@@ -1,0 +1,104 @@
+//! END-TO-END serving driver (the DESIGN.md "E2E" experiment).
+//!
+//! Boots the full stack — PJRT runtime loading the AOT transformer
+//! artifacts, admission queue, continuous batcher, engine — then drives a
+//! synthetic multi-client workload through it in-process and reports
+//! latency percentiles and throughput.  Nothing Python runs here.
+//!
+//! Requires `make artifacts`. Run:
+//!   cargo run --release --example moe_serving
+//!   cargo run --release --example moe_serving -- 200 8   # requests, clients
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Instant;
+
+use staticbatch::coordinator::engine::{Engine, EngineConfig};
+use staticbatch::coordinator::request::Request;
+use staticbatch::util::rng::Rng;
+
+// (engine construction happens inside Engine::spawn — the PJRT client is
+// pinned to its serving thread)
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(60);
+    let n_clients: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    let t0 = Instant::now();
+    let handle = Engine::spawn(EngineConfig { artifacts_dir: dir, ..Default::default() })
+        .expect("engine spawn");
+    let lm = handle.lm.clone();
+    println!(
+        "engine up in {:.1}s: buckets {:?}, vocab {}, {} experts, {} params tensors",
+        t0.elapsed().as_secs_f64(),
+        lm.buckets,
+        lm.vocab,
+        lm.experts,
+        lm.param_shapes.len(),
+    );
+
+    let queue = Arc::clone(&handle.queue);
+    let metrics = Arc::clone(&handle.metrics);
+
+    // synthetic clients: mixed request lengths, Poisson-ish think time
+    let t_load = Instant::now();
+    let mut client_threads = Vec::new();
+    for c in 0..n_clients {
+        let queue = Arc::clone(&queue);
+        let per_client = n_requests / n_clients + usize::from(c < n_requests % n_clients);
+        client_threads.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(c as u64 + 1);
+            let mut latencies = Vec::new();
+            for i in 0..per_client {
+                let len = match rng.below(3) {
+                    0 => 4 + rng.usize_below(12),   // short
+                    1 => 20 + rng.usize_below(40),  // medium
+                    _ => 80 + rng.usize_below(170), // long
+                };
+                let tokens: Vec<i32> = (0..len).map(|_| rng.below(1000) as i32).collect();
+                let (tx, rx) = channel();
+                let req = Request {
+                    id: (c * 1_000_000 + i) as u64,
+                    tokens,
+                    enqueued: Instant::now(),
+                    respond: tx,
+                };
+                queue.push(req);
+                let resp = rx.recv().expect("response");
+                assert!(resp.error.is_none(), "request failed: {:?}", resp.error);
+                assert_eq!(resp.argmax.len(), len);
+                latencies.push(resp.latency_s);
+            }
+            latencies
+        }));
+    }
+    for t in client_threads {
+        t.join().unwrap();
+    }
+    let wall = t_load.elapsed().as_secs_f64();
+    handle.shutdown();
+
+    let snap = metrics.snapshot();
+    println!("\n=== E2E serving results ({n_requests} requests, {n_clients} clients) ===");
+    println!("{}", snap.render());
+    println!("wall time {wall:.2}s -> {:.2} req/s end-to-end", snap.requests as f64 / wall);
+    let rows: Vec<String> = snap
+        .expert_rows
+        .iter()
+        .enumerate()
+        .filter(|(_, &r)| r > 0)
+        .take(8)
+        .map(|(e, r)| format!("e{e}:{r}"))
+        .collect();
+    if !rows.is_empty() {
+        println!("expert load head: {}", rows.join(" "));
+    }
+    println!("\npaste this block into EXPERIMENTS.md §E2E");
+}

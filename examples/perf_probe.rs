@@ -1,0 +1,36 @@
+//! Perf probe: measures the simulator and planner hot paths used by
+//! the Section Perf iteration log in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example perf_probe`
+
+use staticbatch::moe::config::MoeShape;
+use staticbatch::moe::planner::Planner;
+use staticbatch::moe::routing::LoadScenario;
+use staticbatch::sim::{kernel_sim, specs::GpuSpec};
+use std::time::Instant;
+fn main() {
+    let shape = MoeShape::paper_table1();
+    let load = LoadScenario::Worst.counts(&shape, 0);
+    let plan = Planner::new(shape).plan(&load);
+    let spec = GpuSpec::h800();
+    // warm
+    for _ in 0..3 { std::hint::black_box(kernel_sim::simulate_ours(&plan, &spec)); }
+    let iters = 200;
+    let t0 = Instant::now();
+    for _ in 0..iters { std::hint::black_box(kernel_sim::simulate_ours(&plan, &spec)); }
+    let dt = t0.elapsed().as_secs_f64() / iters as f64;
+    let blocks = plan.total_tiles() as f64;
+    println!("simulate_ours: {:.1} us/step, {:.2} M blocks/s ({} tiles)", dt*1e6, blocks/dt/1e6, blocks);
+    // plan construction
+    let t0 = Instant::now();
+    for _ in 0..iters { std::hint::black_box(Planner::new(shape).plan(&load)); }
+    let dt = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("plan: {:.1} us", dt*1e6);
+    // footnote shape (16384 tiles)
+    let shape2 = MoeShape::paper_table1_best_h800();
+    let plan2 = Planner::new(shape2).plan(&LoadScenario::Best.counts(&shape2, 0));
+    let t0 = Instant::now();
+    for _ in 0..20 { std::hint::black_box(kernel_sim::simulate_ours(&plan2, &spec)); }
+    let dt = t0.elapsed().as_secs_f64() / 20.0;
+    println!("simulate big: {:.1} us/step, {:.2} M blocks/s ({} tiles)", dt*1e6, plan2.total_tiles() as f64/dt/1e6, plan2.total_tiles());
+}

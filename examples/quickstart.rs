@@ -1,0 +1,50 @@
+//! Quickstart: the paper's framework in ~40 lines.
+//!
+//! Builds the paper's Table 1 balanced scenario, plans it with the static
+//! batching framework (compressed TilePrefix + σ + per-expert tiling +
+//! half-interval ordering), and simulates it on H800 and H20.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use staticbatch::moe::config::MoeShape;
+use staticbatch::moe::planner::Planner;
+use staticbatch::moe::routing::LoadScenario;
+use staticbatch::sim::kernel_sim;
+use staticbatch::sim::specs::GpuSpec;
+
+fn main() {
+    // 1. the workload: 4096 tokens, top-8 of 64 experts, weight [3584,2560]
+    let shape = MoeShape::paper_table1();
+
+    // 2. a routing outcome (balanced here; try Worst or Zipf(1.2))
+    let load = LoadScenario::Balanced.counts(&shape, 0);
+    println!(
+        "routing: {} rows over {} experts ({} empty), imbalance {:.2}",
+        load.total(),
+        shape.experts,
+        load.num_empty(),
+        load.imbalance()
+    );
+
+    // 3. the static batch plan: σ-compaction of empty experts (Alg. 4),
+    //    per-expert tiling, half-interval ordering, TilePrefix (Alg. 1)
+    let plan = Planner::new(shape).plan(&load);
+    println!(
+        "plan: {} non-empty tasks, {} tiles, {} B of metadata",
+        plan.num_nonempty(),
+        plan.total_tiles(),
+        plan.metadata_bytes()
+    );
+
+    // 4. decompress a few mappings exactly like the kernel does (Alg. 2)
+    for block in [0u32, 1, 100, plan.total_tiles() - 1] {
+        let m = plan.two_stage.map(block);
+        println!("  block {block:>5} -> expert {:>2}, tile {:>3}", m.task, m.tile);
+    }
+
+    // 5. simulate on both paper GPUs
+    for spec in [GpuSpec::h20(), GpuSpec::h800()] {
+        let r = kernel_sim::simulate_ours(&plan, &spec);
+        println!("{:>5}: {}", spec.name, r.summary());
+    }
+}

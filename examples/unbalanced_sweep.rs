@@ -1,0 +1,49 @@
+//! Unbalanced-expert-load sweep: ours vs grouped GEMM vs naive loop as
+//! routing skew grows (zipf alpha 0 -> 2), on H800 and H20.  Shows the
+//! crossover structure the paper's motivation section describes: everyone
+//! is fine when balanced; the gap opens with imbalance.
+//!
+//! Run: `cargo run --release --example unbalanced_sweep`
+
+use staticbatch::baselines::all_impls;
+use staticbatch::moe::config::MoeShape;
+use staticbatch::moe::routing::LoadScenario;
+use staticbatch::sim::specs::GpuSpec;
+use staticbatch::util::bench::Table;
+use staticbatch::util::stats::geomean;
+
+fn main() {
+    let shape = MoeShape::paper_table1();
+    let seeds = 3u64;
+    for spec in [GpuSpec::h800(), GpuSpec::h20()] {
+        println!("=== {} ===", spec.name);
+        let mut table = Table::new(&["alpha", "imbalance", "ours(ms)", "grouped", "two-phase", "naive", "best speedup"]);
+        for &alpha in &[0.0, 0.5, 1.0, 1.5, 2.0] {
+            let mut times: Vec<Vec<f64>> = vec![Vec::new(); 4];
+            let mut imb = 0.0;
+            for seed in 0..seeds {
+                let load = LoadScenario::Zipf(alpha).counts(&shape, seed);
+                imb += load.imbalance() / seeds as f64;
+                for (i, imp) in all_impls().iter().enumerate() {
+                    times[i].push(imp.simulate(&shape, &load, &spec).time_s);
+                }
+            }
+            let mean: Vec<f64> =
+                times.iter().map(|v| v.iter().sum::<f64>() / v.len() as f64).collect();
+            let speedups: Vec<f64> = (1..4).map(|i| mean[i] / mean[0]).collect();
+            table.row(&[
+                format!("{alpha:.1}"),
+                format!("{imb:.2}"),
+                format!("{:.3}", mean[0] * 1e3),
+                format!("{:.2}x", mean[1] / mean[0]),
+                format!("{:.2}x", mean[2] / mean[0]),
+                format!("{:.2}x", mean[3] / mean[0]),
+                format!("{:.2}x", speedups.iter().cloned().fold(f64::MIN, f64::max)),
+            ]);
+        }
+        table.print();
+        let _ = geomean(&[1.0]);
+        println!();
+    }
+    println!("(columns 4-6: slowdown of each baseline relative to ours; >1x means ours wins)");
+}

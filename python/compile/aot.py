@@ -1,0 +1,181 @@
+"""AOT compile path: lower the L2 entry points to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT the serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Produces one ``<entry>.hlo.txt`` per entry point plus ``manifest.json``
+describing every input/output (name, shape, dtype) and the model/kernel
+hyper-parameters, which is the contract the Rust runtime loads.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import metadata  # noqa: F401  (re-exported for tests)
+from .kernels.moe_batched import MoeDims
+from . import model as M
+
+# Sequence-length buckets the serving path compiles; the Rust batcher pads
+# request batches into the smallest fitting bucket.
+LM_BUCKETS = (16, 64, 256)
+FFN_BUCKETS = (64, 256)
+
+# The kernel-bench entry: a scaled-down analog of the paper's Section 5
+# setting (seq 4096, weight [3584, 2560], E=64, k=8) that the CPU can
+# execute in reasonable time.  The full-size setting is exercised by the
+# Rust GPU simulator instead (see DESIGN.md experiment index).
+BENCH_DIMS = MoeDims(seq=512, d_model=448, d_ff=320, experts=64, top_k=8, tile_m=64)
+
+MODEL_CFG = M.ModelConfig()
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _record(avals):
+    return [
+        {"shape": list(a.shape), "dtype": str(a.dtype)}
+        for a in avals
+    ]
+
+
+def build_entries():
+    """Yield (name, jitted_fn, example_args, meta) for every artifact."""
+    entries = []
+
+    # --- raw batched MoE GEMM (paper's kernel) -----------------------------
+    d = BENCH_DIMS
+    sp = d.padded_rows
+
+    def moe_gemm(tokens, weights, tile_prefix, sigma, token_ids, num_tiles):
+        return M.moe_gemm_entry(
+            tokens, weights, tile_prefix, sigma, token_ids, num_tiles, d.tile_m
+        )
+
+    entries.append(
+        (
+            "moe_gemm",
+            moe_gemm,
+            (
+                _spec((d.seq, d.d_model)),
+                _spec((d.experts, d.d_model, d.d_ff)),
+                _spec((d.experts,), jnp.int32),
+                _spec((d.experts,), jnp.int32),
+                _spec((sp,), jnp.int32),
+                _spec((1,), jnp.int32),
+            ),
+            {
+                "kind": "moe_gemm",
+                "dims": dict(d._asdict()),
+                "padded_rows": sp,
+                "max_tiles": d.max_tiles,
+            },
+        )
+    )
+
+    # --- MoE FFN layer per bucket ------------------------------------------
+    cfg = MODEL_CFG
+    for s in FFN_BUCKETS:
+        def ffn(x, router_w, w_in, w_out, _cfg=cfg):
+            return M.moe_ffn_entry(x, router_w, w_in, w_out, _cfg)
+
+        entries.append(
+            (
+                f"moe_ffn_s{s}",
+                ffn,
+                (
+                    _spec((s, cfg.d_model)),
+                    _spec((cfg.d_model, cfg.experts)),
+                    _spec((cfg.experts, cfg.d_model, cfg.d_ff)),
+                    _spec((cfg.experts, cfg.d_ff, cfg.d_model)),
+                ),
+                {"kind": "moe_ffn", "seq": s, "config": dict(cfg._asdict())},
+            )
+        )
+
+    # --- full LM forward per bucket -----------------------------------------
+    pspecs = cfg.param_specs()
+    for s in LM_BUCKETS:
+        def lm(token_ids, *params, _cfg=cfg):
+            return M.transformer_forward(token_ids, list(params), _cfg)
+
+        args = (_spec((s,), jnp.int32),) + tuple(_spec(shape) for _, shape in pspecs)
+        entries.append(
+            (
+                f"lm_forward_s{s}",
+                lm,
+                args,
+                {
+                    "kind": "lm_forward",
+                    "seq": s,
+                    "config": dict(cfg._asdict()),
+                    "params": [
+                        {"name": n, "shape": list(shape)} for n, shape in pspecs
+                    ],
+                    "num_params": cfg.num_params(),
+                },
+            )
+        )
+
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated entry names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"entries": {}}
+    for name, fn, example_args, meta in build_entries():
+        if only is not None and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        out_avals = jax.eval_shape(fn, *example_args)
+        flat_outs = jax.tree_util.tree_leaves(out_avals)
+        manifest["entries"][name] = {
+            "file": fname,
+            "inputs": _record(example_args),
+            "outputs": _record(flat_outs),
+            "meta": meta,
+        }
+        print(f"wrote {path} ({len(text)} chars, {len(example_args)} inputs, "
+              f"{len(flat_outs)} outputs)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

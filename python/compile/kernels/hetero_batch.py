@@ -1,0 +1,122 @@
+"""L1 demo of Algorithm 3 at the kernel level: heterogeneous tasks fused
+into a SINGLE Pallas kernel.
+
+The paper's framework batches *different operations* (e.g. GEMM and
+reduction) into one kernel by compiling each as a device function and
+switching on the task type after the mapping decompression.  In Pallas the
+device functions become branches of ``jax.lax.switch`` selected by the
+task-kind metadata, after the same compressed TilePrefix mapping used by
+the MoE kernel.
+
+Task types (fixed catalog, like ``taskFunc_1..K``):
+  0: GEMM tile       out[tile] = A_rows @ B
+  1: row reduce-sum  out[tile, 0] = sum(A_rows, axis=1)
+  2: element-wise    out[tile] = 2 * A_rows + 1
+
+All tasks read row-tiles of a shared operand buffer ``data [R, C]`` and
+write row-tiles of ``out [R, C]`` — heterogeneity is in the *computation*,
+exactly the paper's "some of the workloads are reduction, while others are
+element-wise operations".
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .moe_batched import _mapping_decompress
+
+TILE_R = 8  # rows per tile
+
+
+def _hetero_kernel(
+    tile_prefix_ref,  # [N] inclusive prefix of per-task tile counts
+    task_kind_ref,    # [N] task type id per task
+    task_row0_ref,    # [N] first data row of each task
+    num_tiles_ref,    # [1]
+    data_ref,         # [R, C]
+    b_ref,            # [C, C]  GEMM's B operand
+    out_ref,          # [R, C]
+):
+    g = pl.program_id(0)
+    h, l = _mapping_decompress(tile_prefix_ref[...], g)
+    h = jnp.minimum(h, task_kind_ref.shape[0] - 1)
+    kind = task_kind_ref[h]
+    row0 = task_row0_ref[h] + l * TILE_R
+
+    rows = jax.lax.dynamic_slice(
+        data_ref[...], (row0, 0), (TILE_R, data_ref.shape[1])
+    )
+
+    def gemm(_):
+        return jnp.dot(rows, b_ref[...], preferred_element_type=jnp.float32)
+
+    def reduce_sum(_):
+        s = jnp.sum(rows, axis=1, keepdims=True)
+        return jnp.concatenate(
+            [s, jnp.zeros((TILE_R, data_ref.shape[1] - 1), jnp.float32)], axis=1
+        )
+
+    def elementwise(_):
+        return 2.0 * rows + 1.0
+
+    result = jax.lax.switch(kind, [gemm, reduce_sum, elementwise], None)
+
+    valid = g < num_tiles_ref[0]
+    result = jnp.where(valid, result, 0.0)
+    out_ref[pl.ds(row0, TILE_R), :] = result.astype(out_ref.dtype)
+
+
+def hetero_batch(data, b, tile_prefix, task_kind, task_row0, num_tiles, grid):
+    """Run the fused heterogeneous kernel.
+
+    ``data [R, C]`` row-partitioned among tasks; ``task_row0[h]`` is task
+    h's first row (tile-aligned); output has the same shape.
+    """
+    r, c = data.shape
+    kernel = functools.partial(_hetero_kernel)
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec(tile_prefix.shape, lambda g: (0,)),
+            pl.BlockSpec(task_kind.shape, lambda g: (0,)),
+            pl.BlockSpec(task_row0.shape, lambda g: (0,)),
+            pl.BlockSpec(num_tiles.shape, lambda g: (0,)),
+            pl.BlockSpec((r, c), lambda g: (0, 0)),
+            pl.BlockSpec(b.shape, lambda g: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((r, c), lambda g: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), data.dtype),
+        interpret=True,
+    )(tile_prefix, task_kind, task_row0, num_tiles, data, b)
+
+
+def build_hetero_metadata(task_rows, task_kinds):
+    """Host-side Algorithm 1 for the heterogeneous batch.
+
+    ``task_rows[h]``: row count of task h (must be TILE_R-aligned here for
+    simplicity); ``task_kinds[h]``: its type id.  Returns the kernel's
+    metadata arrays plus the total grid size.
+    """
+    assert len(task_rows) == len(task_kinds)
+    tiles = [r // TILE_R for r in task_rows]
+    prefix = []
+    acc = 0
+    row0 = []
+    r_acc = 0
+    for t, r in zip(tiles, task_rows):
+        acc += t
+        prefix.append(acc)
+        row0.append(r_acc)
+        r_acc += r
+    return (
+        jnp.array(prefix, jnp.int32),
+        jnp.array(task_kinds, jnp.int32),
+        jnp.array(row0, jnp.int32),
+        jnp.array([acc], jnp.int32),
+        acc,
+    )

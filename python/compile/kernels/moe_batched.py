@@ -1,0 +1,174 @@
+"""L1: statically batched MoE expert-GEMM Pallas kernel.
+
+This is the TPU/Pallas embodiment of the paper's static batching framework
+(Sections 3 and 4):
+
+* One fused kernel (`pallas_call`) computes *all* expert GEMMs of an MoE
+  layer.  The grid enumerates output tiles; each grid step is the analog of
+  one CUDA thread block.
+* The tile -> (task, tile-in-task) mapping is *compressed*: the kernel only
+  receives ``tile_prefix`` (inclusive prefix sum of per-expert tile counts,
+  Algorithm 1) and decompresses it per grid step with a vectorized
+  compare-and-count, the SIMT warp-vote + popcount of Algorithm 2
+  (``h = popcount(g >= TilePrefix)``).
+* Empty experts are elided by the two-stage mapping of Algorithm 4: the
+  prefix array is built over *non-empty* experts only and ``sigma`` maps the
+  non-empty index back to the real expert index.
+* Token rows are gathered directly from the original token sequence through
+  per-expert token index arrays (Section 4.3) -- no pre-gathered contiguous
+  copies of the token tensor exist anywhere.
+
+Hardware adaptation (paper Section 4.4 is Hopper-specific, see
+DESIGN.md Section 1): the WGMMA tile becomes an MXU-shaped ``jnp.dot`` with
+``preferred_element_type=float32``; the cp.async shared-memory pipeline
+becomes the Pallas HBM->VMEM block pipeline expressed through ``BlockSpec``
+index maps (the expert weight block is selected per grid step from the
+scalar-prefetched metadata, exactly the two-phase "host builds the plan,
+device consumes it" split the paper advocates); the L2 tile-swizzle locality
+trick becomes grid-order locality (tiles of one expert are consecutive, so
+the weight block stays resident across them).
+
+The kernel MUST run with ``interpret=True`` on this CPU-only image: real TPU
+lowering emits a Mosaic custom-call that the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_M = 128
+
+
+class MoeDims(NamedTuple):
+    """Static problem dimensions baked into one compiled kernel variant."""
+
+    seq: int          # S, tokens in the sequence
+    d_model: int      # H, hidden size (GEMM K dim)
+    d_ff: int         # D, expert output size (GEMM N dim)
+    experts: int      # E, number of experts resident on this device
+    top_k: int        # experts activated per token
+    tile_m: int = DEFAULT_TILE_M
+
+    @property
+    def padded_rows(self) -> int:
+        """Static bound on the packed, per-expert-padded row count.
+
+        Every non-empty expert wastes at most ``tile_m - 1`` padding rows, so
+        ``S * k`` real rows plus ``E`` partial tiles is a safe static bound
+        (rounded up to a whole number of tiles).
+        """
+        raw = self.seq * self.top_k + self.experts * self.tile_m
+        return (raw + self.tile_m - 1) // self.tile_m * self.tile_m
+
+    @property
+    def max_tiles(self) -> int:
+        """Static grid size: upper bound on the total number of M-tiles."""
+        return self.padded_rows // self.tile_m
+
+
+def _mapping_decompress(tile_prefix, g):
+    """Algorithm 2 on the grid index.
+
+    ``tile_prefix`` is the inclusive prefix sum of tile counts over the
+    non-empty experts, padded to a fixed length by repeating the total (the
+    paper pads to warp size with the last element / max value).  The warp
+    ballot + popcount of the SIMT formulation is exactly a vectorized
+    ``g >= tile_prefix`` compare followed by a horizontal add.
+
+    Returns ``(h, l)``: non-empty-task index and tile index inside the task.
+    """
+    votes = (g >= tile_prefix).astype(jnp.int32)
+    h = jnp.sum(votes)
+    base = jnp.where(h > 0, tile_prefix[jnp.maximum(h - 1, 0)], 0)
+    l = g - base
+    return h, l
+
+
+def _moe_kernel(
+    # scalar-prefetch style metadata (small int32 arrays, SMEM analog)
+    tile_prefix_ref,    # [E] inclusive prefix of per-(non-empty)-expert tiles
+    sigma_ref,          # [E] non-empty index -> real expert index
+    token_ids_ref,      # [SP] gather indices into the token sequence
+    num_tiles_ref,      # [1]  number of real (non-padding) tiles
+    # tensor operands
+    tokens_ref,         # [S, H]  original token sequence (never copied)
+    weights_ref,        # [E, H, D] expert weights
+    out_ref,            # [SP, D] packed per-expert outputs
+    *,
+    tile_m: int,
+):
+    g = pl.program_id(0)
+
+    # --- stage 1+2 mapping: grid index -> non-empty task -> real expert ----
+    h, _l = _mapping_decompress(tile_prefix_ref[...], g)
+    h_safe = jnp.minimum(h, sigma_ref.shape[0] - 1)
+    expert = sigma_ref[h_safe]
+
+    # --- token index array gather (Section 4.3) ---------------------------
+    row0 = g * tile_m
+    ids = jax.lax.dynamic_slice(token_ids_ref[...], (row0,), (tile_m,))
+    x_tile = tokens_ref[ids, :]                       # [tile_m, H] gather
+
+    # --- MXU tile matmul (WGMMA analog) ------------------------------------
+    w = weights_ref[expert, :, :]                     # [H, D]
+    acc = jnp.dot(
+        x_tile.astype(jnp.float32),
+        w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    # Padding grid steps (g >= num_tiles) still execute with a clamped
+    # expert; their rows carry zero gate weight downstream, but we zero them
+    # here too so the packed buffer is deterministic.
+    valid = g < num_tiles_ref[0]
+    acc = jnp.where(valid, acc, 0.0)
+    out_ref[pl.ds(row0, tile_m), :] = acc.astype(out_ref.dtype)
+
+
+def moe_batched_matmul(
+    tokens: jax.Array,        # [S, H]
+    weights: jax.Array,       # [E, H, D]
+    tile_prefix: jax.Array,   # [E] int32
+    sigma: jax.Array,         # [E] int32
+    token_ids: jax.Array,     # [SP] int32
+    num_tiles: jax.Array,     # [1] int32
+    *,
+    tile_m: int = DEFAULT_TILE_M,
+    interpret: bool = True,
+) -> jax.Array:
+    """Run the fused statically-batched MoE GEMM.
+
+    Returns the packed per-expert output buffer ``[SP, D]`` where ``SP`` is
+    ``token_ids.shape[0]`` (rows grouped by expert, each group padded to a
+    multiple of ``tile_m``).  The caller (L2) scatters rows back to tokens
+    with the gate weights; padding rows carry gate 0.
+    """
+    s, hdim = tokens.shape
+    e, hdim2, d = weights.shape
+    assert hdim == hdim2, (hdim, hdim2)
+    sp = token_ids.shape[0]
+    assert sp % tile_m == 0, (sp, tile_m)
+    grid = sp // tile_m
+
+    kernel = functools.partial(_moe_kernel, tile_m=tile_m)
+    out = pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec(tile_prefix.shape, lambda g: (0,)),
+            pl.BlockSpec(sigma.shape, lambda g: (0,)),
+            pl.BlockSpec(token_ids.shape, lambda g: (0,)),
+            pl.BlockSpec(num_tiles.shape, lambda g: (0,)),
+            pl.BlockSpec((s, hdim), lambda g: (0, 0)),
+            pl.BlockSpec((e, hdim, d), lambda g: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((sp, d), lambda g: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((sp, d), tokens.dtype),
+        interpret=interpret,
+    )(tile_prefix, sigma, token_ids, num_tiles, tokens, weights)
+    return out

@@ -1,0 +1,51 @@
+"""Pure-jnp correctness oracle for the MoE layer.
+
+Dense one-hot dispatch: every (token, choice) pair is materialized against
+every expert, so there is no routing-dependent control flow at all.  Slow but
+unambiguous; the Pallas kernel and the whole packed-metadata path must match
+this to a few ULP (fp32 accumulation in both).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def one_hot(idx, num):
+    """One-hot without jax.nn dependency: [..., num] float32."""
+    return (idx[..., None] == jnp.arange(num, dtype=idx.dtype)).astype(jnp.float32)
+
+
+def moe_ref(tokens, weights, expert_ids, gates):
+    """Dense reference MoE.
+
+    Args:
+      tokens:     [S, H] float
+      weights:    [E, H, D] float
+      expert_ids: [S, K] int32, expert chosen per (token, slot)
+      gates:      [S, K] float, combine weight per (token, slot)
+
+    Returns:
+      [S, D] combined expert outputs: ``sum_k gates[s,k] * tokens[s] @ W[e]``.
+    """
+    e = weights.shape[0]
+    # per-token per-expert combined weight: [S, E]
+    combine = jnp.sum(one_hot(expert_ids, e) * gates[..., None].astype(jnp.float32), axis=1)
+    # all-experts outputs: [S, E, D]
+    y = jnp.einsum(
+        "sh,ehd->sed",
+        tokens.astype(jnp.float32),
+        weights.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    out = jnp.einsum("se,sed->sd", combine, y)
+    return out.astype(tokens.dtype)
+
+
+def expert_counts_ref(expert_ids, num_experts):
+    """[E] number of (token, slot) pairs routed to each expert."""
+    flat = expert_ids.reshape(-1)
+    return jnp.sum(
+        (flat[:, None] == jnp.arange(num_experts, dtype=flat.dtype)).astype(jnp.int32),
+        axis=0,
+    )

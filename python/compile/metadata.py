@@ -1,0 +1,121 @@
+"""Host-side static batch plan construction (the paper's Algorithms 1 & 4).
+
+Everything here is shape-static jnp so it lowers into the same AOT HLO as the
+kernel: the "host" of the paper is our L2 graph prologue (and, on the serving
+path, the Rust planner produces the identical arrays -- property-tested
+against each other through the artifact).
+
+Produced arrays, for dims ``MoeDims(S, H, D, E, K, T)`` with
+``SP = dims.padded_rows``:
+
+* ``counts      [E]``  tokens routed to each expert (c_e)
+* ``sigma       [E]``  non-empty-task index -> real expert (Algorithm 4's
+                       injection, padded past M with the remaining/empty
+                       expert ids so it stays a permutation)
+* ``tile_prefix [E]``  inclusive prefix sum of per-non-empty-expert tile
+                       counts (Algorithm 1), tail-padded by repetition
+* ``num_tiles   [1]``  total real tiles
+* ``token_ids   [SP]`` gather indices into the token sequence, grouped by
+                       expert in sigma order, each group padded to a multiple
+                       of tile_m (padding slots point at token 0)
+* ``gates_pad   [SP]`` combine weight per packed row (0 on padding)
+* ``row_token   [SP]`` == token_ids (scatter target for the combine)
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from .kernels.moe_batched import MoeDims
+
+
+class BatchPlan(NamedTuple):
+    counts: jnp.ndarray       # [E] int32
+    sigma: jnp.ndarray        # [E] int32
+    tile_prefix: jnp.ndarray  # [E] int32
+    num_tiles: jnp.ndarray    # [1] int32
+    token_ids: jnp.ndarray    # [SP] int32
+    gates_pad: jnp.ndarray    # [SP] float32
+
+
+def build_plan(expert_ids, gates, dims: MoeDims) -> BatchPlan:
+    """Build the packed static batch plan from routing decisions.
+
+    ``expert_ids``: [S, K] int32, ``gates``: [S, K] float.  All ops are
+    static-shape (argsort / cumsum / scatter), mirroring the atomic-scatter
+    radix bucketing the paper uses on device (Section 4.3).
+    """
+    s, k = expert_ids.shape
+    e, t = dims.experts, dims.tile_m
+    sp = dims.padded_rows
+
+    flat_e = expert_ids.reshape(-1).astype(jnp.int32)          # [S*K]
+    flat_g = gates.reshape(-1).astype(jnp.float32)             # [S*K]
+    flat_tok = (
+        jnp.arange(s * k, dtype=jnp.int32) // jnp.int32(k)
+    )                                                          # token of slot
+
+    # --- per-expert counts (c_e) and tile counts --------------------------
+    counts = jnp.sum(
+        (flat_e[:, None] == jnp.arange(e, dtype=jnp.int32)).astype(jnp.int32),
+        axis=0,
+    )                                                          # [E]
+    tiles = (counts + t - 1) // t                              # ceil, 0 if empty
+
+    # --- Algorithm 4: sigma = non-empty experts first, stable --------------
+    nonempty = counts > 0
+    # argsort of (is_empty, index): stable ascending puts non-empty experts
+    # (in index order) first -- exactly the injection sigma.
+    sigma = jnp.argsort(jnp.where(nonempty, 0, 1), stable=True).astype(jnp.int32)
+
+    # --- Algorithm 1: inclusive tile prefix over non-empty experts ---------
+    tiles_sorted = tiles[sigma]                                # empties -> 0 tail
+    tile_prefix = jnp.cumsum(tiles_sorted).astype(jnp.int32)   # tail repeats total
+    num_tiles = tile_prefix[-1:].astype(jnp.int32)
+
+    # --- packed row layout --------------------------------------------------
+    # Group start (in packed rows) per expert, in sigma order, padded to T.
+    padded_counts_sorted = tiles_sorted * t                    # [E]
+    group_start_sorted = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(padded_counts_sorted)[:-1].astype(jnp.int32)]
+    )                                                          # [E] exclusive
+    # Map real expert -> its packed group start: invert sigma.
+    inv_sigma = jnp.argsort(sigma, stable=True).astype(jnp.int32)
+    group_start = group_start_sorted[inv_sigma]                # [E] by real id
+
+    # Rank of each routed slot within its expert: sort slots by expert
+    # (stable), then rank = position - start of that expert's run.
+    order = jnp.argsort(flat_e, stable=True).astype(jnp.int32)  # [S*K]
+    sorted_e = flat_e[order]
+    run_start = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1].astype(jnp.int32)]
+    )                                                          # [E]
+    pos = jnp.arange(s * k, dtype=jnp.int32)
+    rank = pos - run_start[sorted_e]                           # [S*K]
+    dest = group_start[sorted_e] + rank                        # packed row
+
+    token_ids = jnp.zeros((sp,), jnp.int32).at[dest].set(flat_tok[order])
+    gates_pad = jnp.zeros((sp,), jnp.float32).at[dest].set(flat_g[order])
+
+    return BatchPlan(
+        counts=counts,
+        sigma=sigma,
+        tile_prefix=tile_prefix,
+        num_tiles=num_tiles,
+        token_ids=token_ids,
+        gates_pad=gates_pad,
+    )
+
+
+def combine(out_packed, plan: BatchPlan, seq: int):
+    """Scatter packed expert outputs back to token order with gate weights.
+
+    ``out_packed``: [SP, D].  Padding rows have gate 0 so scattering them to
+    token 0 is a no-op.
+    """
+    weighted = out_packed.astype(jnp.float32) * plan.gates_pad[:, None]
+    d = out_packed.shape[1]
+    out = jnp.zeros((seq, d), jnp.float32).at[plan.token_ids].add(weighted)
+    return out.astype(out_packed.dtype)

@@ -1,0 +1,201 @@
+"""L2: the MoE transformer in JAX, calling the L1 Pallas kernel.
+
+Everything here is build-time Python: `aot.py` lowers the jitted entry points
+to HLO text once, and the Rust coordinator executes the compiled artifacts on
+the PJRT CPU client.  Nothing in this file runs on the request path.
+
+The MoE FFN uses the statically batched kernel for BOTH expert GEMM stages:
+
+  stage 1:  packed = gather(tokens)[rows] @ w_in[expert]     (token index arrays)
+  act:      silu on the packed buffer
+  stage 2:  packed2 = packed[rows identity] @ w_out[expert]  (already grouped)
+  combine:  scatter-add with gate weights
+
+Stage 2 reuses the same kernel with an identity token-index array because the
+activation buffer is already grouped by expert -- the "no duplicate copies"
+property of Section 4.3 holds end to end.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import metadata
+from .kernels.moe_batched import MoeDims, moe_batched_matmul
+
+
+class ModelConfig(NamedTuple):
+    """Hyper-parameters of the tiny MoE transformer LM."""
+
+    vocab: int = 1024
+    d_model: int = 256
+    d_ff: int = 512
+    n_heads: int = 4
+    n_layers: int = 4
+    experts: int = 16
+    top_k: int = 2
+    tile_m: int = 32
+
+    def dims(self, seq: int) -> MoeDims:
+        return MoeDims(
+            seq=seq,
+            d_model=self.d_model,
+            d_ff=self.d_ff,
+            experts=self.experts,
+            top_k=self.top_k,
+            tile_m=self.tile_m,
+        )
+
+    def param_specs(self):
+        """Ordered (name, shape) list -- the artifact manifest contract.
+
+        The Rust side materializes parameters in exactly this order.
+        """
+        c = self
+        specs = [("embedding", (c.vocab, c.d_model))]
+        for i in range(c.n_layers):
+            p = f"layer{i}."
+            specs += [
+                (p + "ln1", (c.d_model,)),
+                (p + "wq", (c.d_model, c.d_model)),
+                (p + "wk", (c.d_model, c.d_model)),
+                (p + "wv", (c.d_model, c.d_model)),
+                (p + "wo", (c.d_model, c.d_model)),
+                (p + "ln2", (c.d_model,)),
+                (p + "router", (c.d_model, c.experts)),
+                (p + "w_in", (c.experts, c.d_model, c.d_ff)),
+                (p + "w_out", (c.experts, c.d_ff, c.d_model)),
+            ]
+        specs += [("ln_f", (c.d_model,)), ("head", (c.d_model, c.vocab))]
+        return specs
+
+    def num_params(self) -> int:
+        return sum(math.prod(s) for _, s in self.param_specs())
+
+
+def init_params(cfg: ModelConfig, key) -> list:
+    """Random init in manifest order (synthetic weights stand in for a real
+    checkpoint: no network access on this image; DESIGN.md documents the
+    substitution)."""
+    params = []
+    for name, shape in cfg.param_specs():
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[-2] if len(shape) > 1 else shape[-1]
+            scale = 0.02 if name in ("embedding", "head") else 1.0 / math.sqrt(fan_in)
+            params.append(jax.random.normal(sub, shape, jnp.float32) * scale)
+    return params
+
+
+def rms_norm(x, g, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * g).astype(x.dtype)
+
+
+def route(x, router_w, top_k):
+    """Top-k softmax router. Returns (expert_ids [S,K] i32, gates [S,K] f32).
+
+    Implemented as iterative argmax + mask rather than ``jax.lax.top_k``:
+    the TopK HLO op is newer than the xla_extension 0.5.1 parser on the
+    runtime side, while argmax/gather/scatter lower to classic HLO that
+    round-trips through the text format (see DESIGN.md Section 5 risks).
+    """
+    s = x.shape[0]
+    logits = jnp.dot(x.astype(jnp.float32), router_w.astype(jnp.float32))
+    work = logits
+    ids, vals = [], []
+    rows = jnp.arange(s)
+    for _ in range(top_k):
+        idx = jnp.argmax(work, axis=-1).astype(jnp.int32)
+        val = work[rows, idx]
+        ids.append(idx)
+        vals.append(val)
+        work = work.at[rows, idx].set(-jnp.inf)
+    ids = jnp.stack(ids, axis=-1)
+    vals = jnp.stack(vals, axis=-1)
+    gates = jax.nn.softmax(vals, axis=-1)
+    return ids.astype(jnp.int32), gates.astype(jnp.float32)
+
+
+def moe_ffn(x, router_w, w_in, w_out, dims: MoeDims, *, interpret: bool = True):
+    """The full MoE FFN layer via the statically batched kernel."""
+    seq = x.shape[0]
+    expert_ids, gates = route(x, router_w, dims.top_k)
+    plan = metadata.build_plan(expert_ids, gates, dims)
+
+    # Stage 1: gather token rows through the token index array, GEMM vs w_in.
+    h1 = moe_batched_matmul(
+        x, w_in, plan.tile_prefix, plan.sigma, plan.token_ids, plan.num_tiles,
+        tile_m=dims.tile_m, interpret=interpret,
+    )                                                     # [SP, F]
+    h1 = jax.nn.silu(h1.astype(jnp.float32)).astype(x.dtype)
+
+    # Stage 2: rows already grouped by expert -> identity index array.
+    sp = plan.token_ids.shape[0]
+    identity = jnp.arange(sp, dtype=jnp.int32)
+    h2 = moe_batched_matmul(
+        h1, w_out, plan.tile_prefix, plan.sigma, identity, plan.num_tiles,
+        tile_m=dims.tile_m, interpret=interpret,
+    )                                                     # [SP, H]
+
+    return metadata.combine(h2, plan, seq), plan
+
+
+def attention(x, wq, wk, wv, wo, n_heads):
+    """Simple causal multi-head attention over the whole sequence."""
+    s, h = x.shape
+    dh = h // n_heads
+    q = jnp.dot(x, wq).reshape(s, n_heads, dh)
+    k = jnp.dot(x, wk).reshape(s, n_heads, dh)
+    v = jnp.dot(x, wv).reshape(s, n_heads, dh)
+    scores = jnp.einsum("qnd,knd->nqk", q, k) / jnp.float32(math.sqrt(dh))
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None], scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("nqk,knd->qnd", probs, v).reshape(s, h)
+    return jnp.dot(out, wo)
+
+
+def transformer_forward(token_ids, params, cfg: ModelConfig, *, interpret: bool = True):
+    """Full forward pass: [S] int32 token ids -> [S, V] logits."""
+    seq = token_ids.shape[0]
+    dims = cfg.dims(seq)
+    it = iter(params)
+    emb = next(it)
+    x = emb[token_ids]
+    pos = jnp.arange(seq)[:, None] * jnp.exp(
+        -jnp.arange(cfg.d_model)[None, :] / cfg.d_model
+    )
+    x = x + 0.01 * jnp.sin(pos).astype(x.dtype)
+    for _layer in range(cfg.n_layers):
+        ln1, wq, wk, wv, wo, ln2, router_w, w_in, w_out = (next(it) for _ in range(9))
+        x = x + attention(rms_norm(x, ln1), wq, wk, wv, wo, cfg.n_heads)
+        y, _plan = moe_ffn(rms_norm(x, ln2), router_w, w_in, w_out, dims, interpret=interpret)
+        x = x + y
+    ln_f, head = next(it), next(it)
+    return jnp.dot(rms_norm(x, ln_f), head)
+
+
+def moe_gemm_entry(tokens, weights, tile_prefix, sigma, token_ids, num_tiles, tile_m):
+    """Raw single-stage batched MoE GEMM -- the paper's exact kernel shape.
+
+    Exposed as its own AOT artifact so the Rust benches can drive the kernel
+    with externally built plans (and cross-check the Rust planner against the
+    jnp planner through the compiled artifact).
+    """
+    return moe_batched_matmul(
+        tokens, weights, tile_prefix, sigma, token_ids, num_tiles, tile_m=tile_m
+    )
+
+
+def moe_ffn_entry(x, router_w, w_in, w_out, cfg: ModelConfig):
+    """MoE FFN entry returning (output, expert counts) for coordinator stats."""
+    dims = cfg.dims(x.shape[0])
+    out, plan = moe_ffn(x, router_w, w_in, w_out, dims)
+    return out, plan.counts

@@ -1,0 +1,162 @@
+"""Kernel vs oracle: the CORE correctness signal for L1.
+
+The statically batched Pallas kernel (+ the packed metadata path around it)
+must reproduce the dense one-hot reference for every routing distribution,
+including the paper's named scenarios (balanced / best / worst, Section 5)
+and adversarial corner cases (all experts empty but one, zero gates,
+duplicate expert slots per token).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import metadata
+from compile.kernels.moe_batched import MoeDims, moe_batched_matmul
+from compile.kernels.ref import expert_counts_ref, moe_ref
+
+
+def run_pair(dims, tokens, weights, expert_ids, gates):
+    plan = metadata.build_plan(expert_ids, gates, dims)
+    packed = moe_batched_matmul(
+        tokens, weights, plan.tile_prefix, plan.sigma,
+        plan.token_ids, plan.num_tiles, tile_m=dims.tile_m,
+    )
+    got = metadata.combine(packed, plan, dims.seq)
+    want = moe_ref(tokens, weights, expert_ids, gates)
+    return got, want, plan
+
+
+def rand_case(dims, seed, ids_fn=None):
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    tokens = jax.random.normal(k1, (dims.seq, dims.d_model), jnp.float32)
+    weights = jax.random.normal(k2, (dims.experts, dims.d_model, dims.d_ff)) * 0.1
+    if ids_fn is None:
+        ids = jax.random.randint(k3, (dims.seq, dims.top_k), 0, dims.experts, jnp.int32)
+    else:
+        ids = ids_fn(k3)
+    gates = jax.nn.softmax(jax.random.normal(k4, (dims.seq, dims.top_k)), axis=-1)
+    return tokens, weights, ids, gates
+
+
+BASE = MoeDims(seq=64, d_model=32, d_ff=48, experts=8, top_k=2, tile_m=16)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_random_routing_matches_ref(seed):
+    tokens, weights, ids, gates = rand_case(BASE, seed)
+    got, want, _ = run_pair(BASE, tokens, weights, ids, gates)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize(
+    "dims",
+    [
+        MoeDims(seq=32, d_model=16, d_ff=16, experts=4, top_k=1, tile_m=8),
+        MoeDims(seq=48, d_model=24, d_ff=40, experts=6, top_k=3, tile_m=16),
+        MoeDims(seq=128, d_model=64, d_ff=32, experts=16, top_k=4, tile_m=32),
+        MoeDims(seq=16, d_model=8, d_ff=8, experts=2, top_k=2, tile_m=4),
+        # tile_m larger than any expert's token count
+        MoeDims(seq=8, d_model=8, d_ff=8, experts=8, top_k=1, tile_m=64),
+    ],
+    ids=lambda d: f"s{d.seq}e{d.experts}k{d.top_k}t{d.tile_m}",
+)
+def test_shape_sweep(dims):
+    tokens, weights, ids, gates = rand_case(dims, 7)
+    got, want, _ = run_pair(dims, tokens, weights, ids, gates)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=3e-5, atol=3e-5)
+
+
+def scenario_ids(dims, scenario):
+    """The paper's Section 5 load scenarios, scaled to the given dims."""
+    s, k, e = dims.seq, dims.top_k, dims.experts
+    if scenario == "balanced":
+        # round-robin: token i -> experts (i*k .. i*k+k-1) mod E
+        base = (jnp.arange(s, dtype=jnp.int32)[:, None] * k
+                + jnp.arange(k, dtype=jnp.int32)[None, :])
+        return base % e
+    if scenario == "best":
+        # all tokens -> the same first k experts
+        return jnp.tile(jnp.arange(k, dtype=jnp.int32)[None, :], (s, 1))
+    if scenario == "worst":
+        # nearly all -> same k experts; remaining experts get 1 token each
+        ids = jnp.tile(jnp.arange(k, dtype=jnp.int32)[None, :], (s, 1))
+        others = [x for x in range(e) if x >= k]
+        for row, ex in enumerate(others):
+            ids = ids.at[row % s, row % k].set(ex)
+        return ids
+    raise ValueError(scenario)
+
+
+@pytest.mark.parametrize("scenario", ["balanced", "best", "worst"])
+def test_paper_scenarios(scenario):
+    dims = MoeDims(seq=64, d_model=32, d_ff=32, experts=16, top_k=4, tile_m=16)
+    tokens, weights, _, gates = rand_case(dims, 11)
+    ids = scenario_ids(dims, scenario)
+    got, want, plan = run_pair(dims, tokens, weights, ids, gates)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=3e-5, atol=3e-5)
+    counts = np.array(plan.counts)
+    if scenario == "best":
+        assert (counts > 0).sum() == dims.top_k  # E - k experts are empty
+    if scenario == "worst":
+        assert (counts == 1).sum() == dims.experts - dims.top_k
+
+
+def test_single_expert_everything():
+    dims = MoeDims(seq=32, d_model=16, d_ff=16, experts=8, top_k=2, tile_m=8)
+    tokens, weights, _, gates = rand_case(dims, 3)
+    ids = jnp.zeros((dims.seq, dims.top_k), jnp.int32)
+    got, want, plan = run_pair(dims, tokens, weights, ids, gates)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=3e-5, atol=3e-5)
+    assert int(plan.counts[0]) == dims.seq * dims.top_k
+
+
+def test_zero_gates_ignored():
+    dims = BASE
+    tokens, weights, ids, gates = rand_case(dims, 9)
+    gates = gates.at[:, 1].set(0.0)
+    got, want, _ = run_pair(dims, tokens, weights, ids, gates)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=3e-5, atol=3e-5)
+
+
+def test_bf16_tokens():
+    dims = MoeDims(seq=32, d_model=32, d_ff=32, experts=4, top_k=2, tile_m=16)
+    tokens, weights, ids, gates = rand_case(dims, 5)
+    tokens = tokens.astype(jnp.bfloat16)
+    weights = weights.astype(jnp.bfloat16)
+    got, want, _ = run_pair(dims, tokens, weights, ids, gates)
+    np.testing.assert_allclose(
+        np.array(got, np.float32), np.array(want, np.float32), rtol=3e-2, atol=3e-2
+    )
+
+
+def test_counts_match_ref():
+    tokens, weights, ids, gates = rand_case(BASE, 13)
+    plan = metadata.build_plan(ids, gates, BASE)
+    want = expert_counts_ref(ids, BASE.experts)
+    np.testing.assert_array_equal(np.array(plan.counts), np.array(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seq=st.integers(4, 64),
+    experts=st.integers(1, 12),
+    top_k=st.integers(1, 4),
+    tile_m=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(seq, experts, top_k, tile_m, seed):
+    """Property: for ANY routing, kernel+metadata == dense reference."""
+    dims = MoeDims(seq=seq, d_model=16, d_ff=24, experts=experts,
+                   top_k=min(top_k, experts), tile_m=tile_m)
+    tokens, weights, ids, gates = rand_case(dims, seed % 10_000)
+    got, want, plan = run_pair(dims, tokens, weights, ids, gates)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=5e-5, atol=5e-5)
+    # plan invariants
+    assert int(plan.counts.sum()) == dims.seq * dims.top_k
+    tp = np.array(plan.tile_prefix)
+    assert (np.diff(tp) >= 0).all(), "prefix must be non-decreasing"
+    assert int(plan.num_tiles[0]) == tp[-1]
+    assert int(plan.num_tiles[0]) <= dims.max_tiles

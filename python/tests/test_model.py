@@ -1,0 +1,88 @@
+"""L2 model tests: MoE FFN against a dense reference, transformer shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels.ref import moe_ref
+
+CFG = M.ModelConfig(vocab=64, d_model=32, d_ff=48, n_heads=2, n_layers=2,
+                    experts=4, top_k=2, tile_m=8)
+
+
+def dense_moe_ffn_ref(x, router_w, w_in, w_out, cfg):
+    """Dense (all-experts) reference of the full FFN, no packing anywhere."""
+    ids, gates = M.route(x, router_w, cfg.top_k)
+    h = jnp.einsum("sh,ehf->sef", x.astype(jnp.float32), w_in.astype(jnp.float32))
+    h = jax.nn.silu(h)
+    y = jnp.einsum("sef,efh->seh", h, w_out.astype(jnp.float32))
+    onehot = (ids[..., None] == jnp.arange(cfg.experts))[..., :].astype(jnp.float32)
+    combine = jnp.sum(onehot * gates[..., None], axis=1)       # [S, E]
+    return jnp.einsum("se,seh->sh", combine, y).astype(x.dtype)
+
+
+@pytest.mark.parametrize("seq", [16, 40])
+def test_moe_ffn_matches_dense(seq):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (seq, CFG.d_model), jnp.float32)
+    router_w = jax.random.normal(ks[1], (CFG.d_model, CFG.experts)) * 0.1
+    w_in = jax.random.normal(ks[2], (CFG.experts, CFG.d_model, CFG.d_ff)) * 0.1
+    w_out = jax.random.normal(ks[3], (CFG.experts, CFG.d_ff, CFG.d_model)) * 0.1
+    got, plan = M.moe_ffn(x, router_w, w_in, w_out, CFG.dims(seq))
+    want = dense_moe_ffn_ref(x, router_w, w_in, w_out, CFG)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-4)
+    assert int(plan.counts.sum()) == seq * CFG.top_k
+
+
+def test_route_topk_valid():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (24, CFG.d_model))
+    rw = jax.random.normal(jax.random.PRNGKey(2), (CFG.d_model, CFG.experts))
+    ids, gates = M.route(x, rw, CFG.top_k)
+    assert ids.shape == (24, CFG.top_k)
+    assert ((np.array(ids) >= 0) & (np.array(ids) < CFG.experts)).all()
+    np.testing.assert_allclose(np.array(gates.sum(-1)), 1.0, rtol=1e-5)
+    # top-k slots of one token are distinct experts
+    for row in np.array(ids):
+        assert len(set(row.tolist())) == CFG.top_k
+
+
+def test_transformer_forward_shape_and_finite():
+    params = M.init_params(CFG, jax.random.PRNGKey(3))
+    ids = jax.random.randint(jax.random.PRNGKey(4), (16,), 0, CFG.vocab, jnp.int32)
+    logits = M.transformer_forward(ids, params, CFG)
+    assert logits.shape == (16, CFG.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_transformer_deterministic():
+    params = M.init_params(CFG, jax.random.PRNGKey(5))
+    ids = jax.random.randint(jax.random.PRNGKey(6), (16,), 0, CFG.vocab, jnp.int32)
+    a = M.transformer_forward(ids, params, CFG)
+    b = M.transformer_forward(ids, params, CFG)
+    np.testing.assert_array_equal(np.array(a), np.array(b))
+
+
+def test_param_specs_count():
+    specs = CFG.param_specs()
+    assert len(specs) == 1 + 9 * CFG.n_layers + 2
+    params = M.init_params(CFG, jax.random.PRNGKey(7))
+    assert len(params) == len(specs)
+    for p, (_, shape) in zip(params, specs):
+        assert p.shape == shape
+    assert CFG.num_params() == sum(int(np.prod(s)) for _, s in specs)
+
+
+def test_causality():
+    """Changing a future token must not change past logits."""
+    params = M.init_params(CFG, jax.random.PRNGKey(8))
+    ids = jax.random.randint(jax.random.PRNGKey(9), (12,), 0, CFG.vocab, jnp.int32)
+    base = M.transformer_forward(ids, params, CFG)
+    ids2 = ids.at[-1].set((ids[-1] + 1) % CFG.vocab)
+    pert = M.transformer_forward(ids2, params, CFG)
+    np.testing.assert_allclose(
+        np.array(base[:-1]), np.array(pert[:-1]), rtol=2e-4, atol=2e-4
+    )

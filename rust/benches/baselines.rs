@@ -1,0 +1,7 @@
+//! A1: ours vs grouped GEMM / two-phase / naive loop; A5 token-copy table.
+fn main() {
+    println!("== A1: baselines across paper scenarios ==");
+    print!("{}", staticbatch::reports::baselines_table());
+    println!("\n== A5: token copy elimination ==");
+    print!("{}", staticbatch::reports::token_copy_table());
+}

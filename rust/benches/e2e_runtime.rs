@@ -1,0 +1,94 @@
+//! E2E runtime bench: execute the AOT moe_gemm artifact through PJRT from
+//! the Rust hot path, with plan construction on the host per step — the
+//! deployment configuration.  Requires `make artifacts`.
+
+use staticbatch::moe::kernel_meta;
+use staticbatch::moe::ordering::OrderingStrategy;
+use staticbatch::moe::token_index::TokenIndex;
+use staticbatch::runtime::artifact::Manifest;
+use staticbatch::runtime::client::Runtime;
+use staticbatch::runtime::executor::{ExecutorPool, Value};
+use staticbatch::util::bench;
+use staticbatch::util::rng::Rng;
+
+fn main() {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("e2e_runtime: artifacts not built (run `make artifacts`); skipping");
+        return;
+    }
+    let rt = Runtime::cpu().expect("pjrt client");
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let dims = manifest.kernel_dims("moe_gemm").expect("dims");
+    let mut pool = ExecutorPool::new(rt, manifest);
+    pool.prepare("moe_gemm").expect("compile");
+
+    let mut rng = Rng::new(3);
+    let tokens: Vec<f32> =
+        (0..dims.seq * dims.d_model).map(|_| rng.normal() as f32 * 0.5).collect();
+    let weights: Vec<f32> = (0..dims.experts * dims.d_model * dims.d_ff)
+        .map(|_| rng.normal() as f32 * 0.05)
+        .collect();
+
+    for scenario in ["balanced", "skewed"] {
+        // routing
+        let mut pairs = Vec::new();
+        for t in 0..dims.seq as u32 {
+            for k in 0..dims.top_k as u32 {
+                let e = match scenario {
+                    "balanced" => (t * dims.top_k as u32 + k) % dims.experts as u32,
+                    _ => (rng.below(8)) as u32, // heavy skew: 8 hot experts
+                };
+                pairs.push((t, e));
+            }
+        }
+        let ti = TokenIndex::build(dims.experts, &pairs);
+        let gates: Vec<Vec<f32>> =
+            ti.index.iter().map(|v| v.iter().map(|_| 0.125f32).collect()).collect();
+
+        // host plan time
+        let t_plan = bench::time("plan", 2, 20, || {
+            std::hint::black_box(kernel_meta::build(
+                &dims,
+                &ti,
+                &gates,
+                OrderingStrategy::HalfInterval,
+            ));
+        });
+        let meta = kernel_meta::build(&dims, &ti, &gates, OrderingStrategy::HalfInterval);
+        let sp = dims.padded_rows();
+        // deployment pattern (§Perf): tokens + weights device-resident,
+        // only the per-step metadata is uploaded on the hot path
+        let tokens_buf = pool
+            .upload(&Value::F32(tokens.clone(), vec![dims.seq, dims.d_model]))
+            .expect("upload tokens");
+        let weights_buf = pool
+            .upload(&Value::F32(weights.clone(), vec![dims.experts, dims.d_model, dims.d_ff]))
+            .expect("upload weights");
+        let flops = 2.0 * (dims.seq * dims.top_k) as f64 * dims.d_model as f64 * dims.d_ff as f64;
+        let (t_exec, _) = bench::time_throughput("exec", 1, 5, || {
+            let m1 = pool.upload(&Value::I32(meta.tile_prefix.clone(), vec![dims.experts])).unwrap();
+            let m2 = pool.upload(&Value::I32(meta.sigma.clone(), vec![dims.experts])).unwrap();
+            let m3 = pool.upload(&Value::I32(meta.token_ids.clone(), vec![sp])).unwrap();
+            let m4 = pool.upload(&Value::I32(meta.num_tiles.to_vec(), vec![1])).unwrap();
+            let args = [&tokens_buf, &weights_buf, &m1, &m2, &m3, &m4];
+            std::hint::black_box(pool.run_buffers("moe_gemm", &args).expect("run"));
+            1
+        });
+        println!(
+            "{scenario:>9}: plan {:>8.1} us | kernel exec {:>9.2} ms | {:.2} CPU-GFLOP/s | plan/exec = {:.4}%",
+            t_plan.mean_us(),
+            t_exec.mean_ms(),
+            flops / t_exec.mean_ns,
+            t_plan.mean_ns / t_exec.mean_ns * 100.0
+        );
+    }
+    if let Some(s) = pool.stats("moe_gemm") {
+        println!(
+            "compile {:.2}s, {} calls, mean exec {:.2} ms",
+            s.compile_s,
+            s.calls,
+            s.total_exec_s / s.calls.max(1) as f64 * 1e3
+        );
+    }
+}

@@ -1,0 +1,5 @@
+//! A4: two-stage empty-task mapping vs dense mapping (Section 4.1).
+fn main() {
+    println!("== A4: empty-task handling ==");
+    print!("{}", staticbatch::reports::empty_tasks_table());
+}

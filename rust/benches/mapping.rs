@@ -1,0 +1,39 @@
+//! A2: mapping mechanism microbench — plus a wallclock benchmark of the
+//! three decode variants on this host CPU.
+use staticbatch::batching::{mapping, tile_prefix};
+use staticbatch::util::bench;
+use staticbatch::util::rng::Rng;
+
+fn main() {
+    println!("== A2: mapping mechanism cost model (simulated H800) ==");
+    print!("{}", staticbatch::reports::mapping_table());
+
+    println!("\n== host wallclock: decode 1M blocks ==");
+    let mut rng = Rng::new(1);
+    for n_tasks in [8usize, 64, 512] {
+        let tiles: Vec<u32> = (0..n_tasks).map(|_| rng.below(64) as u32 + 1).collect();
+        let prefix = tile_prefix::build_from_counts(&tiles);
+        let padded = tile_prefix::pad_to(&prefix, n_tasks.max(32));
+        let total: u32 = tiles.iter().sum();
+        let blocks: Vec<u32> = (0..1_000_000).map(|_| rng.below(total as u64) as u32).collect();
+        let t_scalar = bench::time(&format!("scalar n={n_tasks}"), 1, 5, || {
+            for &b in &blocks {
+                std::hint::black_box(mapping::map_scalar(&prefix, b));
+            }
+        });
+        let t_warp = bench::time(&format!("warp-sim n={n_tasks}"), 1, 5, || {
+            for &b in &blocks {
+                std::hint::black_box(mapping::map_warp(&padded, b));
+            }
+        });
+        let t_bin = bench::time(&format!("binary n={n_tasks}"), 1, 5, || {
+            for &b in &blocks {
+                std::hint::black_box(mapping::map_binary_search(&prefix, b));
+            }
+        });
+        println!(
+            "n_tasks={n_tasks:>4}: scalar {:>8.2} ms  warp-emulated {:>8.2} ms  binary {:>8.2} ms (1M blocks)",
+            t_scalar.mean_ms(), t_warp.mean_ms(), t_bin.mean_ms()
+        );
+    }
+}

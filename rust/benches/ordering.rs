@@ -1,0 +1,5 @@
+//! A3: expert ordering ablation (Section 4.2; half-interval should win).
+fn main() {
+    println!("== A3: expert ordering under skewed load ==");
+    print!("{}", staticbatch::reports::ordering_table(0));
+}

@@ -1,0 +1,8 @@
+//! Regenerates the paper's Table 1 plus the Section 4.4 tile-swizzle
+//! ablation (see DESIGN.md experiment index).
+fn main() {
+    println!("== Table 1: MoE kernel on H20/H800 (simulated) vs paper ==");
+    print!("{}", staticbatch::reports::table1());
+    println!("\n== A6: L2 tile swizzle ablation (footnote-1 workload, H800) ==");
+    print!("{}", staticbatch::reports::swizzle_table());
+}

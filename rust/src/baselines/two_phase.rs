@@ -1,0 +1,67 @@
+//! Two-phase tiling/batching framework baseline (PPoPP'19 [10], Section 2.1).
+//!
+//! Like ours it precomputes the block→tile mapping on the host and supports
+//! per-task tiling strategies; unlike ours the mapping is a *full array with
+//! one entry per thread block*, so it pays:
+//! * H2D copy proportional to the grid size every step, and
+//! * one global-memory mapping read per block with poor locality (the
+//!   entry is touched exactly once, so reuse comes only from cache lines).
+
+use crate::baselines::MoeImpl;
+use crate::moe::config::MoeShape;
+use crate::moe::planner::Planner;
+use crate::moe::routing::ExpertLoad;
+use crate::sim::kernel_sim::{operand_bytes, tiles_for_plan};
+use crate::sim::overhead::MappingMode;
+use crate::sim::specs::GpuSpec;
+use crate::sim::trace::SimResult;
+use crate::sim::wave;
+
+pub struct TwoPhase;
+
+impl MoeImpl for TwoPhase {
+    fn name(&self) -> &'static str {
+        "two-phase map array [10]"
+    }
+
+    fn simulate(&self, shape: &MoeShape, load: &ExpertLoad, spec: &GpuSpec) -> SimResult {
+        // same plan quality as ours (per-task tiling, ordering, σ-elision):
+        // the delta is purely the mapping mechanism
+        let plan = Planner::new(*shape).plan(load);
+        let blocks = plan.total_tiles() as usize;
+        let mode = MappingMode::PerBlockArray { blocks };
+        let decode = mode.decode_ns(spec, operand_bytes(&plan));
+        let tiles = tiles_for_plan(&plan, |_| decode);
+        let host = mode.host_time_s(spec) + mode.launch_time_s(spec);
+        wave::run_waves(&tiles, spec, host)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::Ours;
+    use crate::moe::routing::LoadScenario;
+
+    #[test]
+    fn slower_than_ours_by_mapping_overhead_only() {
+        let shape = MoeShape::paper_table1();
+        let spec = GpuSpec::h800();
+        for sc in [LoadScenario::Balanced, LoadScenario::Best, LoadScenario::Worst] {
+            let load = sc.counts(&shape, 0);
+            let ours = Ours.simulate(&shape, &load, &spec);
+            let tp = TwoPhase.simulate(&shape, &load, &spec);
+            assert!(tp.time_s >= ours.time_s, "{sc:?}");
+            // same tiling quality: padding waste identical
+            assert!((tp.padding_waste() - ours.padding_waste()).abs() < 1e-9, "{sc:?}");
+        }
+    }
+
+    #[test]
+    fn h2d_grows_with_grid() {
+        let spec = GpuSpec::h800();
+        let small = MappingMode::PerBlockArray { blocks: 2560 }.host_time_s(&spec);
+        let big = MappingMode::PerBlockArray { blocks: 1 << 20 }.host_time_s(&spec);
+        assert!(big > small * 10.0);
+    }
+}

@@ -1,0 +1,199 @@
+//! Algorithm 3: the batching framework itself.
+//!
+//! A [`StaticBatch`] owns N heterogeneous task descriptors and the
+//! two-stage mapping built over them.  `run` launches the conceptual grid:
+//! for every thread block it decompresses the mapping and dispatches to the
+//! task's "device function" — a Rust closure registered per [`TaskKind`]
+//! dispatch id, mirroring the `taskFunc_1..K` switch in the paper.
+//!
+//! The framework is generic over the execution context `C`, so the same
+//! dispatch structure drives (a) the CPU numeric executor in
+//! [`crate::moe::cpu_exec`] and (b) pure accounting runs in the simulator.
+
+use std::collections::BTreeMap;
+
+use crate::batching::mapping::TileMapping;
+use crate::batching::task::TaskDescriptor;
+use crate::batching::two_stage::TwoStageMap;
+
+/// A "device function": handles one tile of one task.
+/// Arguments: context, task descriptor, task index, tile index within task.
+pub type TaskFunc<C> = Box<dyn Fn(&mut C, &TaskDescriptor, u32, u32)>;
+
+/// A statically batched set of heterogeneous tasks, ready to "launch".
+pub struct StaticBatch<C> {
+    tasks: Vec<TaskDescriptor>,
+    map: TwoStageMap,
+    funcs: BTreeMap<usize, TaskFunc<C>>,
+}
+
+impl<C> StaticBatch<C> {
+    /// Build the batch: computes ν(T) per task, σ over non-empty tasks, and
+    /// the compressed TilePrefix — everything Algorithm 1 does on the host.
+    pub fn new(tasks: Vec<TaskDescriptor>) -> Self {
+        let map = TwoStageMap::from_tasks(&tasks);
+        StaticBatch { tasks, map, funcs: BTreeMap::new() }
+    }
+
+    /// Register the device function for a dispatch id (`taskFunc_i`).
+    pub fn register(&mut self, dispatch_id: usize, f: TaskFunc<C>) -> &mut Self {
+        self.funcs.insert(dispatch_id, f);
+        self
+    }
+
+    pub fn tasks(&self) -> &[TaskDescriptor] {
+        &self.tasks
+    }
+
+    pub fn mapping(&self) -> &TwoStageMap {
+        &self.map
+    }
+
+    /// Total thread blocks the fused kernel launches.
+    pub fn total_tiles(&self) -> u32 {
+        self.map.total_tiles
+    }
+
+    /// Decompress the mapping for one block (Algorithm 4).
+    pub fn map_block(&self, block: u32) -> TileMapping {
+        self.map.map(block)
+    }
+
+    /// "Launch" the fused kernel: every block decodes its mapping and runs
+    /// its task's device function (Algorithm 3 body). Returns the number of
+    /// blocks executed.
+    ///
+    /// Panics if a task kind has no registered function — a batch with an
+    /// unhandled kind is a build error, same as a missing `taskFunc_i`
+    /// symbol at CUDA link time.
+    pub fn run(&self, ctx: &mut C) -> u32 {
+        for block in 0..self.map.total_tiles {
+            let m = self.map.map(block);
+            let task = &self.tasks[m.task as usize];
+            let f = self
+                .funcs
+                .get(&task.kind.dispatch_id())
+                .unwrap_or_else(|| panic!("no device function for {:?}", task.kind));
+            f(ctx, task, m.task, m.tile);
+        }
+        self.map.total_tiles
+    }
+
+    /// Like `run`, but through the warp-emulated SIMT mapping; returns the
+    /// total number of warp passes (decode cost) alongside the block count.
+    pub fn run_simt(&self, ctx: &mut C) -> (u32, usize) {
+        let mut passes = 0;
+        for block in 0..self.map.total_tiles {
+            let (m, p) = self.map.map_simt(block);
+            passes += p;
+            let task = &self.tasks[m.task as usize];
+            let f = self
+                .funcs
+                .get(&task.kind.dispatch_id())
+                .unwrap_or_else(|| panic!("no device function for {:?}", task.kind));
+            f(ctx, task, m.task, m.tile);
+        }
+        (self.map.total_tiles, passes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::task::TaskKind;
+
+    fn gemm(rows: usize, strategy: usize) -> TaskDescriptor {
+        TaskDescriptor {
+            kind: TaskKind::Gemm { strategy },
+            rows,
+            cols: 128,
+            inner: 32,
+            tile_rows: 64,
+            tile_cols: 128,
+        }
+    }
+
+    fn reduce(rows: usize) -> TaskDescriptor {
+        TaskDescriptor {
+            kind: TaskKind::ReduceSum,
+            rows,
+            cols: 1,
+            inner: 256,
+            tile_rows: 32,
+            tile_cols: 1,
+        }
+    }
+
+    /// Context that records which (task, tile, kind) tuples executed.
+    #[derive(Default)]
+    struct Recorder {
+        calls: Vec<(u32, u32, usize)>,
+    }
+
+    fn build_batch(tasks: Vec<TaskDescriptor>) -> StaticBatch<Recorder> {
+        let mut b = StaticBatch::new(tasks);
+        for id in [
+            TaskKind::ReduceSum.dispatch_id(),
+            TaskKind::ElementWise.dispatch_id(),
+            TaskKind::Gemm { strategy: 0 }.dispatch_id(),
+            TaskKind::Gemm { strategy: 1 }.dispatch_id(),
+        ] {
+            b.register(
+                id,
+                Box::new(move |c: &mut Recorder, _t, task, tile| {
+                    c.calls.push((task, tile, id));
+                }),
+            );
+        }
+        b
+    }
+
+    #[test]
+    fn heterogeneous_batch_dispatches_by_kind() {
+        // GEMM(128 rows, strat 0) = 2 tiles; reduce(64 rows) = 2 tiles;
+        // GEMM(64 rows, strat 1) = 1 tile
+        let batch = build_batch(vec![gemm(128, 0), reduce(64), gemm(64, 1)]);
+        let mut ctx = Recorder::default();
+        let blocks = batch.run(&mut ctx);
+        assert_eq!(blocks, 5);
+        let g0 = TaskKind::Gemm { strategy: 0 }.dispatch_id();
+        let g1 = TaskKind::Gemm { strategy: 1 }.dispatch_id();
+        let rs = TaskKind::ReduceSum.dispatch_id();
+        assert_eq!(
+            ctx.calls,
+            vec![(0, 0, g0), (0, 1, g0), (1, 0, rs), (1, 1, rs), (2, 0, g1)]
+        );
+    }
+
+    #[test]
+    fn empty_tasks_never_dispatch() {
+        let batch = build_batch(vec![gemm(0, 0), reduce(32), gemm(0, 1)]);
+        let mut ctx = Recorder::default();
+        batch.run(&mut ctx);
+        assert!(ctx.calls.iter().all(|&(task, _, _)| task == 1));
+        assert_eq!(ctx.calls.len(), 1);
+    }
+
+    #[test]
+    fn simt_run_agrees_with_scalar_run() {
+        let batch = build_batch(vec![gemm(300, 0), reduce(100), gemm(64, 1), reduce(0)]);
+        let mut a = Recorder::default();
+        let mut b = Recorder::default();
+        batch.run(&mut a);
+        let (_, passes) = batch.run_simt(&mut b);
+        assert_eq!(a.calls, b.calls);
+        assert!(passes >= b.calls.len()); // at least one pass per block
+    }
+
+    #[test]
+    #[should_panic(expected = "no device function")]
+    fn unregistered_kind_panics() {
+        let mut batch: StaticBatch<Recorder> = StaticBatch::new(vec![gemm(64, 7)]);
+        batch.register(
+            TaskKind::ReduceSum.dispatch_id(),
+            Box::new(|_, _, _, _| {}),
+        );
+        let mut ctx = Recorder::default();
+        batch.run(&mut ctx);
+    }
+}

@@ -1,0 +1,247 @@
+//! Algorithm 2: decompress the task mapping with a warp.
+//!
+//! Given the inclusive `TilePrefix` array and a thread block index `B`, find
+//! `(h, l)`: the task this block belongs to and the tile index inside it.
+//! The SIMT formulation: every lane `t` votes `B >= TilePrefix[t]`; the
+//! number of set bits in the ballot is `h`; `l = B - TilePrefix[h-1]`.
+//!
+//! Three variants, all verified against each other:
+//! * [`map_warp`]   — the paper's Algorithm 2, run on the exact 32-lane
+//!   warp emulation; multi-pass loop for N > 32 ("let each warp loop this
+//!   algorithm several times to scan the whole TilePrefix array").
+//! * [`map_two_level`] — the 2-level variant for very large N the paper
+//!   mentions and omits.
+//! * [`map_scalar`] — branchless scalar reference (also the production path
+//!   on CPU, and what a single thread would do).
+
+use crate::batching::tile_prefix::{TwoLevelPrefix, PAD_MAX};
+use crate::batching::warp::{Warp, WARP_SIZE};
+
+/// The decompressed mapping for one thread block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileMapping {
+    /// Task index `h` (index into whatever task list the prefix was built over).
+    pub task: u32,
+    /// Tile index `l` inside the task.
+    pub tile: u32,
+}
+
+/// Scalar reference: first task whose inclusive prefix exceeds `block`.
+pub fn map_scalar(prefix: &[u32], block: u32) -> TileMapping {
+    let mut h = 0u32;
+    for &p in prefix {
+        if p != PAD_MAX && block >= p {
+            h += 1;
+        } else {
+            break;
+        }
+    }
+    let base = if h > 0 { prefix[(h - 1) as usize] } else { 0 };
+    TileMapping { task: h, tile: block - base }
+}
+
+/// Binary-search variant (what a "smart" baseline would do per thread; used
+/// by the mapping microbench to compare against the warp-vote cost model).
+pub fn map_binary_search(prefix: &[u32], block: u32) -> TileMapping {
+    // partition_point over the real (non-sentinel) prefix
+    let n = prefix.iter().position(|&x| x == PAD_MAX).unwrap_or(prefix.len());
+    let h = prefix[..n].partition_point(|&p| block >= p) as u32;
+    let base = if h > 0 { prefix[(h - 1) as usize] } else { 0 };
+    TileMapping { task: h, tile: block - base }
+}
+
+/// Algorithm 2, verbatim over the warp emulation, with the multi-pass loop
+/// for N > WARP_SIZE.  Returns the mapping plus the number of warp passes
+/// executed (the simulator charges decode cost per pass).
+pub fn map_warp(prefix: &[u32], block: u32) -> (TileMapping, usize) {
+    let mut passes = 0usize;
+    let mut h_total = 0u32;
+    for chunk in prefix.chunks(WARP_SIZE) {
+        passes += 1;
+        // p <- B >= TilePrefix[t]  (lane t; sentinel/pad lanes vote false)
+        let mask = Warp::ballot(|lane| {
+            lane < chunk.len() && chunk[lane] != PAD_MAX && block >= chunk[lane]
+        });
+        let h = Warp::popc(mask);
+        h_total += h;
+        // if any lane in this chunk voted false, the boundary is here: stop.
+        if (h as usize) < chunk.len().min(WARP_SIZE) {
+            break;
+        }
+    }
+    let base = if h_total > 0 { prefix[(h_total - 1) as usize] } else { 0 };
+    (TileMapping { task: h_total, tile: block - base }, passes)
+}
+
+/// 2-level lookup: one warp pass over L1 finds the group, one pass over the
+/// group's L0 slice finds the task.  Returns (mapping, passes).
+pub fn map_two_level(tl: &TwoLevelPrefix, block: u32) -> (TileMapping, usize) {
+    let mut passes = 0usize;
+    // pass(es) over L1 — groups whose *total* is <= block are fully below us
+    let mut group = 0u32;
+    for chunk in tl.l1.chunks(WARP_SIZE) {
+        passes += 1;
+        let mask = Warp::ballot(|lane| lane < chunk.len() && block >= chunk[lane]);
+        let g = Warp::popc(mask);
+        group += g;
+        if (g as usize) < chunk.len().min(WARP_SIZE) {
+            break;
+        }
+    }
+    let group = group as usize;
+    let start = group * tl.group;
+    let end = ((group + 1) * tl.group).min(tl.l0.len());
+    // pass over the selected L0 slice
+    let slice = &tl.l0[start..end];
+    let mut h_local = 0u32;
+    for chunk in slice.chunks(WARP_SIZE) {
+        passes += 1;
+        let mask = Warp::ballot(|lane| lane < chunk.len() && block >= chunk[lane]);
+        let h = Warp::popc(mask);
+        h_local += h;
+        if (h as usize) < chunk.len().min(WARP_SIZE) {
+            break;
+        }
+    }
+    let h = start as u32 + h_local;
+    let base = if h > 0 { tl.l0[(h - 1) as usize] } else { 0 };
+    (TileMapping { task: h, tile: block - base }, passes)
+}
+
+/// Decompress the whole grid: mapping for every block `0..total`.
+/// This is what the CPU executor iterates; the simulator charges per-block
+/// decode costs from the pass counts instead.
+pub fn map_all(prefix: &[u32], total: u32) -> Vec<TileMapping> {
+    (0..total).map(|b| map_scalar(prefix, b)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::tile_prefix::{build_from_counts, pad_to, pad_to_max};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn paper_example_small() {
+        // tasks with 2, 1, 3 tiles -> prefix [2, 3, 6]
+        let prefix = build_from_counts(&[2, 1, 3]);
+        let expect = [
+            (0, 0, 0),
+            (1, 0, 1),
+            (2, 1, 0),
+            (3, 2, 0),
+            (4, 2, 1),
+            (5, 2, 2),
+        ];
+        for (b, task, tile) in expect {
+            let m = map_scalar(&prefix, b);
+            assert_eq!((m.task, m.tile), (task, tile), "block {b}");
+        }
+    }
+
+    #[test]
+    fn warp_matches_scalar_padded() {
+        let prefix = pad_to(&build_from_counts(&[2, 1, 3]), WARP_SIZE);
+        for b in 0..6 {
+            let (m, passes) = map_warp(&prefix, b);
+            assert_eq!(m, map_scalar(&prefix, b));
+            assert_eq!(passes, 1);
+        }
+    }
+
+    #[test]
+    fn warp_matches_scalar_sentinel_pad() {
+        let prefix = pad_to_max(&build_from_counts(&[4, 4]), WARP_SIZE);
+        for b in 0..8 {
+            let (m, _) = map_warp(&prefix, b);
+            assert_eq!(m, map_scalar(&prefix, b));
+        }
+    }
+
+    #[test]
+    fn multi_pass_for_large_n() {
+        // 100 tasks, 1 tile each: block 75 -> task 75; needs 3 warp passes
+        let tiles = vec![1u32; 100];
+        let prefix = build_from_counts(&tiles);
+        let (m, passes) = map_warp(&prefix, 75);
+        assert_eq!(m, TileMapping { task: 75, tile: 0 });
+        assert_eq!(passes, 3);
+        // block 5 stops after the first pass
+        let (_, p2) = map_warp(&prefix, 5);
+        assert_eq!(p2, 1);
+    }
+
+    #[test]
+    fn binary_search_matches_scalar() {
+        let prefix = build_from_counts(&[3, 0, 0, 5, 1, 0, 2]);
+        let total = *prefix.last().unwrap();
+        for b in 0..total {
+            assert_eq!(map_binary_search(&prefix, b), map_scalar(&prefix, b), "b={b}");
+        }
+    }
+
+    #[test]
+    fn two_level_matches_scalar() {
+        let mut rng = Rng::new(5);
+        let tiles: Vec<u32> = (0..512).map(|_| rng.below(4) as u32).collect();
+        let tl = TwoLevelPrefix::build(&tiles, 32);
+        let prefix = build_from_counts(&tiles);
+        let total = tl.total_tiles();
+        for b in (0..total).step_by(7) {
+            let (m, passes) = map_two_level(&tl, b);
+            assert_eq!(m, map_scalar(&prefix, b), "b={b}");
+            // 512 tasks: <= 1 L1 pass (16 entries) + 1 L0 pass (32 entries)
+            assert!(passes <= 2, "passes={passes}");
+        }
+    }
+
+    #[test]
+    fn zero_tile_tasks_are_skipped() {
+        // middle task is empty: prefix [2, 2, 4] — block 2 must map to task 2
+        let prefix = build_from_counts(&[2, 0, 2]);
+        let m = map_scalar(&prefix, 2);
+        assert_eq!(m, TileMapping { task: 2, tile: 0 });
+        let (mw, _) = map_warp(&pad_to(&prefix, WARP_SIZE), 2);
+        assert_eq!(mw, m);
+    }
+
+    #[test]
+    fn property_all_variants_agree_and_invert() {
+        prop::check(
+            "mapping-inverts-prefix",
+            200,
+            |g| {
+                let n = 1 + g.rng.usize_below(g.size * 4 + 1);
+                let tiles: Vec<u32> = (0..n).map(|_| g.rng.below(6) as u32).collect();
+                tiles
+            },
+            |tiles| {
+                let prefix = build_from_counts(tiles);
+                let total: u32 = tiles.iter().sum();
+                let padded = pad_to(&prefix, WARP_SIZE.max(prefix.len()));
+                // reconstruct per-task tile counts from the mapping
+                let mut seen = vec![0u32; tiles.len()];
+                for b in 0..total {
+                    let m = map_scalar(&prefix, b);
+                    let (mw, _) = map_warp(&padded, b);
+                    let mb = map_binary_search(&prefix, b);
+                    if m != mw || m != mb {
+                        return Err(format!("variants disagree at block {b}: {m:?} {mw:?} {mb:?}"));
+                    }
+                    if m.task as usize >= tiles.len() {
+                        return Err(format!("task OOB at block {b}: {m:?}"));
+                    }
+                    if m.tile != seen[m.task as usize] {
+                        return Err(format!("tile order broken at block {b}: {m:?}"));
+                    }
+                    seen[m.task as usize] += 1;
+                }
+                if seen != *tiles {
+                    return Err(format!("coverage mismatch: {seen:?} vs {tiles:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,19 @@
+//! The paper's static batching framework (Sections 3 and 4.1).
+//!
+//! * [`task`] — task descriptors and the tile-count function ν(T).
+//! * [`tile_prefix`] — Algorithm 1: the compressed `TilePrefix` array.
+//! * [`warp`] — an exact 32-lane SIMT warp emulation (ballot vote,
+//!   population count, broadcast) so Algorithm 2 runs *as written*.
+//! * [`mapping`] — Algorithm 2: warp-vote decompression of the mapping,
+//!   plus the multi-pass loop for N > 32 and the 2-level prefix the paper
+//!   mentions but omits (N ≥ 512).
+//! * [`two_stage`] — Algorithm 4: the σ injection that elides empty tasks.
+//! * [`framework`] — Algorithm 3: the batch builder + per-block dispatch of
+//!   heterogeneous "device functions".
+
+pub mod framework;
+pub mod mapping;
+pub mod task;
+pub mod tile_prefix;
+pub mod two_stage;
+pub mod warp;

@@ -1,0 +1,141 @@
+//! Task descriptors for the batching framework.
+//!
+//! A *task* is one irregular workload inside a batch (paper Section 3).
+//! Tasks are heterogeneous: different operation kinds and different tiling
+//! strategies can coexist in one fused kernel.  The only thing the framework
+//! requires is that ν(T) — the number of tiles a task needs — is known
+//! before launch.
+
+/// Operation kind of a task. GEMM tiles carry their tiling strategy index so
+/// two GEMM tasks with different strategies dispatch to different device
+/// functions, exactly like the paper's `taskFunc_1..K`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    /// GEMM with tiling strategy `strategy` (index into a tiling catalog).
+    Gemm { strategy: usize },
+    /// Row-wise reduction (sum) — memory bound.
+    ReduceSum,
+    /// Element-wise map — memory bound, trivially tileable.
+    ElementWise,
+}
+
+impl TaskKind {
+    /// Stable small integer id used by dispatch tables (the `i` in Alg. 3).
+    pub fn dispatch_id(&self) -> usize {
+        match self {
+            TaskKind::Gemm { strategy } => 16 + strategy,
+            TaskKind::ReduceSum => 0,
+            TaskKind::ElementWise => 1,
+        }
+    }
+}
+
+/// A task inside a batch: kind + the geometry the tile count derives from.
+#[derive(Clone, Debug)]
+pub struct TaskDescriptor {
+    pub kind: TaskKind,
+    /// Rows of the task's output (M for GEMM, elements for 1-D ops).
+    pub rows: usize,
+    /// Columns of the task's output (N for GEMM, 1 for reductions).
+    pub cols: usize,
+    /// Inner/K extent (GEMM reduction dim; reduction length for ReduceSum).
+    pub inner: usize,
+    /// Tile shape this task was assigned (rows per tile, cols per tile).
+    pub tile_rows: usize,
+    pub tile_cols: usize,
+}
+
+impl TaskDescriptor {
+    /// ν(T): number of tiles (thread blocks) this task requires.
+    /// Zero for empty tasks — the case Algorithm 4 exists for.
+    pub fn num_tiles(&self) -> usize {
+        if self.rows == 0 || self.cols == 0 {
+            return 0;
+        }
+        self.rows.div_ceil(self.tile_rows) * self.cols.div_ceil(self.tile_cols)
+    }
+
+    /// Tiles along the row dimension (used to split a linear tile index).
+    pub fn tiles_m(&self) -> usize {
+        self.rows.div_ceil(self.tile_rows)
+    }
+
+    pub fn tiles_n(&self) -> usize {
+        self.cols.div_ceil(self.tile_cols)
+    }
+
+    /// FLOPs this task performs (2·M·N·K for GEMM; reads for mem-bound ops).
+    pub fn flops(&self) -> u64 {
+        match self.kind {
+            TaskKind::Gemm { .. } => 2 * self.rows as u64 * self.cols as u64 * self.inner as u64,
+            TaskKind::ReduceSum => (self.rows as u64) * (self.inner as u64),
+            TaskKind::ElementWise => (self.rows as u64) * (self.cols as u64),
+        }
+    }
+
+    /// Bytes moved from/to HBM (fp32/bf16-agnostic: caller scales by dtype).
+    pub fn elems_moved(&self) -> u64 {
+        match self.kind {
+            TaskKind::Gemm { .. } => {
+                // A (M·K) + B (K·N, read once per tile wave under L2 reuse
+                // approximation) + C (M·N)
+                self.rows as u64 * self.inner as u64
+                    + self.inner as u64 * self.cols as u64
+                    + self.rows as u64 * self.cols as u64
+            }
+            TaskKind::ReduceSum => self.rows as u64 * self.inner as u64 + self.rows as u64,
+            TaskKind::ElementWise => 2 * self.rows as u64 * self.cols as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gemm(rows: usize, cols: usize, tile: (usize, usize)) -> TaskDescriptor {
+        TaskDescriptor {
+            kind: TaskKind::Gemm { strategy: 0 },
+            rows,
+            cols,
+            inner: 64,
+            tile_rows: tile.0,
+            tile_cols: tile.1,
+        }
+    }
+
+    #[test]
+    fn tile_count_exact_division() {
+        assert_eq!(gemm(256, 256, (128, 128)).num_tiles(), 4);
+    }
+
+    #[test]
+    fn tile_count_rounds_up() {
+        assert_eq!(gemm(129, 1, (128, 128)).num_tiles(), 2);
+        assert_eq!(gemm(1, 1, (128, 128)).num_tiles(), 1);
+    }
+
+    #[test]
+    fn empty_task_has_zero_tiles() {
+        assert_eq!(gemm(0, 256, (128, 128)).num_tiles(), 0);
+    }
+
+    #[test]
+    fn dispatch_ids_unique_across_kinds() {
+        let ids = [
+            TaskKind::ReduceSum.dispatch_id(),
+            TaskKind::ElementWise.dispatch_id(),
+            TaskKind::Gemm { strategy: 0 }.dispatch_id(),
+            TaskKind::Gemm { strategy: 1 }.dispatch_id(),
+        ];
+        let mut sorted = ids.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), ids.len());
+    }
+
+    #[test]
+    fn flops_gemm() {
+        assert_eq!(gemm(128, 128, (128, 128)).flops(), 2 * 128 * 128 * 64);
+    }
+}

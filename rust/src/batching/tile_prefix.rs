@@ -1,0 +1,193 @@
+//! Algorithm 1: the compressed `TilePrefix` auxiliary array.
+//!
+//! `TilePrefix[i] = Σ_{j<=i} ν(T_j)` — the inclusive prefix sum of per-task
+//! tile counts.  Its length equals the number of *tasks*, not the number of
+//! thread blocks, which is the whole point: the prior art (PPoPP'19 [10])
+//! ships a per-block array whose H2D copy and cache behaviour the paper's
+//! Section 3.1 measures as the bottleneck.
+
+use crate::batching::task::TaskDescriptor;
+
+/// Sentinel used to pad the array up to warp size (paper: "padding with the
+/// maximum possible value or repeating its last element").
+pub const PAD_MAX: u32 = u32::MAX;
+
+/// Build the inclusive prefix sum of tile counts (serial version).
+pub fn build(tasks: &[TaskDescriptor]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(tasks.len());
+    let mut acc = 0u32;
+    for t in tasks {
+        acc += t.num_tiles() as u32;
+        out.push(acc);
+    }
+    out
+}
+
+/// Build from raw tile counts.
+pub fn build_from_counts(tiles: &[u32]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(tiles.len());
+    let mut acc = 0u32;
+    for &t in tiles {
+        acc += t;
+        out.push(acc);
+    }
+    out
+}
+
+/// Work-efficient parallel prefix sum (Blelloch scan) — the paper notes the
+/// prefix "can be computed with parallel implementation"; this is the
+/// host-side analog, chunked across a thread pool for large N.
+pub fn build_parallel(tiles: &[u32], pool: &crate::util::threadpool::ThreadPool) -> Vec<u32> {
+    let n = tiles.len();
+    if n < 4096 {
+        return build_from_counts(tiles);
+    }
+    let chunks = pool.workers().max(1);
+    let chunk = n.div_ceil(chunks);
+    // phase 1: per-chunk local inclusive scans
+    let parts: Vec<Vec<u32>> = pool.map(
+        tiles
+            .chunks(chunk)
+            .map(|c| c.to_vec())
+            .collect::<Vec<_>>(),
+        |c| {
+            let mut acc = 0u32;
+            c.iter()
+                .map(|&x| {
+                    acc += x;
+                    acc
+                })
+                .collect::<Vec<u32>>()
+        },
+    );
+    // phase 2: carry chunk totals across
+    let mut out = Vec::with_capacity(n);
+    let mut carry = 0u32;
+    for part in parts {
+        let total = part.last().copied().unwrap_or(0);
+        out.extend(part.into_iter().map(|x| x + carry));
+        carry += total;
+    }
+    out
+}
+
+/// Pad to `width` (usually the warp size, 32) by repeating the last element.
+/// An empty prefix pads with 0 (no tasks → every vote fails).
+pub fn pad_to(prefix: &[u32], width: usize) -> Vec<u32> {
+    let mut out = prefix.to_vec();
+    let last = out.last().copied().unwrap_or(0);
+    while out.len() < width {
+        out.push(last);
+    }
+    out
+}
+
+/// Pad with the sentinel instead (the alternative the paper names).
+pub fn pad_to_max(prefix: &[u32], width: usize) -> Vec<u32> {
+    let mut out = prefix.to_vec();
+    while out.len() < width {
+        out.push(PAD_MAX);
+    }
+    out
+}
+
+/// Total number of tiles (thread blocks) a prefix describes.
+pub fn total_tiles(prefix: &[u32]) -> u32 {
+    prefix.iter().rev().find(|&&x| x != PAD_MAX).copied().unwrap_or(0)
+}
+
+/// Two-level prefix for very large N (the paper's "2-level or multi-level
+/// TilePrefix arrays, which is omitted in this paper" — implemented here).
+///
+/// Level-1 entries summarize fixed-width groups of level-0 entries:
+/// `l1[g] = l0[min((g+1)*group, n) - 1]` (inclusive).  Lookup first scans
+/// l1 to find the group, then scans only that group's l0 slice — two warp
+/// passes instead of ⌈N/32⌉.
+#[derive(Clone, Debug)]
+pub struct TwoLevelPrefix {
+    pub l0: Vec<u32>,
+    pub l1: Vec<u32>,
+    pub group: usize,
+}
+
+impl TwoLevelPrefix {
+    pub fn build(tiles: &[u32], group: usize) -> Self {
+        assert!(group > 0);
+        let l0 = build_from_counts(tiles);
+        let l1 = l0
+            .chunks(group)
+            .map(|c| *c.last().unwrap())
+            .collect();
+        TwoLevelPrefix { l0, l1, group }
+    }
+
+    pub fn total_tiles(&self) -> u32 {
+        self.l0.last().copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::task::{TaskDescriptor, TaskKind};
+    use crate::util::rng::Rng;
+    use crate::util::threadpool::ThreadPool;
+
+    fn gemm_rows(rows: usize) -> TaskDescriptor {
+        TaskDescriptor {
+            kind: TaskKind::Gemm { strategy: 0 },
+            rows,
+            cols: 128,
+            inner: 64,
+            tile_rows: 128,
+            tile_cols: 128,
+        }
+    }
+
+    #[test]
+    fn matches_manual_sum() {
+        let tasks: Vec<_> = [256, 128, 384].iter().map(|&r| gemm_rows(r)).collect();
+        assert_eq!(build(&tasks), vec![2, 3, 6]);
+    }
+
+    #[test]
+    fn empty_tasks_contribute_zero() {
+        let tasks: Vec<_> = [128, 0, 128].iter().map(|&r| gemm_rows(r)).collect();
+        assert_eq!(build(&tasks), vec![1, 1, 2]);
+    }
+
+    #[test]
+    fn pad_repeats_last() {
+        assert_eq!(pad_to(&[2, 5], 4), vec![2, 5, 5, 5]);
+        assert_eq!(pad_to(&[], 3), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn pad_max_uses_sentinel() {
+        let p = pad_to_max(&[2, 5], 4);
+        assert_eq!(p, vec![2, 5, PAD_MAX, PAD_MAX]);
+        assert_eq!(total_tiles(&p), 5);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut rng = Rng::new(7);
+        let tiles: Vec<u32> = (0..10_000).map(|_| rng.below(8) as u32).collect();
+        let pool = ThreadPool::new(4);
+        assert_eq!(build_parallel(&tiles, &pool), build_from_counts(&tiles));
+    }
+
+    #[test]
+    fn two_level_consistent() {
+        let mut rng = Rng::new(3);
+        let tiles: Vec<u32> = (0..512).map(|_| rng.below(5) as u32).collect();
+        let tl = TwoLevelPrefix::build(&tiles, 32);
+        assert_eq!(tl.l1.len(), 16);
+        assert_eq!(tl.total_tiles(), tiles.iter().sum::<u32>());
+        // each l1 entry equals the last l0 entry of its group
+        for (g, &v) in tl.l1.iter().enumerate() {
+            let end = ((g + 1) * 32).min(tl.l0.len()) - 1;
+            assert_eq!(v, tl.l0[end]);
+        }
+    }
+}

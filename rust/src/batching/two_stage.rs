@@ -1,0 +1,163 @@
+//! Algorithm 4: the two-stage mapping for batches with empty tasks.
+//!
+//! Stage 1 (Algorithm 2) maps `block -> non-empty task index h`; stage 2
+//! applies the injection `σ: [M] -> [N]` mapping the non-empty index back to
+//! the real task index.  The `TilePrefix` array is built over non-empty
+//! tasks only, so empty tasks cost nothing at decode time — the paper's fix
+//! for MoE steps where some experts receive no tokens.
+
+use crate::batching::mapping::{map_scalar, map_warp, TileMapping};
+use crate::batching::task::TaskDescriptor;
+use crate::batching::tile_prefix;
+use crate::batching::warp::WARP_SIZE;
+
+/// The σ injection plus the compressed prefix over non-empty tasks.
+#[derive(Clone, Debug)]
+pub struct TwoStageMap {
+    /// `sigma[i]` = real task index of the i-th non-empty task.
+    pub sigma: Vec<u32>,
+    /// Inclusive tile prefix over non-empty tasks, padded to warp width.
+    pub tile_prefix: Vec<u32>,
+    /// Number of non-empty tasks (M).
+    pub num_nonempty: usize,
+    /// Total tiles (thread blocks) to launch.
+    pub total_tiles: u32,
+}
+
+impl TwoStageMap {
+    /// Build σ and the compressed prefix from per-task tile counts.
+    pub fn from_tile_counts(tiles: &[u32]) -> Self {
+        let mut sigma = Vec::new();
+        let mut nonempty_tiles = Vec::new();
+        for (i, &t) in tiles.iter().enumerate() {
+            if t > 0 {
+                sigma.push(i as u32);
+                nonempty_tiles.push(t);
+            }
+        }
+        let prefix = tile_prefix::build_from_counts(&nonempty_tiles);
+        let total = prefix.last().copied().unwrap_or(0);
+        let width = WARP_SIZE.max(prefix.len());
+        TwoStageMap {
+            sigma,
+            tile_prefix: tile_prefix::pad_to(&prefix, width),
+            num_nonempty: nonempty_tiles.len(),
+            total_tiles: total,
+        }
+    }
+
+    pub fn from_tasks(tasks: &[TaskDescriptor]) -> Self {
+        let tiles: Vec<u32> = tasks.iter().map(|t| t.num_tiles() as u32).collect();
+        Self::from_tile_counts(&tiles)
+    }
+
+    /// Algorithm 4 for one block: `(h, l) <- mapping(...); h̃ <- σ(h)`.
+    pub fn map(&self, block: u32) -> TileMapping {
+        debug_assert!(block < self.total_tiles);
+        let m = map_scalar(&self.tile_prefix, block);
+        TileMapping { task: self.sigma[m.task as usize], tile: m.tile }
+    }
+
+    /// Same through the warp-emulated Algorithm 2 (returns warp passes too).
+    pub fn map_simt(&self, block: u32) -> (TileMapping, usize) {
+        let (m, passes) = map_warp(&self.tile_prefix, block);
+        (
+            TileMapping { task: self.sigma[m.task as usize], tile: m.tile },
+            passes,
+        )
+    }
+
+    /// Bytes of metadata shipped to the device per step: σ + prefix.
+    /// The per-block-array baseline ships `4 * total_tiles` instead — the
+    /// comparison the mapping microbench (A2) quantifies.
+    pub fn metadata_bytes(&self) -> usize {
+        4 * (self.sigma.len() + self.tile_prefix.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn no_empty_tasks_is_identity_sigma() {
+        let m = TwoStageMap::from_tile_counts(&[2, 1, 3]);
+        assert_eq!(m.sigma, vec![0, 1, 2]);
+        assert_eq!(m.num_nonempty, 3);
+        assert_eq!(m.total_tiles, 6);
+        assert_eq!(m.map(2).task, 1);
+    }
+
+    #[test]
+    fn empty_tasks_elided() {
+        // tasks: [0, 2, 0, 0, 3, 0] -> non-empty {1, 4}
+        let m = TwoStageMap::from_tile_counts(&[0, 2, 0, 0, 3, 0]);
+        assert_eq!(m.sigma, vec![1, 4]);
+        assert_eq!(m.total_tiles, 5);
+        assert_eq!(m.map(0), TileMapping { task: 1, tile: 0 });
+        assert_eq!(m.map(1), TileMapping { task: 1, tile: 1 });
+        assert_eq!(m.map(2), TileMapping { task: 4, tile: 0 });
+        assert_eq!(m.map(4), TileMapping { task: 4, tile: 2 });
+    }
+
+    #[test]
+    fn all_empty_launches_nothing() {
+        let m = TwoStageMap::from_tile_counts(&[0, 0, 0]);
+        assert_eq!(m.total_tiles, 0);
+        assert_eq!(m.num_nonempty, 0);
+    }
+
+    #[test]
+    fn simt_variant_agrees() {
+        let m = TwoStageMap::from_tile_counts(&[0, 1, 0, 4, 2, 0, 1]);
+        for b in 0..m.total_tiles {
+            let (simt, _) = m.map_simt(b);
+            assert_eq!(simt, m.map(b), "block {b}");
+        }
+    }
+
+    #[test]
+    fn metadata_is_compressed() {
+        // 64 tasks, one tile each, huge grid from big tasks: metadata stays
+        // proportional to tasks, not tiles.
+        let tiles = vec![1000u32; 64];
+        let m = TwoStageMap::from_tile_counts(&tiles);
+        assert_eq!(m.total_tiles, 64_000);
+        assert!(m.metadata_bytes() <= 4 * (64 + 64));
+    }
+
+    #[test]
+    fn property_two_stage_covers_exactly_nonempty_tiles() {
+        prop::check(
+            "two-stage-coverage",
+            150,
+            |g| {
+                let n = 1 + g.rng.usize_below(g.size * 2 + 1);
+                // ~half the tasks empty
+                (0..n)
+                    .map(|_| if g.rng.below(2) == 0 { 0 } else { g.rng.below(5) as u32 + 1 })
+                    .collect::<Vec<u32>>()
+            },
+            |tiles| {
+                let m = TwoStageMap::from_tile_counts(tiles);
+                let mut seen = vec![0u32; tiles.len()];
+                for b in 0..m.total_tiles {
+                    let tm = m.map(b);
+                    let (simt, _) = m.map_simt(b);
+                    if tm != simt {
+                        return Err(format!("scalar/simt disagree at {b}"));
+                    }
+                    seen[tm.task as usize] += 1;
+                    if tiles[tm.task as usize] == 0 {
+                        return Err(format!("block {b} mapped to empty task {}", tm.task));
+                    }
+                }
+                if seen != *tiles {
+                    return Err(format!("coverage {seen:?} != {tiles:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

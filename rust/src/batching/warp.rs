@@ -1,0 +1,86 @@
+//! Exact 32-lane SIMT warp emulation.
+//!
+//! Algorithm 2 is specified as warp-level SIMT code (ballot vote +
+//! population count + broadcast).  To keep the reproduction faithful we run
+//! it *as written* over this emulation: each lane computes its predicate,
+//! `ballot` packs them into a 32-bit mask exactly like `__ballot_sync`, and
+//! `popc` is `u32::count_ones` — bit-for-bit what the GPU does.
+
+/// Warp width of every NVIDIA GPU the paper targets.
+pub const WARP_SIZE: usize = 32;
+
+/// A warp executing one SIMT step at a time.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Warp;
+
+impl Warp {
+    /// `__ballot_sync(0xffffffff, pred(lane))`: bit *i* of the result is the
+    /// predicate of lane *i*.
+    pub fn ballot<F: FnMut(usize) -> bool>(mut pred: F) -> u32 {
+        let mut mask = 0u32;
+        for lane in 0..WARP_SIZE {
+            if pred(lane) {
+                mask |= 1 << lane;
+            }
+        }
+        mask
+    }
+
+    /// `__popc(mask)`.
+    pub fn popc(mask: u32) -> u32 {
+        mask.count_ones()
+    }
+
+    /// `__shfl_sync`: broadcast lane `src`'s value to the whole warp.
+    /// In the emulation this is just returning the value; the signature
+    /// stays to keep the algorithm body isomorphic to the CUDA text.
+    pub fn shfl<T: Copy>(values: &[T; WARP_SIZE], src: usize) -> T {
+        values[src]
+    }
+
+    /// Lane-parallel map: evaluates `f` for each lane, like one SIMT
+    /// instruction over the warp.
+    pub fn lanes<T, F: FnMut(usize) -> T>(mut f: F) -> Vec<T> {
+        (0..WARP_SIZE).map(|lane| f(lane)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ballot_packs_lane_bits() {
+        let mask = Warp::ballot(|lane| lane % 2 == 0);
+        assert_eq!(mask, 0x5555_5555);
+    }
+
+    #[test]
+    fn ballot_all_and_none() {
+        assert_eq!(Warp::ballot(|_| true), u32::MAX);
+        assert_eq!(Warp::ballot(|_| false), 0);
+    }
+
+    #[test]
+    fn popc_counts_bits() {
+        assert_eq!(Warp::popc(0), 0);
+        assert_eq!(Warp::popc(u32::MAX), 32);
+        assert_eq!(Warp::popc(0b1011), 3);
+    }
+
+    #[test]
+    fn ballot_popc_composition() {
+        // the exact composition Algorithm 2 relies on: the number of lanes
+        // whose prefix value is <= B
+        let prefix = [3u32, 5, 9, 9, 12];
+        let b = 8;
+        let mask = Warp::ballot(|lane| lane < prefix.len() && b >= prefix[lane]);
+        assert_eq!(Warp::popc(mask), 2); // 3 and 5 are <= 8
+    }
+
+    #[test]
+    fn shfl_broadcasts() {
+        let vals: [u32; WARP_SIZE] = std::array::from_fn(|i| i as u32 * 10);
+        assert_eq!(Warp::shfl(&vals, 7), 70);
+    }
+}

@@ -1,0 +1,152 @@
+//! Continuous batcher: groups admitted requests into executable batches.
+//!
+//! The AOT artifacts are compiled at fixed sequence buckets (the static
+//! shapes PJRT requires), so the batcher (a) pads each request's token
+//! sequence into the smallest fitting bucket, and (b) forms multi-request
+//! batches under a token budget so one engine dispatch amortizes executor
+//! overhead across requests — the serving-level mirror of the kernel-level
+//! batching thesis.
+
+use crate::coordinator::request::Request;
+
+/// Batching policy.
+#[derive(Clone, Debug)]
+pub struct BatchPolicy {
+    /// Available sequence buckets, ascending (from the artifact manifest).
+    pub buckets: Vec<usize>,
+    /// Max requests per formed batch.
+    pub max_requests: usize,
+    /// Max total (padded) tokens per formed batch.
+    pub max_tokens: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { buckets: vec![16, 64, 256], max_requests: 16, max_tokens: 2048 }
+    }
+}
+
+/// One formed batch: requests sharing a bucket.
+#[derive(Debug)]
+pub struct FormedBatch {
+    pub bucket: usize,
+    pub requests: Vec<Request>,
+}
+
+impl BatchPolicy {
+    /// Smallest bucket that fits `len` tokens; `None` if the request is too
+    /// long for every compiled bucket (rejected with an error upstream).
+    pub fn bucket_for(&self, len: usize) -> Option<usize> {
+        self.buckets.iter().copied().find(|&b| b >= len)
+    }
+
+    /// Pad token ids to the bucket with the pad id (0).
+    pub fn pad(&self, tokens: &[i32], bucket: usize) -> Vec<i32> {
+        let mut v = tokens.to_vec();
+        v.resize(bucket, 0);
+        v
+    }
+
+    /// Form batches from pending requests: group by bucket, respect request
+    /// and token budgets, preserve FIFO inside each bucket.  Requests that
+    /// fit no bucket are returned separately for rejection.
+    pub fn form(&self, pending: Vec<Request>) -> (Vec<FormedBatch>, Vec<Request>) {
+        let mut rejected = Vec::new();
+        let mut per_bucket: Vec<Vec<Request>> = self.buckets.iter().map(|_| Vec::new()).collect();
+        for r in pending {
+            match self.bucket_for(r.tokens.len()) {
+                Some(b) => {
+                    let bi = self.buckets.iter().position(|&x| x == b).unwrap();
+                    per_bucket[bi].push(r);
+                }
+                None => rejected.push(r),
+            }
+        }
+        let mut out = Vec::new();
+        for (bi, reqs) in per_bucket.into_iter().enumerate() {
+            let bucket = self.buckets[bi];
+            let mut cur: Vec<Request> = Vec::new();
+            for r in reqs {
+                let would_tokens = (cur.len() + 1) * bucket;
+                if cur.len() + 1 > self.max_requests || would_tokens > self.max_tokens {
+                    if !cur.is_empty() {
+                        out.push(FormedBatch { bucket, requests: std::mem::take(&mut cur) });
+                    }
+                }
+                cur.push(r);
+            }
+            if !cur.is_empty() {
+                out.push(FormedBatch { bucket, requests: cur });
+            }
+        }
+        (out, rejected)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Response;
+    use std::sync::mpsc::{channel, Receiver};
+    use std::time::Instant;
+
+    fn req(id: u64, len: usize) -> (Request, Receiver<Response>) {
+        let (tx, rx) = channel();
+        (
+            Request { id, tokens: vec![1; len], enqueued: Instant::now(), respond: tx },
+            rx,
+        )
+    }
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy { buckets: vec![16, 64, 256], max_requests: 4, max_tokens: 256 }
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let p = policy();
+        assert_eq!(p.bucket_for(1), Some(16));
+        assert_eq!(p.bucket_for(16), Some(16));
+        assert_eq!(p.bucket_for(17), Some(64));
+        assert_eq!(p.bucket_for(256), Some(256));
+        assert_eq!(p.bucket_for(257), None);
+    }
+
+    #[test]
+    fn padding_preserves_prefix() {
+        let p = policy();
+        let padded = p.pad(&[5, 6, 7], 16);
+        assert_eq!(padded.len(), 16);
+        assert_eq!(&padded[..3], &[5, 6, 7]);
+        assert!(padded[3..].iter().all(|&t| t == 0));
+    }
+
+    #[test]
+    fn groups_by_bucket_fifo() {
+        let p = policy();
+        let reqs = vec![req(0, 10).0, req(1, 60).0, req(2, 12).0];
+        let (batches, rejected) = p.form(reqs);
+        assert!(rejected.is_empty());
+        let b16 = batches.iter().find(|b| b.bucket == 16).unwrap();
+        assert_eq!(b16.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(batches.iter().find(|b| b.bucket == 64).unwrap().requests[0].id, 1);
+    }
+
+    #[test]
+    fn token_budget_splits_batches() {
+        let p = policy(); // max_tokens 256 => at most 4 x 64-token requests? 4*64=256 ok
+        let reqs: Vec<Request> = (0..6).map(|i| req(i, 60).0).collect();
+        let (batches, _) = p.form(reqs);
+        let sizes: Vec<usize> = batches.iter().map(|b| b.requests.len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 6);
+        assert!(sizes.iter().all(|&s| s * 64 <= 256 && s <= 4), "{sizes:?}");
+    }
+
+    #[test]
+    fn oversize_rejected() {
+        let p = policy();
+        let (batches, rejected) = p.form(vec![req(0, 1000).0]);
+        assert!(batches.is_empty());
+        assert_eq!(rejected.len(), 1);
+    }
+}

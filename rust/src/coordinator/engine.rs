@@ -1,0 +1,332 @@
+//! The serving engine: queue → batcher → PJRT execution → responses.
+//!
+//! One engine owns the executor pool (PJRT executables are not Sync in the
+//! `xla` crate, so execution is serialized through a dedicated dispatch
+//! thread; request-side work — padding, batch formation, response fan-out —
+//! happens on the caller/worker side).  Model parameters are generated once
+//! (deterministic seed) and reused across calls as cached `Value`s.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::queue::AdmissionQueue;
+use crate::coordinator::request::{Request, Response};
+use crate::runtime::artifact::Manifest;
+use crate::runtime::client::Runtime;
+use crate::runtime::executor::{ExecutorPool, Value};
+use crate::util::rng::Rng;
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub artifacts_dir: std::path::PathBuf,
+    pub policy: BatchPolicy,
+    pub queue_capacity: usize,
+    pub param_seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            artifacts_dir: std::path::PathBuf::from("artifacts"),
+            policy: BatchPolicy::default(),
+            queue_capacity: 256,
+            param_seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// Model hyper-parameters read from the manifest (mirror of Python
+/// `ModelConfig`; the manifest is the source of truth).
+#[derive(Clone, Debug)]
+pub struct LmConfig {
+    pub vocab: usize,
+    pub buckets: Vec<usize>,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub experts: usize,
+}
+
+/// The engine. Construct with [`Engine::new`], then call [`Engine::serve`]
+/// from a dispatch thread, pushing requests through [`Engine::queue`].
+pub struct Engine {
+    pub queue: Arc<AdmissionQueue>,
+    pub metrics: Arc<Metrics>,
+    cfg: EngineConfig,
+    pool: ExecutorPool,
+    lm: LmConfig,
+    params: Vec<Value>,
+    /// Device-resident parameter buffers, uploaded once at warmup
+    /// (§Perf: the request path must not re-stage ~76 MB of weights).
+    param_buffers: Vec<xla::PjRtBuffer>,
+    stop: Arc<AtomicBool>,
+}
+
+/// Handles returned by [`Engine::spawn`]: everything the request side needs.
+pub struct EngineHandle {
+    pub queue: Arc<AdmissionQueue>,
+    pub metrics: Arc<Metrics>,
+    pub lm: LmConfig,
+    pub stop: Arc<AtomicBool>,
+    join: std::thread::JoinHandle<()>,
+}
+
+impl EngineHandle {
+    /// Close the queue and wait for the engine thread to drain and exit.
+    pub fn shutdown(self) {
+        self.queue.close();
+        let _ = self.join.join();
+    }
+}
+
+impl Engine {
+    /// Construct the engine inside a dedicated thread (the PJRT client is
+    /// not `Send`, so it must live where it serves) and return the handles.
+    /// Blocks until warmup completes or fails.
+    pub fn spawn(cfg: EngineConfig) -> Result<EngineHandle> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let join = std::thread::Builder::new()
+            .name("sb-engine".into())
+            .spawn(move || {
+                let mut engine = match Engine::new(cfg) {
+                    Ok(e) => e,
+                    Err(e) => {
+                        let _ = tx.send(Err(anyhow!("engine init: {e}")));
+                        return;
+                    }
+                };
+                if let Err(e) = engine.warmup() {
+                    let _ = tx.send(Err(anyhow!("warmup: {e}")));
+                    return;
+                }
+                let _ = tx.send(Ok((
+                    Arc::clone(&engine.queue),
+                    Arc::clone(&engine.metrics),
+                    engine.lm.clone(),
+                    Arc::clone(&engine.stop),
+                )));
+                engine.serve();
+            })?;
+        match rx.recv() {
+            Ok(Ok((queue, metrics, lm, stop))) => {
+                Ok(EngineHandle { queue, metrics, lm, stop, join })
+            }
+            Ok(Err(e)) => {
+                let _ = join.join();
+                Err(e)
+            }
+            Err(_) => {
+                let _ = join.join();
+                Err(anyhow!("engine thread died during init"))
+            }
+        }
+    }
+
+    pub fn new(cfg: EngineConfig) -> Result<Self> {
+        let rt = Runtime::cpu()?;
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let lm = Self::lm_config(&manifest)?;
+        let params = Self::materialize_params(&lm, cfg.param_seed);
+        let mut policy = cfg.policy.clone();
+        policy.buckets = lm.buckets.clone();
+        let cfg = EngineConfig { policy, ..cfg };
+        Ok(Engine {
+            queue: Arc::new(AdmissionQueue::new(cfg.queue_capacity)),
+            metrics: Arc::new(Metrics::new()),
+            cfg,
+            pool: ExecutorPool::new(rt, manifest),
+            lm,
+            params,
+            param_buffers: Vec::new(),
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn lm_info(&self) -> &LmConfig {
+        &self.lm
+    }
+
+    pub fn stopper(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    fn lm_config(manifest: &Manifest) -> Result<LmConfig> {
+        // discover lm_forward buckets from entry names
+        let mut buckets = Vec::new();
+        for name in manifest.entries.keys() {
+            if let Some(s) = name.strip_prefix("lm_forward_s") {
+                if let Ok(b) = s.parse::<usize>() {
+                    buckets.push(b);
+                }
+            }
+        }
+        buckets.sort_unstable();
+        if buckets.is_empty() {
+            return Err(anyhow!("no lm_forward_s* entries in manifest"));
+        }
+        let e0 = manifest.entry(&format!("lm_forward_s{}", buckets[0]))?;
+        let cfgj = e0.meta.get("config").ok_or_else(|| anyhow!("meta.config missing"))?;
+        let vocab = cfgj.get("vocab").and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("vocab"))?;
+        let experts =
+            cfgj.get("experts").and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("experts"))?;
+        let param_shapes: Vec<Vec<usize>> =
+            e0.inputs[1..].iter().map(|s| s.shape.clone()).collect();
+        Ok(LmConfig { vocab, buckets, param_shapes, experts })
+    }
+
+    /// Deterministic synthetic weights (documented substitution for a real
+    /// checkpoint; see DESIGN.md) — must match Python `init_params` in
+    /// *shape contract* only, not values: the engine is self-consistent.
+    fn materialize_params(lm: &LmConfig, seed: u64) -> Vec<Value> {
+        let mut rng = Rng::new(seed);
+        lm.param_shapes
+            .iter()
+            .map(|shape| {
+                let n: usize = shape.iter().product();
+                // LN-style vectors get ones, everything else scaled normals
+                let data: Vec<f32> = if shape.len() == 1 {
+                    vec![1.0; n]
+                } else {
+                    let fan_in = shape[shape.len() - 2] as f32;
+                    let scale = 1.0 / fan_in.sqrt();
+                    (0..n).map(|_| rng.normal() as f32 * scale).collect()
+                };
+                Value::F32(data, shape.clone())
+            })
+            .collect()
+    }
+
+    /// Pre-compile all LM buckets and upload the parameters to device
+    /// buffers once (avoids first-request latency spikes and per-request
+    /// weight staging).
+    pub fn warmup(&mut self) -> Result<()> {
+        let buckets = self.lm.buckets.clone();
+        for b in buckets {
+            self.pool.prepare(&format!("lm_forward_s{b}"))?;
+        }
+        if self.param_buffers.is_empty() {
+            self.param_buffers = self
+                .params
+                .iter()
+                .map(|p| self.pool.upload(p))
+                .collect::<Result<Vec<_>>>()?;
+        }
+        Ok(())
+    }
+
+    /// Run one padded sequence through the bucketed LM; returns per-position
+    /// argmax.
+    fn run_lm(&mut self, bucket: usize, padded: &[i32]) -> Result<Vec<i32>> {
+        let entry = format!("lm_forward_s{bucket}");
+        // hot path: only the token ids are uploaded per request; parameters
+        // are device-resident (see warmup)
+        let ids_buf = self.pool.upload(&Value::I32(padded.to_vec(), vec![bucket]))?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.param_buffers.len());
+        args.push(&ids_buf);
+        args.extend(self.param_buffers.iter());
+        let outs = self.pool.run_buffers(&entry, &args)?;
+        let logits = outs[0].as_f32()?;
+        let vocab = self.lm.vocab;
+        let argmax: Vec<i32> = (0..bucket)
+            .map(|pos| {
+                let row = &logits[pos * vocab..(pos + 1) * vocab];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as i32)
+                    .unwrap_or(0)
+            })
+            .collect();
+        Ok(argmax)
+    }
+
+    /// Serve until the queue closes or `stop` is set.  Call from a dedicated
+    /// thread; producers push into `engine.queue`.
+    pub fn serve(&mut self) {
+        log::info!("engine serving: buckets {:?}", self.lm.buckets);
+        while !self.stop.load(Ordering::Relaxed) {
+            let Some(first) = self.queue.pop(Duration::from_millis(50)) else {
+                if self.queue.is_closed() && self.queue.is_empty() {
+                    break;
+                }
+                continue;
+            };
+            // form a batch: the popped request plus whatever is waiting
+            let mut pending = vec![first];
+            pending.extend(self.queue.drain_up_to(self.cfg.policy.max_requests - 1));
+            let (batches, rejected) = self.cfg.policy.form(pending);
+            for r in rejected {
+                self.metrics.record_error();
+                let _ = r.respond.send(Response::failed(
+                    r.id,
+                    format!("request of {} tokens exceeds largest bucket", r.tokens.len()),
+                ));
+            }
+            for batch in batches {
+                self.execute_batch(batch.bucket, batch.requests);
+            }
+        }
+        log::info!("engine stopped");
+    }
+
+    fn execute_batch(&mut self, bucket: usize, requests: Vec<Request>) {
+        let t0 = Instant::now();
+        let n = requests.len();
+        for r in requests {
+            let padded = self.cfg.policy.pad(&r.tokens, bucket);
+            match self.run_lm(bucket, &padded) {
+                Ok(argmax) => {
+                    let latency = r.enqueued.elapsed().as_secs_f64();
+                    self.metrics.record_request(latency, r.tokens.len());
+                    let _ = r.respond.send(Response {
+                        id: r.id,
+                        argmax: argmax[..r.tokens.len()].to_vec(),
+                        latency_s: latency,
+                        bucket,
+                        error: None,
+                    });
+                }
+                Err(e) => {
+                    self.metrics.record_error();
+                    let _ = r.respond.send(Response::failed(r.id, e.to_string()));
+                }
+            }
+        }
+        self.metrics.record_exec(t0.elapsed().as_secs_f64(), n);
+    }
+
+    /// Direct MoE-layer execution (the moe_ffn artifact): tokens from many
+    /// requests packed into one call.  Returns (output, expert counts).
+    pub fn run_moe_ffn(&mut self, seq_bucket: usize, x: &[f32]) -> Result<(Vec<f32>, Vec<i32>)> {
+        let entry_name = format!("moe_ffn_s{seq_bucket}");
+        let entry = self.pool.manifest().entry(&entry_name)?.clone();
+        let d_model = entry.inputs[0].shape[1];
+        anyhow::ensure!(x.len() == seq_bucket * d_model, "bad activation size");
+        let mut rng = Rng::new(self.cfg.param_seed ^ 0xFFF);
+        let mk = |spec: &crate::runtime::artifact::TensorSpec, rng: &mut Rng| {
+            let n = spec.numel();
+            let fan_in = spec.shape[spec.shape.len() - 2] as f32;
+            Value::F32(
+                (0..n).map(|_| rng.normal() as f32 / fan_in.sqrt()).collect(),
+                spec.shape.clone(),
+            )
+        };
+        let router = mk(&entry.inputs[1], &mut rng);
+        let w_in = mk(&entry.inputs[2], &mut rng);
+        let w_out = mk(&entry.inputs[3], &mut rng);
+        let inputs = vec![
+            Value::F32(x.to_vec(), vec![seq_bucket, d_model]),
+            router,
+            w_in,
+            w_out,
+        ];
+        let outs = self.pool.run(&entry_name, &inputs)?;
+        let counts = outs[1].as_i32()?.to_vec();
+        self.metrics.record_expert_rows(&counts);
+        Ok((outs[0].as_f32()?.to_vec(), counts))
+    }
+}

@@ -1,0 +1,165 @@
+//! Serving metrics: latency percentiles, throughput, expert-load tracking.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::{Samples, Welford};
+
+/// Thread-safe metrics sink shared by engine workers.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    latency: Samples,
+    exec: Samples,
+    batch_size: Welford,
+    requests: u64,
+    tokens: u64,
+    errors: u64,
+    started: Option<Instant>,
+    /// cumulative per-expert routed-row counts (from the moe_ffn artifact's
+    /// counts output) — drives load-aware ordering decisions
+    expert_rows: Vec<u64>,
+}
+
+/// A snapshot for reporting.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub tokens: u64,
+    pub errors: u64,
+    pub elapsed_s: f64,
+    pub req_per_s: f64,
+    pub tokens_per_s: f64,
+    pub latency_p50_ms: f64,
+    pub latency_p95_ms: f64,
+    pub latency_p99_ms: f64,
+    pub exec_p50_ms: f64,
+    pub mean_batch: f64,
+    pub expert_rows: Vec<u64>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_request(&self, latency_s: f64, tokens: usize) {
+        let mut g = self.inner.lock().unwrap();
+        if g.started.is_none() {
+            g.started = Some(Instant::now());
+        }
+        g.latency.push(latency_s * 1e3);
+        g.requests += 1;
+        g.tokens += tokens as u64;
+    }
+
+    pub fn record_exec(&self, exec_s: f64, batch_size: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.exec.push(exec_s * 1e3);
+        g.batch_size.push(batch_size as f64);
+    }
+
+    pub fn record_error(&self) {
+        self.inner.lock().unwrap().errors += 1;
+    }
+
+    pub fn record_expert_rows(&self, counts: &[i32]) {
+        let mut g = self.inner.lock().unwrap();
+        if g.expert_rows.len() < counts.len() {
+            g.expert_rows.resize(counts.len(), 0);
+        }
+        for (acc, &c) in g.expert_rows.iter_mut().zip(counts) {
+            *acc += c.max(0) as u64;
+        }
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let mut g = self.inner.lock().unwrap();
+        let elapsed = g.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+        let (p50, p95, p99) = if g.latency.is_empty() {
+            (0.0, 0.0, 0.0)
+        } else {
+            (
+                g.latency.percentile(50.0),
+                g.latency.percentile(95.0),
+                g.latency.percentile(99.0),
+            )
+        };
+        let exec_p50 = if g.exec.is_empty() { 0.0 } else { g.exec.percentile(50.0) };
+        Snapshot {
+            requests: g.requests,
+            tokens: g.tokens,
+            errors: g.errors,
+            elapsed_s: elapsed,
+            req_per_s: if elapsed > 0.0 { g.requests as f64 / elapsed } else { 0.0 },
+            tokens_per_s: if elapsed > 0.0 { g.tokens as f64 / elapsed } else { 0.0 },
+            latency_p50_ms: p50,
+            latency_p95_ms: p95,
+            latency_p99_ms: p99,
+            exec_p50_ms: exec_p50,
+            mean_batch: g.batch_size.mean(),
+            expert_rows: g.expert_rows.clone(),
+        }
+    }
+}
+
+impl Snapshot {
+    pub fn render(&self) -> String {
+        format!(
+            "requests={} tokens={} errors={} elapsed={:.2}s  {:.1} req/s  {:.0} tok/s\n\
+             latency p50={:.2}ms p95={:.2}ms p99={:.2}ms  exec p50={:.2}ms  mean batch={:.2}",
+            self.requests,
+            self.tokens,
+            self.errors,
+            self.elapsed_s,
+            self.req_per_s,
+            self.tokens_per_s,
+            self.latency_p50_ms,
+            self.latency_p95_ms,
+            self.latency_p99_ms,
+            self.exec_p50_ms,
+            self.mean_batch,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        for i in 0..100 {
+            m.record_request(0.001 * (i + 1) as f64, 10);
+        }
+        m.record_exec(0.005, 4);
+        m.record_error();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 100);
+        assert_eq!(s.tokens, 1000);
+        assert_eq!(s.errors, 1);
+        assert!(s.latency_p50_ms > 0.0);
+        assert!(s.latency_p99_ms >= s.latency_p50_ms);
+        assert!((s.mean_batch - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn expert_rows_accumulate() {
+        let m = Metrics::new();
+        m.record_expert_rows(&[1, 2, 3]);
+        m.record_expert_rows(&[4, 0, 1]);
+        assert_eq!(m.snapshot().expert_rows, vec![5, 2, 4]);
+    }
+
+    #[test]
+    fn render_contains_throughput() {
+        let m = Metrics::new();
+        m.record_request(0.01, 5);
+        assert!(m.snapshot().render().contains("req/s"));
+    }
+}

@@ -1,0 +1,18 @@
+//! L3 serving coordinator.
+//!
+//! Owns the request path end to end: admission queue → continuous batcher
+//! (sequence-bucket padding; MoE-layer token batching) → engine workers
+//! executing AOT artifacts on the PJRT runtime → metrics.  Python is never
+//! on this path; the artifacts were compiled once at build time.
+//!
+//! The MoE layer has no cross-token interaction, so the batcher may pack
+//! tokens from *different* requests into one `moe_ffn` call — the serving
+//! analog of the paper's intra-kernel batching across tokens. The full LM
+//! path batches at request granularity into per-sequence buckets.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod queue;
+pub mod request;
+pub mod server;

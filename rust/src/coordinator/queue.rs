@@ -1,0 +1,188 @@
+//! Bounded admission queue with backpressure.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::request::Request;
+
+/// MPMC bounded queue: producers block-or-reject when full (backpressure),
+/// workers block on pop with a timeout so they can observe shutdown.
+pub struct AdmissionQueue {
+    inner: Mutex<Inner>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+struct Inner {
+    q: VecDeque<Request>,
+    closed: bool,
+}
+
+/// Result of a non-blocking push.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushResult {
+    Ok,
+    Full,
+    Closed,
+}
+
+impl AdmissionQueue {
+    pub fn new(capacity: usize) -> Self {
+        AdmissionQueue {
+            inner: Mutex::new(Inner { q: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Non-blocking admission: reject when full (the caller surfaces 429).
+    pub fn try_push(&self, req: Request) -> PushResult {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return PushResult::Closed;
+        }
+        if g.q.len() >= self.capacity {
+            return PushResult::Full;
+        }
+        g.q.push_back(req);
+        drop(g);
+        self.not_empty.notify_one();
+        PushResult::Ok
+    }
+
+    /// Blocking admission with backpressure.
+    pub fn push(&self, req: Request) -> PushResult {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return PushResult::Closed;
+            }
+            if g.q.len() < self.capacity {
+                g.q.push_back(req);
+                drop(g);
+                self.not_empty.notify_one();
+                return PushResult::Ok;
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Pop one request; `None` on timeout or when closed-and-drained.
+    pub fn pop(&self, timeout: Duration) -> Option<Request> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(r) = g.q.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(r);
+            }
+            if g.closed {
+                return None;
+            }
+            let (g2, res) = self.not_empty.wait_timeout(g, timeout).unwrap();
+            g = g2;
+            if res.timed_out() {
+                return g.q.pop_front();
+            }
+        }
+    }
+
+    /// Drain up to `max` requests without blocking (batch formation).
+    pub fn drain_up_to(&self, max: usize) -> Vec<Request> {
+        let mut g = self.inner.lock().unwrap();
+        let n = g.q.len().min(max);
+        let out: Vec<Request> = g.q.drain(..n).collect();
+        drop(g);
+        if !out.is_empty() {
+            self.not_full.notify_all();
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close: producers get `Closed`, workers drain the remainder.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Response;
+    use std::sync::mpsc::channel;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    fn req(id: u64) -> (Request, std::sync::mpsc::Receiver<Response>) {
+        let (tx, rx) = channel();
+        (Request { id, tokens: vec![1], enqueued: Instant::now(), respond: tx }, rx)
+    }
+
+    #[test]
+    fn fifo_order() {
+        let q = AdmissionQueue::new(8);
+        for i in 0..3 {
+            assert_eq!(q.try_push(req(i).0), PushResult::Ok);
+        }
+        for i in 0..3 {
+            assert_eq!(q.pop(Duration::from_millis(1)).unwrap().id, i);
+        }
+    }
+
+    #[test]
+    fn rejects_when_full() {
+        let q = AdmissionQueue::new(2);
+        assert_eq!(q.try_push(req(0).0), PushResult::Ok);
+        assert_eq!(q.try_push(req(1).0), PushResult::Ok);
+        assert_eq!(q.try_push(req(2).0), PushResult::Full);
+    }
+
+    #[test]
+    fn closed_queue_rejects_producers_drains_consumers() {
+        let q = AdmissionQueue::new(4);
+        q.try_push(req(0).0);
+        q.close();
+        assert_eq!(q.try_push(req(1).0), PushResult::Closed);
+        assert!(q.pop(Duration::from_millis(1)).is_some());
+        assert!(q.pop(Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn drain_up_to_takes_prefix() {
+        let q = AdmissionQueue::new(8);
+        for i in 0..5 {
+            q.try_push(req(i).0);
+        }
+        let batch = q.drain_up_to(3);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn blocking_push_wakes_on_pop() {
+        let q = Arc::new(AdmissionQueue::new(1));
+        q.try_push(req(0).0);
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.push(req(1).0));
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(q.pop(Duration::from_millis(10)).is_some());
+        assert_eq!(h.join().unwrap(), PushResult::Ok);
+    }
+}

@@ -1,0 +1,59 @@
+//! Request/response types on the serving path.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+/// An inference request: score a token sequence with the LM and return the
+/// next-token argmax for each position (enough to drive generation loops).
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub enqueued: Instant,
+    pub respond: Sender<Response>,
+}
+
+/// The engine's answer.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    /// Next-token argmax per input position (length = original request len).
+    pub argmax: Vec<i32>,
+    /// Wall time spent queued + executing.
+    pub latency_s: f64,
+    /// Which artifact bucket served it.
+    pub bucket: usize,
+    /// Error message if the request failed.
+    pub error: Option<String>,
+}
+
+impl Response {
+    pub fn failed(id: u64, err: impl Into<String>) -> Self {
+        Response { id, argmax: Vec::new(), latency_s: 0.0, bucket: 0, error: Some(err.into()) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn request_roundtrip_through_channel() {
+        let (tx, rx) = channel();
+        let req = Request { id: 7, tokens: vec![1, 2, 3], enqueued: Instant::now(), respond: tx };
+        req.respond
+            .send(Response { id: req.id, argmax: vec![2, 3, 4], latency_s: 0.001, bucket: 16, error: None })
+            .unwrap();
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.argmax.len(), 3);
+        assert!(resp.error.is_none());
+    }
+
+    #[test]
+    fn failed_response() {
+        let r = Response::failed(1, "too long");
+        assert!(r.error.is_some());
+    }
+}

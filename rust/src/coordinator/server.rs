@@ -1,0 +1,170 @@
+//! TCP line-protocol server (std::net, one thread per connection).
+//!
+//! Wire format: one JSON object per line.
+//!   request:  {"id": 1, "tokens": [3, 14, 15]}
+//!   response: {"id": 1, "argmax": [...], "latency_ms": 1.2, "bucket": 16}
+//!   error:    {"id": 1, "error": "..."}
+//! The literal line "stats" returns a metrics snapshot; "quit" closes the
+//! connection.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::queue::{AdmissionQueue, PushResult};
+use crate::coordinator::request::Request;
+use crate::util::json::Json;
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Parse one request line into (id, tokens).
+pub fn parse_request(line: &str) -> Result<(u64, Vec<i32>), String> {
+    let j = Json::parse(line).map_err(|e| e.to_string())?;
+    let id = j
+        .get("id")
+        .and_then(|v| v.as_i64())
+        .map(|v| v as u64)
+        .unwrap_or_else(|| NEXT_ID.fetch_add(1, Ordering::Relaxed));
+    let tokens = j
+        .get("tokens")
+        .and_then(|v| v.as_arr())
+        .ok_or("missing tokens array")?
+        .iter()
+        .map(|t| t.as_i64().map(|x| x as i32).ok_or("non-integer token"))
+        .collect::<Result<Vec<i32>, &str>>()?;
+    if tokens.is_empty() {
+        return Err("empty token list".into());
+    }
+    Ok((id, tokens))
+}
+
+/// Render a response line.
+pub fn render_response(resp: &crate::coordinator::request::Response) -> String {
+    match &resp.error {
+        Some(e) => Json::obj(vec![
+            ("id", Json::num(resp.id as f64)),
+            ("error", Json::str(e.clone())),
+        ])
+        .to_string(),
+        None => Json::obj(vec![
+            ("id", Json::num(resp.id as f64)),
+            (
+                "argmax",
+                Json::arr(resp.argmax.iter().map(|&x| Json::num(x as f64))),
+            ),
+            ("latency_ms", Json::num(resp.latency_s * 1e3)),
+            ("bucket", Json::num(resp.bucket as f64)),
+        ])
+        .to_string(),
+    }
+}
+
+/// Serve one connection (public so integration tests can drive a real
+/// socket against an in-process engine).
+pub fn handle_conn(
+    stream: TcpStream,
+    queue: Arc<AdmissionQueue>,
+    metrics: Arc<Metrics>,
+) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    log::debug!("connection from {peer}");
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line == "quit" {
+            break;
+        }
+        if line == "stats" {
+            writeln!(writer, "{}", metrics.snapshot().render())?;
+            continue;
+        }
+        match parse_request(line) {
+            Ok((id, tokens)) => {
+                let (tx, rx) = channel();
+                let req = Request { id, tokens, enqueued: Instant::now(), respond: tx };
+                match queue.try_push(req) {
+                    PushResult::Ok => {
+                        // block this connection until its answer arrives
+                        match rx.recv() {
+                            Ok(resp) => writeln!(writer, "{}", render_response(&resp))?,
+                            Err(_) => writeln!(writer, "{{\"id\":{id},\"error\":\"engine gone\"}}")?,
+                        }
+                    }
+                    PushResult::Full => {
+                        writeln!(writer, "{{\"id\":{id},\"error\":\"queue full\"}}")?
+                    }
+                    PushResult::Closed => {
+                        writeln!(writer, "{{\"id\":{id},\"error\":\"shutting down\"}}")?;
+                        break;
+                    }
+                }
+            }
+            Err(e) => writeln!(writer, "{{\"error\":{}}}", Json::str(e))?,
+        }
+    }
+    Ok(())
+}
+
+/// Accept loop: one thread per connection. Blocks forever (Ctrl-C to stop).
+pub fn listen(addr: &str, queue: Arc<AdmissionQueue>, metrics: Arc<Metrics>) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    log::info!("listening on {addr}");
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let q = Arc::clone(&queue);
+        let m = Arc::clone(&metrics);
+        std::thread::spawn(move || {
+            if let Err(e) = handle_conn(stream, q, m) {
+                log::warn!("connection error: {e}");
+            }
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Response;
+
+    #[test]
+    fn parses_valid_request() {
+        let (id, tokens) = parse_request(r#"{"id": 5, "tokens": [1, 2, 3]}"#).unwrap();
+        assert_eq!(id, 5);
+        assert_eq!(tokens, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn assigns_id_when_missing() {
+        let (id, _) = parse_request(r#"{"tokens": [9]}"#).unwrap();
+        assert!(id >= 1);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"tokens": []}"#).is_err());
+        assert!(parse_request(r#"{"tokens": "nope"}"#).is_err());
+    }
+
+    #[test]
+    fn renders_success_and_error() {
+        let ok = Response { id: 1, argmax: vec![4, 2], latency_s: 0.0015, bucket: 16, error: None };
+        let s = render_response(&ok);
+        assert!(s.contains("\"argmax\":[4,2]"));
+        assert!(s.contains("\"bucket\":16"));
+        let err = Response::failed(2, "boom");
+        assert!(render_response(&err).contains("boom"));
+    }
+}

@@ -1,0 +1,33 @@
+//! # staticbatch — static batching of irregular workloads
+//!
+//! Production-quality reproduction of *"Static Batching of Irregular
+//! Workloads on GPUs: Framework and Application to Efficient MoE Model
+//! Inference"* (Alibaba Group, CS.DC 2025) as a three-layer Rust + JAX +
+//! Pallas stack:
+//!
+//! * **L1** — a Pallas kernel (`python/compile/kernels/moe_batched.py`)
+//!   implementing the paper's fused, statically batched MoE expert GEMM with
+//!   the compressed TilePrefix task mapping.
+//! * **L2** — a JAX MoE transformer (`python/compile/model.py`) lowered
+//!   ahead-of-time to HLO text artifacts.
+//! * **L3** — this crate: the serving coordinator, the batching framework
+//!   algorithms themselves ([`batching`]), a calibrated GPU execution
+//!   simulator ([`sim`]) used to regenerate the paper's evaluation on
+//!   H20/H800, baseline implementations ([`baselines`]), and the PJRT
+//!   runtime ([`runtime`]) that executes the AOT artifacts with Python
+//!   nowhere on the request path.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod baselines;
+pub mod batching;
+pub mod coordinator;
+pub mod moe;
+pub mod reports;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate version, reported by the CLI and the serving handshake.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

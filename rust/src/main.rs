@@ -1,0 +1,303 @@
+//! `staticbatch` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   table1        regenerate the paper's Table 1 on the GPU simulator
+//!   baselines     ours vs grouped GEMM / two-phase / naive loop (A1)
+//!   mapping       mapping-mechanism microbench table (A2)
+//!   ordering      expert-ordering ablation (A3)
+//!   empty-tasks   empty-task two-stage mapping ablation (A4)
+//!   token-copy    token-copy elimination accounting (A5)
+//!   sweep         zipf imbalance sweep, ours vs grouped GEMM
+//!   simulate      one scenario end to end with the wave trace
+//!   plan          print the static batch plan for a scenario
+//!   serve         start the TCP serving coordinator (needs artifacts)
+//!   client        send synthetic requests to a running server
+//!   selftest      quick numeric self-check (CPU executor vs reference)
+
+use std::sync::Arc;
+
+use staticbatch::coordinator::engine::{Engine, EngineConfig};
+use staticbatch::coordinator::server;
+use staticbatch::moe::config::MoeShape;
+use staticbatch::moe::planner::Planner;
+use staticbatch::moe::routing::LoadScenario;
+use staticbatch::reports;
+use staticbatch::sim::{kernel_sim, specs::GpuSpec};
+use staticbatch::util::cli::Command;
+use staticbatch::util::logging;
+
+fn scenario_from(name: &str, alpha: f64) -> LoadScenario {
+    match name {
+        "balanced" => LoadScenario::Balanced,
+        "best" => LoadScenario::Best,
+        "worst" => LoadScenario::Worst,
+        "zipf" => LoadScenario::Zipf(alpha),
+        "dirichlet" => LoadScenario::Dirichlet(alpha),
+        other => {
+            eprintln!("unknown scenario '{other}', using balanced");
+            LoadScenario::Balanced
+        }
+    }
+}
+
+fn main() {
+    logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let sub = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if args.is_empty() { &[][..] } else { &args[1..] };
+    let code = match sub {
+        "table1" => {
+            print!("{}", reports::table1());
+            0
+        }
+        "baselines" => {
+            print!("{}", reports::baselines_table());
+            0
+        }
+        "mapping" => {
+            print!("{}", reports::mapping_table());
+            0
+        }
+        "ordering" => {
+            print!("{}", reports::ordering_table(0));
+            0
+        }
+        "empty-tasks" => {
+            print!("{}", reports::empty_tasks_table());
+            0
+        }
+        "token-copy" => {
+            print!("{}", reports::token_copy_table());
+            0
+        }
+        "swizzle" => {
+            print!("{}", reports::swizzle_table());
+            0
+        }
+        "sweep" => cmd_sweep(rest),
+        "simulate" => cmd_simulate(rest),
+        "plan" => cmd_plan(rest),
+        "serve" => cmd_serve(rest),
+        "client" => cmd_client(rest),
+        "selftest" => cmd_selftest(),
+        _ => {
+            eprintln!(
+                "staticbatch {} — static batching of irregular workloads\n\n\
+                 usage: staticbatch <table1|baselines|mapping|ordering|empty-tasks|swizzle|\n\
+                        token-copy|sweep|simulate|plan|serve|client|selftest> [flags]\n\
+                 run a subcommand with --help for its flags",
+                staticbatch::VERSION
+            );
+            if sub == "help" { 0 } else { 2 }
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_sweep(args: &[String]) -> i32 {
+    let cmd = Command::new("sweep", "zipf imbalance sweep, ours vs grouped GEMM")
+        .flag("gpu", Some("h800"), "gpu spec (h20|h800|a100)")
+        .flag("seeds", Some("3"), "seeds to average");
+    match cmd.parse(args) {
+        Ok(p) => {
+            print!("{}", reports::sweep_table(&p.str("gpu"), p.u64("seeds").unwrap_or(3)));
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            2
+        }
+    }
+}
+
+fn cmd_simulate(args: &[String]) -> i32 {
+    let cmd = Command::new("simulate", "simulate one MoE step on a GPU spec")
+        .flag("gpu", Some("h800"), "gpu spec (h20|h800|a100)")
+        .flag("scenario", Some("balanced"), "balanced|best|worst|zipf|dirichlet")
+        .flag("alpha", Some("1.2"), "skew parameter for zipf/dirichlet")
+        .flag("seed", Some("0"), "routing seed")
+        .switch("trace", "print the wave timeline");
+    let p = match cmd.parse(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let spec = match GpuSpec::by_name(&p.str("gpu")) {
+        Some(s) => s,
+        None => {
+            eprintln!("unknown gpu '{}'", p.str("gpu"));
+            return 2;
+        }
+    };
+    let sc = scenario_from(&p.str("scenario"), p.f64("alpha").unwrap_or(1.2));
+    let shape = MoeShape::paper_table1();
+    let load = sc.counts(&shape, p.u64("seed").unwrap_or(0));
+    let plan = Planner::new(shape).plan(&load);
+    let r = kernel_sim::simulate_ours(&plan, &spec);
+    println!(
+        "{} / {} on {}: {}",
+        sc.name(),
+        "paper_table1 shape",
+        spec.name,
+        r.summary()
+    );
+    println!(
+        "experts: {} non-empty, {} empty; {} tiles; imbalance {:.2}",
+        plan.num_nonempty(),
+        shape.experts - plan.num_nonempty(),
+        plan.total_tiles(),
+        load.imbalance()
+    );
+    if p.bool("trace") {
+        print!("{}", r.render_trace(40));
+    }
+    0
+}
+
+fn cmd_plan(args: &[String]) -> i32 {
+    let cmd = Command::new("plan", "print the static batch plan for a scenario")
+        .flag("scenario", Some("worst"), "balanced|best|worst|zipf|dirichlet")
+        .flag("alpha", Some("1.2"), "skew parameter")
+        .flag("seed", Some("0"), "routing seed");
+    let p = match cmd.parse(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let sc = scenario_from(&p.str("scenario"), p.f64("alpha").unwrap_or(1.2));
+    let shape = MoeShape::paper_table1();
+    let load = sc.counts(&shape, p.u64("seed").unwrap_or(0));
+    let plan = Planner::new(shape).plan(&load);
+    println!("plan for {} ({} experts, {} tiles):", sc.name(), shape.experts, plan.total_tiles());
+    println!("  sigma (grid order -> expert): {:?}", &plan.two_stage.sigma);
+    println!(
+        "  tile_prefix: {:?}",
+        &plan.two_stage.tile_prefix[..plan.num_nonempty().min(plan.two_stage.tile_prefix.len())]
+    );
+    for t in plan.tasks.iter().filter(|t| t.rows > 0).take(16) {
+        let s = staticbatch::moe::tiling::CATALOG[t.strategy];
+        println!("  expert {:>2}: {:>5} rows, tile {}x{}", t.expert, t.rows, s.tm, s.tn);
+    }
+    if plan.num_nonempty() > 16 {
+        println!("  ... ({} more tasks)", plan.num_nonempty() - 16);
+    }
+    println!("  metadata: {} bytes", plan.metadata_bytes());
+    0
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let cmd = Command::new("serve", "start the serving coordinator")
+        .flag("addr", Some("127.0.0.1:7433"), "listen address")
+        .flag("artifacts", Some("artifacts"), "artifacts directory");
+    let p = match cmd.parse(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let cfg = EngineConfig {
+        artifacts_dir: p.str("artifacts").into(),
+        ..EngineConfig::default()
+    };
+    let handle = match Engine::spawn(cfg) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("engine start failed: {e}");
+            return 1;
+        }
+    };
+    let addr = p.str("addr");
+    if let Err(e) = server::listen(&addr, Arc::clone(&handle.queue), Arc::clone(&handle.metrics)) {
+        eprintln!("server error: {e}");
+        return 1;
+    }
+    0
+}
+
+fn cmd_client(args: &[String]) -> i32 {
+    use std::io::{BufRead, BufReader, Write};
+    let cmd = Command::new("client", "send synthetic requests to a server")
+        .flag("addr", Some("127.0.0.1:7433"), "server address")
+        .flag("requests", Some("20"), "number of requests")
+        .flag("len", Some("12"), "tokens per request");
+    let p = match cmd.parse(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let n = p.usize("requests").unwrap_or(20);
+    let len = p.usize("len").unwrap_or(12);
+    let stream = match std::net::TcpStream::connect(p.str("addr")) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("connect: {e}");
+            return 1;
+        }
+    };
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    let mut rng = staticbatch::util::rng::Rng::new(1);
+    let t0 = std::time::Instant::now();
+    for i in 0..n {
+        let toks: Vec<String> =
+            (0..len).map(|_| rng.below(1000).to_string()).collect();
+        writeln!(w, "{{\"id\":{i},\"tokens\":[{}]}}", toks.join(",")).unwrap();
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        print!("{line}");
+    }
+    println!(
+        "{n} requests in {:.2}s ({:.1} req/s)",
+        t0.elapsed().as_secs_f64(),
+        n as f64 / t0.elapsed().as_secs_f64()
+    );
+    let _ = writeln!(w, "quit");
+    0
+}
+
+fn cmd_selftest() -> i32 {
+    use staticbatch::moe::cpu_exec;
+    use staticbatch::moe::token_index::TokenIndex;
+    use staticbatch::util::rng::Rng;
+    use staticbatch::util::tensor::Tensor;
+
+    let shape = MoeShape::tiny();
+    let load = LoadScenario::Dirichlet(0.5).counts(&shape, 1);
+    let mut rng = Rng::new(7);
+    let tokens = Tensor::randn(&[shape.seq, shape.d_model], 1.0, &mut rng);
+    let weights = Tensor::randn(&[shape.experts, shape.d_model, shape.d_ff], 0.1, &mut rng);
+    let mut pairs = Vec::new();
+    for (e, &c) in load.counts.iter().enumerate() {
+        for _ in 0..c {
+            pairs.push((rng.usize_below(shape.seq) as u32, e as u32));
+        }
+    }
+    let ti = TokenIndex::build(shape.experts, &pairs);
+    let gates: Vec<Vec<f32>> =
+        ti.index.iter().map(|v| v.iter().map(|_| 0.5f32).collect()).collect();
+    let inputs = cpu_exec::MoeInputs {
+        tokens: &tokens,
+        weights: &weights,
+        token_index: &ti,
+        gates: &gates,
+    };
+    let plan = Planner::new(shape).plan(&load);
+    let got = cpu_exec::execute(&plan, &inputs);
+    let want = cpu_exec::reference(&inputs, shape.seq, shape.d_model, shape.d_ff);
+    let err = got.max_abs_diff(&want);
+    println!("selftest: plan tiles={} max abs err={err:.2e}", plan.total_tiles());
+    if err < 1e-3 {
+        println!("selftest OK");
+        0
+    } else {
+        println!("selftest FAILED");
+        1
+    }
+}

@@ -1,0 +1,209 @@
+//! Kernel metadata builder: the Rust twin of `python/compile/metadata.py`.
+//!
+//! The AOT Pallas kernel consumes four int32 arrays per step:
+//! `tile_prefix[E]`, `sigma[E]`, `token_ids[SP]`, `num_tiles[1]`.  The
+//! serving engine builds them here (host side, per step, exactly the
+//! paper's two-phase host work), with the same layout contract as the jnp
+//! planner so one compiled executable serves every routing:
+//!
+//! * σ: non-empty experts first (in the chosen grid order), then empty
+//!   experts — Algorithm 4's injection padded to a permutation.
+//! * `tile_prefix`: inclusive prefix of per-non-empty-expert tile counts in
+//!   σ order, tail repeating the total (Algorithm 1 + padding rule).
+//! * `token_ids`: gather indices grouped by expert in σ order, each group
+//!   padded to a tile_m multiple (padding rows point at token 0 and carry
+//!   zero gate).
+
+use crate::moe::ordering::OrderingStrategy;
+use crate::moe::token_index::TokenIndex;
+
+/// Static dims of one compiled kernel variant (mirror of Python `MoeDims`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelDims {
+    pub seq: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub experts: usize,
+    pub top_k: usize,
+    pub tile_m: usize,
+}
+
+impl KernelDims {
+    /// Static padded row bound — must equal Python `MoeDims.padded_rows`.
+    pub fn padded_rows(&self) -> usize {
+        let raw = self.seq * self.top_k + self.experts * self.tile_m;
+        raw.div_ceil(self.tile_m) * self.tile_m
+    }
+
+    pub fn max_tiles(&self) -> usize {
+        self.padded_rows() / self.tile_m
+    }
+}
+
+/// The metadata tensors the kernel takes, plus the combine-side arrays.
+#[derive(Clone, Debug)]
+pub struct KernelMeta {
+    pub tile_prefix: Vec<i32>, // [E]
+    pub sigma: Vec<i32>,       // [E]
+    pub token_ids: Vec<i32>,   // [SP]
+    pub num_tiles: [i32; 1],
+    /// Combine gate per packed row (0 on padding) — consumed host-side.
+    pub gates_pad: Vec<f32>,   // [SP]
+    /// Expert of each packed row (for host-side checks / debugging).
+    pub row_expert: Vec<i32>,  // [SP], -1 on trailing padding
+}
+
+/// Build kernel metadata from token index arrays + gates.
+///
+/// `ordering` permutes the grid order of non-empty experts (Section 4.2);
+/// the Python planner always uses Natural, and the contract allows any
+/// permutation because the kernel reads experts through σ.
+pub fn build(
+    dims: &KernelDims,
+    token_index: &TokenIndex,
+    gates: &[Vec<f32>],
+    ordering: OrderingStrategy,
+) -> KernelMeta {
+    let e = dims.experts;
+    let t = dims.tile_m;
+    let sp = dims.padded_rows();
+    assert_eq!(token_index.index.len(), e);
+
+    let nonempty: Vec<(u32, usize)> = token_index
+        .index
+        .iter()
+        .enumerate()
+        .filter(|(_, v)| !v.is_empty())
+        .map(|(i, v)| (i as u32, v.len()))
+        .collect();
+    let ordered = ordering.order(&nonempty);
+
+    // σ: ordered non-empty experts, then empty experts ascending
+    let mut sigma: Vec<i32> = ordered.iter().map(|&x| x as i32).collect();
+    for (i, v) in token_index.index.iter().enumerate() {
+        if v.is_empty() {
+            sigma.push(i as i32);
+        }
+    }
+    debug_assert_eq!(sigma.len(), e);
+
+    // inclusive tile prefix over σ order (empties contribute 0 => tail
+    // repeats the total, the padding rule)
+    let mut tile_prefix = Vec::with_capacity(e);
+    let mut acc = 0i32;
+    for &s in &sigma {
+        let c = token_index.index[s as usize].len();
+        acc += c.div_ceil(t) as i32;
+        tile_prefix.push(acc);
+    }
+    let num_tiles = [acc];
+
+    // packed rows
+    let mut token_ids = vec![0i32; sp];
+    let mut gates_pad = vec![0f32; sp];
+    let mut row_expert = vec![-1i32; sp];
+    let mut cursor = 0usize;
+    for &s in sigma.iter().take(e) {
+        let rows = &token_index.index[s as usize];
+        if rows.is_empty() {
+            continue;
+        }
+        let padded = rows.len().div_ceil(t) * t;
+        assert!(cursor + padded <= sp, "static SP bound violated");
+        for (pos, &tok) in rows.iter().enumerate() {
+            token_ids[cursor + pos] = tok as i32;
+            gates_pad[cursor + pos] = gates[s as usize][pos];
+            row_expert[cursor + pos] = s;
+        }
+        // padding rows within the group still belong to the expert's tiles
+        for pos in rows.len()..padded {
+            row_expert[cursor + pos] = s;
+        }
+        cursor += padded;
+    }
+
+    KernelMeta { tile_prefix, sigma, token_ids, num_tiles, gates_pad, row_expert }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> KernelDims {
+        KernelDims { seq: 16, d_model: 8, d_ff: 8, experts: 4, top_k: 2, tile_m: 4 }
+    }
+
+    fn index(counts: &[usize]) -> (TokenIndex, Vec<Vec<f32>>) {
+        let mut pairs = Vec::new();
+        let mut tok = 0u32;
+        for (e, &c) in counts.iter().enumerate() {
+            for _ in 0..c {
+                pairs.push((tok % 16, e as u32));
+                tok += 1;
+            }
+        }
+        let ti = TokenIndex::build(counts.len(), &pairs);
+        let gates: Vec<Vec<f32>> =
+            ti.index.iter().map(|v| v.iter().map(|_| 0.5f32).collect()).collect();
+        (ti, gates)
+    }
+
+    #[test]
+    fn padded_rows_matches_python_formula() {
+        // python: ceil((S*K + E*T)/T)*T
+        let d = dims();
+        assert_eq!(d.padded_rows(), 48);
+        let d2 = KernelDims { seq: 8, d_model: 8, d_ff: 8, experts: 8, top_k: 1, tile_m: 64 };
+        assert_eq!(d2.padded_rows(), 576); // ceil(520/64)*64
+    }
+
+    #[test]
+    fn sigma_is_permutation_nonempty_first() {
+        let (ti, gates) = index(&[3, 0, 5, 0]);
+        let m = build(&dims(), &ti, &gates, OrderingStrategy::Natural);
+        assert_eq!(m.sigma, vec![0, 2, 1, 3]);
+        // tiles: ceil(3/4)=1, ceil(5/4)=2 -> prefix [1,3,3,3]
+        assert_eq!(m.tile_prefix, vec![1, 3, 3, 3]);
+        assert_eq!(m.num_tiles, [3]);
+    }
+
+    #[test]
+    fn token_ids_grouped_and_padded() {
+        let (ti, gates) = index(&[3, 0, 5, 0]);
+        let m = build(&dims(), &ti, &gates, OrderingStrategy::Natural);
+        // expert 0: rows 0..3 at offset 0, pad row 3; expert 2: rows at 4..9
+        assert_eq!(&m.token_ids[..3], &[0, 1, 2]);
+        assert_eq!(m.gates_pad[3], 0.0);
+        assert_eq!(m.row_expert[3], 0); // pad row still inside expert 0's tile
+        assert_eq!(&m.token_ids[4..9], &[3, 4, 5, 6, 7]);
+        assert_eq!(m.row_expert[4], 2);
+        // trailing region unused
+        assert!(m.row_expert[12..].iter().all(|&x| x == -1));
+    }
+
+    #[test]
+    fn ordering_permutes_sigma_prefix_consistently() {
+        let (ti, gates) = index(&[8, 1, 0, 6]);
+        let nat = build(&dims(), &ti, &gates, OrderingStrategy::Natural);
+        let half = build(&dims(), &ti, &gates, OrderingStrategy::HalfInterval);
+        // same totals, different order
+        assert_eq!(nat.num_tiles, half.num_tiles);
+        let mut a = nat.sigma.clone();
+        let mut b = half.sigma.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+        // gate mass preserved
+        let mass: f32 = nat.gates_pad.iter().sum();
+        let mass2: f32 = half.gates_pad.iter().sum();
+        assert!((mass - mass2).abs() < 1e-5);
+    }
+
+    #[test]
+    fn all_empty_is_valid() {
+        let (ti, gates) = index(&[0, 0, 0, 0]);
+        let m = build(&dims(), &ti, &gates, OrderingStrategy::Natural);
+        assert_eq!(m.num_tiles, [0]);
+        assert!(m.tile_prefix.iter().all(|&x| x == 0));
+    }
+}

@@ -1,0 +1,28 @@
+//! MoE-specific application of the batching framework (paper Section 4).
+//!
+//! * [`config`] — problem shapes, including the paper's Table 1 setting.
+//! * [`routing`] — expert-load scenarios (balanced / best / worst / zipf /
+//!   dirichlet) and a top-k router simulation.
+//! * [`token_index`] — per-expert token index arrays (Section 4.3), built
+//!   with the atomic-scatter semantics of radix bucketing.
+//! * [`tiling`] — the tiling-strategy catalog + per-expert selection
+//!   (different tasks in one batch get different strategies, the framework's
+//!   headline capability).
+//! * [`ordering`] — expert ordering strategies (Section 4.2): natural,
+//!   alternating, half-interval, random, sorted.
+//! * [`planner`] — builds the [`planner::ExecutionPlan`]: σ over non-empty
+//!   experts, ordering, per-expert tiling, TilePrefix — the one artifact
+//!   both the simulator and the CPU executor consume.
+//! * [`cpu_exec`] — executes a plan numerically on CPU *through the
+//!   framework dispatch*, validating mapping + gather correctness against
+//!   the dense reference.
+
+pub mod config;
+pub mod cpu_exec;
+pub mod kernel_meta;
+pub mod ordering;
+pub mod parallel;
+pub mod planner;
+pub mod routing;
+pub mod tiling;
+pub mod token_index;

@@ -1,0 +1,210 @@
+//! Expert ordering strategies (paper Section 4.2).
+//!
+//! "The basic idea is to interleave busy experts with non-busy experts so
+//! that a wave of thread blocks optimally contains both compute-bound and
+//! memory-bound tasks. [...] In practice, the half-interval strategy shows
+//! better performance."  The optimal ordering is NP-hard (the paper leaves
+//! it as future work); these are the heuristics it names plus controls.
+
+use crate::util::rng::Rng;
+
+/// Which order non-empty experts are laid out in the fused grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OrderingStrategy {
+    /// Expert-index order (the control).
+    Natural,
+    /// Busy experts sorted descending (worst mixing — busy tiles clump).
+    SortedDesc,
+    /// Strictly alternate busy / non-busy from the two ends of the sorted
+    /// list (paper: "alternating busy and non-busy experts").
+    Alternating,
+    /// Place busy experts at half-interval positions: the busiest at slot 0,
+    /// the next at the midpoint, recursively — spreading compute-bound tasks
+    /// evenly across the grid (paper: "arranging busy experts in a
+    /// half-interval manner"; the strategy it found best).
+    HalfInterval,
+    /// Uniform random permutation (control).
+    Random(u64),
+}
+
+impl OrderingStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OrderingStrategy::Natural => "natural",
+            OrderingStrategy::SortedDesc => "sorted-desc",
+            OrderingStrategy::Alternating => "alternating",
+            OrderingStrategy::HalfInterval => "half-interval",
+            OrderingStrategy::Random(_) => "random",
+        }
+    }
+
+    /// Order the given (expert, rows) pairs; returns expert ids.
+    /// Only call with non-empty experts (the planner filters first).
+    pub fn order(&self, loads: &[(u32, usize)]) -> Vec<u32> {
+        match *self {
+            OrderingStrategy::Natural => loads.iter().map(|&(e, _)| e).collect(),
+            OrderingStrategy::SortedDesc => {
+                let mut v = loads.to_vec();
+                v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+                v.into_iter().map(|(e, _)| e).collect()
+            }
+            OrderingStrategy::Alternating => {
+                let mut v = loads.to_vec();
+                v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+                let mut out = Vec::with_capacity(v.len());
+                let (mut lo, mut hi) = (0usize, v.len());
+                // take from the busy end and the idle end alternately
+                let mut take_busy = true;
+                while lo < hi {
+                    if take_busy {
+                        out.push(v[lo].0);
+                        lo += 1;
+                    } else {
+                        hi -= 1;
+                        out.push(v[hi].0);
+                    }
+                    take_busy = !take_busy;
+                }
+                out
+            }
+            OrderingStrategy::HalfInterval => {
+                let mut v = loads.to_vec();
+                v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+                let n = v.len();
+                let mut slots: Vec<Option<u32>> = vec![None; n];
+                // visit slot offsets in bit-reversal order: 0, n/2, n/4,
+                // 3n/4, ... — the "half-interval" recursive midpoint layout
+                let order = bit_reversal_order(n);
+                for (rank, slot) in order.into_iter().enumerate() {
+                    slots[slot] = Some(v[rank].0);
+                }
+                slots.into_iter().map(|s| s.unwrap()).collect()
+            }
+            OrderingStrategy::Random(seed) => {
+                let mut v: Vec<u32> = loads.iter().map(|&(e, _)| e).collect();
+                Rng::new(seed).shuffle(&mut v);
+                v
+            }
+        }
+    }
+}
+
+/// Slot visit order by bit-reversed index, truncated to n (stable for any n).
+fn bit_reversal_order(n: usize) -> Vec<usize> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let bits = usize::BITS - (n - 1).leading_zeros().max(0);
+    let bits = bits.max(1);
+    let mut seen = vec![false; n];
+    let mut out = Vec::with_capacity(n);
+    for i in 0..(1usize << bits) {
+        let r = reverse_bits(i, bits);
+        if r < n && !seen[r] {
+            seen[r] = true;
+            out.push(r);
+        }
+    }
+    // any slots missed (non-power-of-two n): append in order
+    for (i, s) in seen.iter().enumerate() {
+        if !s {
+            out.push(i);
+        }
+    }
+    out
+}
+
+fn reverse_bits(x: usize, bits: u32) -> usize {
+    let mut r = 0usize;
+    for b in 0..bits {
+        if x & (1 << b) != 0 {
+            r |= 1 << (bits - 1 - b);
+        }
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loads() -> Vec<(u32, usize)> {
+        // experts 0..7 with descending busyness 800, 400, 200, 100, 4, 3, 2, 1
+        vec![
+            (0, 800),
+            (1, 400),
+            (2, 200),
+            (3, 100),
+            (4, 4),
+            (5, 3),
+            (6, 2),
+            (7, 1),
+        ]
+    }
+
+    #[test]
+    fn natural_preserves_input() {
+        let o = OrderingStrategy::Natural.order(&loads());
+        assert_eq!(o, vec![0, 1, 2, 3, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn sorted_desc_by_load() {
+        let mut l = loads();
+        l.reverse();
+        let o = OrderingStrategy::SortedDesc.order(&l);
+        assert_eq!(o, vec![0, 1, 2, 3, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn alternating_interleaves_ends() {
+        let o = OrderingStrategy::Alternating.order(&loads());
+        // busy, idle, busy, idle...
+        assert_eq!(o, vec![0, 7, 1, 6, 2, 5, 3, 4]);
+    }
+
+    #[test]
+    fn half_interval_spreads_busy() {
+        let o = OrderingStrategy::HalfInterval.order(&loads());
+        // busiest at 0, second-busiest at midpoint
+        assert_eq!(o[0], 0);
+        assert_eq!(o[4], 1);
+        // all experts present exactly once
+        let mut sorted = o.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..8).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn half_interval_non_power_of_two() {
+        let l: Vec<(u32, usize)> = (0..7).map(|e| (e, 100 - e as usize)).collect();
+        let o = OrderingStrategy::HalfInterval.order(&l);
+        let mut sorted = o.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..7).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn random_is_permutation_and_seeded() {
+        let a = OrderingStrategy::Random(9).order(&loads());
+        let b = OrderingStrategy::Random(9).order(&loads());
+        assert_eq!(a, b);
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..8).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn single_expert_all_strategies() {
+        let l = vec![(3u32, 42usize)];
+        for s in [
+            OrderingStrategy::Natural,
+            OrderingStrategy::SortedDesc,
+            OrderingStrategy::Alternating,
+            OrderingStrategy::HalfInterval,
+            OrderingStrategy::Random(1),
+        ] {
+            assert_eq!(s.order(&l), vec![3]);
+        }
+    }
+}

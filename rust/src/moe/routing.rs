@@ -1,0 +1,215 @@
+//! Expert-load scenarios and routing generation.
+//!
+//! The paper's Section 5 evaluates three named scenarios; real serving sees
+//! a continuum of imbalance, which the zipf/dirichlet generators cover for
+//! the sweep experiments.
+
+use crate::moe::config::MoeShape;
+use crate::util::rng::{zipf_weights, Rng};
+
+/// A routing outcome: how many (token, slot) rows each expert received.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ExpertLoad {
+    pub counts: Vec<usize>,
+}
+
+impl ExpertLoad {
+    pub fn total(&self) -> usize {
+        self.counts.iter().sum()
+    }
+
+    pub fn num_empty(&self) -> usize {
+        self.counts.iter().filter(|&&c| c == 0).count()
+    }
+
+    pub fn max(&self) -> usize {
+        self.counts.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Load-imbalance factor: max/mean over non-empty experts.
+    pub fn imbalance(&self) -> f64 {
+        let nonzero: Vec<usize> = self.counts.iter().copied().filter(|&c| c > 0).collect();
+        if nonzero.is_empty() {
+            return 0.0;
+        }
+        let mean = nonzero.iter().sum::<usize>() as f64 / nonzero.len() as f64;
+        self.max() as f64 / mean
+    }
+}
+
+/// Named load scenarios.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LoadScenario {
+    /// Tokens averagely routed to all experts (paper case 1).
+    Balanced,
+    /// All tokens routed to the same `top_k` experts (paper case 2).
+    Best,
+    /// Nearly all tokens to the same `top_k` experts; every other expert
+    /// receives exactly one token (paper case 3).
+    Worst,
+    /// Zipf-distributed expert popularity with exponent alpha.
+    Zipf(f64),
+    /// Dirichlet-distributed expert shares with concentration alpha
+    /// (alpha -> inf = balanced; alpha < 1 = spiky).
+    Dirichlet(f64),
+}
+
+impl LoadScenario {
+    /// Generate per-expert row counts for a shape. Deterministic in `seed`.
+    pub fn counts(&self, shape: &MoeShape, seed: u64) -> ExpertLoad {
+        let e = shape.experts;
+        let total = shape.total_rows();
+        let mut counts = vec![0usize; e];
+        match *self {
+            LoadScenario::Balanced => {
+                for i in 0..total {
+                    counts[i % e] += 1;
+                }
+            }
+            LoadScenario::Best => {
+                // all rows on the first top_k experts, evenly
+                for i in 0..total {
+                    counts[i % shape.top_k] += 1;
+                }
+            }
+            LoadScenario::Worst => {
+                // one token on each non-hot expert, the rest on the hot k
+                let cold = e - shape.top_k;
+                for (j, c) in counts.iter_mut().enumerate().skip(shape.top_k).take(cold) {
+                    let _ = j;
+                    *c = 1;
+                }
+                let remaining = total - cold;
+                for i in 0..remaining {
+                    counts[i % shape.top_k] += 1;
+                }
+            }
+            LoadScenario::Zipf(alpha) => {
+                let mut rng = Rng::new(seed);
+                let w = zipf_weights(e, alpha);
+                // random expert popularity permutation so rank != index
+                let mut perm: Vec<usize> = (0..e).collect();
+                rng.shuffle(&mut perm);
+                for _ in 0..total {
+                    counts[perm[rng.zipf(&w)]] += 1;
+                }
+            }
+            LoadScenario::Dirichlet(alpha) => {
+                let mut rng = Rng::new(seed);
+                let shares = rng.dirichlet(alpha, e);
+                // multinomial via repeated categorical draws
+                for _ in 0..total {
+                    let mut u = rng.f64();
+                    let mut chosen = e - 1;
+                    for (i, &s) in shares.iter().enumerate() {
+                        if u < s {
+                            chosen = i;
+                            break;
+                        }
+                        u -= s;
+                    }
+                    counts[chosen] += 1;
+                }
+            }
+        }
+        ExpertLoad { counts }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            LoadScenario::Balanced => "balanced".into(),
+            LoadScenario::Best => "best".into(),
+            LoadScenario::Worst => "worst".into(),
+            LoadScenario::Zipf(a) => format!("zipf({a})"),
+            LoadScenario::Dirichlet(a) => format!("dirichlet({a})"),
+        }
+    }
+}
+
+/// Simulated top-k router over real token activations is on the Python side;
+/// here we also provide a synthetic per-token assignment consistent with an
+/// [`ExpertLoad`] for the CPU executor: round-robin filling of expert slots.
+pub fn assignments_from_counts(load: &ExpertLoad, seed: u64) -> Vec<Vec<u32>> {
+    // produce, per expert, the list of token row ids routed to it
+    let mut rng = Rng::new(seed ^ 0xA55A);
+    let total: usize = load.total();
+    let mut rows: Vec<u32> = (0..total as u32).collect();
+    rng.shuffle(&mut rows);
+    let mut out = Vec::with_capacity(load.counts.len());
+    let mut cursor = 0;
+    for &c in &load.counts {
+        out.push(rows[cursor..cursor + c].to_vec());
+        cursor += c;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape() -> MoeShape {
+        MoeShape::paper_table1()
+    }
+
+    #[test]
+    fn balanced_is_flat() {
+        let load = LoadScenario::Balanced.counts(&shape(), 0);
+        assert_eq!(load.total(), 4096 * 8);
+        assert!(load.counts.iter().all(|&c| c == 512));
+        assert_eq!(load.num_empty(), 0);
+        assert!((load.imbalance() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn best_uses_only_k_experts() {
+        let load = LoadScenario::Best.counts(&shape(), 0);
+        assert_eq!(load.num_empty(), 64 - 8);
+        assert_eq!(load.total(), 4096 * 8);
+        assert!(load.counts[..8].iter().all(|&c| c == 4096));
+    }
+
+    #[test]
+    fn worst_has_56_single_token_experts() {
+        let load = LoadScenario::Worst.counts(&shape(), 0);
+        assert_eq!(load.total(), 4096 * 8);
+        assert_eq!(load.counts.iter().filter(|&&c| c == 1).count(), 56);
+        assert_eq!(load.num_empty(), 0);
+        assert!(load.counts[..8].iter().all(|&c| c >= 4089 / 2));
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_mass_conserving() {
+        let load = LoadScenario::Zipf(1.2).counts(&shape(), 7);
+        assert_eq!(load.total(), 4096 * 8);
+        assert!(load.imbalance() > 2.0, "imbalance {}", load.imbalance());
+    }
+
+    #[test]
+    fn dirichlet_spiky_vs_flat() {
+        let spiky = LoadScenario::Dirichlet(0.1).counts(&shape(), 3);
+        let flat = LoadScenario::Dirichlet(100.0).counts(&shape(), 3);
+        assert!(spiky.imbalance() > flat.imbalance());
+        assert_eq!(spiky.total(), flat.total());
+    }
+
+    #[test]
+    fn scenarios_deterministic_in_seed() {
+        let a = LoadScenario::Zipf(1.0).counts(&shape(), 42);
+        let b = LoadScenario::Zipf(1.0).counts(&shape(), 42);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn assignments_partition_rows() {
+        let s = MoeShape::tiny();
+        let load = LoadScenario::Balanced.counts(&s, 0);
+        let asg = assignments_from_counts(&load, 0);
+        let mut all: Vec<u32> = asg.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..load.total() as u32).collect::<Vec<_>>());
+        for (e, rows) in asg.iter().enumerate() {
+            assert_eq!(rows.len(), load.counts[e]);
+        }
+    }
+}

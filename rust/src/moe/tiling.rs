@@ -1,0 +1,107 @@
+//! Tiling-strategy catalog and per-expert selection.
+//!
+//! "These GEMMs can be categorized into several pre-defined tiling
+//! strategies. Generally speaking, GEMMs with large input and output sizes
+//! prefer large tiles to improve computational intensity." (Section 4.)
+//! Each strategy corresponds to one device function (`taskFunc_i`), so the
+//! catalog is fixed at build time; selection is per task at plan time.
+
+/// One pre-compiled tile shape (rows x cols of the output tile).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileStrategy {
+    pub tm: usize,
+    pub tn: usize,
+}
+
+/// The catalog, largest to smallest. Shapes follow the usual Hopper WGMMA
+/// sweet spots; on the TPU side these are MXU-aligned (multiples of 8x128).
+pub const CATALOG: &[TileStrategy] = &[
+    TileStrategy { tm: 128, tn: 256 },
+    TileStrategy { tm: 128, tn: 128 },
+    TileStrategy { tm: 64, tn: 128 },
+    TileStrategy { tm: 32, tn: 128 },
+    TileStrategy { tm: 16, tn: 128 },
+];
+
+/// Index into [`CATALOG`].
+pub type StrategyId = usize;
+
+/// Pick the strategy for an expert GEMM of `m` rows: the largest tile whose
+/// row dimension does not waste more than half its rows, falling back to
+/// the smallest for skinny tasks.  This is the per-task selection the
+/// framework enables and grouped GEMM (single strategy) cannot do.
+pub fn select(m: usize) -> StrategyId {
+    for (i, s) in CATALOG.iter().enumerate() {
+        if m >= s.tm {
+            return i;
+        }
+        // allow one partial tile if at least half full
+        if m * 2 >= s.tm {
+            return i;
+        }
+    }
+    CATALOG.len() - 1
+}
+
+/// The single compromise strategy grouped GEMM would use for the whole
+/// batch: sized for the *mean* task (the defect in Section 2.1 — too large
+/// for skinny tasks, too small for fat ones).
+pub fn select_single_for_batch(ms: &[usize]) -> StrategyId {
+    let nonzero: Vec<usize> = ms.iter().copied().filter(|&m| m > 0).collect();
+    if nonzero.is_empty() {
+        return CATALOG.len() - 1;
+    }
+    let mean = nonzero.iter().sum::<usize>() / nonzero.len();
+    select(mean)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_is_sorted_descending() {
+        for w in CATALOG.windows(2) {
+            assert!(w[0].tm * w[0].tn >= w[1].tm * w[1].tn);
+        }
+    }
+
+    #[test]
+    fn big_tasks_get_big_tiles() {
+        assert_eq!(CATALOG[select(4096)], TileStrategy { tm: 128, tn: 256 });
+        assert_eq!(CATALOG[select(512)], TileStrategy { tm: 128, tn: 256 });
+    }
+
+    #[test]
+    fn skinny_tasks_get_small_tiles() {
+        assert_eq!(CATALOG[select(1)].tm, 16);
+        // 16 rows exactly half-fill a 32-row tile -> accepted by the
+        // half-full rule (one partial tile beats two tiny ones)
+        assert_eq!(CATALOG[select(16)].tm, 32);
+        assert_eq!(CATALOG[select(15)].tm, 16);
+        assert_eq!(CATALOG[select(33)].tm, 64);
+    }
+
+    #[test]
+    fn half_full_tile_accepted() {
+        // 64 rows: a 128-row tile would be exactly half full -> accepted
+        assert_eq!(CATALOG[select(64)].tm, 128);
+        // 63 rows: less than half of 128 -> next size down
+        assert_eq!(CATALOG[select(63)].tm, 64);
+    }
+
+    #[test]
+    fn single_strategy_uses_mean() {
+        // mean of [4096 x8, 1 x56] = (32768+56)/64 = 512 -> big tile
+        let mut ms = vec![4096usize; 8];
+        ms.extend(vec![1usize; 56]);
+        assert_eq!(CATALOG[select_single_for_batch(&ms)].tm, 128);
+        // all-skinny batch -> small tile
+        assert_eq!(CATALOG[select_single_for_batch(&[2, 3, 1])].tm, 16);
+    }
+
+    #[test]
+    fn empty_batch_defaults_to_smallest() {
+        assert_eq!(select_single_for_batch(&[0, 0]), CATALOG.len() - 1);
+    }
+}

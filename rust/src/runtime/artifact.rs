@@ -1,0 +1,179 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.  Parsed with the in-crate JSON parser.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of a tensor in the manifest.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    Bf16,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            "bfloat16" => Ok(DType::Bf16),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+}
+
+/// Shape + dtype of one input/output.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow!("spec missing shape"))?
+            .iter()
+            .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(
+            j.get("dtype").and_then(|d| d.as_str()).ok_or_else(|| anyhow!("missing dtype"))?,
+        )?;
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One AOT entry point.
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: Json,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, Entry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        let mut entries = BTreeMap::new();
+        let ents = json
+            .get("entries")
+            .and_then(|e| e.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing entries"))?;
+        for (name, ent) in ents {
+            let file = dir.join(
+                ent.get("file").and_then(|f| f.as_str()).ok_or_else(|| anyhow!("missing file"))?,
+            );
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                ent.get(key)
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| anyhow!("{name}: missing {key}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            entries.insert(
+                name.clone(),
+                Entry {
+                    name: name.clone(),
+                    file,
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                    meta: ent.get("meta").cloned().unwrap_or(Json::Null),
+                },
+            );
+        }
+        Ok(Manifest { dir, entries })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("no entry '{name}' in manifest (have: {:?})",
+                self.entries.keys().collect::<Vec<_>>()))
+    }
+
+    /// Kernel dims recorded in the moe_gemm entry's meta.
+    pub fn kernel_dims(&self, name: &str) -> Result<crate::moe::kernel_meta::KernelDims> {
+        let meta = &self.entry(name)?.meta;
+        let dims = meta.get("dims").ok_or_else(|| anyhow!("{name}: meta.dims missing"))?;
+        let get = |k: &str| -> Result<usize> {
+            dims.get(k).and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("meta.dims.{k}"))
+        };
+        Ok(crate::moe::kernel_meta::KernelDims {
+            seq: get("seq")?,
+            d_model: get("d_model")?,
+            d_ff: get("d_ff")?,
+            experts: get("experts")?,
+            top_k: get("top_k")?,
+            tile_m: get("tile_m")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("float32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("int32").unwrap(), DType::I32);
+        assert!(DType::parse("float64").is_err());
+    }
+
+    #[test]
+    fn manifest_loads_if_built() {
+        let dir = art_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let e = m.entry("moe_gemm").unwrap();
+        assert_eq!(e.inputs.len(), 6);
+        assert!(e.file.exists());
+        let dims = m.kernel_dims("moe_gemm").unwrap();
+        assert_eq!(dims.experts, 64);
+        // SP input matches the dims formula
+        assert_eq!(e.inputs[4].shape[0], dims.padded_rows());
+    }
+
+    #[test]
+    fn missing_entry_is_error() {
+        let dir = art_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.entry("nope").is_err());
+    }
+}

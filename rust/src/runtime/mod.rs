@@ -1,0 +1,7 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
+//! PJRT client.  Python never runs here — artifacts are produced once by
+//! `make artifacts` and this module is the only consumer.
+
+pub mod artifact;
+pub mod client;
+pub mod executor;

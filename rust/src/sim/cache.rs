@@ -1,0 +1,88 @@
+//! L2 cache model for mapping-metadata reads.
+//!
+//! Section 3.1's critique of the per-block mapping array (PPoPP'19 [10]):
+//! the array is as long as the grid, so when every block reads its own
+//! entry the accesses stream through L2 with poor locality; the compressed
+//! TilePrefix (length = #tasks) instead stays L2/L1-resident for the whole
+//! kernel.  This model turns that argument into numbers the mapping
+//! microbench (experiment A2) reports.
+
+use crate::sim::specs::GpuSpec;
+
+/// Access-cost model for one auxiliary array read per thread block.
+#[derive(Clone, Copy, Debug)]
+pub struct ArrayAccessModel {
+    /// Array length in elements.
+    pub len: usize,
+    /// Element size in bytes.
+    pub elem_bytes: usize,
+}
+
+impl ArrayAccessModel {
+    pub fn bytes(&self) -> f64 {
+        (self.len * self.elem_bytes) as f64
+    }
+
+    /// Expected hit rate when `blocks` reads with hardware-linear block ids
+    /// stream through the array while the rest of the kernel's working set
+    /// (`competing_bytes`) also contends for L2.
+    ///
+    /// The array competes for the L2 share left over by operand traffic;
+    /// a 128-byte line serves `line/elem` consecutive block ids, so even a
+    /// streaming pass hits `1 - elem/line` of the time *if* the line is not
+    /// evicted between neighboring blocks' reads — the eviction probability
+    /// grows with working-set pressure.
+    pub fn hit_rate(&self, spec: &GpuSpec, competing_bytes: f64) -> f64 {
+        let line = 128.0;
+        let spatial = 1.0 - self.elem_bytes as f64 / line; // same-line hits
+        let l2 = spec.l2_bytes();
+        let resident = (l2 / (competing_bytes + self.bytes())).min(1.0);
+        // lines survive between neighbor reads with prob ~ resident share
+        spatial * resident + (1.0 - spatial) * (l2 / (competing_bytes + l2)).min(1.0) * 0.0
+    }
+
+    /// Mean latency of one block's metadata read, ns.
+    pub fn read_ns(&self, spec: &GpuSpec, competing_bytes: f64) -> f64 {
+        let h = self.hit_rate(spec, competing_bytes);
+        h * spec.l2_hit_ns + (1.0 - h) * spec.hbm_miss_ns
+    }
+
+    /// H2D copy time for shipping this array to the device each step, s.
+    pub fn h2d_time_s(&self, spec: &GpuSpec) -> f64 {
+        spec.h2d_latency_us * 1e-6 + self.bytes() / (spec.h2d_gbps * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_array_mostly_hits() {
+        let spec = GpuSpec::h800();
+        // 64-entry TilePrefix: trivially resident
+        let m = ArrayAccessModel { len: 64, elem_bytes: 4 };
+        assert!(m.hit_rate(&spec, 0.0) > 0.9);
+        assert!(m.read_ns(&spec, 0.0) < 100.0);
+    }
+
+    #[test]
+    fn giant_array_under_pressure_misses_more() {
+        let spec = GpuSpec::h800();
+        let small = ArrayAccessModel { len: 64, elem_bytes: 4 };
+        let big = ArrayAccessModel { len: 1 << 20, elem_bytes: 8 };
+        let pressure = 200.0 * 1024.0 * 1024.0; // 200 MB of operand traffic
+        assert!(big.hit_rate(&spec, pressure) < small.hit_rate(&spec, pressure));
+        assert!(big.read_ns(&spec, pressure) > small.read_ns(&spec, pressure));
+    }
+
+    #[test]
+    fn h2d_scales_with_length() {
+        let spec = GpuSpec::h20();
+        let small = ArrayAccessModel { len: 64, elem_bytes: 4 };
+        let big = ArrayAccessModel { len: 1 << 22, elem_bytes: 8 };
+        assert!(big.h2d_time_s(&spec) > small.h2d_time_s(&spec) * 10.0);
+        // latency floor dominates tiny copies
+        assert!(small.h2d_time_s(&spec) >= spec.h2d_latency_us * 1e-6);
+    }
+}

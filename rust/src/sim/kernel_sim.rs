@@ -1,0 +1,220 @@
+//! Simulate our statically batched MoE kernel on a GPU spec.
+//!
+//! Converts an [`ExecutionPlan`] into the tile stream the fused kernel
+//! would launch (grid order = plan order, m-outer n-inner per expert) and
+//! runs it through the wave model with the chosen mapping mode's overheads.
+
+use crate::moe::planner::ExecutionPlan;
+use crate::moe::tiling::CATALOG;
+use crate::sim::cost::{gemm_tiles, TileWork};
+use crate::sim::overhead::MappingMode;
+use crate::sim::specs::GpuSpec;
+use crate::sim::trace::SimResult;
+use crate::sim::wave;
+
+/// Warp passes Algorithm 2 needs for the tile of the `h`-th non-empty task.
+fn warp_passes_for_task(h: usize) -> usize {
+    h / crate::batching::warp::WARP_SIZE + 1
+}
+
+/// Expand the plan into its tile stream. `decode_ns_for_task(h)` supplies
+/// the per-block decode overhead (h = position among non-empty tasks).
+pub fn tiles_for_plan<F: Fn(usize) -> f64>(
+    plan: &ExecutionPlan,
+    decode_ns_for_task: F,
+) -> Vec<TileWork> {
+    let shape = plan.shape;
+    let mut tiles = Vec::new();
+    let mut h = 0usize;
+    for (ti, task) in plan.tasks.iter().enumerate() {
+        if task.rows == 0 {
+            continue;
+        }
+        let s = CATALOG[task.strategy];
+        tiles.extend(gemm_tiles(
+            ti as u32,
+            task.rows,
+            shape.d_ff,
+            shape.d_model,
+            s.tm,
+            s.tn,
+            shape.dtype(),
+            decode_ns_for_task(h),
+        ));
+        h += 1;
+    }
+    tiles
+}
+
+/// Total operand bytes (used as L2 pressure for the cache models).
+pub fn operand_bytes(plan: &ExecutionPlan) -> f64 {
+    let s = plan.shape;
+    let weights: f64 = plan.num_nonempty() as f64 * s.weight_bytes() as f64;
+    let tokens = (s.total_rows() * s.d_model * s.dtype_bytes) as f64;
+    let outs = (s.total_rows() * s.d_ff * s.dtype_bytes) as f64;
+    weights + tokens + outs
+}
+
+/// Our kernel: compressed TilePrefix + σ, warp-vote decode (Alg. 2/4).
+pub fn simulate_ours(plan: &ExecutionPlan, spec: &GpuSpec) -> SimResult {
+    let metadata_len = plan.two_stage.tile_prefix.len() + plan.two_stage.sigma.len();
+    let mode = MappingMode::CompressedPrefix { metadata_len, warp_passes: 1 };
+    let warp_ns = spec.warp_pass_ns;
+    let tiles = tiles_for_plan(plan, |h| warp_ns * warp_passes_for_task(h) as f64);
+    let host = mode.host_time_s(spec) + mode.launch_time_s(spec);
+    wave::run_waves(&tiles, spec, host)
+}
+
+/// Our kernel but decoded through a full per-block mapping array
+/// (PPoPP'19 [10] style) — isolates the mapping mechanism (experiment A2).
+pub fn simulate_per_block_array(plan: &ExecutionPlan, spec: &GpuSpec) -> SimResult {
+    let blocks = plan.total_tiles() as usize;
+    let mode = MappingMode::PerBlockArray { blocks };
+    let pressure = operand_bytes(plan);
+    let decode = mode.decode_ns(spec, pressure);
+    let tiles = tiles_for_plan(plan, |_| decode);
+    let host = mode.host_time_s(spec) + mode.launch_time_s(spec);
+    wave::run_waves(&tiles, spec, host)
+}
+
+/// A "no-elision" variant: empty tasks keep a mapping slot (the dense
+/// Algorithm 2 over all N tasks). Decode scans all N, and σ is skipped.
+/// Used by the empty-task ablation (A4).
+pub fn simulate_dense_mapping(plan: &ExecutionPlan, spec: &GpuSpec) -> SimResult {
+    let n = plan.tasks.len(); // all experts, empty included
+    let warp_ns = spec.warp_pass_ns;
+    // every block scans the full N-entry prefix (no early-out benefit of
+    // compaction); passes = ceil(N/32) in the worst case — charge the mean
+    // position like the compressed variant for fairness
+    let tiles = tiles_for_plan(plan, |h| {
+        let _ = h;
+        warp_ns * (n as f64 / crate::batching::warp::WARP_SIZE as f64).ceil()
+    });
+    let mode = MappingMode::CompressedPrefix { metadata_len: n, warp_passes: 1 };
+    let host = mode.host_time_s(spec) + mode.launch_time_s(spec);
+    wave::run_waves(&tiles, spec, host)
+}
+
+/// The no-Algorithm-4 strawman a static scheme needs without σ: every empty
+/// task is padded to one tile so the dense mapping stays invertible.  The
+/// padding tiles compute nothing but still stage their weight slice from
+/// HBM and occupy block slots — the waste Section 4.1 eliminates.
+pub fn simulate_padded_empty(plan: &ExecutionPlan, spec: &GpuSpec) -> SimResult {
+    let n = plan.tasks.len();
+    let shape = plan.shape;
+    let warp_ns = spec.warp_pass_ns;
+    let passes = (n as f64 / crate::batching::warp::WARP_SIZE as f64).ceil();
+    let mut tiles = tiles_for_plan(plan, |_| warp_ns * passes);
+    for (ti, task) in plan.tasks.iter().enumerate() {
+        if task.rows > 0 {
+            continue;
+        }
+        let s = CATALOG[task.strategy];
+        let ds = shape.dtype_bytes as f64;
+        tiles.push(crate::sim::cost::TileWork {
+            task: ti as u32,
+            m_tile: 0,
+            n_tile: 0,
+            useful_flops: 0.0,
+            // the tensor core still cycles through the padded tile
+            occupied_flops: 2.0 * s.tm as f64 * s.tn as f64 * shape.d_model as f64,
+            weight_bytes: shape.d_model as f64 * s.tn as f64 * ds,
+            token_bytes: s.tm as f64 * shape.d_model as f64 * ds,
+            out_bytes: 0.0,
+            decode_ns: warp_ns * passes,
+        });
+    }
+    let mode = MappingMode::CompressedPrefix { metadata_len: n, warp_passes: 1 };
+    let host = mode.host_time_s(spec) + mode.launch_time_s(spec);
+    wave::run_waves(&tiles, spec, host)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::config::MoeShape;
+    use crate::moe::planner::Planner;
+    use crate::moe::routing::LoadScenario;
+
+    #[test]
+    fn padded_empty_never_faster_and_wasteful_with_many_empties() {
+        let shape = MoeShape::paper_table1();
+        let plan = Planner::new(shape).plan(&LoadScenario::Best.counts(&shape, 0));
+        let ours = simulate_ours(&plan, &GpuSpec::h800());
+        let padded = simulate_padded_empty(&plan, &GpuSpec::h800());
+        assert!(padded.time_s >= ours.time_s);
+        assert!(padded.padding_waste() > ours.padding_waste());
+    }
+
+    fn plan_for(sc: LoadScenario) -> ExecutionPlan {
+        Planner::new(MoeShape::paper_table1()).plan(&sc.counts(&MoeShape::paper_table1(), 0))
+    }
+
+    #[test]
+    fn tile_stream_matches_mapping_block_count() {
+        let plan = plan_for(LoadScenario::Worst);
+        let tiles = tiles_for_plan(&plan, |_| 0.0);
+        assert_eq!(tiles.len() as u32, plan.total_tiles());
+    }
+
+    #[test]
+    fn h20_balanced_hits_paper_ballpark() {
+        // Paper Table 1: H20 balanced = 94.67% of peak.
+        let r = simulate_ours(&plan_for(LoadScenario::Balanced), &GpuSpec::h20());
+        assert!(
+            r.peak_frac > 0.88 && r.peak_frac < 1.0,
+            "H20 balanced peak% = {:.2}",
+            r.peak_frac * 100.0
+        );
+    }
+
+    #[test]
+    fn h800_balanced_above_three_quarters() {
+        // Paper: 84.82%.
+        let r = simulate_ours(&plan_for(LoadScenario::Balanced), &GpuSpec::h800());
+        assert!(
+            r.peak_frac > 0.70 && r.peak_frac < 0.98,
+            "H800 balanced peak% = {:.2}",
+            r.peak_frac * 100.0
+        );
+    }
+
+    #[test]
+    fn h800_worst_degrades_much_more_than_h20() {
+        // Paper: H800 drops to 59%, H20 only to 90%.
+        let worst_h800 = simulate_ours(&plan_for(LoadScenario::Worst), &GpuSpec::h800());
+        let worst_h20 = simulate_ours(&plan_for(LoadScenario::Worst), &GpuSpec::h20());
+        let bal_h800 = simulate_ours(&plan_for(LoadScenario::Balanced), &GpuSpec::h800());
+        let bal_h20 = simulate_ours(&plan_for(LoadScenario::Balanced), &GpuSpec::h20());
+        let drop_h800 = worst_h800.peak_frac / bal_h800.peak_frac;
+        let drop_h20 = worst_h20.peak_frac / bal_h20.peak_frac;
+        assert!(drop_h800 < drop_h20, "H800 must degrade more: {drop_h800} vs {drop_h20}");
+        assert!(drop_h20 > 0.85, "H20 worst should stay near balanced: {drop_h20}");
+    }
+
+    #[test]
+    fn per_block_array_never_faster() {
+        for sc in [LoadScenario::Balanced, LoadScenario::Worst] {
+            let plan = plan_for(sc);
+            let ours = simulate_ours(&plan, &GpuSpec::h800());
+            let arr = simulate_per_block_array(&plan, &GpuSpec::h800());
+            assert!(arr.time_s >= ours.time_s, "{sc:?}");
+        }
+    }
+
+    #[test]
+    fn dense_mapping_never_faster_with_many_empties() {
+        let plan = plan_for(LoadScenario::Best); // 56 empty experts
+        let ours = simulate_ours(&plan, &GpuSpec::h800());
+        let dense = simulate_dense_mapping(&plan, &GpuSpec::h800());
+        assert!(dense.time_s >= ours.time_s);
+    }
+
+    #[test]
+    fn operand_bytes_sane() {
+        let plan = plan_for(LoadScenario::Balanced);
+        let b = operand_bytes(&plan);
+        // 64 weights x 18.35 MB + tokens + outputs ~ 1.5 GB
+        assert!(b > 1.0e9 && b < 3.0e9, "bytes = {b}");
+    }
+}

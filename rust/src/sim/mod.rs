@@ -1,0 +1,39 @@
+//! GPU execution simulator.
+//!
+//! The paper evaluates a CUDA kernel on H20/H800 hardware we do not have
+//! (repro band 0/5), so this module provides the calibrated substitute: a
+//! wave-quantized roofline simulator that executes *the same static plans*
+//! the real kernel would (same TilePrefix, same σ, same tile lists, same
+//! ordering) and charges costs from published hardware characteristics.
+//!
+//! What it models — each effect maps to a claim in the paper:
+//!
+//! * **wave quantization + tail** (Section 4.2): blocks are scheduled in
+//!   waves of `sms * blocks_per_sm`; the last wave of a task mix is partially
+//!   full.
+//! * **padded-tile compute vs useful FLOPs** (Section 2.1): a tile's compute
+//!   time uses the *padded* tile shape (the tensor core computes the whole
+//!   tile), while achieved TFLOPS only counts useful rows — this is exactly
+//!   the "too large tiling wastes computing power" defect of single-strategy
+//!   grouped GEMM.
+//! * **wave-level bandwidth sharing + per-block bandwidth cap**
+//!   (Section 4.2): a wave's memory time is `bytes / HBM_BW`, and a single
+//!   block cannot pull more than `bw_block_gbps` — so memory-bound tiles
+//!   (non-busy experts) only hide under compute-bound tiles (busy experts)
+//!   when the ordering mixes them into the same wave.
+//! * **L2 reuse within a wave**: weight/token slices are charged once per
+//!   (task, slice, wave) — consecutive tiles of one expert share their
+//!   operands through L2, the locality the paper's grid ordering creates.
+//! * **metadata + decode overheads** (Section 3.1): H2D copy of the mapping
+//!   metadata, per-block decode cost (warp passes for ours, array reads with
+//!   an L2 hit model for the per-block-array baseline, atomic ticket +
+//!   problem-descriptor loads for dynamic grouped GEMM), and per-kernel
+//!   launch latency (the naive per-expert loop pays it per task).
+
+pub mod cache;
+pub mod cost;
+pub mod kernel_sim;
+pub mod overhead;
+pub mod specs;
+pub mod trace;
+pub mod wave;

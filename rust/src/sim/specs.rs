@@ -1,0 +1,171 @@
+//! Hardware specifications for the simulated GPUs.
+//!
+//! Numbers are public datasheet values (peak dense FP16/BF16 Tensor Core
+//! throughput without sparsity, HBM bandwidth, SM count, L2 size) plus a
+//! small set of microarchitectural cost constants documented per field.
+//! The paper's Section 5 names the two peaks we must match: H20 = 146
+//! TFLOPS, H800 = 989 TFLOPS.
+
+/// Static description of one GPU model.
+#[derive(Clone, Debug)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Number of streaming multiprocessors.
+    pub sms: usize,
+    /// Thread blocks resident per SM for our register-heavy GEMM blocks.
+    /// Hopper WGMMA kernels run 1–2 big blocks per SM; we use 1.
+    pub blocks_per_sm: usize,
+    /// Peak dense FP16/BF16 Tensor Core throughput, TFLOPS.
+    pub tc_tflops: f64,
+    /// HBM bandwidth, GB/s.
+    pub hbm_gbps: f64,
+    /// L2 cache size, MiB.
+    pub l2_mib: f64,
+    /// Sustained HBM bandwidth one thread block can pull on its own for
+    /// bulk (TMA / cp.async.bulk) tile loads, GB/s.  A single block's
+    /// in-flight transactions cap well below chip bandwidth; Hopper TMA
+    /// sustains a few hundred GB/s per SM, Ampere cp.async less.
+    pub bw_block_gbps: f64,
+    /// Kernel launch latency, microseconds (driver + grid setup).
+    pub launch_us: f64,
+    /// Host-to-device copy bandwidth (PCIe/NVLink effective), GB/s.
+    pub h2d_gbps: f64,
+    /// H2D copy fixed latency per transfer, microseconds.
+    pub h2d_latency_us: f64,
+    /// Cost of one warp pass of Algorithm 2 (SMEM reads + ballot + popc), ns.
+    pub warp_pass_ns: f64,
+    /// Cost of one atomic ticket + problem-descriptor fetch for dynamic
+    /// (grouped-GEMM style) on-device scheduling, ns per tile.
+    pub dyn_sched_ns: f64,
+    /// Latency of one mapping-array read that hits in L2, ns.
+    pub l2_hit_ns: f64,
+    /// Latency of one mapping-array read that misses to HBM, ns.
+    pub hbm_miss_ns: f64,
+    /// Fixed per-tile pipeline fill/drain + epilogue overhead, ns.
+    /// Calibrated so a long compute-bound run lands near the paper's
+    /// balanced-case peak fractions (94.7% H20 / 84.8% H800).
+    pub tile_overhead_ns: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA H800 (Hopper, SXM): 132 SMs, 989 TF dense BF16, 3.35 TB/s.
+    pub fn h800() -> Self {
+        GpuSpec {
+            name: "H800",
+            sms: 132,
+            blocks_per_sm: 1,
+            tc_tflops: 989.0,
+            hbm_gbps: 3350.0,
+            l2_mib: 50.0,
+            bw_block_gbps: 256.0,
+            launch_us: 4.0,
+            h2d_gbps: 50.0,
+            h2d_latency_us: 8.0,
+            warp_pass_ns: 12.0,
+            dyn_sched_ns: 450.0,
+            l2_hit_ns: 40.0,
+            hbm_miss_ns: 500.0,
+            tile_overhead_ns: 2600.0,
+        }
+    }
+
+    /// NVIDIA H20 (Hopper, inference part): 78 SMs, 146 TF dense BF16,
+    /// 4.0 TB/s HBM3 — low compute, huge bandwidth, hence the paper's
+    /// near-perfect peak fractions.
+    pub fn h20() -> Self {
+        GpuSpec {
+            name: "H20",
+            sms: 78,
+            blocks_per_sm: 1,
+            tc_tflops: 146.0,
+            hbm_gbps: 4000.0,
+            l2_mib: 60.0,
+            bw_block_gbps: 256.0,
+            launch_us: 4.0,
+            h2d_gbps: 50.0,
+            h2d_latency_us: 8.0,
+            warp_pass_ns: 12.0,
+            dyn_sched_ns: 450.0,
+            l2_hit_ns: 40.0,
+            hbm_miss_ns: 500.0,
+            tile_overhead_ns: 2600.0,
+        }
+    }
+
+    /// NVIDIA A100 SXM (Ampere): for the cross-generation sweep example.
+    pub fn a100() -> Self {
+        GpuSpec {
+            name: "A100",
+            sms: 108,
+            blocks_per_sm: 1,
+            tc_tflops: 312.0,
+            hbm_gbps: 2039.0,
+            l2_mib: 40.0,
+            bw_block_gbps: 160.0,
+            launch_us: 4.5,
+            h2d_gbps: 25.0,
+            h2d_latency_us: 10.0,
+            warp_pass_ns: 15.0,
+            dyn_sched_ns: 500.0,
+            l2_hit_ns: 45.0,
+            hbm_miss_ns: 550.0,
+            tile_overhead_ns: 2600.0,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "h800" => Some(Self::h800()),
+            "h20" => Some(Self::h20()),
+            "a100" => Some(Self::a100()),
+            _ => None,
+        }
+    }
+
+    /// Blocks per wave (one wave = one full residency of the device).
+    pub fn wave_size(&self) -> usize {
+        self.sms * self.blocks_per_sm
+    }
+
+    /// Peak throughput of a single SM, FLOP/s.
+    pub fn flops_per_sm(&self) -> f64 {
+        self.tc_tflops * 1e12 / self.sms as f64
+    }
+
+    pub fn l2_bytes(&self) -> f64 {
+        self.l2_mib * 1024.0 * 1024.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_peaks_match_section5() {
+        assert_eq!(GpuSpec::h20().tc_tflops, 146.0);
+        assert_eq!(GpuSpec::h800().tc_tflops, 989.0);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(GpuSpec::by_name("H800").unwrap().name, "H800");
+        assert_eq!(GpuSpec::by_name("h20").unwrap().name, "H20");
+        assert!(GpuSpec::by_name("b200").is_none());
+    }
+
+    #[test]
+    fn derived_quantities() {
+        let s = GpuSpec::h800();
+        assert_eq!(s.wave_size(), 132);
+        assert!((s.flops_per_sm() - 989.0e12 / 132.0).abs() < 1.0);
+        assert!((s.l2_bytes() - 50.0 * 1048576.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn h20_is_bandwidth_rich_compute_poor_vs_h800() {
+        let (h20, h800) = (GpuSpec::h20(), GpuSpec::h800());
+        assert!(h20.tc_tflops < h800.tc_tflops / 5.0);
+        assert!(h20.hbm_gbps > h800.hbm_gbps);
+    }
+}

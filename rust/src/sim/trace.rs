@@ -1,0 +1,145 @@
+//! Simulation results and per-wave traces.
+
+use crate::sim::specs::GpuSpec;
+
+/// Timing of one wave of thread blocks.
+#[derive(Clone, Debug)]
+pub struct WaveTrace {
+    pub wave: usize,
+    pub blocks: usize,
+    pub time_s: f64,
+    pub mem_time_s: f64,
+    pub longest_tile_s: f64,
+    pub bytes: f64,
+}
+
+impl WaveTrace {
+    /// True if this wave was limited by the memory roofline rather than its
+    /// slowest block.
+    pub fn memory_bound(&self) -> bool {
+        self.mem_time_s >= self.longest_tile_s
+    }
+}
+
+/// Outcome of simulating one kernel (or a sequence of launches).
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    /// End-to-end time including host-side extras.
+    pub time_s: f64,
+    /// Host-side serial extras (H2D copies, launch latency) included above.
+    pub host_time_s: f64,
+    /// FLOPs that produced real output rows.
+    pub useful_flops: f64,
+    /// FLOPs the tensor cores actually cycled through (>= useful).
+    pub occupied_flops: f64,
+    /// Achieved useful throughput, TFLOPS.
+    pub tflops: f64,
+    /// `tflops / spec.tc_tflops` — the paper's "peak%" metric.
+    pub peak_frac: f64,
+    /// Per-wave timeline.
+    pub waves: Vec<WaveTrace>,
+}
+
+impl SimResult {
+    pub fn new(
+        time_s: f64,
+        host_time_s: f64,
+        useful_flops: f64,
+        occupied_flops: f64,
+        spec: &GpuSpec,
+        waves: Vec<WaveTrace>,
+    ) -> Self {
+        let tflops = if time_s > 0.0 { useful_flops / time_s / 1e12 } else { 0.0 };
+        SimResult {
+            time_s,
+            host_time_s,
+            useful_flops,
+            occupied_flops,
+            tflops,
+            peak_frac: tflops / spec.tc_tflops,
+            waves,
+        }
+    }
+
+    /// Fraction of tensor-core cycles wasted on padding rows/cols.
+    pub fn padding_waste(&self) -> f64 {
+        if self.occupied_flops == 0.0 {
+            0.0
+        } else {
+            1.0 - self.useful_flops / self.occupied_flops
+        }
+    }
+
+    /// Compact one-line summary used by the benches.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:.3} ms  {:.2} TFLOPS  {:.2}% peak  ({} waves, {:.1}% padding waste)",
+            self.time_s * 1e3,
+            self.tflops,
+            self.peak_frac * 100.0,
+            self.waves.len(),
+            self.padding_waste() * 100.0
+        )
+    }
+
+    /// Render an ASCII timeline of the first `max` waves (debug aid).
+    pub fn render_trace(&self, max: usize) -> String {
+        let mut s = String::new();
+        s.push_str("wave  blocks  time(us)  bound\n");
+        for w in self.waves.iter().take(max) {
+            s.push_str(&format!(
+                "{:>4}  {:>6}  {:>8.2}  {}\n",
+                w.wave,
+                w.blocks,
+                w.time_s * 1e6,
+                if w.memory_bound() { "mem" } else { "compute" }
+            ));
+        }
+        if self.waves.len() > max {
+            s.push_str(&format!("... ({} more waves)\n", self.waves.len() - max));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tflops_and_peak_frac() {
+        let spec = GpuSpec::h800();
+        let r = SimResult::new(1e-3, 0.0, 989.0e9, 989.0e9, &spec, vec![]);
+        assert!((r.tflops - 989.0).abs() < 1e-9);
+        assert!((r.peak_frac - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn padding_waste_computed() {
+        let spec = GpuSpec::h20();
+        let r = SimResult::new(1.0, 0.0, 50.0, 100.0, &spec, vec![]);
+        assert!((r.padding_waste() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wave_boundedness() {
+        let w = WaveTrace {
+            wave: 0,
+            blocks: 10,
+            time_s: 2.0,
+            mem_time_s: 2.0,
+            longest_tile_s: 1.0,
+            bytes: 0.0,
+        };
+        assert!(w.memory_bound());
+    }
+
+    #[test]
+    fn summary_contains_key_numbers() {
+        let spec = GpuSpec::h20();
+        let r = SimResult::new(2e-3, 0.0, 146.0e9, 146.0e9, &spec, vec![]);
+        let s = r.summary();
+        assert!(s.contains("TFLOPS"));
+        assert!(s.contains("peak"));
+    }
+}

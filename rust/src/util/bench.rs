@@ -1,0 +1,183 @@
+//! Bench harness (no criterion offline): warmup + timed iterations with
+//! outlier-robust statistics and aligned table output shared by all
+//! `cargo bench` targets and the CLI's bench subcommands.
+
+use std::time::Instant;
+
+use super::stats::Samples;
+
+/// Result of timing one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Timing {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+/// Time `f` with `warmup` + `iters` runs; returns robust stats.
+pub fn time<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Samples::new();
+    let mut min = f64::INFINITY;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        let ns = t0.elapsed().as_nanos() as f64;
+        samples.push(ns);
+        min = min.min(ns);
+    }
+    Timing {
+        name: name.to_string(),
+        iters,
+        mean_ns: samples.mean(),
+        p50_ns: samples.percentile(50.0),
+        p95_ns: samples.percentile(95.0),
+        min_ns: min,
+    }
+}
+
+/// Time a batch-style closure that reports its own work units; returns
+/// (Timing, units/sec based on mean).
+pub fn time_throughput<F: FnMut() -> usize>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: F,
+) -> (Timing, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Samples::new();
+    let mut min = f64::INFINITY;
+    let mut units_total = 0usize;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let units = f();
+        let ns = t0.elapsed().as_nanos() as f64;
+        units_total += units;
+        samples.push(ns);
+        min = min.min(ns);
+    }
+    let timing = Timing {
+        name: name.to_string(),
+        iters,
+        mean_ns: samples.mean(),
+        p50_ns: samples.percentile(50.0),
+        p95_ns: samples.percentile(95.0),
+        min_ns: min,
+    };
+    let per_iter_units = units_total as f64 / iters as f64;
+    let ups = per_iter_units / (timing.mean_ns / 1e9);
+    (timing, ups)
+}
+
+/// Fixed-width table printer used by every bench binary so outputs diff
+/// cleanly across runs (EXPERIMENTS.md embeds them verbatim).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) {
+        self.row(&cells.iter().map(|c| c.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {c:<w$} |"));
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<width$}|", "", width = w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_reports_sane_numbers() {
+        let t = time("noop-ish", 2, 20, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(t.iters, 20);
+        assert!(t.mean_ns > 0.0);
+        assert!(t.min_ns <= t.mean_ns * 1.5 + 1.0);
+        assert!(t.p50_ns <= t.p95_ns);
+    }
+
+    #[test]
+    fn throughput_counts_units() {
+        let (_t, ups) = time_throughput("units", 1, 5, || 1000);
+        assert!(ups > 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["case", "tflops", "peak%"]);
+        t.row(&["balanced".into(), "838.87".into(), "84.82".into()]);
+        t.row(&["best".into(), "897.03".into(), "90.70".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0].len(), lines[2].len());
+        assert!(lines[0].contains("tflops"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,206 @@
+//! Declarative CLI parsing (the vendor set has no clap).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean switches,
+//! typed accessors with defaults, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// One registered flag.
+#[derive(Clone, Debug)]
+struct FlagSpec {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_switch: bool,
+}
+
+/// A declarative command-line parser for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Command {
+    name: &'static str,
+    about: &'static str,
+    flags: Vec<FlagSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, flags: Vec::new() }
+    }
+
+    /// Register `--name <value>` with an optional default.
+    pub fn flag(mut self, name: &'static str, default: Option<&str>, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: default.map(|s| s.to_string()),
+            is_switch: false,
+        });
+        self
+    }
+
+    /// Register a boolean `--name` switch.
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, default: None, is_switch: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.name, self.about);
+        let _ = writeln!(s, "\nflags:");
+        for f in &self.flags {
+            let v = if f.is_switch {
+                String::new()
+            } else {
+                format!(" <{}>", f.default.as_deref().unwrap_or("value"))
+            };
+            let _ = writeln!(s, "  --{}{:<18} {}", f.name, v, f.help);
+        }
+        s
+    }
+
+    /// Parse `args` (not including the subcommand itself).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, String> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut positional = Vec::new();
+        for f in &self.flags {
+            if let Some(d) = &f.default {
+                values.insert(f.name.to_string(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == key)
+                    .ok_or_else(|| format!("unknown flag --{key}\n\n{}", self.usage()))?;
+                let val = if spec.is_switch {
+                    inline.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    i += 1;
+                    args.get(i)
+                        .cloned()
+                        .ok_or_else(|| format!("--{key} expects a value"))?
+                };
+                values.insert(key.to_string(), val);
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Parsed { values, positional })
+    }
+}
+
+/// Parsed flag values with typed accessors.
+#[derive(Clone, Debug)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> String {
+        self.values.get(name).cloned().unwrap_or_default()
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, String> {
+        self.values
+            .get(name)
+            .ok_or_else(|| format!("missing --{name}"))?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, String> {
+        self.values
+            .get(name)
+            .ok_or_else(|| format!("missing --{name}"))?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, String> {
+        self.values
+            .get(name)
+            .ok_or_else(|| format!("missing --{name}"))?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("bench", "run a bench")
+            .flag("gpu", Some("h800"), "gpu spec")
+            .flag("iters", Some("10"), "iterations")
+            .switch("verbose", "extra output")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = cmd().parse(&args(&[])).unwrap();
+        assert_eq!(p.str("gpu"), "h800");
+        assert_eq!(p.usize("iters").unwrap(), 10);
+        assert!(!p.bool("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let p = cmd().parse(&args(&["--gpu", "h20", "--iters=25", "--verbose"])).unwrap();
+        assert_eq!(p.str("gpu"), "h20");
+        assert_eq!(p.usize("iters").unwrap(), 25);
+        assert!(p.bool("verbose"));
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(cmd().parse(&args(&["--nope", "x"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cmd().parse(&args(&["--gpu"])).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let p = cmd().parse(&args(&["file.txt", "--iters", "3"])).unwrap();
+        assert_eq!(p.positional, vec!["file.txt"]);
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = cmd().parse(&args(&["--help"])).unwrap_err();
+        assert!(err.contains("bench"));
+        assert!(err.contains("--gpu"));
+    }
+}

@@ -1,0 +1,18 @@
+//! Substrate utilities built from scratch.
+//!
+//! The offline vendor set ships no tokio / clap / serde / criterion /
+//! proptest / rand, so this module provides the equivalents the rest of the
+//! crate needs: a counter-based PRNG with the distributions the workload
+//! generators use, a JSON parser/emitter for the artifact manifest, a
+//! declarative CLI parser, streaming statistics, a scoped thread pool, a
+//! bench harness, and a tiny property-testing driver.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod tensor;
+pub mod threadpool;

@@ -1,0 +1,105 @@
+//! Tiny property-testing driver (no proptest in the offline vendor set).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` over `cases` generated inputs
+//! drawn from a seeded [`Rng`]; on failure it re-runs the generator with a
+//! "shrink ladder" of smaller size hints and reports the smallest failing
+//! seed/size so the case can be reproduced with `reproduce()`.
+
+use super::rng::Rng;
+
+/// Generation context: seeded RNG plus a size hint that shrinking lowers.
+pub struct GenCtx<'a> {
+    pub rng: &'a mut Rng,
+    pub size: usize,
+}
+
+/// Outcome of a property over one case.
+pub type PropResult = Result<(), String>;
+
+/// Run a property `cases` times. Panics with a reproducer on failure.
+pub fn check<T, G, P>(name: &str, cases: usize, mut generate: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut GenCtx) -> T,
+    P: FnMut(&T) -> PropResult,
+{
+    let base_seed = 0x5EED_0000u64;
+    for case in 0..cases {
+        let seed = base_seed + case as u64;
+        let size = 1 + case % 64; // ramp size with case index
+        let mut rng = Rng::new(seed);
+        let mut ctx = GenCtx { rng: &mut rng, size };
+        let input = generate(&mut ctx);
+        if let Err(msg) = prop(&input) {
+            // shrink: retry the same seed at smaller sizes, keep the smallest failure
+            let mut smallest: (usize, String, String) =
+                (size, format!("{input:?}"), msg.clone());
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng = Rng::new(seed);
+                let mut ctx = GenCtx { rng: &mut rng, size: s };
+                let cand = generate(&mut ctx);
+                if let Err(m2) = prop(&cand) {
+                    smallest = (s, format!("{cand:?}"), m2);
+                }
+                if s == 1 {
+                    break;
+                }
+                s /= 2;
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, size {}):\n  input: {}\n  error: {}",
+                smallest.0, smallest.1, smallest.2
+            );
+        }
+    }
+}
+
+/// Re-generate the input for a reported (seed, size) pair.
+pub fn reproduce<T, G: FnMut(&mut GenCtx) -> T>(seed: u64, size: usize, mut generate: G) -> T {
+    let mut rng = Rng::new(seed);
+    let mut ctx = GenCtx { rng: &mut rng, size };
+    generate(&mut ctx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(
+            "sum-commutes",
+            50,
+            |g| (g.rng.below(100) as i64, g.rng.below(100) as i64),
+            |&(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+        count += 1;
+        assert_eq!(count, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_reproducer() {
+        check(
+            "always-fails",
+            10,
+            |g| g.rng.below(10),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn reproduce_matches_generation() {
+        let a = reproduce(0x5EED_0001, 2, |g| g.rng.below(1000));
+        let b = reproduce(0x5EED_0001, 2, |g| g.rng.below(1000));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,232 @@
+//! Streaming statistics: Welford mean/variance, percentiles, histograms.
+
+/// Online mean/variance accumulator (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Reservoir of raw samples with percentile queries. For the latency volumes
+/// in this crate (≤ millions) exact storage is fine and keeps p99 exact.
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    v: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Samples { v: Vec::new(), sorted: true }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.v.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.v.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.v.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Exact percentile by linear interpolation; `q` in [0, 100].
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        if self.v.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        let rank = q / 100.0 * (self.v.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            self.v[lo]
+        } else {
+            let frac = rank - lo as f64;
+            self.v[lo] * (1.0 - frac) + self.v[hi] * frac
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.v.is_empty() {
+            f64::NAN
+        } else {
+            self.v.iter().sum::<f64>() / self.v.len() as f64
+        }
+    }
+
+    pub fn summary(&mut self) -> String {
+        if self.v.is_empty() {
+            return "n=0".to_string();
+        }
+        format!(
+            "n={} mean={:.3} p50={:.3} p90={:.3} p99={:.3} max={:.3}",
+            self.len(),
+            self.mean(),
+            self.percentile(50.0),
+            self.percentile(90.0),
+            self.percentile(99.0),
+            self.percentile(100.0),
+        )
+    }
+}
+
+/// Fixed-bucket histogram over [lo, hi) with overflow/underflow buckets.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    buckets: Vec<u64>,
+    under: u64,
+    over: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, n: usize) -> Self {
+        assert!(hi > lo && n > 0);
+        Histogram { lo, hi, buckets: vec![0; n], under: 0, over: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if x < self.lo {
+            self.under += 1;
+        } else if x >= self.hi {
+            self.over += 1;
+        } else {
+            let n = self.buckets.len();
+            let i = ((x - self.lo) / (self.hi - self.lo) * n as f64) as usize;
+            self.buckets[i.min(n - 1)] += 1;
+        }
+    }
+
+    pub fn counts(&self) -> (&[u64], u64, u64) {
+        (&self.buckets, self.under, self.over)
+    }
+
+    pub fn total(&self) -> u64 {
+        self.buckets.iter().sum::<u64>() + self.under + self.over
+    }
+}
+
+/// Geometric mean of ratios — used for "ours vs baseline" aggregate speedups.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_closed_form() {
+        let mut w = Welford::new();
+        for i in 1..=100 {
+            w.push(i as f64);
+        }
+        assert_eq!(w.count(), 100);
+        assert!((w.mean() - 50.5).abs() < 1e-9);
+        // var of 1..=100 (sample) = 841.666...
+        assert!((w.variance() - 841.6666666).abs() < 1e-4);
+        assert_eq!(w.min(), 1.0);
+        assert_eq!(w.max(), 100.0);
+    }
+
+    #[test]
+    fn percentiles_exact_on_known_data() {
+        let mut s = Samples::new();
+        for i in 0..=100 {
+            s.push(i as f64);
+        }
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(50.0), 50.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+        assert!((s.percentile(90.0) - 90.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let mut s = Samples::new();
+        s.push(0.0);
+        s.push(10.0);
+        assert!((s.percentile(50.0) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.push(i as f64 + 0.5);
+        }
+        h.push(-1.0);
+        h.push(99.0);
+        let (b, under, over) = h.counts();
+        assert!(b.iter().all(|&c| c == 1));
+        assert_eq!((under, over), (1, 1));
+        assert_eq!(h.total(), 12);
+    }
+
+    #[test]
+    fn geomean_of_equal_ratios() {
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,190 @@
+//! Row-major f32 tensors with just enough ops for the CPU reference
+//! executor and the runtime's literal conversions.
+
+use crate::util::rng::Rng;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn randn(shape: &[usize], scale: f32, rng: &mut Rng) -> Self {
+        let n = shape.iter().product();
+        let data = (0..n).map(|_| rng.normal() as f32 * scale).collect();
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.rank(), 2);
+        let cols = self.shape[1];
+        &self.data[i * cols..(i + 1) * cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        assert_eq!(self.rank(), 2);
+        let cols = self.shape[1];
+        &mut self.data[i * cols..(i + 1) * cols]
+    }
+
+    /// 3-D indexing helper: slice `[i, :, :]` of an [a, b, c] tensor as rows.
+    pub fn plane(&self, i: usize) -> &[f32] {
+        assert_eq!(self.rank(), 3);
+        let sz = self.shape[1] * self.shape[2];
+        &self.data[i * sz..(i + 1) * sz]
+    }
+
+    /// `C = A @ B` for 2-D tensors, fp32 accumulation.
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(other.rank(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "matmul inner dims");
+        let mut out = Tensor::zeros(&[m, n]);
+        matmul_into(&self.data, &other.data, &mut out.data, m, k, n);
+        out
+    }
+
+    /// Max |a - b| over all elements.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn allclose(&self, other: &Tensor, atol: f32) -> bool {
+        self.shape == other.shape && self.max_abs_diff(other) <= atol
+    }
+}
+
+/// Cache-blocked `C += A(mxk) @ B(kxn)`, the inner loop of the CPU executor.
+/// i-k-j loop order keeps B rows hot and autovectorizes the j loop.
+pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let c_row = &mut c[i * n..(i + 1) * n];
+        for (kk, &av) in a_row.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let b_row = &b[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                c_row[j] += av * b_row[j];
+            }
+        }
+    }
+}
+
+/// Gathered-row GEMM: `C[r, :] += tokens[idx[r], :] @ W` for each tile row r.
+/// This is the token-index-array load of paper Section 4.3: no contiguous
+/// copy of the gathered rows is ever materialized.
+pub fn gathered_matmul_into(
+    tokens: &Tensor,   // [S, K]
+    idx: &[u32],       // row gather indices (len = tile rows)
+    w: &[f32],         // [K, N] weight plane
+    n: usize,
+    c: &mut [f32],     // [tile_rows, N]
+) {
+    let k = tokens.shape[1];
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(c.len(), idx.len() * n);
+    for (r, &src) in idx.iter().enumerate() {
+        let a_row = tokens.row(src as usize);
+        let c_row = &mut c[r * n..(r + 1) * n];
+        for (kk, &av) in a_row.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let b_row = &w[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                c_row[j] += av * b_row[j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let i = Tensor::from_vec(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(a.matmul(&i), a);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        // [[1,2],[3,4]] @ [[1,1],[1,1]] = [[3,3],[7,7]]
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[2, 2], vec![1.0; 4]);
+        assert_eq!(a.matmul(&b).data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_rect() {
+        let a = Tensor::from_vec(&[1, 3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::from_vec(&[3, 2], vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.matmul(&b).data, vec![4.0, 5.0]);
+    }
+
+    #[test]
+    fn gathered_matmul_matches_dense() {
+        let mut rng = Rng::new(1);
+        let tokens = Tensor::randn(&[8, 4], 1.0, &mut rng);
+        let w = Tensor::randn(&[4, 3], 1.0, &mut rng);
+        let idx = [5u32, 0, 7, 2];
+        let mut c = vec![0.0; 4 * 3];
+        gathered_matmul_into(&tokens, &idx, &w.data, 3, &mut c);
+        for (r, &src) in idx.iter().enumerate() {
+            let row = Tensor::from_vec(&[1, 4], tokens.row(src as usize).to_vec());
+            let want = row.matmul(&w);
+            for j in 0..3 {
+                assert!((c[r * 3 + j] - want.data[j]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn plane_indexing() {
+        let t = Tensor::from_vec(&[2, 2, 2], (0..8).map(|x| x as f32).collect());
+        assert_eq!(t.plane(1), &[4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn allclose_tolerance() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[2], vec![1.0 + 1e-7, 2.0]);
+        assert!(a.allclose(&b, 1e-6));
+        assert!(!a.allclose(&b, 1e-9));
+    }
+}
