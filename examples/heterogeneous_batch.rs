@@ -2,8 +2,13 @@
 //! and element-wise tasks fused into ONE conceptual kernel, dispatched per
 //! block through the compressed mapping — with real numerics on CPU.
 //!
+//! Device functions are registered on a `DispatchTableBuilder`; the batch
+//! validates coverage of every task kind at construction, so a missing
+//! `taskFunc_i` is an `Err` here, never a panic mid-launch.
+//!
 //! Run: `cargo run --release --example heterogeneous_batch`
 
+use staticbatch::batching::dispatch::DispatchTableBuilder;
 use staticbatch::batching::framework::StaticBatch;
 use staticbatch::batching::task::{TaskDescriptor, TaskKind};
 use staticbatch::util::rng::Rng;
@@ -60,11 +65,9 @@ fn main() {
         },
     ];
 
-    let mut batch: StaticBatch<Ctx> = StaticBatch::new(tasks);
-    // device function 1: GEMM tile
-    batch.register(
-        TaskKind::Gemm { strategy: 0 }.dispatch_id(),
-        Box::new(|c: &mut Ctx, desc, _task, tile| {
+    let table = DispatchTableBuilder::<Ctx>::new()
+        // device function 1: GEMM tile
+        .on(TaskKind::Gemm { strategy: 0 }, |c: &mut Ctx, desc, _task, tile| {
             c.blocks_run += 1;
             let tiles_n = desc.tiles_n() as u32;
             let (mi, ni) = (tile / tiles_n, tile % tiles_n);
@@ -81,30 +84,27 @@ fn main() {
                     c.gemm_c.data[row * n + col] = acc;
                 }
             }
-        }),
-    );
-    // device function 2: row-sum reduction tile
-    batch.register(
-        TaskKind::ReduceSum.dispatch_id(),
-        Box::new(|c: &mut Ctx, desc, _task, tile| {
+        })
+        // device function 2: row-sum reduction tile
+        .on(TaskKind::ReduceSum, |c: &mut Ctx, desc, _task, tile| {
             c.blocks_run += 1;
             let r0 = tile as usize * desc.tile_rows;
             for r in r0..(r0 + desc.tile_rows).min(desc.rows) {
                 c.reduce_out[r] = c.reduce_in.row(r).iter().sum();
             }
-        }),
-    );
-    // device function 3: element-wise x -> 2x+1 tile
-    batch.register(
-        TaskKind::ElementWise.dispatch_id(),
-        Box::new(|c: &mut Ctx, desc, _task, tile| {
+        })
+        // device function 3: element-wise x -> 2x+1 tile
+        .on(TaskKind::ElementWise, |c: &mut Ctx, desc, _task, tile| {
             c.blocks_run += 1;
             let i0 = tile as usize * desc.tile_rows;
             for i in i0..(i0 + desc.tile_rows).min(desc.rows) {
                 c.ew_buf[i] = 2.0 * c.ew_buf[i] + 1.0;
             }
-        }),
-    );
+        });
+
+    // coverage of all three kinds is checked HERE, before any block runs
+    let batch: StaticBatch<Ctx> =
+        StaticBatch::try_new(tasks, table).expect("every task kind has a device function");
 
     let (blocks, warp_passes) = batch.run_simt(&mut ctx);
     println!(

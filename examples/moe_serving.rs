@@ -100,5 +100,5 @@ fn main() {
     if !rows.is_empty() {
         println!("expert load head: {}", rows.join(" "));
     }
-    println!("\npaste this block into EXPERIMENTS.md §E2E");
+    println!("\nE2E experiment (DESIGN.md index) complete");
 }

@@ -1,36 +1,62 @@
-//! Perf probe: measures the simulator and planner hot paths used by
-//! the Section Perf iteration log in EXPERIMENTS.md.
+//! Perf probe: measures the simulator and planner hot paths (the Section
+//! Perf iteration log in DESIGN.md's experiment index), driven through the
+//! unified `ExecutionSession`/`Backend` surface.
 //!
 //! Run: `cargo run --release --example perf_probe`
 
+use staticbatch::exec::{ExecutionSession, SimBackend};
 use staticbatch::moe::config::MoeShape;
-use staticbatch::moe::planner::Planner;
 use staticbatch::moe::routing::LoadScenario;
-use staticbatch::sim::{kernel_sim, specs::GpuSpec};
+use staticbatch::sim::specs::GpuSpec;
 use std::time::Instant;
+
 fn main() {
     let shape = MoeShape::paper_table1();
     let load = LoadScenario::Worst.counts(&shape, 0);
-    let plan = Planner::new(shape).plan(&load);
-    let spec = GpuSpec::h800();
+    let mut session = ExecutionSession::new(shape)
+        .backend(SimBackend::ours())
+        .gpu(GpuSpec::h800());
+    let plan = session.plan(&load);
     // warm
-    for _ in 0..3 { std::hint::black_box(kernel_sim::simulate_ours(&plan, &spec)); }
+    for _ in 0..3 {
+        std::hint::black_box(session.run_plan(&plan).unwrap());
+    }
     let iters = 200;
     let t0 = Instant::now();
-    for _ in 0..iters { std::hint::black_box(kernel_sim::simulate_ours(&plan, &spec)); }
+    for _ in 0..iters {
+        std::hint::black_box(session.run_plan(&plan).unwrap());
+    }
     let dt = t0.elapsed().as_secs_f64() / iters as f64;
     let blocks = plan.total_tiles() as f64;
-    println!("simulate_ours: {:.1} us/step, {:.2} M blocks/s ({} tiles)", dt*1e6, blocks/dt/1e6, blocks);
+    println!(
+        "simulate_ours: {:.1} us/step, {:.2} M blocks/s ({} tiles)",
+        dt * 1e6,
+        blocks / dt / 1e6,
+        blocks
+    );
     // plan construction
     let t0 = Instant::now();
-    for _ in 0..iters { std::hint::black_box(Planner::new(shape).plan(&load)); }
+    for _ in 0..iters {
+        std::hint::black_box(session.plan(&load));
+    }
     let dt = t0.elapsed().as_secs_f64() / iters as f64;
-    println!("plan: {:.1} us", dt*1e6);
+    println!("plan: {:.1} us", dt * 1e6);
     // footnote shape (16384 tiles)
     let shape2 = MoeShape::paper_table1_best_h800();
-    let plan2 = Planner::new(shape2).plan(&LoadScenario::Best.counts(&shape2, 0));
+    let load2 = LoadScenario::Best.counts(&shape2, 0);
+    let mut session2 = ExecutionSession::new(shape2)
+        .backend(SimBackend::ours())
+        .gpu(GpuSpec::h800());
+    let plan2 = session2.plan(&load2);
     let t0 = Instant::now();
-    for _ in 0..20 { std::hint::black_box(kernel_sim::simulate_ours(&plan2, &spec)); }
+    for _ in 0..20 {
+        std::hint::black_box(session2.run_plan(&plan2).unwrap());
+    }
     let dt = t0.elapsed().as_secs_f64() / 20.0;
-    println!("simulate big: {:.1} us/step, {:.2} M blocks/s ({} tiles)", dt*1e6, plan2.total_tiles() as f64/dt/1e6, plan2.total_tiles());
+    println!(
+        "simulate big: {:.1} us/step, {:.2} M blocks/s ({} tiles)",
+        dt * 1e6,
+        plan2.total_tiles() as f64 / dt / 1e6,
+        plan2.total_tiles()
+    );
 }

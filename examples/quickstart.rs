@@ -2,14 +2,14 @@
 //!
 //! Builds the paper's Table 1 balanced scenario, plans it with the static
 //! batching framework (compressed TilePrefix + σ + per-expert tiling +
-//! half-interval ordering), and simulates it on H800 and H20.
+//! half-interval ordering), and simulates it on H800 and H20 — everything
+//! through the one `ExecutionSession` → `Backend` surface.
 //!
 //! Run: `cargo run --release --example quickstart`
 
+use staticbatch::exec::{ExecutionSession, SimBackend};
 use staticbatch::moe::config::MoeShape;
-use staticbatch::moe::planner::Planner;
 use staticbatch::moe::routing::LoadScenario;
-use staticbatch::sim::kernel_sim;
 use staticbatch::sim::specs::GpuSpec;
 
 fn main() {
@@ -27,8 +27,10 @@ fn main() {
     );
 
     // 3. the static batch plan: σ-compaction of empty experts (Alg. 4),
-    //    per-expert tiling, half-interval ordering, TilePrefix (Alg. 1)
-    let plan = Planner::new(shape).plan(&load);
+    //    per-expert tiling, half-interval ordering, TilePrefix (Alg. 1) —
+    //    the session owns plan construction
+    let session = ExecutionSession::new(shape);
+    let plan = session.plan(&load);
     println!(
         "plan: {} non-empty tasks, {} tiles, {} B of metadata",
         plan.num_nonempty(),
@@ -42,9 +44,14 @@ fn main() {
         println!("  block {block:>5} -> expert {:>2}, tile {:>3}", m.task, m.tile);
     }
 
-    // 5. simulate on both paper GPUs
+    // 5. simulate on both paper GPUs: same session shape, swap the GPU spec
     for spec in [GpuSpec::h20(), GpuSpec::h800()] {
-        let r = kernel_sim::simulate_ours(&plan, &spec);
-        println!("{:>5}: {}", spec.name, r.summary());
+        let name = spec.name;
+        let outcome = ExecutionSession::new(shape)
+            .backend(SimBackend::ours())
+            .gpu(spec)
+            .run(&load)
+            .expect("sim backend");
+        println!("{:>5}: {}", name, outcome.sim().summary());
     }
 }

@@ -1,11 +1,12 @@
 //! Unbalanced-expert-load sweep: ours vs grouped GEMM vs naive loop as
 //! routing skew grows (zipf alpha 0 -> 2), on H800 and H20.  Shows the
 //! crossover structure the paper's motivation section describes: everyone
-//! is fine when balanced; the gap opens with imbalance.
+//! is fine when balanced; the gap opens with imbalance.  All four
+//! executors run behind the one `Backend` trait.
 //!
 //! Run: `cargo run --release --example unbalanced_sweep`
 
-use staticbatch::baselines::all_impls;
+use staticbatch::exec::{all_backends, ExecutionSession};
 use staticbatch::moe::config::MoeShape;
 use staticbatch::moe::routing::LoadScenario;
 use staticbatch::sim::specs::GpuSpec;
@@ -17,15 +18,20 @@ fn main() {
     let seeds = 3u64;
     for spec in [GpuSpec::h800(), GpuSpec::h20()] {
         println!("=== {} ===", spec.name);
+        // one session per backend, reused across the whole sweep
+        let mut sessions: Vec<ExecutionSession> = all_backends()
+            .into_iter()
+            .map(|b| ExecutionSession::new(shape).gpu(spec.clone()).boxed_backend(b))
+            .collect();
         let mut table = Table::new(&["alpha", "imbalance", "ours(ms)", "grouped", "two-phase", "naive", "best speedup"]);
         for &alpha in &[0.0, 0.5, 1.0, 1.5, 2.0] {
-            let mut times: Vec<Vec<f64>> = vec![Vec::new(); 4];
+            let mut times: Vec<Vec<f64>> = vec![Vec::new(); sessions.len()];
             let mut imb = 0.0;
             for seed in 0..seeds {
                 let load = LoadScenario::Zipf(alpha).counts(&shape, seed);
                 imb += load.imbalance() / seeds as f64;
-                for (i, imp) in all_impls().iter().enumerate() {
-                    times[i].push(imp.simulate(&shape, &load, &spec).time_s);
+                for (i, s) in sessions.iter_mut().enumerate() {
+                    times[i].push(s.run(&load).expect("accounting backend").time_s());
                 }
             }
             let mean: Vec<f64> =

@@ -1,7 +1,44 @@
 //! A1: ours vs grouped GEMM / two-phase / naive loop; A5 token-copy table.
+//!
+//! All four executors are benched through the one
+//! `ExecutionSession`/`Backend` harness: per scenario we report both the
+//! *simulated* GPU time (the experiment) and the *host wallclock* of
+//! plan construction + backend execution (the cost of running it).
+
+use staticbatch::exec::{all_backends, bench::time_session, ExecutionSession};
+use staticbatch::moe::config::MoeShape;
+use staticbatch::moe::routing::LoadScenario;
+use staticbatch::sim::specs::GpuSpec;
+use staticbatch::util::bench::Table;
+
 fn main() {
     println!("== A1: baselines across paper scenarios ==");
     print!("{}", staticbatch::reports::baselines_table());
+
+    println!("\n== A1 harness: wallclock of plan+execute per backend (H800) ==");
+    let shape = MoeShape::paper_table1();
+    let mut t = Table::new(&[
+        "backend", "scenario", "sim time(ms)", "host mean(us)", "host p95(us)", "blocks",
+    ]);
+    for b in all_backends() {
+        let mut session = ExecutionSession::new(shape).gpu(GpuSpec::h800()).boxed_backend(b);
+        for sc in [LoadScenario::Balanced, LoadScenario::Worst, LoadScenario::Zipf(1.2)] {
+            let load = sc.counts(&shape, 0);
+            let label = format!("{}/{}", session.backend_name(), sc.name());
+            let (timing, out) =
+                time_session(&label, &mut session, &load, 2, 15).expect("backend runs");
+            t.row(&[
+                out.backend.to_string(),
+                sc.name(),
+                format!("{:.3}", out.time_s() * 1e3),
+                format!("{:.1}", timing.mean_us()),
+                format!("{:.1}", timing.p95_ns / 1e3),
+                out.blocks.to_string(),
+            ]);
+        }
+    }
+    t.print();
+
     println!("\n== A5: token copy elimination ==");
     print!("{}", staticbatch::reports::token_copy_table());
 }

@@ -1,15 +1,22 @@
 //! E2E runtime bench: execute the AOT moe_gemm artifact through PJRT from
 //! the Rust hot path, with plan construction on the host per step — the
-//! deployment configuration.  Requires `make artifacts`.
+//! deployment configuration, driven through the unified
+//! `ExecutionSession` → `PjrtBackend` surface.  Requires `make artifacts`
+//! and `--features pjrt`.
 
-use staticbatch::moe::kernel_meta;
+use staticbatch::exec::{Backend, ExecContext, ExecutionSession, NumericInputs};
+use staticbatch::moe::config::MoeShape;
 use staticbatch::moe::ordering::OrderingStrategy;
+use staticbatch::moe::routing::ExpertLoad;
 use staticbatch::moe::token_index::TokenIndex;
 use staticbatch::runtime::artifact::Manifest;
 use staticbatch::runtime::client::Runtime;
-use staticbatch::runtime::executor::{ExecutorPool, Value};
+use staticbatch::runtime::executor::ExecutorPool;
+use staticbatch::runtime::PjrtBackend;
+use staticbatch::sim::specs::GpuSpec;
 use staticbatch::util::bench;
 use staticbatch::util::rng::Rng;
+use staticbatch::util::tensor::Tensor;
 
 fn main() {
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -21,14 +28,28 @@ fn main() {
     let manifest = Manifest::load(&dir).expect("manifest");
     let dims = manifest.kernel_dims("moe_gemm").expect("dims");
     let mut pool = ExecutorPool::new(rt, manifest);
-    pool.prepare("moe_gemm").expect("compile");
+    let mut backend =
+        PjrtBackend::new(&mut pool, OrderingStrategy::HalfInterval).expect("compile moe_gemm");
 
+    let shape = MoeShape {
+        seq: dims.seq,
+        d_model: dims.d_model,
+        d_ff: dims.d_ff,
+        experts: dims.experts,
+        top_k: dims.top_k,
+        dtype_bytes: 4,
+    };
     let mut rng = Rng::new(3);
-    let tokens: Vec<f32> =
-        (0..dims.seq * dims.d_model).map(|_| rng.normal() as f32 * 0.5).collect();
-    let weights: Vec<f32> = (0..dims.experts * dims.d_model * dims.d_ff)
-        .map(|_| rng.normal() as f32 * 0.05)
-        .collect();
+    let tokens = Tensor::from_vec(
+        &[dims.seq, dims.d_model],
+        (0..dims.seq * dims.d_model).map(|_| rng.normal() as f32 * 0.5).collect(),
+    );
+    let weights = Tensor::from_vec(
+        &[dims.experts, dims.d_model, dims.d_ff],
+        (0..dims.experts * dims.d_model * dims.d_ff)
+            .map(|_| rng.normal() as f32 * 0.05)
+            .collect(),
+    );
 
     for scenario in ["balanced", "skewed"] {
         // routing
@@ -43,40 +64,39 @@ fn main() {
             }
         }
         let ti = TokenIndex::build(dims.experts, &pairs);
+        let load = ExpertLoad { counts: ti.index.iter().map(Vec::len).collect() };
         let gates: Vec<Vec<f32>> =
             ti.index.iter().map(|v| v.iter().map(|_| 0.125f32).collect()).collect();
+        let numeric = NumericInputs {
+            tokens: tokens.clone(),
+            weights: weights.clone(),
+            token_index: ti,
+            gates,
+        };
 
-        // host plan time
+        let session = ExecutionSession::new(shape)
+            .ordering(OrderingStrategy::HalfInterval)
+            .gpu(GpuSpec::h800());
+
+        // host plan time (σ + ordering + tiling + TilePrefix)
         let t_plan = bench::time("plan", 2, 20, || {
-            std::hint::black_box(kernel_meta::build(
-                &dims,
-                &ti,
-                &gates,
-                OrderingStrategy::HalfInterval,
-            ));
+            std::hint::black_box(session.plan(&load));
         });
-        let meta = kernel_meta::build(&dims, &ti, &gates, OrderingStrategy::HalfInterval);
-        let sp = dims.padded_rows();
-        // deployment pattern (§Perf): tokens + weights device-resident,
-        // only the per-step metadata is uploaded on the hot path
-        let tokens_buf = pool
-            .upload(&Value::F32(tokens.clone(), vec![dims.seq, dims.d_model]))
-            .expect("upload tokens");
-        let weights_buf = pool
-            .upload(&Value::F32(weights.clone(), vec![dims.experts, dims.d_model, dims.d_ff]))
-            .expect("upload weights");
+        let plan = session.plan(&load);
+
+        // deployment pattern (§Perf): tokens + weights device-resident; the
+        // timed step below is the full per-step hot path — metadata build +
+        // metadata upload + kernel execution (the standalone "plan" number
+        // above isolates the host-side planning share)
+        backend.warm(&numeric).expect("upload resident operands");
         let flops = 2.0 * (dims.seq * dims.top_k) as f64 * dims.d_model as f64 * dims.d_ff as f64;
         let (t_exec, _) = bench::time_throughput("exec", 1, 5, || {
-            let m1 = pool.upload(&Value::I32(meta.tile_prefix.clone(), vec![dims.experts])).unwrap();
-            let m2 = pool.upload(&Value::I32(meta.sigma.clone(), vec![dims.experts])).unwrap();
-            let m3 = pool.upload(&Value::I32(meta.token_ids.clone(), vec![sp])).unwrap();
-            let m4 = pool.upload(&Value::I32(meta.num_tiles.to_vec(), vec![1])).unwrap();
-            let args = [&tokens_buf, &weights_buf, &m1, &m2, &m3, &m4];
-            std::hint::black_box(pool.run_buffers("moe_gemm", &args).expect("run"));
+            let mut ctx = ExecContext::new(GpuSpec::h800()).with_numeric(&numeric);
+            std::hint::black_box(backend.execute(&plan, &mut ctx).expect("run"));
             1
         });
         println!(
-            "{scenario:>9}: plan {:>8.1} us | kernel exec {:>9.2} ms | {:.2} CPU-GFLOP/s | plan/exec = {:.4}%",
+            "{scenario:>9}: plan {:>8.1} us | step exec {:>9.2} ms | {:.2} CPU-GFLOP/s | plan/exec = {:.4}%",
             t_plan.mean_us(),
             t_exec.mean_ms(),
             flops / t_exec.mean_ns,

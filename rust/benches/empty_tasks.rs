@@ -1,5 +1,47 @@
 //! A4: two-stage empty-task mapping vs dense mapping (Section 4.1).
+//!
+//! The simulated table is the experiment; the harness section benches the
+//! three simulator mapping modes (ours / dense / padded-empty) through the
+//! unified `ExecutionSession`/`Backend` surface as the number of active
+//! experts shrinks.
+
+use staticbatch::exec::{bench::time_session, ExecutionSession, SimBackend};
+use staticbatch::moe::config::MoeShape;
+use staticbatch::moe::routing::ExpertLoad;
+use staticbatch::sim::specs::GpuSpec;
+use staticbatch::util::bench::Table;
+
 fn main() {
     println!("== A4: empty-task handling ==");
     print!("{}", staticbatch::reports::empty_tasks_table());
+
+    println!("\n== A4 harness: plan+simulate wallclock per mapping mode (H800) ==");
+    let shape = MoeShape::paper_table1();
+    let mut t = Table::new(&[
+        "active", "backend", "sim time(ms)", "host mean(us)", "blocks",
+    ]);
+    for active in [64usize, 8, 2] {
+        let mut counts = vec![0usize; shape.experts];
+        for i in 0..shape.total_rows() {
+            counts[i % active] += 1;
+        }
+        let load = ExpertLoad { counts };
+        for backend in
+            [SimBackend::ours(), SimBackend::dense_mapping(), SimBackend::padded_empty()]
+        {
+            let mut session =
+                ExecutionSession::new(shape).backend(backend).gpu(GpuSpec::h800());
+            let label = format!("active{active}/{}", session.backend_name());
+            let (timing, out) =
+                time_session(&label, &mut session, &load, 2, 15).expect("sim backend");
+            t.row(&[
+                active.to_string(),
+                out.backend.to_string(),
+                format!("{:.3}", out.time_s() * 1e3),
+                format!("{:.1}", timing.mean_us()),
+                out.blocks.to_string(),
+            ]);
+        }
+    }
+    t.print();
 }

@@ -1,5 +1,44 @@
 //! A3: expert ordering ablation (Section 4.2; half-interval should win).
+//!
+//! The simulated table is the experiment; the harness section below also
+//! wallclock-benches plan construction + simulation per ordering through
+//! the unified `ExecutionSession`/`Backend` surface, since ordering is
+//! host-side work on the serving hot path.
+
+use staticbatch::exec::{bench::time_session, ExecutionSession, SimBackend};
+use staticbatch::moe::config::MoeShape;
+use staticbatch::moe::ordering::OrderingStrategy;
+use staticbatch::moe::routing::LoadScenario;
+use staticbatch::sim::specs::GpuSpec;
+use staticbatch::util::bench::Table;
+
 fn main() {
     println!("== A3: expert ordering under skewed load ==");
     print!("{}", staticbatch::reports::ordering_table(0));
+
+    println!("\n== A3 harness: host cost of plan+simulate per ordering (H800, worst case) ==");
+    let shape = MoeShape::paper_table1();
+    let load = LoadScenario::Worst.counts(&shape, 0);
+    let mut t = Table::new(&["ordering", "sim time(ms)", "host mean(us)", "host p95(us)"]);
+    for ord in [
+        OrderingStrategy::HalfInterval,
+        OrderingStrategy::Alternating,
+        OrderingStrategy::Natural,
+        OrderingStrategy::SortedDesc,
+        OrderingStrategy::Random(0),
+    ] {
+        let mut session = ExecutionSession::new(shape)
+            .ordering(ord)
+            .backend(SimBackend::ours())
+            .gpu(GpuSpec::h800());
+        let (timing, out) =
+            time_session(ord.name(), &mut session, &load, 3, 25).expect("sim backend");
+        t.row(&[
+            ord.name().to_string(),
+            format!("{:.3}", out.time_s() * 1e3),
+            format!("{:.1}", timing.mean_us()),
+            format!("{:.1}", timing.p95_ns / 1e3),
+        ]);
+    }
+    t.print();
 }

@@ -1,8 +1,47 @@
 //! Regenerates the paper's Table 1 plus the Section 4.4 tile-swizzle
 //! ablation (see DESIGN.md experiment index).
+//!
+//! The harness section wallclock-benches the full Table-1 cell pipeline
+//! (plan + simulate) per scenario/GPU through the unified
+//! `ExecutionSession`/`Backend` surface.
+
+use staticbatch::exec::{bench::time_session, ExecutionSession, SimBackend};
+use staticbatch::moe::config::MoeShape;
+use staticbatch::moe::routing::LoadScenario;
+use staticbatch::sim::specs::GpuSpec;
+use staticbatch::util::bench::Table;
+
 fn main() {
     println!("== Table 1: MoE kernel on H20/H800 (simulated) vs paper ==");
     print!("{}", staticbatch::reports::table1());
+
+    println!("\n== Table 1 harness: per-cell plan+simulate wallclock ==");
+    let mut t = Table::new(&["case", "gpu", "peak%", "host mean(us)", "host p95(us)"]);
+    for gpu in ["H20", "H800"] {
+        for sc in [LoadScenario::Balanced, LoadScenario::Best, LoadScenario::Worst] {
+            let shape = if sc == LoadScenario::Best && gpu == "H800" {
+                MoeShape::paper_table1_best_h800()
+            } else {
+                MoeShape::paper_table1()
+            };
+            let load = sc.counts(&shape, 0);
+            let mut session = ExecutionSession::new(shape)
+                .backend(SimBackend::ours())
+                .gpu(GpuSpec::by_name(gpu).unwrap());
+            let label = format!("{}/{gpu}", sc.name());
+            let (timing, out) =
+                time_session(&label, &mut session, &load, 2, 20).expect("sim backend");
+            t.row(&[
+                sc.name(),
+                gpu.into(),
+                format!("{:.2}", out.sim().peak_frac * 100.0),
+                format!("{:.1}", timing.mean_us()),
+                format!("{:.1}", timing.p95_ns / 1e3),
+            ]);
+        }
+    }
+    t.print();
+
     println!("\n== A6: L2 tile swizzle ablation (footnote-1 workload, H800) ==");
     print!("{}", staticbatch::reports::swizzle_table());
 }

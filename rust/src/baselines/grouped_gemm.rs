@@ -11,8 +11,9 @@
 //!    inputs, so every routed row is copied once before the kernel runs
 //!    (bandwidth time + a small launch for the gather kernel).
 
-use crate::baselines::MoeImpl;
+use crate::exec::{Backend, ExecContext, ExecError, Outcome};
 use crate::moe::config::MoeShape;
+use crate::moe::planner::ExecutionPlan;
 use crate::moe::routing::ExpertLoad;
 use crate::moe::tiling::{self, CATALOG};
 use crate::sim::cost::gemm_tiles;
@@ -31,25 +32,16 @@ impl GroupedGemm {
         let bytes = 2.0 * (rows * shape.d_model * shape.dtype_bytes) as f64; // rd + wr
         spec.launch_us * 1e-6 + bytes / (spec.hbm_gbps * 1e9)
     }
-}
 
-impl MoeImpl for GroupedGemm {
-    fn name(&self) -> &'static str {
-        "grouped GEMM (SOTA)"
-    }
-
-    fn simulate(&self, shape: &MoeShape, load: &ExpertLoad, spec: &GpuSpec) -> SimResult {
+    fn simulate_load(shape: &MoeShape, load: &ExpertLoad, spec: &GpuSpec) -> (SimResult, u32) {
         // defect 1: single tiling strategy chosen for the mean group size
         let sid = tiling::select_single_for_batch(&load.counts);
         let s = CATALOG[sid];
 
         // defect 2: dynamic scheduling cost per tile
         let mode = MappingMode::DynamicOnDevice { groups: shape.experts };
-        let pressure = {
-            let weights = load.counts.iter().filter(|&&c| c > 0).count() as f64
-                * shape.weight_bytes() as f64;
-            weights
-        };
+        let pressure = load.counts.iter().filter(|&&c| c > 0).count() as f64
+            * shape.weight_bytes() as f64;
         let decode = mode.decode_ns(spec, pressure);
 
         let mut tiles = Vec::new();
@@ -73,27 +65,57 @@ impl MoeImpl for GroupedGemm {
         let host = Self::gather_copy_time_s(shape, load, spec)
             + mode.host_time_s(spec)
             + mode.launch_time_s(spec);
-        wave::run_waves(&tiles, spec, host)
+        let blocks = tiles.len() as u32;
+        (wave::run_waves(&tiles, spec, host), blocks)
+    }
+}
+
+impl Backend for GroupedGemm {
+    fn name(&self) -> &'static str {
+        "grouped GEMM (SOTA)"
+    }
+
+    fn execute(
+        &mut self,
+        plan: &ExecutionPlan,
+        ctx: &mut ExecContext<'_>,
+    ) -> Result<Outcome, ExecError> {
+        let load = plan.expert_load();
+        let (sim, blocks) = Self::simulate_load(&plan.shape, &load, &ctx.spec);
+        Ok(Outcome { backend: self.name(), blocks, sim: Some(sim), output: None, trace: None })
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::baselines::Ours;
+    use crate::exec::{ExecutionSession, SimBackend};
     use crate::moe::routing::LoadScenario;
+
+    fn run_pair(load: &ExpertLoad) -> (Outcome, Outcome) {
+        let shape = MoeShape::paper_table1();
+        let grouped = ExecutionSession::new(shape)
+            .gpu(GpuSpec::h800())
+            .backend(GroupedGemm)
+            .run(load)
+            .unwrap();
+        let ours = ExecutionSession::new(shape)
+            .gpu(GpuSpec::h800())
+            .backend(SimBackend::ours())
+            .run(load)
+            .unwrap();
+        (grouped, ours)
+    }
 
     #[test]
     fn single_tiling_wastes_compute_on_worst_case() {
         let shape = MoeShape::paper_table1();
-        let spec = GpuSpec::h800();
         let load = LoadScenario::Worst.counts(&shape, 0);
-        let grouped = GroupedGemm.simulate(&shape, &load, &spec);
-        let ours = Ours.simulate(&shape, &load, &spec);
+        let (grouped, ours) = run_pair(&load);
         // mean-sized tiling (128 rows) on 56 single-token experts: >99% of
         // those tiles' tensor-core cycles are padding
-        assert!(grouped.padding_waste() > ours.padding_waste());
-        assert!(grouped.time_s > ours.time_s);
+        assert!(grouped.sim().padding_waste() > ours.sim().padding_waste());
+        assert!(grouped.time_s() > ours.time_s());
     }
 
     #[test]
@@ -109,11 +131,9 @@ mod tests {
     #[test]
     fn balanced_case_close_to_ours_but_behind() {
         let shape = MoeShape::paper_table1();
-        let spec = GpuSpec::h800();
         let load = LoadScenario::Balanced.counts(&shape, 0);
-        let grouped = GroupedGemm.simulate(&shape, &load, &spec);
-        let ours = Ours.simulate(&shape, &load, &spec);
-        assert!(grouped.time_s > ours.time_s);
-        assert!(grouped.time_s < ours.time_s * 1.6, "should be competitive when balanced");
+        let (grouped, ours) = run_pair(&load);
+        assert!(grouped.time_s() > ours.time_s());
+        assert!(grouped.time_s() < ours.time_s() * 1.6, "should be competitive when balanced");
     }
 }

@@ -1,7 +1,11 @@
 //! Baseline MoE implementations the paper compares against (Section 2).
 //!
-//! All baselines run on the same simulator and the same routing outcomes as
-//! our kernel, so comparisons isolate the scheduling/batching strategy:
+//! All baselines implement [`crate::exec::Backend`] and run on the same
+//! simulator and the same routing outcomes as our kernel, so comparisons
+//! isolate the scheduling/batching strategy.  They derive the routing
+//! outcome from the [`crate::moe::planner::ExecutionPlan`] they are handed
+//! and then apply their *own* tiling/scheduling defects — the plan fixes
+//! what work exists, the backend decides how badly it runs:
 //!
 //! * [`naive_loop`] — one kernel launch per expert (DeepSpeed-MoE style):
 //!   per-launch overhead, no cross-expert overlap.
@@ -10,65 +14,44 @@
 //!   contiguous input copies (the Section 4.3 overhead).
 //! * [`two_phase`] — the PPoPP'19 [10] framework: per-task tiling like
 //!   ours, but a full per-block mapping array (H2D copy + poor locality).
+//!
+//! Our own kernel's backend is [`crate::exec::SimBackend::ours`]; the
+//! comparison registry that iterates all four is
+//! [`crate::exec::all_backends`].
 
 pub mod grouped_gemm;
 pub mod naive_loop;
 pub mod two_phase;
 
-use crate::moe::config::MoeShape;
-use crate::moe::routing::ExpertLoad;
-use crate::sim::specs::GpuSpec;
-use crate::sim::trace::SimResult;
-
-/// Common interface: simulate one MoE step for a routing outcome.
-pub trait MoeImpl {
-    fn name(&self) -> &'static str;
-    fn simulate(&self, shape: &MoeShape, load: &ExpertLoad, spec: &GpuSpec) -> SimResult;
-}
-
-/// Our kernel, boxed behind the same trait for the comparison benches.
-pub struct Ours;
-
-impl MoeImpl for Ours {
-    fn name(&self) -> &'static str {
-        "static-batch (ours)"
-    }
-
-    fn simulate(&self, shape: &MoeShape, load: &ExpertLoad, spec: &GpuSpec) -> SimResult {
-        let plan = crate::moe::planner::Planner::new(*shape).plan(load);
-        crate::sim::kernel_sim::simulate_ours(&plan, spec)
-    }
-}
-
-/// All implementations, ours first.
-pub fn all_impls() -> Vec<Box<dyn MoeImpl>> {
-    vec![
-        Box::new(Ours),
-        Box::new(grouped_gemm::GroupedGemm),
-        Box::new(two_phase::TwoPhase),
-        Box::new(naive_loop::NaiveLoop),
-    ]
-}
+pub use grouped_gemm::GroupedGemm;
+pub use naive_loop::NaiveLoop;
+pub use two_phase::TwoPhase;
 
 #[cfg(test)]
 mod tests {
-    use super::*;
+    use crate::exec::{all_backends, ExecutionSession, SimBackend};
+    use crate::moe::config::MoeShape;
     use crate::moe::routing::LoadScenario;
+    use crate::sim::specs::GpuSpec;
 
     #[test]
     fn ours_beats_every_baseline_under_imbalance() {
         let shape = MoeShape::paper_table1();
         let load = LoadScenario::Worst.counts(&shape, 0);
-        let spec = GpuSpec::h800();
-        let ours = Ours.simulate(&shape, &load, &spec);
-        for b in all_impls().into_iter().skip(1) {
-            let r = b.simulate(&shape, &load, &spec);
+        let ours = ExecutionSession::new(shape)
+            .gpu(GpuSpec::h800())
+            .run(&load)
+            .unwrap()
+            .time_s();
+        for b in all_backends().into_iter().skip(1) {
+            let mut s = ExecutionSession::new(shape).gpu(GpuSpec::h800()).boxed_backend(b);
+            let r = s.run(&load).unwrap();
             assert!(
-                r.time_s >= ours.time_s * 0.999,
+                r.time_s() >= ours * 0.999,
                 "{} beat ours: {} vs {}",
-                b.name(),
-                r.time_s,
-                ours.time_s
+                r.backend,
+                r.time_s(),
+                ours
             );
         }
     }
@@ -79,9 +62,18 @@ mod tests {
         // the naive loop should lag badly.
         let shape = MoeShape::paper_table1();
         let load = LoadScenario::Balanced.counts(&shape, 0);
-        let spec = GpuSpec::h20();
-        let ours = Ours.simulate(&shape, &load, &spec);
-        let grouped = grouped_gemm::GroupedGemm.simulate(&shape, &load, &spec);
-        assert!(grouped.time_s < ours.time_s * 2.0);
+        let ours = ExecutionSession::new(shape)
+            .gpu(GpuSpec::h20())
+            .backend(SimBackend::ours())
+            .run(&load)
+            .unwrap()
+            .time_s();
+        let grouped = ExecutionSession::new(shape)
+            .gpu(GpuSpec::h20())
+            .backend(super::GroupedGemm)
+            .run(&load)
+            .unwrap()
+            .time_s();
+        assert!(grouped < ours * 2.0);
     }
 }

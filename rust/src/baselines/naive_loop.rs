@@ -3,8 +3,9 @@
 //! batching."  Each non-empty expert is its own kernel launch; empty
 //! experts are skipped by the host loop (no mapping needed at all).
 
-use crate::baselines::MoeImpl;
+use crate::exec::{Backend, ExecContext, ExecError, Outcome};
 use crate::moe::config::MoeShape;
+use crate::moe::planner::ExecutionPlan;
 use crate::moe::routing::ExpertLoad;
 use crate::moe::tiling::{self, CATALOG};
 use crate::sim::cost::gemm_tiles;
@@ -14,22 +15,19 @@ use crate::sim::wave;
 
 pub struct NaiveLoop;
 
-impl MoeImpl for NaiveLoop {
-    fn name(&self) -> &'static str {
-        "naive per-expert loop"
-    }
-
-    fn simulate(&self, shape: &MoeShape, load: &ExpertLoad, spec: &GpuSpec) -> SimResult {
+impl NaiveLoop {
+    fn simulate_load(shape: &MoeShape, load: &ExpertLoad, spec: &GpuSpec) -> (SimResult, u32) {
         // Each expert GEMM gets a well-chosen tiling (cuBLAS heuristics do
         // this per call) but runs alone: no wave can mix experts, so small
         // GEMMs underfill the device, and every launch pays latency.
         let mut launches = Vec::new();
+        let mut blocks = 0u32;
         for (e, &rows) in load.counts.iter().enumerate() {
             if rows == 0 {
                 continue;
             }
             let s = CATALOG[tiling::select(rows)];
-            launches.push(gemm_tiles(
+            let tiles = gemm_tiles(
                 e as u32,
                 rows,
                 shape.d_ff,
@@ -38,16 +36,39 @@ impl MoeImpl for NaiveLoop {
                 s.tn,
                 shape.dtype(),
                 0.0, // no mapping decode; the grid is the task
-            ));
+            );
+            blocks += tiles.len() as u32;
+            launches.push(tiles);
         }
-        wave::run_serial_launches(&launches, spec, 0.0)
+        (wave::run_serial_launches(&launches, spec, 0.0), blocks)
+    }
+}
+
+impl Backend for NaiveLoop {
+    fn name(&self) -> &'static str {
+        "naive per-expert loop"
+    }
+
+    fn execute(
+        &mut self,
+        plan: &ExecutionPlan,
+        ctx: &mut ExecContext<'_>,
+    ) -> Result<Outcome, ExecError> {
+        let load = plan.expert_load();
+        let (sim, blocks) = Self::simulate_load(&plan.shape, &load, &ctx.spec);
+        Ok(Outcome { backend: self.name(), blocks, sim: Some(sim), output: None, trace: None })
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::exec::ExecutionSession;
     use crate::moe::routing::LoadScenario;
+
+    fn run(shape: MoeShape, load: &ExpertLoad, spec: GpuSpec) -> Outcome {
+        ExecutionSession::new(shape).gpu(spec).backend(NaiveLoop).run(load).unwrap()
+    }
 
     #[test]
     fn pays_launch_latency_per_expert() {
@@ -56,28 +77,28 @@ mod tests {
         // worst case: 64 launches, 56 of them tiny -> launch overhead is
         // 64 * 4 us = 256 us of pure serial latency
         let load = LoadScenario::Worst.counts(&shape, 0);
-        let r = NaiveLoop.simulate(&shape, &load, &spec);
-        assert!(r.time_s > 64.0 * spec.launch_us * 1e-6);
+        let launch_us = spec.launch_us;
+        let r = run(shape, &load, spec);
+        assert!(r.time_s() > 64.0 * launch_us * 1e-6);
     }
 
     #[test]
     fn small_gemms_underfill_device() {
         let shape = MoeShape::paper_table1();
-        let spec = GpuSpec::h800();
         let load = LoadScenario::Worst.counts(&shape, 0);
-        let r = NaiveLoop.simulate(&shape, &load, &spec);
+        let r = run(shape, &load, GpuSpec::h800());
         // utilization collapses: single-token GEMMs run alone on the device
-        assert!(r.peak_frac < 0.5, "peak {}", r.peak_frac);
+        assert!(r.sim().peak_frac < 0.5, "peak {}", r.sim().peak_frac);
     }
 
     #[test]
     fn skips_empty_experts() {
         let shape = MoeShape::paper_table1();
-        let spec = GpuSpec::h20();
         let best = LoadScenario::Best.counts(&shape, 0);
-        let r = NaiveLoop.simulate(&shape, &best, &spec);
+        let r = run(shape, &best, GpuSpec::h20());
         // only 8 launches worth of waves
-        assert!(r.waves.len() >= 8);
-        assert!(r.useful_flops > 0.0);
+        assert!(r.sim().waves.len() >= 8);
+        assert!(r.sim().useful_flops > 0.0);
+        assert!(r.blocks > 0);
     }
 }

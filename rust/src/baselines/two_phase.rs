@@ -7,10 +7,8 @@
 //! * one global-memory mapping read per block with poor locality (the
 //!   entry is touched exactly once, so reuse comes only from cache lines).
 
-use crate::baselines::MoeImpl;
-use crate::moe::config::MoeShape;
-use crate::moe::planner::Planner;
-use crate::moe::routing::ExpertLoad;
+use crate::exec::{Backend, ExecContext, ExecError, Outcome};
+use crate::moe::planner::ExecutionPlan;
 use crate::sim::kernel_sim::{operand_bytes, tiles_for_plan};
 use crate::sim::overhead::MappingMode;
 use crate::sim::specs::GpuSpec;
@@ -19,41 +17,73 @@ use crate::sim::wave;
 
 pub struct TwoPhase;
 
-impl MoeImpl for TwoPhase {
+impl TwoPhase {
+    fn simulate_plan(plan: &ExecutionPlan, spec: &GpuSpec) -> SimResult {
+        // same plan quality as ours (per-task tiling, ordering, σ-elision):
+        // the delta is purely the mapping mechanism
+        let blocks = plan.total_tiles() as usize;
+        let mode = MappingMode::PerBlockArray { blocks };
+        let decode = mode.decode_ns(spec, operand_bytes(plan));
+        let tiles = tiles_for_plan(plan, |_| decode);
+        let host = mode.host_time_s(spec) + mode.launch_time_s(spec);
+        wave::run_waves(&tiles, spec, host)
+    }
+}
+
+impl Backend for TwoPhase {
     fn name(&self) -> &'static str {
         "two-phase map array [10]"
     }
 
-    fn simulate(&self, shape: &MoeShape, load: &ExpertLoad, spec: &GpuSpec) -> SimResult {
-        // same plan quality as ours (per-task tiling, ordering, σ-elision):
-        // the delta is purely the mapping mechanism
-        let plan = Planner::new(*shape).plan(load);
-        let blocks = plan.total_tiles() as usize;
-        let mode = MappingMode::PerBlockArray { blocks };
-        let decode = mode.decode_ns(spec, operand_bytes(&plan));
-        let tiles = tiles_for_plan(&plan, |_| decode);
-        let host = mode.host_time_s(spec) + mode.launch_time_s(spec);
-        wave::run_waves(&tiles, spec, host)
+    fn execute(
+        &mut self,
+        plan: &ExecutionPlan,
+        ctx: &mut ExecContext<'_>,
+    ) -> Result<Outcome, ExecError> {
+        let sim = Self::simulate_plan(plan, &ctx.spec);
+        // two-phase runs the plan's exact grid (only the mapping mechanism
+        // differs), so its dispatch sequence IS the plan's
+        let trace = ctx.record_dispatch.then(|| crate::exec::mapping_trace(plan));
+        Ok(Outcome {
+            backend: self.name(),
+            blocks: plan.total_tiles(),
+            sim: Some(sim),
+            output: None,
+            trace,
+        })
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::baselines::Ours;
+    use crate::exec::{ExecutionSession, SimBackend};
+    use crate::moe::config::MoeShape;
     use crate::moe::routing::LoadScenario;
 
     #[test]
     fn slower_than_ours_by_mapping_overhead_only() {
         let shape = MoeShape::paper_table1();
-        let spec = GpuSpec::h800();
         for sc in [LoadScenario::Balanced, LoadScenario::Best, LoadScenario::Worst] {
             let load = sc.counts(&shape, 0);
-            let ours = Ours.simulate(&shape, &load, &spec);
-            let tp = TwoPhase.simulate(&shape, &load, &spec);
-            assert!(tp.time_s >= ours.time_s, "{sc:?}");
+            let ours = ExecutionSession::new(shape)
+                .gpu(GpuSpec::h800())
+                .backend(SimBackend::ours())
+                .run(&load)
+                .unwrap();
+            let tp = ExecutionSession::new(shape)
+                .gpu(GpuSpec::h800())
+                .backend(TwoPhase)
+                .run(&load)
+                .unwrap();
+            assert!(tp.time_s() >= ours.time_s(), "{sc:?}");
             // same tiling quality: padding waste identical
-            assert!((tp.padding_waste() - ours.padding_waste()).abs() < 1e-9, "{sc:?}");
+            assert!(
+                (tp.sim().padding_waste() - ours.sim().padding_waste()).abs() < 1e-9,
+                "{sc:?}"
+            );
+            // same grid: both execute the plan's tile count
+            assert_eq!(tp.blocks, ours.blocks, "{sc:?}");
         }
     }
 

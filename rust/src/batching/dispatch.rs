@@ -1,0 +1,209 @@
+//! Typed dispatch tables: the construction-time-checked replacement for
+//! the old panic-on-missing closure registry.
+//!
+//! In the paper's Algorithm 3 every task kind `i` must have a compiled
+//! `taskFunc_i` or the fused kernel fails to *link*; the analogous Rust
+//! guarantee is that a [`DispatchTable`] can only be built against a batch
+//! whose every [`TaskKind`] has a registered device function.  A missing
+//! registration is a [`DispatchError::Unregistered`] at `build()` time —
+//! never a mid-launch panic.
+
+use std::collections::BTreeMap;
+
+use crate::batching::task::{TaskDescriptor, TaskKind};
+
+/// A "device function": handles one tile of one task.
+/// Arguments: context, task descriptor, task index, tile index within task.
+pub type DeviceFn<C> = Box<dyn Fn(&mut C, &TaskDescriptor, u32, u32)>;
+
+/// Legacy name for [`DeviceFn`], kept for the one-release deprecation
+/// window of the old `StaticBatch::register` path.
+#[deprecated(note = "use batching::dispatch::DeviceFn")]
+pub type TaskFunc<C> = DeviceFn<C>;
+
+/// One dispatch event: which device function ran, for which task and tile.
+/// Backends record these when asked so cross-backend agreement can be
+/// asserted (the sim and CPU executors must dispatch identical sequences).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DispatchRecord {
+    /// Index of the task within the batch (grid order).
+    pub task: u32,
+    /// Tile index within the task.
+    pub tile: u32,
+    /// The kind the dispatch resolved to.
+    pub kind: TaskKind,
+}
+
+/// Why a dispatch table could not be built.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DispatchError {
+    /// A task in the batch has no registered device function — the Rust
+    /// analog of a missing `taskFunc_i` symbol at CUDA link time.
+    Unregistered { kind: TaskKind, task_index: usize },
+    /// Two registrations collided on one dispatch id.
+    Duplicate { dispatch_id: usize },
+}
+
+impl std::fmt::Display for DispatchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DispatchError::Unregistered { kind, task_index } => write!(
+                f,
+                "no device function registered for {kind:?} (task {task_index} in the batch)"
+            ),
+            DispatchError::Duplicate { dispatch_id } => {
+                write!(f, "device function registered twice for dispatch id {dispatch_id}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DispatchError {}
+
+/// Builder for a [`DispatchTable`]: register device functions by kind (or
+/// raw dispatch id), then `build()` against the batch's task list.
+pub struct DispatchTableBuilder<C> {
+    entries: BTreeMap<usize, DeviceFn<C>>,
+    duplicates: Vec<usize>,
+}
+
+impl<C> Default for DispatchTableBuilder<C> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<C> DispatchTableBuilder<C> {
+    pub fn new() -> Self {
+        DispatchTableBuilder { entries: BTreeMap::new(), duplicates: Vec::new() }
+    }
+
+    /// Register the device function for a task kind (`taskFunc_i`).
+    pub fn on<F>(self, kind: TaskKind, f: F) -> Self
+    where
+        F: Fn(&mut C, &TaskDescriptor, u32, u32) + 'static,
+    {
+        self.on_id(kind.dispatch_id(), f)
+    }
+
+    /// Register by raw dispatch id (for closed-over generated ids).
+    pub fn on_id<F>(mut self, dispatch_id: usize, f: F) -> Self
+    where
+        F: Fn(&mut C, &TaskDescriptor, u32, u32) + 'static,
+    {
+        if self.entries.insert(dispatch_id, Box::new(f)).is_some() {
+            self.duplicates.push(dispatch_id);
+        }
+        self
+    }
+
+    /// Validate coverage: every kind appearing in `tasks` must have a
+    /// registered function.  Duplicate registrations are also rejected —
+    /// silently shadowing a device function is a build error too.
+    pub fn build(self, tasks: &[TaskDescriptor]) -> Result<DispatchTable<C>, DispatchError> {
+        if let Some(&dispatch_id) = self.duplicates.first() {
+            return Err(DispatchError::Duplicate { dispatch_id });
+        }
+        for (task_index, t) in tasks.iter().enumerate() {
+            if !self.entries.contains_key(&t.kind.dispatch_id()) {
+                return Err(DispatchError::Unregistered { kind: t.kind, task_index });
+            }
+        }
+        Ok(DispatchTable { entries: self.entries })
+    }
+}
+
+/// A validated kind → device-function table.  Constructing one proves the
+/// batch is fully dispatchable; lookups during the launch cannot miss.
+pub struct DispatchTable<C> {
+    entries: BTreeMap<usize, DeviceFn<C>>,
+}
+
+impl<C> DispatchTable<C> {
+    /// An empty table — only reachable through the deprecated
+    /// `StaticBatch::new`/`register` shim, which keeps the legacy
+    /// panic-at-launch behavior for one release.
+    pub(crate) fn empty() -> Self {
+        DispatchTable { entries: BTreeMap::new() }
+    }
+
+    /// Unchecked insert used by the deprecated `register` shim.
+    pub(crate) fn insert_unchecked(&mut self, dispatch_id: usize, f: DeviceFn<C>) {
+        self.entries.insert(dispatch_id, f);
+    }
+
+    pub fn get(&self, kind: &TaskKind) -> Option<&DeviceFn<C>> {
+        self.entries.get(&kind.dispatch_id())
+    }
+
+    pub fn covers(&self, kind: &TaskKind) -> bool {
+        self.entries.contains_key(&kind.dispatch_id())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gemm(strategy: usize) -> TaskDescriptor {
+        TaskDescriptor {
+            kind: TaskKind::Gemm { strategy },
+            rows: 64,
+            cols: 128,
+            inner: 32,
+            tile_rows: 64,
+            tile_cols: 128,
+        }
+    }
+
+    #[test]
+    fn build_accepts_full_coverage() {
+        let tasks = vec![gemm(0), gemm(1)];
+        let table: DispatchTable<()> = DispatchTableBuilder::new()
+            .on(TaskKind::Gemm { strategy: 0 }, |_, _, _, _| {})
+            .on(TaskKind::Gemm { strategy: 1 }, |_, _, _, _| {})
+            .build(&tasks)
+            .expect("covered");
+        assert_eq!(table.len(), 2);
+        assert!(table.covers(&TaskKind::Gemm { strategy: 0 }));
+        assert!(!table.covers(&TaskKind::ReduceSum));
+    }
+
+    #[test]
+    fn build_rejects_unregistered_kind() {
+        let tasks = vec![gemm(0), gemm(7)];
+        let err = DispatchTableBuilder::<()>::new()
+            .on(TaskKind::Gemm { strategy: 0 }, |_, _, _, _| {})
+            .build(&tasks)
+            .unwrap_err();
+        assert_eq!(
+            err,
+            DispatchError::Unregistered { kind: TaskKind::Gemm { strategy: 7 }, task_index: 1 }
+        );
+        assert!(err.to_string().contains("no device function registered"));
+    }
+
+    #[test]
+    fn build_rejects_duplicate_registration() {
+        let err = DispatchTableBuilder::<()>::new()
+            .on(TaskKind::ReduceSum, |_, _, _, _| {})
+            .on(TaskKind::ReduceSum, |_, _, _, _| {})
+            .build(&[])
+            .unwrap_err();
+        assert_eq!(err, DispatchError::Duplicate { dispatch_id: TaskKind::ReduceSum.dispatch_id() });
+    }
+
+    #[test]
+    fn empty_batch_builds_with_empty_table() {
+        let table: DispatchTable<()> = DispatchTableBuilder::new().build(&[]).expect("empty ok");
+        assert!(table.is_empty());
+    }
+}

@@ -1,43 +1,72 @@
 //! Algorithm 3: the batching framework itself.
 //!
-//! A [`StaticBatch`] owns N heterogeneous task descriptors and the
-//! two-stage mapping built over them.  `run` launches the conceptual grid:
-//! for every thread block it decompresses the mapping and dispatches to the
-//! task's "device function" — a Rust closure registered per [`TaskKind`]
-//! dispatch id, mirroring the `taskFunc_1..K` switch in the paper.
+//! A [`StaticBatch`] owns N heterogeneous task descriptors, the two-stage
+//! mapping built over them, and a validated [`DispatchTable`].  `run`
+//! launches the conceptual grid: for every thread block it decompresses
+//! the mapping and dispatches to the task's "device function" — a Rust
+//! closure registered per [`crate::batching::task::TaskKind`], mirroring
+//! the `taskFunc_1..K` switch in the paper.
+//!
+//! Construction goes through [`StaticBatch::try_new`] with a
+//! [`DispatchTableBuilder`]: coverage of every task kind in the batch is
+//! checked *before* launch, so an unhandled kind is a build error (like a
+//! missing `taskFunc_i` symbol at CUDA link time) rather than a panic in
+//! the middle of the grid.  The pre-table `new`/`register` API survives
+//! one release as a deprecated shim with the old panic behavior.
 //!
 //! The framework is generic over the execution context `C`, so the same
 //! dispatch structure drives (a) the CPU numeric executor in
 //! [`crate::moe::cpu_exec`] and (b) pure accounting runs in the simulator.
 
-use std::collections::BTreeMap;
-
+use crate::batching::dispatch::{DeviceFn, DispatchError, DispatchTable, DispatchTableBuilder};
 use crate::batching::mapping::TileMapping;
 use crate::batching::task::TaskDescriptor;
 use crate::batching::two_stage::TwoStageMap;
 
-/// A "device function": handles one tile of one task.
-/// Arguments: context, task descriptor, task index, tile index within task.
-pub type TaskFunc<C> = Box<dyn Fn(&mut C, &TaskDescriptor, u32, u32)>;
+// The closure alias historically lived here; keep the old path importable
+// for the same one-release window as `new`/`register`.
+#[allow(deprecated)]
+pub use crate::batching::dispatch::TaskFunc;
 
 /// A statically batched set of heterogeneous tasks, ready to "launch".
 pub struct StaticBatch<C> {
     tasks: Vec<TaskDescriptor>,
     map: TwoStageMap,
-    funcs: BTreeMap<usize, TaskFunc<C>>,
+    table: DispatchTable<C>,
 }
 
 impl<C> StaticBatch<C> {
-    /// Build the batch: computes ν(T) per task, σ over non-empty tasks, and
-    /// the compressed TilePrefix — everything Algorithm 1 does on the host.
-    pub fn new(tasks: Vec<TaskDescriptor>) -> Self {
+    /// Build the batch: computes ν(T) per task, σ over non-empty tasks, the
+    /// compressed TilePrefix — everything Algorithm 1 does on the host —
+    /// and validates that `builder` covers every task kind in the batch.
+    pub fn try_new(
+        tasks: Vec<TaskDescriptor>,
+        builder: DispatchTableBuilder<C>,
+    ) -> Result<Self, DispatchError> {
+        let table = builder.build(&tasks)?;
         let map = TwoStageMap::from_tasks(&tasks);
-        StaticBatch { tasks, map, funcs: BTreeMap::new() }
+        Ok(StaticBatch { tasks, map, table })
     }
 
-    /// Register the device function for a dispatch id (`taskFunc_i`).
-    pub fn register(&mut self, dispatch_id: usize, f: TaskFunc<C>) -> &mut Self {
-        self.funcs.insert(dispatch_id, f);
+    /// Legacy constructor without a dispatch table.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use StaticBatch::try_new with a DispatchTableBuilder; this path panics at \
+                launch when a task kind has no device function"
+    )]
+    pub fn new(tasks: Vec<TaskDescriptor>) -> Self {
+        let map = TwoStageMap::from_tasks(&tasks);
+        StaticBatch { tasks, map, table: DispatchTable::empty() }
+    }
+
+    /// Legacy per-id registration (`taskFunc_i`), unchecked.
+    #[deprecated(
+        since = "0.2.0",
+        note = "register device functions on a DispatchTableBuilder and pass it to \
+                StaticBatch::try_new"
+    )]
+    pub fn register(&mut self, dispatch_id: usize, f: DeviceFn<C>) -> &mut Self {
+        self.table.insert_unchecked(dispatch_id, f);
         self
     }
 
@@ -47,6 +76,10 @@ impl<C> StaticBatch<C> {
 
     pub fn mapping(&self) -> &TwoStageMap {
         &self.map
+    }
+
+    pub fn dispatch_table(&self) -> &DispatchTable<C> {
+        &self.table
     }
 
     /// Total thread blocks the fused kernel launches.
@@ -59,22 +92,27 @@ impl<C> StaticBatch<C> {
         self.map.map(block)
     }
 
+    /// The single dispatch site both launch modes funnel through: resolve
+    /// the block's task, look up its device function, run the tile.
+    ///
+    /// Unreachable-miss on the `try_new` path (coverage was validated at
+    /// build); on the deprecated `new`/`register` path a missing function
+    /// keeps the historical panic message.
+    fn dispatch_block(&self, ctx: &mut C, m: TileMapping) {
+        let task = &self.tasks[m.task as usize];
+        let f = self
+            .table
+            .get(&task.kind)
+            .unwrap_or_else(|| panic!("no device function for {:?}", task.kind));
+        f(ctx, task, m.task, m.tile);
+    }
+
     /// "Launch" the fused kernel: every block decodes its mapping and runs
     /// its task's device function (Algorithm 3 body). Returns the number of
     /// blocks executed.
-    ///
-    /// Panics if a task kind has no registered function — a batch with an
-    /// unhandled kind is a build error, same as a missing `taskFunc_i`
-    /// symbol at CUDA link time.
     pub fn run(&self, ctx: &mut C) -> u32 {
         for block in 0..self.map.total_tiles {
-            let m = self.map.map(block);
-            let task = &self.tasks[m.task as usize];
-            let f = self
-                .funcs
-                .get(&task.kind.dispatch_id())
-                .unwrap_or_else(|| panic!("no device function for {:?}", task.kind));
-            f(ctx, task, m.task, m.tile);
+            self.dispatch_block(ctx, self.map.map(block));
         }
         self.map.total_tiles
     }
@@ -86,12 +124,7 @@ impl<C> StaticBatch<C> {
         for block in 0..self.map.total_tiles {
             let (m, p) = self.map.map_simt(block);
             passes += p;
-            let task = &self.tasks[m.task as usize];
-            let f = self
-                .funcs
-                .get(&task.kind.dispatch_id())
-                .unwrap_or_else(|| panic!("no device function for {:?}", task.kind));
-            f(ctx, task, m.task, m.tile);
+            self.dispatch_block(ctx, m);
         }
         (self.map.total_tiles, passes)
     }
@@ -131,21 +164,18 @@ mod tests {
     }
 
     fn build_batch(tasks: Vec<TaskDescriptor>) -> StaticBatch<Recorder> {
-        let mut b = StaticBatch::new(tasks);
+        let mut builder = DispatchTableBuilder::new();
         for id in [
             TaskKind::ReduceSum.dispatch_id(),
             TaskKind::ElementWise.dispatch_id(),
             TaskKind::Gemm { strategy: 0 }.dispatch_id(),
             TaskKind::Gemm { strategy: 1 }.dispatch_id(),
         ] {
-            b.register(
-                id,
-                Box::new(move |c: &mut Recorder, _t, task, tile| {
-                    c.calls.push((task, tile, id));
-                }),
-            );
+            builder = builder.on_id(id, move |c: &mut Recorder, _t, task, tile| {
+                c.calls.push((task, tile, id));
+            });
         }
-        b
+        StaticBatch::try_new(tasks, builder).expect("all kinds covered")
     }
 
     #[test]
@@ -186,8 +216,25 @@ mod tests {
     }
 
     #[test]
+    fn unregistered_kind_is_a_build_error() {
+        let builder: DispatchTableBuilder<Recorder> = DispatchTableBuilder::new()
+            .on(TaskKind::ReduceSum, |_, _, _, _| {});
+        let err = StaticBatch::try_new(vec![gemm(64, 7)], builder).unwrap_err();
+        assert!(matches!(
+            err,
+            crate::batching::dispatch::DispatchError::Unregistered {
+                kind: TaskKind::Gemm { strategy: 7 },
+                task_index: 0,
+            }
+        ));
+    }
+
+    /// Pins the legacy behavior (and its panic message) for the one-release
+    /// deprecation window of `new`/`register`.
+    #[test]
     #[should_panic(expected = "no device function")]
-    fn unregistered_kind_panics() {
+    #[allow(deprecated)]
+    fn deprecated_register_path_still_panics_at_launch() {
         let mut batch: StaticBatch<Recorder> = StaticBatch::new(vec![gemm(64, 7)]);
         batch.register(
             TaskKind::ReduceSum.dispatch_id(),

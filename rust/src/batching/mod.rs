@@ -8,9 +8,13 @@
 //!   plus the multi-pass loop for N > 32 and the 2-level prefix the paper
 //!   mentions but omits (N ≥ 512).
 //! * [`two_stage`] — Algorithm 4: the σ injection that elides empty tasks.
+//! * [`dispatch`] — the typed `DispatchTable`: per-kind device functions
+//!   with construction-time coverage validation (a missing `taskFunc_i` is
+//!   a build error, not a launch panic).
 //! * [`framework`] — Algorithm 3: the batch builder + per-block dispatch of
 //!   heterogeneous "device functions".
 
+pub mod dispatch;
 pub mod framework;
 pub mod mapping;
 pub mod task;

@@ -299,6 +299,17 @@ impl Engine {
         self.metrics.record_exec(t0.elapsed().as_secs_f64(), n);
     }
 
+    /// The engine's MoE batch path on the unified execution surface: wraps
+    /// the engine's executor pool as a [`crate::runtime::PjrtBackend`], so callers execute
+    /// plans through `Backend::execute` / `ExecutionSession::run_on` exactly
+    /// like the simulator, CPU, and baseline backends.
+    pub fn moe_backend(
+        &mut self,
+        ordering: crate::moe::ordering::OrderingStrategy,
+    ) -> Result<crate::runtime::PjrtBackend<'_>> {
+        crate::runtime::PjrtBackend::new(&mut self.pool, ordering)
+    }
+
     /// Direct MoE-layer execution (the moe_ffn artifact): tokens from many
     /// requests packed into one call.  Returns (output, expert counts).
     pub fn run_moe_ffn(&mut self, seq_bucket: usize, x: &[f32]) -> Result<(Vec<f32>, Vec<i32>)> {

@@ -11,6 +11,7 @@
 //! path batches at request granularity into per-sequence buckets.
 
 pub mod batcher;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod metrics;
 pub mod queue;

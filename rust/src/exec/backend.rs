@@ -1,0 +1,189 @@
+//! The [`Backend`] trait and its execution context / outcome types.
+
+use crate::batching::dispatch::DispatchRecord;
+use crate::exec::error::ExecError;
+use crate::moe::config::MoeShape;
+use crate::moe::planner::ExecutionPlan;
+use crate::moe::routing::ExpertLoad;
+use crate::moe::token_index::TokenIndex;
+use crate::sim::specs::GpuSpec;
+use crate::sim::trace::SimResult;
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+/// Real tensors for one MoE step — required by numeric backends (CPU,
+/// PJRT), ignored by accounting-only backends (simulator, baselines).
+pub struct NumericInputs {
+    /// `[seq, d_model]` original token sequence.
+    pub tokens: Tensor,
+    /// `[experts, d_model, d_ff]` expert weights.
+    pub weights: Tensor,
+    /// Token index arrays per expert (Section 4.3).
+    pub token_index: TokenIndex,
+    /// Combine gate per (expert, position) — aligned with `token_index`.
+    pub gates: Vec<Vec<f32>>,
+}
+
+impl NumericInputs {
+    /// Deterministic synthetic inputs for a routing outcome: random tokens
+    /// and weights, token-index arrays consistent with `load`, and gates in
+    /// `[0.25, 0.75)`.  Shared by the selftest and the cross-backend test
+    /// suites so every numeric check runs the same input distribution.
+    pub fn synthetic(shape: MoeShape, load: &ExpertLoad, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let tokens = Tensor::randn(&[shape.seq, shape.d_model], 1.0, &mut rng);
+        let weights = Tensor::randn(&[shape.experts, shape.d_model, shape.d_ff], 0.1, &mut rng);
+        let mut pairs = Vec::new();
+        for (e, &c) in load.counts.iter().enumerate() {
+            for _ in 0..c {
+                pairs.push((rng.usize_below(shape.seq) as u32, e as u32));
+            }
+        }
+        let token_index = TokenIndex::build(shape.experts, &pairs);
+        let gates = token_index
+            .index
+            .iter()
+            .map(|rows| rows.iter().map(|_| rng.f32() * 0.5 + 0.25).collect())
+            .collect();
+        NumericInputs { tokens, weights, token_index, gates }
+    }
+}
+
+/// Everything a backend may need beyond the plan itself.
+///
+/// The same context type serves all backends; each consumes the parts it
+/// needs and errors with [`ExecError::MissingInputs`] when a required part
+/// is absent — so call sites wire up *one* structure regardless of which
+/// backend runs.
+pub struct ExecContext<'a> {
+    /// Hardware model the accounting backends charge costs against.
+    pub spec: GpuSpec,
+    /// Real tensors for numeric backends.
+    pub numeric: Option<&'a NumericInputs>,
+    /// When set, backends that execute the plan's grid (sim, CPU,
+    /// two-phase) record their per-block dispatch sequence in
+    /// [`Outcome::trace`] (used by cross-backend agreement tests).
+    /// Backends that re-schedule the work under their own tiling
+    /// (grouped GEMM, naive loop) have no plan-shaped sequence to record
+    /// and return `None`.
+    pub record_dispatch: bool,
+}
+
+impl<'a> ExecContext<'a> {
+    pub fn new(spec: GpuSpec) -> Self {
+        ExecContext { spec, numeric: None, record_dispatch: false }
+    }
+
+    pub fn with_numeric(mut self, numeric: &'a NumericInputs) -> Self {
+        self.numeric = Some(numeric);
+        self
+    }
+
+    pub fn recording(mut self) -> Self {
+        self.record_dispatch = true;
+        self
+    }
+}
+
+/// What one execution produced.  Fields are optional because backends are
+/// heterogeneous: the simulator yields timings, numeric executors yield
+/// tensors, and either may record a dispatch trace.
+pub struct Outcome {
+    /// Name of the backend that produced this outcome.
+    pub backend: &'static str,
+    /// Thread blocks (tiles) the backend launched for this plan.
+    pub blocks: u32,
+    /// Simulated timing/throughput (accounting backends).
+    pub sim: Option<SimResult>,
+    /// Numeric output (CPU: `[seq, d_ff]` combined; PJRT: packed rows).
+    pub output: Option<Tensor>,
+    /// Per-block dispatch sequence, when requested via
+    /// [`ExecContext::record_dispatch`].
+    pub trace: Option<Vec<DispatchRecord>>,
+}
+
+impl Outcome {
+    /// Simulated end-to-end seconds; panics if this backend is numeric-only.
+    pub fn time_s(&self) -> f64 {
+        self.sim.as_ref().expect("backend produced no simulated timing").time_s
+    }
+
+    /// The simulation result; panics if absent (numeric-only backends).
+    pub fn sim(&self) -> &SimResult {
+        self.sim.as_ref().expect("backend produced no simulated timing")
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        match &self.sim {
+            Some(r) => format!("{}: {} ({} blocks)", self.backend, r.summary(), self.blocks),
+            None => format!(
+                "{}: {} blocks{}",
+                self.backend,
+                self.blocks,
+                if self.output.is_some() { ", numeric output" } else { "" }
+            ),
+        }
+    }
+}
+
+/// One typed execution surface for every way this crate can run a static
+/// batch plan: roofline simulation, CPU numerics, the paper's baselines,
+/// and (behind the `pjrt` feature) the AOT Pallas kernel.
+///
+/// Backends are intentionally `&mut self`: real runtimes hold compiled
+/// executables and device-resident buffers.
+pub trait Backend {
+    /// Stable display name (`sim/ours`, `cpu`, `baseline/grouped-gemm`, ...).
+    fn name(&self) -> &'static str;
+
+    /// Execute `plan` and report what happened.
+    fn execute(
+        &mut self,
+        plan: &ExecutionPlan,
+        ctx: &mut ExecContext<'_>,
+    ) -> Result<Outcome, ExecError>;
+}
+
+/// The dispatch sequence the fused kernel performs for `plan`: block index
+/// → Algorithm 4 two-stage decode → (task, tile, kind).  This is the
+/// ground truth accounting backends report when tracing is requested.
+pub fn mapping_trace(plan: &ExecutionPlan) -> Vec<DispatchRecord> {
+    let descs = plan.descriptors();
+    (0..plan.total_tiles())
+        .map(|block| {
+            let m = plan.two_stage.map(block);
+            DispatchRecord { task: m.task, tile: m.tile, kind: descs[m.task as usize].kind }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::config::MoeShape;
+    use crate::moe::planner::Planner;
+    use crate::moe::routing::LoadScenario;
+
+    #[test]
+    fn mapping_trace_covers_every_block_in_order() {
+        let shape = MoeShape::tiny();
+        let load = LoadScenario::Worst.counts(&shape, 0);
+        let plan = Planner::new(shape).plan(&load);
+        let trace = mapping_trace(&plan);
+        assert_eq!(trace.len() as u32, plan.total_tiles());
+        // tiles within one task are consecutive and start at 0
+        let mut seen_tiles = vec![0u32; plan.tasks.len()];
+        for r in &trace {
+            assert_eq!(r.tile, seen_tiles[r.task as usize]);
+            seen_tiles[r.task as usize] += 1;
+        }
+    }
+
+    #[test]
+    fn outcome_summary_mentions_backend() {
+        let o = Outcome { backend: "cpu", blocks: 7, sim: None, output: None, trace: None };
+        assert!(o.summary().contains("cpu"));
+        assert!(o.summary().contains('7'));
+    }
+}

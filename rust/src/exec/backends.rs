@@ -1,0 +1,162 @@
+//! First-party backends: the roofline simulator (four mapping modes) and
+//! the CPU numeric executor.  The paper's baselines implement [`Backend`]
+//! in [`crate::baselines`]; the PJRT deployment backend lives in
+//! [`crate::runtime`] behind the `pjrt` feature.
+
+use crate::exec::backend::{Backend, ExecContext, mapping_trace, Outcome};
+use crate::exec::error::ExecError;
+use crate::moe::cpu_exec;
+use crate::moe::planner::ExecutionPlan;
+use crate::sim::kernel_sim;
+
+/// Which mapping mechanism the simulator charges for (experiments A2/A4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimMode {
+    /// Compressed TilePrefix + σ, warp-vote decode (Algorithms 1/2/4).
+    Ours,
+    /// Full per-block mapping array (PPoPP'19 [10] style decode).
+    PerBlockArray,
+    /// Dense mapping over all N tasks — no σ compaction (ablation A4).
+    DenseMapping,
+    /// Empty tasks padded to one dummy tile each (the no-Algorithm-4
+    /// strawman; ablation A4).
+    PaddedEmpty,
+}
+
+/// The calibrated GPU execution simulator as a [`Backend`].
+pub struct SimBackend {
+    mode: SimMode,
+}
+
+impl SimBackend {
+    pub fn new(mode: SimMode) -> Self {
+        SimBackend { mode }
+    }
+
+    pub fn ours() -> Self {
+        Self::new(SimMode::Ours)
+    }
+
+    pub fn per_block_array() -> Self {
+        Self::new(SimMode::PerBlockArray)
+    }
+
+    pub fn dense_mapping() -> Self {
+        Self::new(SimMode::DenseMapping)
+    }
+
+    pub fn padded_empty() -> Self {
+        Self::new(SimMode::PaddedEmpty)
+    }
+
+    pub fn mode(&self) -> SimMode {
+        self.mode
+    }
+}
+
+impl Backend for SimBackend {
+    fn name(&self) -> &'static str {
+        match self.mode {
+            SimMode::Ours => "sim/ours",
+            SimMode::PerBlockArray => "sim/per-block-array",
+            SimMode::DenseMapping => "sim/dense-mapping",
+            SimMode::PaddedEmpty => "sim/padded-empty",
+        }
+    }
+
+    fn execute(
+        &mut self,
+        plan: &ExecutionPlan,
+        ctx: &mut ExecContext<'_>,
+    ) -> Result<Outcome, ExecError> {
+        let sim = match self.mode {
+            SimMode::Ours => kernel_sim::simulate_ours(plan, &ctx.spec),
+            SimMode::PerBlockArray => kernel_sim::simulate_per_block_array(plan, &ctx.spec),
+            SimMode::DenseMapping => kernel_sim::simulate_dense_mapping(plan, &ctx.spec),
+            SimMode::PaddedEmpty => kernel_sim::simulate_padded_empty(plan, &ctx.spec),
+        };
+        let trace = ctx.record_dispatch.then(|| mapping_trace(plan));
+        Ok(Outcome {
+            backend: self.name(),
+            blocks: plan.total_tiles(),
+            sim: Some(sim),
+            output: None,
+            trace,
+        })
+    }
+}
+
+/// The CPU numeric executor as a [`Backend`]: runs the plan *through the
+/// framework dispatch* on real tensors and returns `[seq, d_ff]` combined
+/// outputs.  Requires [`ExecContext::numeric`].
+pub struct CpuBackend;
+
+impl Backend for CpuBackend {
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+
+    fn execute(
+        &mut self,
+        plan: &ExecutionPlan,
+        ctx: &mut ExecContext<'_>,
+    ) -> Result<Outcome, ExecError> {
+        let n = ctx
+            .numeric
+            .ok_or(ExecError::MissingInputs { backend: "cpu", what: "numeric inputs" })?;
+        let inputs = cpu_exec::MoeInputs {
+            tokens: &n.tokens,
+            weights: &n.weights,
+            token_index: &n.token_index,
+            gates: &n.gates,
+        };
+        let (output, trace) = cpu_exec::execute_traced(plan, &inputs, ctx.record_dispatch)?;
+        Ok(Outcome {
+            backend: self.name(),
+            blocks: plan.total_tiles(),
+            sim: None,
+            output: Some(output),
+            trace,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::config::MoeShape;
+    use crate::moe::planner::Planner;
+    use crate::moe::routing::LoadScenario;
+    use crate::sim::specs::GpuSpec;
+
+    #[test]
+    fn sim_backend_matches_direct_kernel_sim() {
+        let shape = MoeShape::paper_table1();
+        let plan = Planner::new(shape).plan(&LoadScenario::Worst.counts(&shape, 0));
+        let direct = kernel_sim::simulate_ours(&plan, &GpuSpec::h800());
+        let mut ctx = ExecContext::new(GpuSpec::h800());
+        let out = SimBackend::ours().execute(&plan, &mut ctx).unwrap();
+        assert_eq!(out.time_s(), direct.time_s);
+        assert_eq!(out.blocks, plan.total_tiles());
+        assert!(out.trace.is_none());
+    }
+
+    #[test]
+    fn sim_backend_records_trace_when_asked() {
+        let shape = MoeShape::tiny();
+        let plan = Planner::new(shape).plan(&LoadScenario::Balanced.counts(&shape, 0));
+        let mut ctx = ExecContext::new(GpuSpec::h20()).recording();
+        let out = SimBackend::ours().execute(&plan, &mut ctx).unwrap();
+        let trace = out.trace.expect("trace requested");
+        assert_eq!(trace.len() as u32, plan.total_tiles());
+    }
+
+    #[test]
+    fn cpu_backend_without_inputs_is_typed_error() {
+        let shape = MoeShape::tiny();
+        let plan = Planner::new(shape).plan(&LoadScenario::Balanced.counts(&shape, 0));
+        let mut ctx = ExecContext::new(GpuSpec::h20());
+        let err = CpuBackend.execute(&plan, &mut ctx).unwrap_err();
+        assert!(matches!(err, ExecError::MissingInputs { backend: "cpu", .. }));
+    }
+}

@@ -1,0 +1,46 @@
+//! The one bench harness all `cargo bench` targets drive backends through:
+//! wallclock-times `ExecutionSession::run` (plan construction + backend
+//! execution) with the shared warmup/percentile machinery in
+//! [`crate::util::bench`], and returns the last [`Outcome`] so simulated
+//! metrics can be reported next to host-side cost.
+
+use crate::exec::backend::Outcome;
+use crate::exec::error::ExecError;
+use crate::exec::session::ExecutionSession;
+use crate::moe::routing::ExpertLoad;
+use crate::util::bench::{self, Timing};
+
+/// Wallclock-time `session.run(load)` (`warmup` + `iters` runs).  Returns
+/// the timing stats and the outcome of the final run.
+pub fn time_session(
+    label: &str,
+    session: &mut ExecutionSession,
+    load: &ExpertLoad,
+    warmup: usize,
+    iters: usize,
+) -> Result<(Timing, Outcome), ExecError> {
+    // surface errors once, eagerly, instead of panicking inside the timer
+    let mut last = session.run(load)?;
+    let timing = bench::time(label, warmup, iters, || {
+        last = session.run(load).expect("backend failed mid-bench after a successful probe run");
+    });
+    Ok((timing, last))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::config::MoeShape;
+    use crate::moe::routing::LoadScenario;
+
+    #[test]
+    fn times_a_sim_session_and_returns_its_outcome() {
+        let shape = MoeShape::tiny();
+        let load = LoadScenario::Balanced.counts(&shape, 0);
+        let mut s = ExecutionSession::new(shape);
+        let (t, out) = time_session("tiny", &mut s, &load, 1, 3).expect("runs");
+        assert_eq!(t.iters, 3);
+        assert!(t.mean_ns > 0.0);
+        assert_eq!(out.backend, "sim/ours");
+    }
+}

@@ -1,0 +1,63 @@
+//! Typed errors for the unified execution surface.
+
+use crate::batching::dispatch::DispatchError;
+
+/// Why a backend could not execute a plan.
+#[derive(Debug)]
+pub enum ExecError {
+    /// Dispatch-table construction failed (unregistered kind / duplicate).
+    Dispatch(DispatchError),
+    /// The backend needs inputs the [`crate::exec::ExecContext`] does not
+    /// carry (e.g. the CPU executor without tensors).
+    MissingInputs { backend: &'static str, what: &'static str },
+    /// The plan is incompatible with the backend's compiled configuration
+    /// (e.g. a PJRT artifact built for different static dims).
+    PlanMismatch { backend: &'static str, detail: String },
+    /// Backend-internal failure (runtime errors, artifact I/O, ...).
+    Backend { backend: &'static str, detail: String },
+}
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecError::Dispatch(e) => write!(f, "dispatch table: {e}"),
+            ExecError::MissingInputs { backend, what } => {
+                write!(f, "{backend}: execution context is missing {what}")
+            }
+            ExecError::PlanMismatch { backend, detail } => {
+                write!(f, "{backend}: plan incompatible with backend: {detail}")
+            }
+            ExecError::Backend { backend, detail } => write!(f, "{backend}: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for ExecError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ExecError::Dispatch(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<DispatchError> for ExecError {
+    fn from(e: DispatchError) -> Self {
+        ExecError::Dispatch(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::task::TaskKind;
+
+    #[test]
+    fn display_carries_backend_and_cause() {
+        let e = ExecError::MissingInputs { backend: "cpu", what: "numeric inputs" };
+        assert!(e.to_string().contains("cpu"));
+        let d: ExecError =
+            DispatchError::Unregistered { kind: TaskKind::ReduceSum, task_index: 3 }.into();
+        assert!(d.to_string().contains("no device function registered"));
+    }
+}

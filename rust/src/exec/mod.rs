@@ -1,0 +1,88 @@
+//! The unified execution API: one typed surface for every executor.
+//!
+//! The paper's central claim is that *one* static batching framework
+//! (two-stage mapping + per-task dispatch) drives heterogeneous workloads
+//! through a single kernel entry point.  This module is the Rust-side
+//! mirror of that claim: every way the crate can execute an
+//! [`ExecutionPlan`](crate::moe::planner::ExecutionPlan) — the calibrated
+//! roofline simulator, the CPU numeric executor, the three paper
+//! baselines, and (behind the `pjrt` feature) the AOT Pallas kernel — sits
+//! behind the same [`Backend`] trait, and every call site builds and runs
+//! plans through one [`ExecutionSession`] builder:
+//!
+//! ```no_run
+//! use staticbatch::exec::{ExecutionSession, SimBackend};
+//! use staticbatch::moe::config::MoeShape;
+//! use staticbatch::moe::ordering::OrderingStrategy;
+//! use staticbatch::moe::routing::LoadScenario;
+//! use staticbatch::sim::specs::GpuSpec;
+//!
+//! let shape = MoeShape::paper_table1();
+//! let load = LoadScenario::Worst.counts(&shape, 0);
+//! let outcome = ExecutionSession::new(shape)
+//!     .ordering(OrderingStrategy::HalfInterval)
+//!     .backend(SimBackend::ours())
+//!     .gpu(GpuSpec::h800())
+//!     .run(&load)
+//!     .unwrap();
+//! println!("{}", outcome.summary());
+//! ```
+//!
+//! Errors are typed ([`ExecError`]); in particular a batch whose task kind
+//! has no registered device function fails at *construction* (the
+//! [`crate::batching::dispatch::DispatchTable`] build step), mirroring a
+//! missing `taskFunc_i` symbol at CUDA link time — not mid-launch.
+
+pub mod backend;
+pub mod backends;
+pub mod bench;
+pub mod error;
+pub mod session;
+
+pub use backend::{Backend, ExecContext, mapping_trace, NumericInputs, Outcome};
+pub use backends::{CpuBackend, SimBackend, SimMode};
+pub use error::ExecError;
+pub use session::ExecutionSession;
+
+use crate::baselines::{GroupedGemm, NaiveLoop, TwoPhase};
+
+/// The comparison registry: our kernel (simulated) first, then the three
+/// baselines — everything the A1/sweep experiments iterate over, behind
+/// one trait.
+pub fn all_backends() -> Vec<Box<dyn Backend>> {
+    vec![
+        Box::new(SimBackend::ours()),
+        Box::new(GroupedGemm),
+        Box::new(TwoPhase),
+        Box::new(NaiveLoop),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::config::MoeShape;
+    use crate::moe::routing::LoadScenario;
+
+    #[test]
+    fn registry_has_four_backends_with_unique_names() {
+        let names: Vec<&str> = all_backends().iter().map(|b| b.name()).collect();
+        assert_eq!(names.len(), 4);
+        let mut dedup = names.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 4, "names must be unique: {names:?}");
+        assert_eq!(names[0], "sim/ours");
+    }
+
+    #[test]
+    fn every_registry_backend_executes_the_same_plan() {
+        let shape = MoeShape::paper_table1();
+        let load = LoadScenario::Worst.counts(&shape, 0);
+        for b in all_backends() {
+            let mut s = ExecutionSession::new(shape).boxed_backend(b);
+            let out = s.run(&load).expect("accounting backends need no inputs");
+            assert!(out.time_s() > 0.0, "{}", out.backend);
+        }
+    }
+}

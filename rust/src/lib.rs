@@ -13,18 +13,59 @@
 //! * **L3** — this crate: the serving coordinator, the batching framework
 //!   algorithms themselves ([`batching`]), a calibrated GPU execution
 //!   simulator ([`sim`]) used to regenerate the paper's evaluation on
-//!   H20/H800, baseline implementations ([`baselines`]), and the PJRT
-//!   runtime ([`runtime`]) that executes the AOT artifacts with Python
-//!   nowhere on the request path.
+//!   H20/H800, baseline implementations ([`baselines`]), and — behind the
+//!   `pjrt` feature — the PJRT runtime ([`runtime`]) that executes the AOT
+//!   artifacts with Python nowhere on the request path.
 //!
-//! See `DESIGN.md` for the system inventory and the experiment index, and
-//! `EXPERIMENTS.md` for paper-vs-measured results.
+//! ## One execution surface
+//!
+//! Everything that can run a static batch plan implements the
+//! [`exec::Backend`] trait, and every call site builds and executes plans
+//! through the [`exec::ExecutionSession`] builder:
+//!
+//! ```no_run
+//! use staticbatch::exec::{ExecutionSession, SimBackend};
+//! use staticbatch::moe::config::MoeShape;
+//! use staticbatch::moe::routing::LoadScenario;
+//! use staticbatch::sim::specs::GpuSpec;
+//!
+//! let shape = MoeShape::paper_table1();
+//! let load = LoadScenario::Zipf(1.2).counts(&shape, 0);
+//! // simulate on H800 ...
+//! let sim = ExecutionSession::new(shape)
+//!     .gpu(GpuSpec::h800())
+//!     .backend(SimBackend::ours())
+//!     .run(&load)
+//!     .unwrap();
+//! // ... or run real numerics on CPU: same session shape, one call changed
+//! // (CpuBackend additionally needs `.inputs(...)` tensors).
+//! println!("{}", sim.summary());
+//! ```
+//!
+//! Available backends: [`exec::SimBackend`] (four mapping modes),
+//! [`exec::CpuBackend`], the three baselines in [`baselines`], and
+//! `runtime::PjrtBackend` (feature `pjrt`).  Device-function dispatch is
+//! validated at construction by [`batching::dispatch::DispatchTable`]: a
+//! task kind without a registered function is a build-time `Err`, exactly
+//! like a missing `taskFunc_i` symbol at CUDA link time.
+//!
+//! See `DESIGN.md` at the repository root for the architecture inventory
+//! and the experiment index.
+//!
+//! ## Feature flags
+//!
+//! * `pjrt` — enables the [`runtime`] module, the serving engine
+//!   ([`coordinator::engine`]), and the XLA/PJRT-backed tests, benches and
+//!   examples.  Off by default so the tier-1 suite builds and passes on
+//!   machines without artifacts or a GPU.
 
 pub mod baselines;
 pub mod batching;
 pub mod coordinator;
+pub mod exec;
 pub mod moe;
 pub mod reports;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod util;

@@ -14,15 +14,11 @@
 //!   client        send synthetic requests to a running server
 //!   selftest      quick numeric self-check (CPU executor vs reference)
 
-use std::sync::Arc;
-
-use staticbatch::coordinator::engine::{Engine, EngineConfig};
-use staticbatch::coordinator::server;
+use staticbatch::exec::ExecutionSession;
 use staticbatch::moe::config::MoeShape;
-use staticbatch::moe::planner::Planner;
 use staticbatch::moe::routing::LoadScenario;
 use staticbatch::reports;
-use staticbatch::sim::{kernel_sim, specs::GpuSpec};
+use staticbatch::sim::specs::GpuSpec;
 use staticbatch::util::cli::Command;
 use staticbatch::util::logging;
 
@@ -134,13 +130,16 @@ fn cmd_simulate(args: &[String]) -> i32 {
     let sc = scenario_from(&p.str("scenario"), p.f64("alpha").unwrap_or(1.2));
     let shape = MoeShape::paper_table1();
     let load = sc.counts(&shape, p.u64("seed").unwrap_or(0));
-    let plan = Planner::new(shape).plan(&load);
-    let r = kernel_sim::simulate_ours(&plan, &spec);
+    let spec_name = spec.name;
+    let mut session = ExecutionSession::new(shape).gpu(spec);
+    let plan = session.plan(&load);
+    let out = session.run_plan(&plan).expect("sim backend");
+    let r = out.sim();
     println!(
         "{} / {} on {}: {}",
         sc.name(),
         "paper_table1 shape",
-        spec.name,
+        spec_name,
         r.summary()
     );
     println!(
@@ -171,7 +170,7 @@ fn cmd_plan(args: &[String]) -> i32 {
     let sc = scenario_from(&p.str("scenario"), p.f64("alpha").unwrap_or(1.2));
     let shape = MoeShape::paper_table1();
     let load = sc.counts(&shape, p.u64("seed").unwrap_or(0));
-    let plan = Planner::new(shape).plan(&load);
+    let plan = ExecutionSession::new(shape).plan(&load);
     println!("plan for {} ({} experts, {} tiles):", sc.name(), shape.experts, plan.total_tiles());
     println!("  sigma (grid order -> expert): {:?}", &plan.two_stage.sigma);
     println!(
@@ -189,7 +188,12 @@ fn cmd_plan(args: &[String]) -> i32 {
     0
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_serve(args: &[String]) -> i32 {
+    use staticbatch::coordinator::engine::{Engine, EngineConfig};
+    use staticbatch::coordinator::server;
+    use std::sync::Arc;
+
     let cmd = Command::new("serve", "start the serving coordinator")
         .flag("addr", Some("127.0.0.1:7433"), "listen address")
         .flag("artifacts", Some("artifacts"), "artifacts directory");
@@ -217,6 +221,12 @@ fn cmd_serve(args: &[String]) -> i32 {
         return 1;
     }
     0
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(_args: &[String]) -> i32 {
+    eprintln!("serve requires the `pjrt` feature: cargo run --features pjrt -- serve");
+    2
 }
 
 fn cmd_client(args: &[String]) -> i32 {
@@ -263,6 +273,7 @@ fn cmd_client(args: &[String]) -> i32 {
 }
 
 fn cmd_selftest() -> i32 {
+    use staticbatch::exec::{CpuBackend, NumericInputs};
     use staticbatch::moe::cpu_exec;
     use staticbatch::moe::token_index::TokenIndex;
     use staticbatch::util::rng::Rng;
@@ -282,17 +293,28 @@ fn cmd_selftest() -> i32 {
     let ti = TokenIndex::build(shape.experts, &pairs);
     let gates: Vec<Vec<f32>> =
         ti.index.iter().map(|v| v.iter().map(|_| 0.5f32).collect()).collect();
-    let inputs = cpu_exec::MoeInputs {
-        tokens: &tokens,
-        weights: &weights,
-        token_index: &ti,
-        gates: &gates,
+    let want = {
+        let inputs = cpu_exec::MoeInputs {
+            tokens: &tokens,
+            weights: &weights,
+            token_index: &ti,
+            gates: &gates,
+        };
+        cpu_exec::reference(&inputs, shape.seq, shape.d_model, shape.d_ff)
     };
-    let plan = Planner::new(shape).plan(&load);
-    let got = cpu_exec::execute(&plan, &inputs);
-    let want = cpu_exec::reference(&inputs, shape.seq, shape.d_model, shape.d_ff);
+    let mut session = ExecutionSession::new(shape)
+        .backend(CpuBackend)
+        .inputs(NumericInputs { tokens, weights, token_index: ti, gates });
+    let out = match session.run(&load) {
+        Ok(o) => o,
+        Err(e) => {
+            println!("selftest FAILED: {e}");
+            return 1;
+        }
+    };
+    let got = out.output.expect("cpu backend returns a tensor");
     let err = got.max_abs_diff(&want);
-    println!("selftest: plan tiles={} max abs err={err:.2e}", plan.total_tiles());
+    println!("selftest: plan tiles={} max abs err={err:.2e}", out.blocks);
     if err < 1e-3 {
         println!("selftest OK");
         0

@@ -5,7 +5,11 @@
 //! block→(task, tile) mappings the simulator charges costs for here produce
 //! actual numbers, gathered through token index arrays exactly like the
 //! Pallas kernel, and are checked against a dense reference.
+//!
+//! Call sites reach this through [`crate::exec::CpuBackend`]; the functions
+//! here are the numeric core that backend wraps.
 
+use crate::batching::dispatch::{DispatchError, DispatchRecord, DispatchTableBuilder};
 use crate::batching::framework::StaticBatch;
 use crate::batching::task::TaskKind;
 use crate::moe::planner::ExecutionPlan;
@@ -34,14 +38,33 @@ struct ExecCtx<'a> {
     offsets: Vec<usize>,
     /// blocks executed per strategy (for assertions / stats)
     dispatch_counts: Vec<usize>,
+    /// per-block dispatch sequence, recorded when requested
+    trace: Option<Vec<DispatchRecord>>,
 }
 
 /// Execute the plan; returns `[seq, d_ff]` combined outputs.
 ///
+/// Thin wrapper over [`execute_traced`] for call sites that don't need the
+/// dispatch trace.  The dispatch table is built over the full tiling
+/// catalog, so coverage of any planner-produced batch is guaranteed.
+pub fn execute(plan: &ExecutionPlan, inputs: &MoeInputs) -> Tensor {
+    let (out, _) = execute_traced(plan, inputs, false)
+        .expect("dispatch table covers the whole tiling catalog");
+    out
+}
+
+/// Execute the plan, optionally recording the per-block dispatch sequence.
+///
 /// Every tile goes through `StaticBatch::run` — block index → Algorithm 4
 /// mapping → strategy-specific device function — so a mapping bug corrupts
-/// numerics and the tests catch it.
-pub fn execute(plan: &ExecutionPlan, inputs: &MoeInputs) -> Tensor {
+/// numerics and the tests catch it.  The returned trace (when requested)
+/// is the actually-dispatched sequence, which cross-backend tests compare
+/// against the simulator's mapping decode.
+pub fn execute_traced(
+    plan: &ExecutionPlan,
+    inputs: &MoeInputs,
+    record_dispatch: bool,
+) -> Result<(Tensor, Option<Vec<DispatchRecord>>), DispatchError> {
     let shape = plan.shape;
     let d_ff = shape.d_ff;
 
@@ -53,49 +76,50 @@ pub fn execute(plan: &ExecutionPlan, inputs: &MoeInputs) -> Tensor {
         acc += t.rows;
     }
 
-    let mut batch: StaticBatch<ExecCtx> = StaticBatch::new(plan.descriptors());
+    let mut builder: DispatchTableBuilder<ExecCtx> = DispatchTableBuilder::new();
     for (sid, _s) in CATALOG.iter().enumerate() {
         let kind = TaskKind::Gemm { strategy: sid };
-        batch.register(
-            kind.dispatch_id(),
-            Box::new(move |ctx: &mut ExecCtx, desc, task_idx, tile_idx| {
-                ctx.dispatch_counts[sid] += 1;
-                let task = &ctx.plan.tasks[task_idx as usize];
-                let tiles_n = desc.tiles_n() as u32;
-                let (mi, ni) = (tile_idx / tiles_n, tile_idx % tiles_n);
-                let tm = desc.tile_rows;
-                let tn = desc.tile_cols;
-                let row0 = mi as usize * tm;
-                let col0 = ni as usize * tn;
-                let rows = (task.rows - row0).min(tm);
-                let cols = (ctx.plan.shape.d_ff - col0).min(tn);
-                // gather indices for this tile's rows (token index array)
-                let ids = &ctx.inputs.token_index.index[task.expert as usize]
-                    [row0..row0 + rows];
-                // weight plane slice [d_model, col0..col0+cols]
-                let w = ctx.inputs.weights.plane(task.expert as usize);
-                let d_ff_full = ctx.plan.shape.d_ff;
-                let k = ctx.plan.shape.d_model;
-                // tile-local output, then scatter into packed buffer
-                let mut local = vec![0.0f32; rows * cols];
-                // build a column-sliced weight view: w is [k, d_ff]; we
-                // need [k, cols] starting at col0 — copy the slice once per
-                // tile (models the VMEM block the Pallas kernel stages).
-                let mut wslice = vec![0.0f32; k * cols];
-                for kk in 0..k {
-                    wslice[kk * cols..(kk + 1) * cols].copy_from_slice(
-                        &w[kk * d_ff_full + col0..kk * d_ff_full + col0 + cols],
-                    );
-                }
-                gathered_matmul_into(ctx.inputs.tokens, ids, &wslice, cols, &mut local);
-                let base = ctx.offsets[task_idx as usize];
-                for r in 0..rows {
-                    let dst = (base + row0 + r) * d_ff_full + col0;
-                    ctx.packed[dst..dst + cols].copy_from_slice(&local[r * cols..(r + 1) * cols]);
-                }
-            }),
-        );
+        builder = builder.on(kind, move |ctx: &mut ExecCtx, desc, task_idx, tile_idx| {
+            ctx.dispatch_counts[sid] += 1;
+            if let Some(trace) = ctx.trace.as_mut() {
+                trace.push(DispatchRecord { task: task_idx, tile: tile_idx, kind: desc.kind });
+            }
+            let task = &ctx.plan.tasks[task_idx as usize];
+            let tiles_n = desc.tiles_n() as u32;
+            let (mi, ni) = (tile_idx / tiles_n, tile_idx % tiles_n);
+            let tm = desc.tile_rows;
+            let tn = desc.tile_cols;
+            let row0 = mi as usize * tm;
+            let col0 = ni as usize * tn;
+            let rows = (task.rows - row0).min(tm);
+            let cols = (ctx.plan.shape.d_ff - col0).min(tn);
+            // gather indices for this tile's rows (token index array)
+            let ids = &ctx.inputs.token_index.index[task.expert as usize]
+                [row0..row0 + rows];
+            // weight plane slice [d_model, col0..col0+cols]
+            let w = ctx.inputs.weights.plane(task.expert as usize);
+            let d_ff_full = ctx.plan.shape.d_ff;
+            let k = ctx.plan.shape.d_model;
+            // tile-local output, then scatter into packed buffer
+            let mut local = vec![0.0f32; rows * cols];
+            // build a column-sliced weight view: w is [k, d_ff]; we
+            // need [k, cols] starting at col0 — copy the slice once per
+            // tile (models the VMEM block the Pallas kernel stages).
+            let mut wslice = vec![0.0f32; k * cols];
+            for kk in 0..k {
+                wslice[kk * cols..(kk + 1) * cols].copy_from_slice(
+                    &w[kk * d_ff_full + col0..kk * d_ff_full + col0 + cols],
+                );
+            }
+            gathered_matmul_into(ctx.inputs.tokens, ids, &wslice, cols, &mut local);
+            let base = ctx.offsets[task_idx as usize];
+            for r in 0..rows {
+                let dst = (base + row0 + r) * d_ff_full + col0;
+                ctx.packed[dst..dst + cols].copy_from_slice(&local[r * cols..(r + 1) * cols]);
+            }
+        });
     }
+    let batch = StaticBatch::try_new(plan.descriptors(), builder)?;
 
     let total_rows: usize = plan.tasks.iter().map(|t| t.rows).sum();
     let mut ctx = ExecCtx {
@@ -104,6 +128,7 @@ pub fn execute(plan: &ExecutionPlan, inputs: &MoeInputs) -> Tensor {
         packed: vec![0.0; total_rows * d_ff],
         offsets,
         dispatch_counts: vec![0; CATALOG.len()],
+        trace: record_dispatch.then(Vec::new),
     };
     let blocks = batch.run(&mut ctx);
     debug_assert_eq!(blocks, plan.total_tiles());
@@ -122,7 +147,7 @@ pub fn execute(plan: &ExecutionPlan, inputs: &MoeInputs) -> Tensor {
             }
         }
     }
-    out
+    Ok((out, ctx.trace))
 }
 
 /// Dense reference: `out[t] = Σ_e gate(e,t) · tokens[t] @ W[e]` without any
@@ -253,5 +278,23 @@ mod tests {
         let got = execute(&plan, &inputs);
         let want = reference(&inputs, shape.seq, shape.d_model, shape.d_ff);
         assert!(got.max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn trace_matches_mapping_decode() {
+        let shape = MoeShape::tiny();
+        let load = LoadScenario::Zipf(1.2).counts(&shape, 6);
+        let (tokens, weights, ti, gates) = setup(shape, &load, 6);
+        let inputs = MoeInputs { tokens: &tokens, weights: &weights, token_index: &ti, gates: &gates };
+        let plan = Planner::new(shape).plan(&load);
+        let (_, trace) = execute_traced(&plan, &inputs, true).unwrap();
+        let trace = trace.expect("requested");
+        assert_eq!(trace.len() as u32, plan.total_tiles());
+        let descs = plan.descriptors();
+        for (block, r) in trace.iter().enumerate() {
+            let m = plan.two_stage.map(block as u32);
+            assert_eq!((r.task, r.tile), (m.task, m.tile));
+            assert_eq!(r.kind, descs[m.task as usize].kind);
+        }
     }
 }

@@ -16,9 +16,7 @@
 //! *device*-load imbalance, the effect the `multi_gpu` bench sweeps.
 
 use crate::moe::config::MoeShape;
-use crate::moe::planner::Planner;
 use crate::moe::routing::ExpertLoad;
-use crate::sim::kernel_sim;
 use crate::sim::specs::GpuSpec;
 
 /// A parallel configuration over `ep * tp` identical GPUs.
@@ -125,15 +123,18 @@ pub fn simulate(
     let ranks = partition(shape, load, cfg);
     let mut rank_kernel_s = Vec::with_capacity(cfg.ep);
     let mut useful_flops = 0.0;
+    let mut backend = crate::exec::SimBackend::ours();
     for rank in &ranks {
         if rank.rows_in == 0 {
             rank_kernel_s.push(0.0);
             continue;
         }
-        let plan = Planner::new(rank.shape).plan(&rank.load);
-        let r = kernel_sim::simulate_ours(&plan, spec);
-        useful_flops += r.useful_flops;
-        rank_kernel_s.push(r.time_s);
+        let out = crate::exec::ExecutionSession::new(rank.shape)
+            .gpu(spec.clone())
+            .run_on(&mut backend, &rank.load)
+            .expect("sim backend");
+        useful_flops += out.sim().useful_flops;
+        rank_kernel_s.push(out.time_s());
     }
     let critical = rank_kernel_s.iter().cloned().fold(0.0, f64::max);
     let a2a = all_to_all_s(shape, &ranks, cfg);

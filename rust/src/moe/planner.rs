@@ -142,6 +142,16 @@ impl ExecutionPlan {
         self.two_stage.num_nonempty
     }
 
+    /// Reconstruct the routing outcome this plan was built from (baseline
+    /// backends re-plan it with their own tiling/scheduling defects).
+    pub fn expert_load(&self) -> ExpertLoad {
+        let mut counts = vec![0usize; self.shape.experts];
+        for t in &self.tasks {
+            counts[t.expert as usize] = t.rows;
+        }
+        ExpertLoad { counts }
+    }
+
     /// Metadata bytes shipped to the device per step (σ + prefix + token
     /// index arrays).
     pub fn metadata_bytes(&self) -> usize {

@@ -1,13 +1,15 @@
 //! Report generators shared by the CLI subcommands and the `cargo bench`
 //! targets: each function regenerates one experiment from DESIGN.md's
 //! index and returns the rendered table.
+//!
+//! Every plan executed here goes through [`crate::exec::ExecutionSession`]
+//! — the tables differ only in which backend / ordering / scenario they
+//! sweep.
 
-use crate::baselines::{all_impls, MoeImpl, Ours};
+use crate::exec::{all_backends, ExecutionSession, SimBackend};
 use crate::moe::config::MoeShape;
 use crate::moe::ordering::OrderingStrategy;
-use crate::moe::planner::Planner;
 use crate::moe::routing::LoadScenario;
-use crate::sim::kernel_sim;
 use crate::sim::overhead::MappingMode;
 use crate::sim::specs::GpuSpec;
 use crate::util::bench::Table;
@@ -36,13 +38,12 @@ pub fn table1() -> String {
             _ => unreachable!(),
         };
         let load = scenario.counts(&shape, 0);
-        let plan = Planner::new(shape).plan(&load);
-        let r = kernel_sim::simulate_ours(&plan, &spec);
+        let r = ExecutionSession::new(shape).gpu(spec).run(&load).unwrap();
         t.row(&[
             case.into(),
             gpu.into(),
-            format!("{:.2}", r.tflops),
-            format!("{:.2}", r.peak_frac * 100.0),
+            format!("{:.2}", r.sim().tflops),
+            format!("{:.2}", r.sim().peak_frac * 100.0),
             format!("{p_tf:.2}"),
             format!("{p_pct:.2}"),
         ]);
@@ -58,17 +59,22 @@ pub fn baselines_table() -> String {
         let spec = GpuSpec::by_name(gpu).unwrap();
         for sc in [LoadScenario::Balanced, LoadScenario::Best, LoadScenario::Worst] {
             let load = sc.counts(&shape, 0);
-            let ours_time = Ours.simulate(&shape, &load, &spec).time_s;
-            for imp in all_impls() {
-                let r = imp.simulate(&shape, &load, &spec);
+            let ours_time = ExecutionSession::new(shape)
+                .gpu(spec.clone())
+                .run(&load)
+                .unwrap()
+                .time_s();
+            for b in all_backends() {
+                let mut s = ExecutionSession::new(shape).gpu(spec.clone()).boxed_backend(b);
+                let r = s.run(&load).unwrap();
                 t.row(&[
                     gpu.into(),
                     sc.name(),
-                    imp.name().into(),
-                    format!("{:.3}", r.time_s * 1e3),
-                    format!("{:.1}", r.tflops),
-                    format!("{:.1}", r.peak_frac * 100.0),
-                    format!("{:.2}x", r.time_s / ours_time),
+                    r.backend.into(),
+                    format!("{:.3}", r.time_s() * 1e3),
+                    format!("{:.1}", r.sim().tflops),
+                    format!("{:.1}", r.sim().peak_frac * 100.0),
+                    format!("{:.2}x", r.time_s() / ours_time),
                 ]);
             }
         }
@@ -143,22 +149,25 @@ pub fn ordering_table(seed: u64) -> String {
         let spec = GpuSpec::by_name(gpu).unwrap();
         for sc in [LoadScenario::Worst, LoadScenario::Zipf(1.2), LoadScenario::Dirichlet(0.3)] {
             let load = sc.counts(&shape, seed);
-            let base = {
-                let plan = Planner::new(shape)
-                    .with_ordering(OrderingStrategy::HalfInterval)
-                    .plan(&load);
-                kernel_sim::simulate_ours(&plan, &spec).time_s
-            };
+            let base = ExecutionSession::new(shape)
+                .ordering(OrderingStrategy::HalfInterval)
+                .gpu(spec.clone())
+                .run(&load)
+                .unwrap()
+                .time_s();
             for ord in orderings {
-                let plan = Planner::new(shape).with_ordering(ord).plan(&load);
-                let r = kernel_sim::simulate_ours(&plan, &spec);
+                let r = ExecutionSession::new(shape)
+                    .ordering(ord)
+                    .gpu(spec.clone())
+                    .run(&load)
+                    .unwrap();
                 t.row(&[
                     gpu.into(),
                     sc.name(),
                     ord.name().into(),
-                    format!("{:.3}", r.time_s * 1e3),
-                    format!("{:.1}", r.peak_frac * 100.0),
-                    format!("{:.3}x", r.time_s / base),
+                    format!("{:.3}", r.time_s() * 1e3),
+                    format!("{:.1}", r.sim().peak_frac * 100.0),
+                    format!("{:.3}x", r.time_s() / base),
                 ]);
             }
         }
@@ -185,18 +194,20 @@ pub fn empty_tasks_table() -> String {
             counts[i % active] += 1;
         }
         let load = crate::moe::routing::ExpertLoad { counts };
-        let plan = Planner::new(shape).plan(&load);
-        let ours = kernel_sim::simulate_ours(&plan, &spec);
-        let dense = kernel_sim::simulate_dense_mapping(&plan, &spec);
-        let padded = kernel_sim::simulate_padded_empty(&plan, &spec);
+        let run = |b: SimBackend| {
+            ExecutionSession::new(shape).gpu(spec.clone()).backend(b).run(&load).unwrap()
+        };
+        let ours = run(SimBackend::ours());
+        let dense = run(SimBackend::dense_mapping());
+        let padded = run(SimBackend::padded_empty());
         t.row(&[
             active.to_string(),
             (shape.experts - active).to_string(),
-            format!("{:.3}", ours.time_s * 1e3),
-            format!("{:.3}", dense.time_s * 1e3),
-            format!("{:.3}", padded.time_s * 1e3),
-            format!("{:.2}", padded.padding_waste() * 100.0),
-            format!("{:.3}x", padded.time_s / ours.time_s),
+            format!("{:.3}", ours.time_s() * 1e3),
+            format!("{:.3}", dense.time_s() * 1e3),
+            format!("{:.3}", padded.time_s() * 1e3),
+            format!("{:.2}", padded.sim().padding_waste() * 100.0),
+            format!("{:.3}x", padded.time_s() / ours.time_s()),
         ]);
     }
     t.render()
@@ -230,7 +241,10 @@ pub fn token_copy_table() -> String {
 /// **A6**: L2 tile-swizzle ablation (paper Section 4.4) on the footnote-1
 /// best-case workload, whose 58 MB weight working set thrashes L2 without
 /// swizzling.  `group` is the super-block height in m-tiles; 1 = off.
+/// (Cost-model ablation: builds custom tile streams below the Backend
+/// surface on purpose.)
 pub fn swizzle_table() -> String {
+    use crate::moe::planner::Planner;
     use crate::moe::tiling::CATALOG;
     use crate::sim::cost::gemm_tiles_with_group;
     use crate::sim::wave;
@@ -270,6 +284,10 @@ pub fn swizzle_table() -> String {
 pub fn sweep_table(gpu: &str, seeds: u64) -> String {
     let spec = GpuSpec::by_name(gpu).unwrap_or_else(GpuSpec::h800);
     let shape = MoeShape::paper_table1();
+    let mut ours_sess = ExecutionSession::new(shape).gpu(spec.clone());
+    let mut grouped_sess = ExecutionSession::new(shape)
+        .gpu(spec)
+        .backend(crate::baselines::GroupedGemm);
     let mut t = Table::new(&["alpha", "imbalance", "ours(ms)", "grouped(ms)", "speedup"]);
     for &alpha in &[0.0, 0.4, 0.8, 1.2, 1.6, 2.0] {
         let mut ours_acc = 0.0;
@@ -278,10 +296,8 @@ pub fn sweep_table(gpu: &str, seeds: u64) -> String {
         for seed in 0..seeds {
             let load = LoadScenario::Zipf(alpha).counts(&shape, seed);
             imb += load.imbalance();
-            ours_acc += Ours.simulate(&shape, &load, &spec).time_s;
-            grouped_acc += crate::baselines::grouped_gemm::GroupedGemm
-                .simulate(&shape, &load, &spec)
-                .time_s;
+            ours_acc += ours_sess.run(&load).unwrap().time_s();
+            grouped_acc += grouped_sess.run(&load).unwrap().time_s();
         }
         let n = seeds as f64;
         t.row(&[
@@ -318,6 +334,14 @@ mod tests {
                 .parse()
                 .unwrap();
             assert!(speedup >= 0.99, "line: {line}");
+        }
+    }
+
+    #[test]
+    fn baselines_table_names_all_backends() {
+        let s = super::baselines_table();
+        for name in ["sim/ours", "grouped GEMM", "two-phase", "naive per-expert loop"] {
+            assert!(s.contains(name), "missing {name} in:\n{s}");
         }
     }
 }

@@ -1,0 +1,220 @@
+//! [`PjrtBackend`]: the deployment path behind the unified [`Backend`]
+//! trait — executes a static batch plan on the AOT-compiled Pallas
+//! `moe_gemm` artifact through PJRT.
+//!
+//! The backend lowers the plan's routing (via the token index in
+//! [`crate::exec::NumericInputs`]) to the four metadata tensors the kernel
+//! consumes (`tile_prefix`, `sigma`, `token_ids`, `num_tiles`) and runs the
+//! compiled executable.  With [`PjrtBackend::warm`], tokens and weights
+//! stay device-resident and the hot path uploads only the per-step
+//! metadata — the §Perf deployment pattern, now reachable through the same
+//! `Backend::execute` call every other executor uses.
+
+use anyhow::Result;
+
+use crate::exec::{Backend, ExecContext, ExecError, NumericInputs, Outcome};
+use crate::moe::kernel_meta::{self, KernelDims};
+use crate::moe::ordering::OrderingStrategy;
+use crate::moe::planner::ExecutionPlan;
+use crate::runtime::executor::{ExecutorPool, Value};
+use crate::util::tensor::Tensor;
+
+const ENTRY: &str = "moe_gemm";
+const NAME: &str = "pjrt/moe_gemm";
+
+/// Device-resident operands uploaded once by [`PjrtBackend::warm`], plus
+/// the identity (allocation pointer + length) of the host tensors they
+/// were staged from, so the hot path can refuse to pair stale resident
+/// buffers with different inputs.
+struct Resident {
+    tokens: xla::PjRtBuffer,
+    weights: xla::PjRtBuffer,
+    tokens_id: (*const f32, usize),
+    weights_id: (*const f32, usize),
+}
+
+fn tensor_id(t: &Tensor) -> (*const f32, usize) {
+    (t.data.as_ptr(), t.data.len())
+}
+
+/// The AOT Pallas kernel as a [`Backend`].  Borrows the caller's
+/// [`ExecutorPool`], so it composes with the serving engine (which owns a
+/// pool of its own) and with standalone benches.
+pub struct PjrtBackend<'p> {
+    pool: &'p mut ExecutorPool,
+    dims: KernelDims,
+    ordering: OrderingStrategy,
+    resident: Option<Resident>,
+}
+
+impl<'p> PjrtBackend<'p> {
+    /// Compile the `moe_gemm` entry (cached in the pool) and wrap it.
+    /// `ordering` must match the session's: the kernel metadata re-derives
+    /// σ from the token index with this strategy.
+    pub fn new(pool: &'p mut ExecutorPool, ordering: OrderingStrategy) -> Result<Self> {
+        let dims = pool.manifest().kernel_dims(ENTRY)?;
+        pool.prepare(ENTRY)?;
+        Ok(PjrtBackend { pool, dims, ordering, resident: None })
+    }
+
+    pub fn dims(&self) -> KernelDims {
+        self.dims
+    }
+
+    /// Upload tokens and weights to device buffers once; subsequent
+    /// `execute` calls upload only the per-step metadata (§Perf).  The
+    /// hot path checks (by allocation identity) that later calls still
+    /// carry the same tensors — pass the new inputs here again to re-warm.
+    pub fn warm(&mut self, numeric: &NumericInputs) -> Result<()> {
+        let d = self.dims;
+        anyhow::ensure!(
+            numeric.tokens.data.len() == d.seq * d.d_model,
+            "tokens tensor has {} elements, kernel dims need {}",
+            numeric.tokens.data.len(),
+            d.seq * d.d_model
+        );
+        anyhow::ensure!(
+            numeric.weights.data.len() == d.experts * d.d_model * d.d_ff,
+            "weights tensor has {} elements, kernel dims need {}",
+            numeric.weights.data.len(),
+            d.experts * d.d_model * d.d_ff
+        );
+        let tokens = self.pool.upload(&Value::F32(
+            numeric.tokens.data.clone(),
+            vec![d.seq, d.d_model],
+        ))?;
+        let weights = self.pool.upload(&Value::F32(
+            numeric.weights.data.clone(),
+            vec![d.experts, d.d_model, d.d_ff],
+        ))?;
+        self.resident = Some(Resident {
+            tokens,
+            weights,
+            tokens_id: tensor_id(&numeric.tokens),
+            weights_id: tensor_id(&numeric.weights),
+        });
+        Ok(())
+    }
+
+    fn check_plan(&self, plan: &ExecutionPlan) -> Result<(), ExecError> {
+        let d = self.dims;
+        let s = plan.shape;
+        if s.seq != d.seq || s.d_model != d.d_model || s.d_ff != d.d_ff || s.experts != d.experts
+        {
+            return Err(ExecError::PlanMismatch {
+                backend: NAME,
+                detail: format!(
+                    "plan shape {}x{}x{} ({} experts) vs compiled dims {}x{}x{} ({} experts)",
+                    s.seq, s.d_model, s.d_ff, s.experts, d.seq, d.d_model, d.d_ff, d.experts
+                ),
+            });
+        }
+        Ok(())
+    }
+
+    fn exec_err(e: anyhow::Error) -> ExecError {
+        ExecError::Backend { backend: NAME, detail: e.to_string() }
+    }
+}
+
+impl Backend for PjrtBackend<'_> {
+    fn name(&self) -> &'static str {
+        NAME
+    }
+
+    fn execute(
+        &mut self,
+        plan: &ExecutionPlan,
+        ctx: &mut ExecContext<'_>,
+    ) -> Result<Outcome, ExecError> {
+        self.check_plan(plan)?;
+        let numeric = ctx.numeric.ok_or(ExecError::MissingInputs {
+            backend: NAME,
+            what: "numeric inputs (token index + gates + tensors)",
+        })?;
+        let d = self.dims;
+        let meta = kernel_meta::build(&d, &numeric.token_index, &numeric.gates, self.ordering);
+        let sp = d.padded_rows();
+
+        // the metadata is re-derived from the token index, so enforce that
+        // it describes the *same schedule* as the plan we were handed: same
+        // non-empty experts in the same grid order, same row counts.  A
+        // session/backend ordering mismatch is an error, not a silent
+        // different schedule.
+        let nonempty = plan.num_nonempty();
+        for (i, task) in plan.tasks[..nonempty].iter().enumerate() {
+            if meta.sigma[i] != task.expert as i32 {
+                return Err(ExecError::PlanMismatch {
+                    backend: NAME,
+                    detail: format!(
+                        "grid slot {i}: plan schedules expert {} but the backend's \
+                         {:?}-ordered metadata schedules expert {} — construct \
+                         PjrtBackend with the session's ordering",
+                        task.expert, self.ordering, meta.sigma[i]
+                    ),
+                });
+            }
+            let rows = numeric.token_index.index[task.expert as usize].len();
+            if rows != task.rows {
+                return Err(ExecError::PlanMismatch {
+                    backend: NAME,
+                    detail: format!(
+                        "expert {}: plan has {} rows but the token index has {rows} — \
+                         plan and numeric inputs come from different routings",
+                        task.expert, task.rows
+                    ),
+                });
+            }
+        }
+
+        let m1 = Value::I32(meta.tile_prefix.clone(), vec![d.experts]);
+        let m2 = Value::I32(meta.sigma.clone(), vec![d.experts]);
+        let m3 = Value::I32(meta.token_ids.clone(), vec![sp]);
+        let m4 = Value::I32(meta.num_tiles.to_vec(), vec![1]);
+
+        let outs = match &self.resident {
+            // hot path: operands device-resident, metadata-only upload.
+            // Refuse to run if the caller's tensors are not the ones the
+            // resident buffers were staged from (stale-warm guard).
+            Some(r)
+                if r.tokens_id != tensor_id(&numeric.tokens)
+                    || r.weights_id != tensor_id(&numeric.weights) =>
+            {
+                return Err(ExecError::Backend {
+                    backend: NAME,
+                    detail: "resident operands were warmed from different tensors than the \
+                             current inputs — call warm() again with these inputs"
+                        .into(),
+                });
+            }
+            Some(r) => {
+                let bufs: Result<Vec<xla::PjRtBuffer>> =
+                    [&m1, &m2, &m3, &m4].iter().map(|v| self.pool.upload(v)).collect();
+                let bufs = bufs.map_err(Self::exec_err)?;
+                let mut args: Vec<&xla::PjRtBuffer> = vec![&r.tokens, &r.weights];
+                args.extend(bufs.iter());
+                self.pool.run_buffers(ENTRY, &args).map_err(Self::exec_err)?
+            }
+            // cold path: stage everything per call
+            None => {
+                let inputs = vec![
+                    Value::F32(numeric.tokens.data.clone(), vec![d.seq, d.d_model]),
+                    Value::F32(numeric.weights.data.clone(), vec![d.experts, d.d_model, d.d_ff]),
+                    m1,
+                    m2,
+                    m3,
+                    m4,
+                ];
+                self.pool.run(ENTRY, &inputs).map_err(Self::exec_err)?
+            }
+        };
+        let packed = outs[0].as_f32().map_err(Self::exec_err)?;
+        Ok(Outcome {
+            backend: NAME,
+            blocks: meta.num_tiles[0] as u32,
+            sim: None,
+            output: Some(Tensor::from_vec(&[sp, d.d_ff], packed.to_vec())),
+            trace: None,
+        })
+    }
+}

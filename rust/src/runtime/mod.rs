@@ -3,5 +3,8 @@
 //! `make artifacts` and this module is the only consumer.
 
 pub mod artifact;
+pub mod backend;
 pub mod client;
 pub mod executor;
+
+pub use backend::PjrtBackend;

@@ -87,7 +87,7 @@ pub fn time_throughput<F: FnMut() -> usize>(
 }
 
 /// Fixed-width table printer used by every bench binary so outputs diff
-/// cleanly across runs (EXPERIMENTS.md embeds them verbatim).
+/// cleanly across runs (reports embed them verbatim).
 pub struct Table {
     headers: Vec<String>,
     rows: Vec<Vec<String>>,

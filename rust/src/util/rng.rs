@@ -2,7 +2,7 @@
 //!
 //! Xoshiro256** seeded through SplitMix64 — the standard, well-tested
 //! construction.  Every simulator / generator in this crate takes an explicit
-//! seed so that all experiments in EXPERIMENTS.md are exactly reproducible.
+//! seed so that every experiment in the DESIGN.md index is exactly reproducible.
 
 /// SplitMix64: used to expand a single `u64` seed into the xoshiro state.
 #[derive(Clone, Copy, Debug)]

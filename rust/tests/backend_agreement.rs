@@ -1,0 +1,142 @@
+//! Cross-backend agreement: property tests over random `ExpertLoad`s
+//! asserting that the simulator backend and the CPU numeric backend
+//! dispatch *identical* `(task, tile, kind)` sequences for the same plan —
+//! the simulator decodes the two-stage mapping, the CPU executor actually
+//! runs `StaticBatch` dispatch, so agreement pins the whole Algorithm
+//! 1/2/4 pipeline across two independent code paths.
+//!
+//! Also covers the construction-time dispatch guarantee: a batch
+//! containing an unregistered `TaskKind` is rejected by
+//! `DispatchTable::build` with a typed error instead of panicking at
+//! launch.
+
+use staticbatch::batching::dispatch::{DispatchError, DispatchTableBuilder};
+use staticbatch::batching::task::{TaskDescriptor, TaskKind};
+use staticbatch::exec::{CpuBackend, ExecutionSession, NumericInputs, SimBackend};
+use staticbatch::moe::config::MoeShape;
+use staticbatch::moe::ordering::OrderingStrategy;
+use staticbatch::moe::routing::ExpertLoad;
+use staticbatch::util::prop;
+
+/// Random routing outcome + the shape it belongs to.
+fn gen_case(g: &mut prop::GenCtx) -> (MoeShape, ExpertLoad, u64) {
+    let experts = 2 + g.rng.usize_below(14);
+    let mut counts = vec![0usize; experts];
+    let rows = g.rng.usize_below(g.size * 24 + 2);
+    for _ in 0..rows {
+        let e = g.rng.usize_below(experts);
+        counts[e] += 1;
+    }
+    let shape = MoeShape {
+        seq: rows.max(1),
+        d_model: 8 + g.rng.usize_below(3) * 8,
+        d_ff: 16 + g.rng.usize_below(3) * 16,
+        experts,
+        top_k: 1,
+        dtype_bytes: 4,
+    };
+    let seed = g.rng.below(u32::MAX as u64);
+    (shape, ExpertLoad { counts }, seed)
+}
+
+#[test]
+fn sim_and_cpu_backends_dispatch_identical_sequences() {
+    prop::check(
+        "sim-cpu-dispatch-agreement",
+        60,
+        gen_case,
+        |&(shape, ref load, seed)| {
+            for ordering in [
+                OrderingStrategy::Natural,
+                OrderingStrategy::HalfInterval,
+                OrderingStrategy::SortedDesc,
+            ] {
+                let sim_trace = ExecutionSession::new(shape)
+                    .ordering(ordering)
+                    .backend(SimBackend::ours())
+                    .record_dispatch()
+                    .run(load)
+                    .map_err(|e| format!("sim backend: {e}"))?
+                    .trace
+                    .ok_or("sim backend returned no trace")?;
+                let cpu_trace = ExecutionSession::new(shape)
+                    .ordering(ordering)
+                    .backend(CpuBackend)
+                    .inputs(NumericInputs::synthetic(shape, load, seed))
+                    .record_dispatch()
+                    .run(load)
+                    .map_err(|e| format!("cpu backend: {e}"))?
+                    .trace
+                    .ok_or("cpu backend returned no trace")?;
+                if sim_trace != cpu_trace {
+                    let first = sim_trace
+                        .iter()
+                        .zip(&cpu_trace)
+                        .position(|(a, b)| a != b)
+                        .unwrap_or(sim_trace.len().min(cpu_trace.len()));
+                    return Err(format!(
+                        "dispatch traces diverge under {ordering:?}: lens {}/{}, first diff at block {first}",
+                        sim_trace.len(),
+                        cpu_trace.len()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn cpu_backend_numerics_survive_random_loads() {
+    // agreement on *where* blocks go is necessary but not sufficient — the
+    // gathered numbers must also match the dense reference
+    prop::check("cpu-vs-reference", 25, gen_case, |&(shape, ref load, seed)| {
+        let numeric = NumericInputs::synthetic(shape, load, seed);
+        let want = {
+            let inputs = staticbatch::moe::cpu_exec::MoeInputs {
+                tokens: &numeric.tokens,
+                weights: &numeric.weights,
+                token_index: &numeric.token_index,
+                gates: &numeric.gates,
+            };
+            staticbatch::moe::cpu_exec::reference(&inputs, shape.seq, shape.d_model, shape.d_ff)
+        };
+        let got = ExecutionSession::new(shape)
+            .backend(CpuBackend)
+            .inputs(numeric)
+            .run(load)
+            .map_err(|e| format!("cpu backend: {e}"))?
+            .output
+            .ok_or("cpu backend returned no tensor")?;
+        let err = got.max_abs_diff(&want);
+        if err < 1e-3 {
+            Ok(())
+        } else {
+            Err(format!("max abs err {err}"))
+        }
+    });
+}
+
+#[test]
+fn dispatch_table_rejects_unregistered_kind_in_batch() {
+    // a batch mixing GEMM strategies where only strategy 0 is registered
+    let tasks: Vec<TaskDescriptor> = [0usize, 0, 3]
+        .iter()
+        .map(|&s| TaskDescriptor {
+            kind: TaskKind::Gemm { strategy: s },
+            rows: 32,
+            cols: 64,
+            inner: 16,
+            tile_rows: 16,
+            tile_cols: 64,
+        })
+        .collect();
+    let err = DispatchTableBuilder::<()>::new()
+        .on(TaskKind::Gemm { strategy: 0 }, |_, _, _, _| {})
+        .build(&tasks)
+        .unwrap_err();
+    assert_eq!(
+        err,
+        DispatchError::Unregistered { kind: TaskKind::Gemm { strategy: 3 }, task_index: 2 }
+    );
+}

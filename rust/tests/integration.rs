@@ -1,19 +1,26 @@
 //! Cross-layer integration tests: the Rust planner drives the AOT-compiled
-//! Pallas kernel through PJRT and the numbers must match the Rust CPU
-//! reference.  This is the deployment path end to end — if the Rust
-//! metadata layout disagreed with the Python kernel's expectations in any
-//! way (σ order, tile prefix, row padding), these tests would produce
-//! garbage numerics, not just a failed assert on metadata.
+//! Pallas kernel through PJRT — via the unified `Backend` surface — and
+//! the numbers must match the Rust CPU reference.  This is the deployment
+//! path end to end: if the Rust metadata layout disagreed with the Python
+//! kernel's expectations in any way (σ order, tile prefix, row padding),
+//! these tests would produce garbage numerics, not just a failed assert on
+//! metadata.
 //!
-//! Requires `make artifacts`; tests skip (with a note) if absent.
+//! Requires `make artifacts` and `--features pjrt`; tests skip (with a
+//! note) if artifacts are absent.
 
+use staticbatch::exec::{ExecutionSession, NumericInputs};
+use staticbatch::moe::config::MoeShape;
 use staticbatch::moe::kernel_meta::{self, KernelDims};
 use staticbatch::moe::ordering::OrderingStrategy;
+use staticbatch::moe::routing::ExpertLoad;
 use staticbatch::moe::token_index::TokenIndex;
 use staticbatch::runtime::artifact::Manifest;
 use staticbatch::runtime::client::Runtime;
 use staticbatch::runtime::executor::{ExecutorPool, Value};
+use staticbatch::runtime::PjrtBackend;
 use staticbatch::util::rng::Rng;
+use staticbatch::util::tensor::Tensor;
 
 fn artifacts_dir() -> std::path::PathBuf {
     std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -39,6 +46,17 @@ fn ctx() -> Ctx {
     let dims = manifest.kernel_dims("moe_gemm").expect("kernel dims");
     let pool = ExecutorPool::new(rt, manifest);
     Ctx { pool, dims }
+}
+
+fn shape_of(dims: &KernelDims) -> MoeShape {
+    MoeShape {
+        seq: dims.seq,
+        d_model: dims.d_model,
+        d_ff: dims.d_ff,
+        experts: dims.experts,
+        top_k: dims.top_k,
+        dtype_bytes: 4,
+    }
 }
 
 /// Expected packed output computed in Rust directly from the metadata:
@@ -93,20 +111,29 @@ fn run_case(ctxx: &mut Ctx, counts: &[usize], ordering: OrderingStrategy, seed: 
     let ti = TokenIndex::build(dims.experts, &pairs);
     let gates: Vec<Vec<f32>> =
         ti.index.iter().map(|v| v.iter().map(|_| 1.0f32).collect()).collect();
+    // twin of the metadata the backend will lower the plan to — used for
+    // the host-side verification below
     let meta = kernel_meta::build(&dims, &ti, &gates, ordering);
 
+    let numeric = NumericInputs {
+        tokens: Tensor::from_vec(&[dims.seq, dims.d_model], tokens.clone()),
+        weights: Tensor::from_vec(&[dims.experts, dims.d_model, dims.d_ff], weights.clone()),
+        token_index: ti,
+        gates,
+    };
+    let load = ExpertLoad { counts: counts.to_vec() };
+
+    // the deployment path: session plans, PjrtBackend executes the plan on
+    // the AOT kernel
+    let mut backend = PjrtBackend::new(&mut ctxx.pool, ordering).expect("compile moe_gemm");
+    let session = ExecutionSession::new(shape_of(&dims)).ordering(ordering).inputs(numeric);
+    let out = session.run_on(&mut backend, &load).expect("execute moe_gemm");
+
     let sp = dims.padded_rows();
-    let inputs = vec![
-        Value::F32(tokens.clone(), vec![dims.seq, dims.d_model]),
-        Value::F32(weights.clone(), vec![dims.experts, dims.d_model, dims.d_ff]),
-        Value::I32(meta.tile_prefix.clone(), vec![dims.experts]),
-        Value::I32(meta.sigma.clone(), vec![dims.experts]),
-        Value::I32(meta.token_ids.clone(), vec![sp]),
-        Value::I32(meta.num_tiles.to_vec(), vec![1]),
-    ];
-    let outs = ctxx.pool.run("moe_gemm", &inputs).expect("execute moe_gemm");
-    let got = outs[0].as_f32().expect("f32 output");
-    assert_eq!(got.len(), sp * dims.d_ff);
+    assert_eq!(out.blocks as usize, meta.num_tiles[0] as usize);
+    let packed = out.output.expect("packed rows");
+    assert_eq!(packed.shape, vec![sp, dims.d_ff]);
+    let got = &packed.data;
 
     let want = expected_packed(&dims, &meta, &tokens, &weights);
     let mut max_err = 0f32;
