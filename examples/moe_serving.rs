@@ -1,9 +1,12 @@
 //! END-TO-END serving driver (the DESIGN.md "E2E" experiment).
 //!
 //! Boots the full stack — PJRT runtime loading the AOT transformer
-//! artifacts, admission queue, continuous batcher, engine — then drives a
-//! synthetic multi-client workload through it in-process and reports
-//! latency percentiles and throughput.  Nothing Python runs here.
+//! artifacts, admission queue, continuous batcher, and the backend-generic
+//! serving core (`staticbatch::serve::Server`) with the PJRT engine as its
+//! step executor — then drives a synthetic multi-client workload through
+//! it in-process and reports latency percentiles and throughput.  Nothing
+//! Python runs here.  The GPU-free twin of this driver is the
+//! `sim_serving` example (default features).
 //!
 //! Requires `make artifacts`. Run:
 //!   cargo run --release --example moe_serving

@@ -1,0 +1,50 @@
+//! Sim-backed serving demo (default features — no GPU, artifacts, or XLA).
+//!
+//! The same backend-generic serving core the PJRT engine runs
+//! (`queue → batcher → PlanCache → StepExecutor → metrics`), instantiated
+//! with the sim/CPU MoE executor and driven by synthetic open-loop
+//! traffic.  Run:
+//!   cargo run --release --example sim_serving
+//!   cargo run --release --example sim_serving -- 500 200   # requests, req/s
+
+use staticbatch::coordinator::batcher::BatchPolicy;
+use staticbatch::serve::{
+    run_traffic, Server, ServerConfig, SimServeConfig, SimStepExecutor, StepExecutor,
+    TrafficConfig,
+};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(200);
+    let rate_hz: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(400.0);
+
+    let sim_cfg = SimServeConfig::default();
+    let max_tokens = sim_cfg.max_tokens;
+    let executor = SimStepExecutor::new(sim_cfg);
+    println!(
+        "sim serving core up: shape {:?}, buckets {:?}",
+        executor.shape(),
+        executor.buckets()
+    );
+
+    let mut server = Server::new(
+        ServerConfig {
+            policy: BatchPolicy { buckets: Vec::new(), max_requests: 16, max_tokens },
+            queue_capacity: 512,
+            poll: std::time::Duration::from_millis(5),
+        },
+        executor,
+    );
+
+    let report = run_traffic(
+        &mut server,
+        TrafficConfig { requests, rate_hz, ..TrafficConfig::default() },
+    );
+    println!("\n=== sim serving results ({requests} requests @ {rate_hz} req/s) ===");
+    print!("{}", report.render());
+    println!(
+        "\nexecutor ran {} packed steps for {} requests",
+        server.executor().steps(),
+        report.ok
+    );
+}

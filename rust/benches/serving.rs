@@ -1,0 +1,31 @@
+//! Serving-core bench (default features): burst traffic through the
+//! sim/CPU-backed server, then the SERVE report table (accounting mode)
+//! across prompt-pool skews.  No GPU, artifacts, or XLA — this is the
+//! load-test half of the DESIGN.md experiment index entry "SERVE".
+
+use staticbatch::coordinator::batcher::BatchPolicy;
+use staticbatch::serve::{
+    run_traffic, Server, ServerConfig, SimServeConfig, SimStepExecutor, TrafficConfig,
+};
+
+fn main() {
+    println!("== serving core: 512-request burst, CPU numerics ==");
+    let sim_cfg = SimServeConfig { seed: 1, ..SimServeConfig::default() };
+    let max_tokens = sim_cfg.max_tokens;
+    let mut server = Server::new(
+        ServerConfig {
+            policy: BatchPolicy { buckets: Vec::new(), max_requests: 16, max_tokens },
+            queue_capacity: 1024,
+            poll: std::time::Duration::from_millis(1),
+        },
+        SimStepExecutor::new(sim_cfg),
+    );
+    let report = run_traffic(
+        &mut server,
+        TrafficConfig { requests: 512, rate_hz: 0.0, ..TrafficConfig::default() },
+    );
+    print!("{}", report.render());
+
+    println!("\n== SERVE: plan-cache behavior across prompt-pool skews ==");
+    print!("{}", staticbatch::reports::serving_sim_table(256, 1));
+}

@@ -12,7 +12,7 @@ use crate::batching::tile_prefix;
 use crate::batching::warp::WARP_SIZE;
 
 /// The σ injection plus the compressed prefix over non-empty tasks.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct TwoStageMap {
     /// `sigma[i]` = real task index of the i-th non-empty task.
     pub sigma: Vec<u32>,

@@ -1,24 +1,28 @@
-//! The serving engine: queue → batcher → PJRT execution → responses.
+//! The PJRT serving engine: AOT LM artifacts as a
+//! [`StepExecutor`](crate::serve::StepExecutor) for the backend-generic
+//! serving core.
 //!
-//! One engine owns the executor pool (PJRT executables are not Sync in the
+//! The engine owns the executor pool (PJRT executables are not Sync in the
 //! `xla` crate, so execution is serialized through a dedicated dispatch
-//! thread; request-side work — padding, batch formation, response fan-out —
-//! happens on the caller/worker side).  Model parameters are generated once
-//! (deterministic seed) and reused across calls as cached `Value`s.
+//! thread) and the model parameters (generated once from a deterministic
+//! seed, uploaded to device buffers at warmup).  The queue → batcher →
+//! execute → respond loop is [`crate::serve::Server`] — the same core the
+//! default-features sim path runs under `cargo test`, instantiated here
+//! with this executor.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::queue::AdmissionQueue;
-use crate::coordinator::request::{Request, Response};
+use crate::exec::ExecError;
 use crate::runtime::artifact::Manifest;
 use crate::runtime::client::Runtime;
 use crate::runtime::executor::{ExecutorPool, Value};
+use crate::serve::{Server, ServerConfig, StepExecutor, StepInput, StepOutput};
 use crate::util::rng::Rng;
 
 /// Engine configuration.
@@ -51,11 +55,9 @@ pub struct LmConfig {
     pub experts: usize,
 }
 
-/// The engine. Construct with [`Engine::new`], then call [`Engine::serve`]
-/// from a dispatch thread, pushing requests through [`Engine::queue`].
+/// The PJRT execution step.  Construct with [`Engine::new`], or let
+/// [`Engine::spawn`] wrap it in a [`Server`] on a dedicated thread.
 pub struct Engine {
-    pub queue: Arc<AdmissionQueue>,
-    pub metrics: Arc<Metrics>,
     cfg: EngineConfig,
     pool: ExecutorPool,
     lm: LmConfig,
@@ -63,7 +65,6 @@ pub struct Engine {
     /// Device-resident parameter buffers, uploaded once at warmup
     /// (§Perf: the request path must not re-stage ~76 MB of weights).
     param_buffers: Vec<xla::PjRtBuffer>,
-    stop: Arc<AtomicBool>,
 }
 
 /// Handles returned by [`Engine::spawn`]: everything the request side needs.
@@ -76,7 +77,7 @@ pub struct EngineHandle {
 }
 
 impl EngineHandle {
-    /// Close the queue and wait for the engine thread to drain and exit.
+    /// Close the queue and wait for the serving thread to drain and exit.
     pub fn shutdown(self) {
         self.queue.close();
         let _ = self.join.join();
@@ -85,8 +86,9 @@ impl EngineHandle {
 
 impl Engine {
     /// Construct the engine inside a dedicated thread (the PJRT client is
-    /// not `Send`, so it must live where it serves) and return the handles.
-    /// Blocks until warmup completes or fails.
+    /// not `Send`, so it must live where it serves), wrap it in the
+    /// generic [`Server`], and return the request-side handles.  Blocks
+    /// until warmup completes or fails.
     pub fn spawn(cfg: EngineConfig) -> Result<EngineHandle> {
         let (tx, rx) = std::sync::mpsc::channel();
         let join = std::thread::Builder::new()
@@ -103,13 +105,20 @@ impl Engine {
                     let _ = tx.send(Err(anyhow!("warmup: {e}")));
                     return;
                 }
+                let lm = engine.lm.clone();
+                let server_cfg = ServerConfig {
+                    policy: engine.cfg.policy.clone(),
+                    queue_capacity: engine.cfg.queue_capacity,
+                    ..ServerConfig::default()
+                };
+                let mut server = Server::new(server_cfg, engine);
                 let _ = tx.send(Ok((
-                    Arc::clone(&engine.queue),
-                    Arc::clone(&engine.metrics),
-                    engine.lm.clone(),
-                    Arc::clone(&engine.stop),
+                    server.queue(),
+                    server.metrics(),
+                    lm,
+                    server.stopper(),
                 )));
-                engine.serve();
+                server.serve();
             })?;
         match rx.recv() {
             Ok(Ok((queue, metrics, lm, stop))) => {
@@ -131,27 +140,17 @@ impl Engine {
         let manifest = Manifest::load(&cfg.artifacts_dir)?;
         let lm = Self::lm_config(&manifest)?;
         let params = Self::materialize_params(&lm, cfg.param_seed);
-        let mut policy = cfg.policy.clone();
-        policy.buckets = lm.buckets.clone();
-        let cfg = EngineConfig { policy, ..cfg };
         Ok(Engine {
-            queue: Arc::new(AdmissionQueue::new(cfg.queue_capacity)),
-            metrics: Arc::new(Metrics::new()),
             cfg,
             pool: ExecutorPool::new(rt, manifest),
             lm,
             params,
             param_buffers: Vec::new(),
-            stop: Arc::new(AtomicBool::new(false)),
         })
     }
 
     pub fn lm_info(&self) -> &LmConfig {
         &self.lm
-    }
-
-    pub fn stopper(&self) -> Arc<AtomicBool> {
-        Arc::clone(&self.stop)
     }
 
     fn lm_config(manifest: &Manifest) -> Result<LmConfig> {
@@ -244,61 +243,6 @@ impl Engine {
         Ok(argmax)
     }
 
-    /// Serve until the queue closes or `stop` is set.  Call from a dedicated
-    /// thread; producers push into `engine.queue`.
-    pub fn serve(&mut self) {
-        log::info!("engine serving: buckets {:?}", self.lm.buckets);
-        while !self.stop.load(Ordering::Relaxed) {
-            let Some(first) = self.queue.pop(Duration::from_millis(50)) else {
-                if self.queue.is_closed() && self.queue.is_empty() {
-                    break;
-                }
-                continue;
-            };
-            // form a batch: the popped request plus whatever is waiting
-            let mut pending = vec![first];
-            pending.extend(self.queue.drain_up_to(self.cfg.policy.max_requests - 1));
-            let (batches, rejected) = self.cfg.policy.form(pending);
-            for r in rejected {
-                self.metrics.record_error();
-                let _ = r.respond.send(Response::failed(
-                    r.id,
-                    format!("request of {} tokens exceeds largest bucket", r.tokens.len()),
-                ));
-            }
-            for batch in batches {
-                self.execute_batch(batch.bucket, batch.requests);
-            }
-        }
-        log::info!("engine stopped");
-    }
-
-    fn execute_batch(&mut self, bucket: usize, requests: Vec<Request>) {
-        let t0 = Instant::now();
-        let n = requests.len();
-        for r in requests {
-            let padded = self.cfg.policy.pad(&r.tokens, bucket);
-            match self.run_lm(bucket, &padded) {
-                Ok(argmax) => {
-                    let latency = r.enqueued.elapsed().as_secs_f64();
-                    self.metrics.record_request(latency, r.tokens.len());
-                    let _ = r.respond.send(Response {
-                        id: r.id,
-                        argmax: argmax[..r.tokens.len()].to_vec(),
-                        latency_s: latency,
-                        bucket,
-                        error: None,
-                    });
-                }
-                Err(e) => {
-                    self.metrics.record_error();
-                    let _ = r.respond.send(Response::failed(r.id, e.to_string()));
-                }
-            }
-        }
-        self.metrics.record_exec(t0.elapsed().as_secs_f64(), n);
-    }
-
     /// The engine's MoE batch path on the unified execution surface: wraps
     /// the engine's executor pool as a [`crate::runtime::PjrtBackend`], so callers execute
     /// plans through `Backend::execute` / `ExecutionSession::run_on` exactly
@@ -311,7 +255,8 @@ impl Engine {
     }
 
     /// Direct MoE-layer execution (the moe_ffn artifact): tokens from many
-    /// requests packed into one call.  Returns (output, expert counts).
+    /// requests packed into one call.  Returns (output, expert counts);
+    /// the caller records the counts into its metrics sink.
     pub fn run_moe_ffn(&mut self, seq_bucket: usize, x: &[f32]) -> Result<(Vec<f32>, Vec<i32>)> {
         let entry_name = format!("moe_ffn_s{seq_bucket}");
         let entry = self.pool.manifest().entry(&entry_name)?.clone();
@@ -337,7 +282,42 @@ impl Engine {
         ];
         let outs = self.pool.run(&entry_name, &inputs)?;
         let counts = outs[1].as_i32()?.to_vec();
-        self.metrics.record_expert_rows(&counts);
         Ok((outs[0].as_f32()?.to_vec(), counts))
+    }
+}
+
+impl StepExecutor for Engine {
+    fn name(&self) -> &'static str {
+        "pjrt/lm"
+    }
+
+    fn buckets(&self) -> Vec<usize> {
+        self.lm.buckets.clone()
+    }
+
+    /// Execute one formed batch.  The `lm_forward_s{bucket}` artifacts are
+    /// compiled for ONE padded sequence (`[bucket]` token ids — PJRT
+    /// requires static shapes and the AOT set carries no request
+    /// dimension), so a formed batch necessarily executes as `rows`
+    /// sequential kernel dispatches; the batch still amortizes queue/
+    /// batcher overhead, and the server records one per-batch exec metric
+    /// around this whole call.  Per-row MoE token packing happens inside
+    /// the artifact.  A failing row is reported in [`StepOutput::failed`]
+    /// (placeholder argmax) rather than failing the whole batch, so
+    /// per-request error isolation is preserved.
+    fn execute_step(&mut self, step: &StepInput<'_>) -> Result<StepOutput, ExecError> {
+        let mut argmax = Vec::with_capacity(step.rows * step.bucket);
+        let mut failed = Vec::new();
+        for r in 0..step.rows {
+            let padded = &step.tokens[r * step.bucket..(r + 1) * step.bucket];
+            match self.run_lm(step.bucket, padded) {
+                Ok(out) => argmax.extend(out),
+                Err(e) => {
+                    argmax.extend(std::iter::repeat(0).take(step.bucket));
+                    failed.push((r, e.to_string()));
+                }
+            }
+        }
+        Ok(StepOutput { argmax, expert_rows: Vec::new(), failed })
     }
 }

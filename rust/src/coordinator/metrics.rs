@@ -23,6 +23,9 @@ struct Inner {
     /// cumulative per-expert routed-row counts (from the moe_ffn artifact's
     /// counts output) — drives load-aware ordering decisions
     expert_rows: Vec<u64>,
+    /// plan-cache lookup counters, mirrored from the step executor
+    plan_hits: u64,
+    plan_misses: u64,
 }
 
 /// A snapshot for reporting.
@@ -39,7 +42,13 @@ pub struct Snapshot {
     pub latency_p99_ms: f64,
     pub exec_p50_ms: f64,
     pub mean_batch: f64,
+    /// Executor dispatches (formed batches executed).
+    pub batches: u64,
     pub expert_rows: Vec<u64>,
+    /// Plan-cache lookups that skipped re-planning.
+    pub plan_cache_hits: u64,
+    /// Plan-cache lookups that built a fresh plan.
+    pub plan_cache_misses: u64,
 }
 
 impl Metrics {
@@ -65,6 +74,14 @@ impl Metrics {
 
     pub fn record_error(&self) {
         self.inner.lock().unwrap().errors += 1;
+    }
+
+    /// Mirror the executor's plan-cache counters (absolute values; the
+    /// cache owns the counting, metrics only surface it).
+    pub fn set_plan_cache(&self, hits: u64, misses: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.plan_hits = hits;
+        g.plan_misses = misses;
     }
 
     pub fn record_expert_rows(&self, counts: &[i32]) {
@@ -102,14 +119,27 @@ impl Metrics {
             latency_p99_ms: p99,
             exec_p50_ms: exec_p50,
             mean_batch: g.batch_size.mean(),
+            batches: g.batch_size.count(),
             expert_rows: g.expert_rows.clone(),
+            plan_cache_hits: g.plan_hits,
+            plan_cache_misses: g.plan_misses,
         }
     }
 }
 
 impl Snapshot {
+    /// Hits over total plan-cache lookups; 0.0 before any lookup.
+    pub fn plan_cache_hit_rate(&self) -> f64 {
+        let total = self.plan_cache_hits + self.plan_cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.plan_cache_hits as f64 / total as f64
+        }
+    }
+
     pub fn render(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} tokens={} errors={} elapsed={:.2}s  {:.1} req/s  {:.0} tok/s\n\
              latency p50={:.2}ms p95={:.2}ms p99={:.2}ms  exec p50={:.2}ms  mean batch={:.2}",
             self.requests,
@@ -123,7 +153,16 @@ impl Snapshot {
             self.latency_p99_ms,
             self.exec_p50_ms,
             self.mean_batch,
-        )
+        );
+        if self.plan_cache_hits + self.plan_cache_misses > 0 {
+            s.push_str(&format!(
+                "\nplan cache: {} hits / {} misses ({:.1}% hit rate)",
+                self.plan_cache_hits,
+                self.plan_cache_misses,
+                self.plan_cache_hit_rate() * 100.0,
+            ));
+        }
+        s
     }
 }
 
@@ -161,5 +200,26 @@ mod tests {
         let m = Metrics::new();
         m.record_request(0.01, 5);
         assert!(m.snapshot().render().contains("req/s"));
+    }
+
+    #[test]
+    fn plan_cache_counters_surface_in_snapshot_and_render() {
+        let m = Metrics::new();
+        let before = m.snapshot();
+        assert_eq!((before.plan_cache_hits, before.plan_cache_misses), (0, 0));
+        assert!(!before.render().contains("plan cache"));
+        m.set_plan_cache(6, 2);
+        let s = m.snapshot();
+        assert_eq!((s.plan_cache_hits, s.plan_cache_misses), (6, 2));
+        assert!((s.plan_cache_hit_rate() - 0.75).abs() < 1e-12);
+        assert!(s.render().contains("plan cache: 6 hits / 2 misses"));
+    }
+
+    #[test]
+    fn batches_counts_exec_dispatches() {
+        let m = Metrics::new();
+        m.record_exec(0.001, 4);
+        m.record_exec(0.002, 2);
+        assert_eq!(m.snapshot().batches, 2);
     }
 }

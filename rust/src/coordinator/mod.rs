@@ -1,13 +1,16 @@
-//! L3 serving coordinator.
+//! L3 serving coordinator: the request-path building blocks.
 //!
-//! Owns the request path end to end: admission queue → continuous batcher
-//! (sequence-bucket padding; MoE-layer token batching) → engine workers
-//! executing AOT artifacts on the PJRT runtime → metrics.  Python is never
-//! on this path; the artifacts were compiled once at build time.
+//! Owns the pieces of the request path — admission queue with
+//! backpressure, continuous batcher (sequence-bucket padding), metrics,
+//! request/response types, and the TCP line-protocol front end.  The loop
+//! that wires them together is the backend-generic serving core in
+//! [`crate::serve`]; the PJRT engine here (`engine`, feature `pjrt`) is
+//! one [`crate::serve::StepExecutor`] instantiation of that core, the
+//! default-features sim/CPU path is the other.
 //!
 //! The MoE layer has no cross-token interaction, so the batcher may pack
-//! tokens from *different* requests into one `moe_ffn` call — the serving
-//! analog of the paper's intra-kernel batching across tokens. The full LM
+//! tokens from *different* requests into one execution step — the serving
+//! analog of the paper's intra-kernel batching across tokens.  The full LM
 //! path batches at request granularity into per-sequence buckets.
 
 pub mod batcher;

@@ -44,6 +44,9 @@ pub use backends::{CpuBackend, SimBackend, SimMode};
 pub use error::ExecError;
 pub use session::ExecutionSession;
 
+// plan-cache types, re-exported for `ExecutionSession::plan_cache` callers
+pub use crate::moe::plan_cache::{CacheStats, PlanCache};
+
 use crate::baselines::{GroupedGemm, NaiveLoop, TwoPhase};
 
 /// The comparison registry: our kernel (simulated) first, then the three

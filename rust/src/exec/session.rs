@@ -15,11 +15,14 @@
 //! simulator, CPU numerics, a baseline, the PJRT deployment path — is one
 //! builder call, with no other changes at the call site.
 
+use std::sync::Arc;
+
 use crate::exec::backend::{Backend, ExecContext, NumericInputs, Outcome};
 use crate::exec::backends::SimBackend;
 use crate::exec::error::ExecError;
 use crate::moe::config::MoeShape;
 use crate::moe::ordering::OrderingStrategy;
+use crate::moe::plan_cache::{CacheStats, PlanCache};
 use crate::moe::planner::{ExecutionPlan, Planner};
 use crate::moe::routing::ExpertLoad;
 use crate::moe::tiling::StrategyId;
@@ -42,11 +45,15 @@ pub struct ExecutionSession {
     numeric: Option<NumericInputs>,
     record_dispatch: bool,
     backend: Box<dyn Backend>,
+    /// Optional LRU plan cache between routing and the planner; entries are
+    /// valid for exactly this session's planner configuration, so any
+    /// ordering/tiling change clears it.
+    cache: Option<PlanCache>,
 }
 
 impl ExecutionSession {
     /// New session for a problem shape. Defaults: half-interval ordering,
-    /// per-task tiling, [`SimBackend::ours`] on H800.
+    /// per-task tiling, [`SimBackend::ours`] on H800, no plan cache.
     pub fn new(shape: MoeShape) -> Self {
         ExecutionSession {
             planner: Planner::new(shape),
@@ -54,20 +61,40 @@ impl ExecutionSession {
             numeric: None,
             record_dispatch: false,
             backend: Box::new(SimBackend::ours()),
+            cache: None,
         }
     }
 
     /// Expert ordering strategy (paper Section 4.2).
     pub fn ordering(mut self, ordering: OrderingStrategy) -> Self {
-        self.planner = self.planner.clone().with_ordering(ordering);
+        self.planner.ordering = ordering;
+        if let Some(c) = &mut self.cache {
+            c.clear();
+        }
         self
     }
 
     /// Force one tiling strategy for every task (grouped-GEMM style);
     /// default is per-task selection from the catalog.
     pub fn tiling(mut self, strategy: StrategyId) -> Self {
-        self.planner = self.planner.clone().with_single_strategy(strategy);
+        self.planner.force_strategy = Some(strategy);
+        if let Some(c) = &mut self.cache {
+            c.clear();
+        }
         self
+    }
+
+    /// Cache built plans in an LRU of `capacity` entries keyed by the load
+    /// signature (per-expert counts), so repeated load shapes skip the
+    /// σ / ordering / tiling / TilePrefix reconstruction on the hot path.
+    pub fn plan_cache(mut self, capacity: usize) -> Self {
+        self.cache = Some(PlanCache::new(capacity));
+        self
+    }
+
+    /// Hit/miss counters of the plan cache, when one is enabled.
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.cache.as_ref().map(|c| c.stats())
     }
 
     /// The backend that will execute plans.
@@ -93,6 +120,13 @@ impl ExecutionSession {
         self
     }
 
+    /// Replace (or drop) the numeric inputs on an already-built session —
+    /// the per-step path for serving executors that stream new tensors
+    /// through one long-lived session.
+    pub fn set_inputs(&mut self, numeric: Option<NumericInputs>) {
+        self.numeric = numeric;
+    }
+
     /// Ask the backend to record its per-block dispatch sequence.
     pub fn record_dispatch(mut self) -> Self {
         self.record_dispatch = true;
@@ -108,14 +142,24 @@ impl ExecutionSession {
     }
 
     /// Build the static batch plan for a routing outcome (host-side work:
-    /// σ, ordering, per-task tiling, compressed TilePrefix).
+    /// σ, ordering, per-task tiling, compressed TilePrefix).  Always plans
+    /// fresh; the cached path is [`Self::plan_shared`].
     pub fn plan(&self, load: &ExpertLoad) -> ExecutionPlan {
         self.planner.plan(load)
     }
 
+    /// Plan through the cache when one is enabled (shared `Arc` on hits),
+    /// falling back to a fresh build otherwise.
+    pub fn plan_shared(&mut self, load: &ExpertLoad) -> Arc<ExecutionPlan> {
+        match &mut self.cache {
+            Some(c) => c.get_or_plan(&self.planner, load),
+            None => Arc::new(self.planner.plan(load)),
+        }
+    }
+
     /// Plan + execute one routing outcome on the session's backend.
     pub fn run(&mut self, load: &ExpertLoad) -> Result<Outcome, ExecError> {
-        let plan = self.planner.plan(load);
+        let plan = self.plan_shared(load);
         self.run_plan(&plan)
     }
 
@@ -165,6 +209,21 @@ mod tests {
         let out = s.run(&load).expect("cpu runs");
         let t = out.output.expect("numeric output");
         assert_eq!(t.shape, vec![shape.seq, shape.d_ff]);
+    }
+
+    #[test]
+    fn cached_session_skips_replanning_on_repeated_loads() {
+        let shape = MoeShape::paper_table1();
+        let load = LoadScenario::Zipf(1.1).counts(&shape, 2);
+        let mut s = ExecutionSession::new(shape).plan_cache(4);
+        let a = s.run(&load).expect("run 1");
+        let b = s.run(&load).expect("run 2");
+        assert_eq!(a.blocks, b.blocks);
+        let stats = s.cache_stats().expect("cache enabled");
+        assert_eq!((stats.hits, stats.misses), (1, 1));
+        // the cached plan is exactly what a fresh build produces
+        let cached = s.plan_shared(&load);
+        assert_eq!(*cached, s.plan(&load));
     }
 
     #[test]

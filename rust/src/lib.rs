@@ -49,6 +49,17 @@
 //! task kind without a registered function is a build-time `Err`, exactly
 //! like a missing `taskFunc_i` symbol at CUDA link time.
 //!
+//! ## One serving core
+//!
+//! The request path — admission queue → continuous batcher → plan cache →
+//! execution → metrics → responses — is the backend-generic
+//! [`serve::Server`], driven by a small [`serve::StepExecutor`] trait with
+//! two instantiations: [`serve::SimStepExecutor`] (default features; CPU
+//! numerics or accounting simulation through one
+//! [`exec::ExecutionSession`] with an LRU [`serve::PlanCache`]) and the
+//! PJRT engine (`coordinator::engine::Engine`, feature `pjrt`).  Explore
+//! it without a GPU via `staticbatch serve-sim`.
+//!
 //! See `DESIGN.md` at the repository root for the architecture inventory
 //! and the experiment index.
 //!
@@ -67,6 +78,7 @@ pub mod moe;
 pub mod reports;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod util;
 

@@ -11,6 +11,8 @@
 //!   simulate      one scenario end to end with the wave trace
 //!   plan          print the static batch plan for a scenario
 //!   serve         start the TCP serving coordinator (needs artifacts)
+//!   serve-sim     drive synthetic open-loop traffic through the sim-backed
+//!                 serving core (no GPU, no artifacts)
 //!   client        send synthetic requests to a running server
 //!   selftest      quick numeric self-check (CPU executor vs reference)
 
@@ -74,13 +76,14 @@ fn main() {
         "simulate" => cmd_simulate(rest),
         "plan" => cmd_plan(rest),
         "serve" => cmd_serve(rest),
+        "serve-sim" => cmd_serve_sim(rest),
         "client" => cmd_client(rest),
         "selftest" => cmd_selftest(),
         _ => {
             eprintln!(
                 "staticbatch {} — static batching of irregular workloads\n\n\
                  usage: staticbatch <table1|baselines|mapping|ordering|empty-tasks|swizzle|\n\
-                        token-copy|sweep|simulate|plan|serve|client|selftest> [flags]\n\
+                        token-copy|sweep|simulate|plan|serve|serve-sim|client|selftest> [flags]\n\
                  run a subcommand with --help for its flags",
                 staticbatch::VERSION
             );
@@ -227,6 +230,77 @@ fn cmd_serve(args: &[String]) -> i32 {
 fn cmd_serve(_args: &[String]) -> i32 {
     eprintln!("serve requires the `pjrt` feature: cargo run --features pjrt -- serve");
     2
+}
+
+/// Synthetic open-loop traffic against the sim-backed serving core: the
+/// full queue → batcher → PlanCache → execute → respond pipeline with no
+/// GPU, artifacts, or XLA anywhere.
+fn cmd_serve_sim(args: &[String]) -> i32 {
+    use staticbatch::coordinator::batcher::BatchPolicy;
+    use staticbatch::serve::{
+        run_traffic, Server, ServerConfig, SimServeConfig, SimStepExecutor, TrafficConfig,
+    };
+
+    let cmd = Command::new("serve-sim", "synthetic traffic through the sim serving core")
+        .flag("requests", Some("256"), "requests to send")
+        .flag("rate", Some("500"), "open-loop request rate (req/s); 0 = burst")
+        .flag("alpha", Some("1.2"), "zipf exponent for tokens and prompt popularity")
+        .flag("distinct", Some("8"), "distinct prompts in the pool")
+        .flag("experts", Some("16"), "experts in the sim MoE layer")
+        .flag("topk", Some("2"), "experts per token")
+        .flag("cache", Some("128"), "plan cache capacity (LRU entries)")
+        .flag("max-requests", Some("16"), "max requests per formed batch")
+        .flag("seed", Some("1"), "traffic + weight seed")
+        .switch("accounting", "skip CPU numerics (roofline accounting only)");
+    let p = match cmd.parse(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let sim_cfg = SimServeConfig {
+        experts: p.usize("experts").unwrap_or(16).max(1),
+        top_k: p.usize("topk").unwrap_or(2).max(1),
+        cache_capacity: p.usize("cache").unwrap_or(128),
+        numeric: !p.bool("accounting"),
+        seed: p.u64("seed").unwrap_or(1),
+        ..SimServeConfig::default()
+    };
+    let max_tokens = sim_cfg.max_tokens;
+    let executor = SimStepExecutor::new(sim_cfg);
+    let server_cfg = ServerConfig {
+        policy: BatchPolicy {
+            buckets: Vec::new(), // adopted from the executor
+            max_requests: p.usize("max-requests").unwrap_or(16).max(1),
+            max_tokens,
+        },
+        queue_capacity: 512,
+        poll: std::time::Duration::from_millis(5),
+    };
+    let mut server = Server::new(server_cfg, executor);
+    let traffic = TrafficConfig {
+        requests: p.usize("requests").unwrap_or(256),
+        rate_hz: p.f64("rate").unwrap_or(500.0),
+        zipf_alpha: p.f64("alpha").unwrap_or(1.2),
+        distinct: p.usize("distinct").unwrap_or(8).max(1),
+        seed: p.u64("seed").unwrap_or(1),
+        ..TrafficConfig::default()
+    };
+    println!(
+        "serve-sim: {} requests at {} req/s, {} distinct prompts, zipf {:.2}",
+        traffic.requests,
+        if traffic.rate_hz > 0.0 { traffic.rate_hz.to_string() } else { "burst".into() },
+        traffic.distinct,
+        traffic.zipf_alpha
+    );
+    let report = run_traffic(&mut server, traffic);
+    print!("{}", report.render());
+    if report.failed > 0 {
+        1
+    } else {
+        0
+    }
 }
 
 fn cmd_client(args: &[String]) -> i32 {

@@ -13,6 +13,9 @@
 //! * [`planner`] — builds the [`planner::ExecutionPlan`]: σ over non-empty
 //!   experts, ordering, per-expert tiling, TilePrefix — the one artifact
 //!   both the simulator and the CPU executor consume.
+//! * [`plan_cache`] — LRU cache from normalized load signature to built
+//!   plan, so serving traffic that repeats load shapes skips the σ /
+//!   TilePrefix reconstruction.
 //! * [`cpu_exec`] — executes a plan numerically on CPU *through the
 //!   framework dispatch*, validating mapping + gather correctness against
 //!   the dense reference.
@@ -22,6 +25,7 @@ pub mod cpu_exec;
 pub mod kernel_meta;
 pub mod ordering;
 pub mod parallel;
+pub mod plan_cache;
 pub mod planner;
 pub mod routing;
 pub mod tiling;

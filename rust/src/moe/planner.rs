@@ -31,8 +31,25 @@ pub struct ExpertTask {
     pub strategy: StrategyId,
 }
 
+impl ExpertTask {
+    /// The task descriptor under `shape`: tile geometry from the strategy
+    /// catalog, GEMM dims from the shape — everything a dispatch table or
+    /// mapping needs, derived without a planner.
+    pub fn descriptor(&self, shape: &MoeShape) -> TaskDescriptor {
+        let s = CATALOG[self.strategy];
+        TaskDescriptor {
+            kind: TaskKind::Gemm { strategy: self.strategy },
+            rows: self.rows,
+            cols: shape.d_ff,
+            inner: shape.d_model,
+            tile_rows: s.tm,
+            tile_cols: s.tn,
+        }
+    }
+}
+
 /// The static batch plan for one MoE step.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ExecutionPlan {
     pub shape: MoeShape,
     /// Tasks in grid order: ordered non-empty experts first, then empty
@@ -99,38 +116,17 @@ impl Planner {
         }
 
         let descriptors: Vec<TaskDescriptor> =
-            tasks.iter().map(|t| self.descriptor(t)).collect();
+            tasks.iter().map(|t| t.descriptor(&self.shape)).collect();
         let two_stage = TwoStageMap::from_tasks(&descriptors);
         ExecutionPlan { shape: self.shape, tasks, two_stage }
-    }
-
-    fn descriptor(&self, t: &ExpertTask) -> TaskDescriptor {
-        let s = CATALOG[t.strategy];
-        TaskDescriptor {
-            kind: TaskKind::Gemm { strategy: t.strategy },
-            rows: t.rows,
-            cols: self.shape.d_ff,
-            inner: self.shape.d_model,
-            tile_rows: s.tm,
-            tile_cols: s.tn,
-        }
     }
 }
 
 impl ExecutionPlan {
-    /// Task descriptors in grid order (including empty tasks).
+    /// Task descriptors in grid order (including empty tasks), derived
+    /// directly from each [`ExpertTask`] and the plan's shape.
     pub fn descriptors(&self) -> Vec<TaskDescriptor> {
-        let planner = Planner { shape: self.shape, ordering: OrderingStrategy::Natural, force_strategy: None };
-        self.tasks
-            .iter()
-            .map(|t| {
-                let mut d = planner.descriptor(t);
-                // preserve the plan's strategy (descriptor() re-derives tile
-                // shape from t.strategy, so nothing to fix — kept explicit)
-                d.kind = TaskKind::Gemm { strategy: t.strategy };
-                d
-            })
-            .collect()
+        self.tasks.iter().map(|t| t.descriptor(&self.shape)).collect()
     }
 
     /// Total thread blocks the fused kernel launches.

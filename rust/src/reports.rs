@@ -280,6 +280,62 @@ pub fn swizzle_table() -> String {
     t.render()
 }
 
+/// **SERVE**: the sim-serving load test — burst traffic from prompt pools
+/// of varying popularity skew through the backend-generic serving core
+/// (queue → batcher → PlanCache → executor → metrics), reporting
+/// throughput shape and plan-cache behavior.  Accounting backend, so the
+/// table regenerates in milliseconds.
+pub fn serving_sim_table(requests: usize, seed: u64) -> String {
+    use crate::coordinator::batcher::BatchPolicy;
+    use crate::serve::{
+        run_traffic, Server, ServerConfig, SimServeConfig, SimStepExecutor, TrafficConfig,
+    };
+
+    let mut t = Table::new(&[
+        "traffic", "requests", "batches", "mean batch", "cache hits", "cache misses", "hit rate",
+    ]);
+    for (name, distinct, alpha) in
+        [("hot pool", 4usize, 1.6), ("mixed pool", 8, 1.2), ("wide pool", 32, 0.8)]
+    {
+        let sim_cfg = SimServeConfig { numeric: false, seed, ..SimServeConfig::default() };
+        let max_tokens = sim_cfg.max_tokens;
+        let mut server = Server::new(
+            ServerConfig {
+                policy: BatchPolicy {
+                    buckets: Vec::new(),
+                    max_requests: 16,
+                    max_tokens,
+                },
+                queue_capacity: requests.max(16),
+                poll: std::time::Duration::from_millis(1),
+            },
+            SimStepExecutor::new(sim_cfg),
+        );
+        let report = run_traffic(
+            &mut server,
+            TrafficConfig {
+                requests,
+                rate_hz: 0.0,
+                zipf_alpha: alpha,
+                distinct,
+                seed,
+                ..TrafficConfig::default()
+            },
+        );
+        let c = report.cache.unwrap_or_default();
+        t.row(&[
+            name.into(),
+            format!("{}", report.ok),
+            format!("{}", report.snapshot.batches),
+            format!("{:.2}", report.snapshot.mean_batch),
+            format!("{}", c.hits),
+            format!("{}", c.misses),
+            format!("{:.1}%", c.hit_rate() * 100.0),
+        ]);
+    }
+    t.render()
+}
+
 /// Zipf-imbalance sweep: ours vs grouped GEMM crossover analysis.
 pub fn sweep_table(gpu: &str, seeds: u64) -> String {
     let spec = GpuSpec::by_name(gpu).unwrap_or_else(GpuSpec::h800);
@@ -341,6 +397,15 @@ mod tests {
     fn baselines_table_names_all_backends() {
         let s = super::baselines_table();
         for name in ["sim/ours", "grouped GEMM", "two-phase", "naive per-expert loop"] {
+            assert!(s.contains(name), "missing {name} in:\n{s}");
+        }
+    }
+
+    #[test]
+    fn serving_sim_table_reports_cache_behavior() {
+        let s = super::serving_sim_table(48, 7);
+        assert_eq!(s.lines().count(), 2 + 3, "header + 3 traffic rows:\n{s}");
+        for name in ["hot pool", "mixed pool", "wide pool", "hit rate"] {
             assert!(s.contains(name), "missing {name} in:\n{s}");
         }
     }

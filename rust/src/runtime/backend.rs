@@ -9,6 +9,15 @@
 //! stay device-resident and the hot path uploads only the per-step
 //! metadata — the §Perf deployment pattern, now reachable through the same
 //! `Backend::execute` call every other executor uses.
+//!
+//! On the serving path this backend is reached through
+//! `coordinator::engine::Engine::moe_backend`; the engine itself is a
+//! [`crate::serve::StepExecutor`] instantiation of the backend-generic
+//! serving core, so the queue → batcher → plan → execute loop around it is
+//! the same one the default-features sim executor runs.  Plans fed here
+//! may come from an [`crate::exec::ExecutionSession`] plan cache — the
+//! execute path treats the plan as read-only, so cached (`Arc`-shared)
+//! plans are safe.
 
 use anyhow::Result;
 

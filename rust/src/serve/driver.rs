@@ -1,0 +1,215 @@
+//! Synthetic traffic driver for the serving core.
+//!
+//! Generates an open- or closed-loop request stream from a pool of
+//! Zipf-valued prompts (popular queries repeat, like real serving traffic,
+//! which is exactly what the plan cache exploits), pushes it into a
+//! [`Server`]'s queue from a producer thread, runs the serving loop on the
+//! calling thread, and reports latency percentiles, throughput, and
+//! plan-cache behavior.  Shared by the `staticbatch serve-sim` subcommand,
+//! the `serving` bench, and the load tests.
+
+use std::sync::mpsc::{channel, Receiver};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::Snapshot;
+use crate::coordinator::queue::PushResult;
+use crate::coordinator::request::{Request, Response};
+use crate::moe::plan_cache::CacheStats;
+use crate::serve::{Server, StepExecutor};
+use crate::util::rng::{zipf_weights, Rng};
+use crate::util::stats::Samples;
+
+/// Synthetic workload shape.
+#[derive(Clone, Debug)]
+pub struct TrafficConfig {
+    /// Total requests to send.
+    pub requests: usize,
+    /// Open-loop arrival rate in requests/second; 0 = closed-loop burst
+    /// (push as fast as admission allows).
+    pub rate_hz: f64,
+    /// Zipf exponent for token values *and* prompt popularity.
+    pub zipf_alpha: f64,
+    /// Token id range.
+    pub vocab: usize,
+    /// Distinct prompts in the pool (requests sample from these).
+    pub distinct: usize,
+    /// Prompt lengths, cycled over the pool (mixed-length traffic).
+    pub lengths: Vec<usize>,
+    pub seed: u64,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> Self {
+        TrafficConfig {
+            requests: 256,
+            rate_hz: 0.0,
+            zipf_alpha: 1.2,
+            vocab: 1000,
+            distinct: 8,
+            lengths: vec![12, 48, 200],
+            seed: 1,
+        }
+    }
+}
+
+/// What one traffic run produced.
+#[derive(Clone, Debug)]
+pub struct TrafficReport {
+    pub sent: usize,
+    pub ok: usize,
+    pub failed: usize,
+    /// Requests the bounded queue refused (backpressure).
+    pub rejected: usize,
+    pub wall_s: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub cache: Option<CacheStats>,
+    pub snapshot: Snapshot,
+}
+
+impl TrafficReport {
+    /// Multi-line human summary (the serve-sim output).  Plan-cache
+    /// hit/miss counters appear once, via the snapshot (the server mirrors
+    /// the executor's cache stats into its metrics every loop iteration);
+    /// the cache occupancy is the one field only [`CacheStats`] carries.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "sent={} ok={} failed={} rejected={}  wall={:.2}s ({:.1} req/s)\n\
+             latency p50={:.3}ms p99={:.3}ms\n",
+            self.sent,
+            self.ok,
+            self.failed,
+            self.rejected,
+            self.wall_s,
+            if self.wall_s > 0.0 { self.ok as f64 / self.wall_s } else { 0.0 },
+            self.p50_ms,
+            self.p99_ms,
+        );
+        s.push_str(&self.snapshot.render());
+        s.push('\n');
+        if let Some(c) = self.cache {
+            s.push_str(&format!("plan cache entries: {}\n", c.entries));
+        }
+        s
+    }
+}
+
+/// The prompt pool: `distinct` prompts with cycled lengths and
+/// Zipf-distributed token values, plus Zipf popularity ranks so a few
+/// prompts dominate the stream.
+fn prompt_pool(cfg: &TrafficConfig, rng: &mut Rng) -> Vec<Vec<i32>> {
+    let token_w = zipf_weights(cfg.vocab.max(2), cfg.zipf_alpha);
+    (0..cfg.distinct.max(1))
+        .map(|i| {
+            let len = cfg.lengths[i % cfg.lengths.len()].max(1);
+            (0..len).map(|_| rng.zipf(&token_w) as i32 + 1).collect()
+        })
+        .collect()
+}
+
+/// Drive `cfg` traffic through `server`: producer thread pushes, the
+/// serving loop runs on the calling thread until the stream ends, then all
+/// responses are collected.
+pub fn run_traffic<E: StepExecutor>(server: &mut Server<E>, cfg: TrafficConfig) -> TrafficReport {
+    let queue = server.queue();
+    let cfg2 = cfg.clone();
+    let producer = std::thread::spawn(move || {
+        let mut rng = Rng::new(cfg2.seed);
+        let pool = prompt_pool(&cfg2, &mut rng);
+        let pop_w = zipf_weights(pool.len(), cfg2.zipf_alpha);
+        let mut receivers: Vec<(usize, Receiver<Response>)> = Vec::new();
+        let mut rejected = 0usize;
+        let t0 = Instant::now();
+        for i in 0..cfg2.requests {
+            if cfg2.rate_hz > 0.0 {
+                let due = t0 + Duration::from_secs_f64(i as f64 / cfg2.rate_hz);
+                let now = Instant::now();
+                if due > now {
+                    std::thread::sleep(due - now);
+                }
+            }
+            let prompt = &pool[rng.zipf(&pop_w)];
+            let (tx, rx) = channel();
+            let req = Request {
+                id: i as u64,
+                tokens: prompt.clone(),
+                enqueued: Instant::now(),
+                respond: tx,
+            };
+            // open-loop: never block the arrival process; count drops
+            match queue.try_push(req) {
+                PushResult::Ok => receivers.push((prompt.len(), rx)),
+                PushResult::Full | PushResult::Closed => rejected += 1,
+            }
+        }
+        queue.close();
+        (receivers, rejected)
+    });
+
+    let t0 = Instant::now();
+    server.serve();
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let (receivers, rejected) = producer.join().expect("producer thread");
+    let sent = receivers.len() + rejected;
+    let mut ok = 0usize;
+    let mut failed = 0usize;
+    let mut lat = Samples::new();
+    for (len, rx) in receivers {
+        match rx.try_recv() {
+            Ok(resp) if resp.error.is_none() => {
+                debug_assert_eq!(resp.argmax.len(), len);
+                lat.push(resp.latency_s * 1e3);
+                ok += 1;
+            }
+            _ => failed += 1,
+        }
+    }
+    let (p50, p99) = if lat.is_empty() {
+        (0.0, 0.0)
+    } else {
+        (lat.percentile(50.0), lat.percentile(99.0))
+    };
+    TrafficReport {
+        sent,
+        ok,
+        failed,
+        rejected,
+        wall_s,
+        p50_ms: p50,
+        p99_ms: p99,
+        cache: server.executor().cache_stats(),
+        snapshot: server.metrics().snapshot(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{ServerConfig, SimServeConfig, SimStepExecutor};
+
+    #[test]
+    fn burst_traffic_completes_and_reports() {
+        let ex = SimStepExecutor::new(SimServeConfig {
+            buckets: vec![16, 64, 256],
+            max_tokens: 2048,
+            numeric: false,
+            ..SimServeConfig::default()
+        });
+        let mut server = Server::new(
+            ServerConfig { queue_capacity: 512, ..ServerConfig::default() },
+            ex,
+        );
+        let report = run_traffic(
+            &mut server,
+            TrafficConfig { requests: 48, ..TrafficConfig::default() },
+        );
+        assert_eq!(report.sent, 48);
+        assert_eq!(report.ok + report.failed + report.rejected, 48);
+        assert_eq!(report.failed, 0);
+        assert_eq!(report.rejected, 0, "queue of 512 never fills on a 48-burst");
+        let cache = report.cache.expect("sim executor has a plan cache");
+        assert!(cache.hits + cache.misses > 0);
+        assert!(report.render().contains("plan cache"));
+    }
+}

@@ -1,0 +1,97 @@
+//! Backend-generic serving core.
+//!
+//! The L3 request path — admission queue → continuous batcher → plan cache
+//! → execution → metrics → responses — used to live inside the PJRT-only
+//! engine, invisible to the tier-1 suite.  This module owns that loop for
+//! *any* execution surface:
+//!
+//! ```text
+//!           requests (TCP / in-process)
+//!                      │
+//!          ┌───────────▼───────────┐
+//!          │    AdmissionQueue     │  bounded, backpressure
+//!          └───────────┬───────────┘
+//!          ┌───────────▼───────────┐
+//!          │      BatchPolicy      │  bucket + pack, FIFO per bucket
+//!          └───────────┬───────────┘
+//!          ┌───────────▼───────────┐
+//!          │     StepExecutor      │  one call per formed batch:
+//!          │  (sim / CPU / PJRT)   │  route → PlanCache → plan → execute
+//!          └───────────┬───────────┘
+//!          ┌───────────▼───────────┐
+//!          │       Metrics         │  latency, exec, batch, plan cache
+//!          └───────────┬───────────┘
+//!                  responses
+//! ```
+//!
+//! [`Server`] is generic over a small [`StepExecutor`] trait; the
+//! PJRT engine (`coordinator::engine::Engine`, feature `pjrt`) and the
+//! default-features [`SimStepExecutor`] (routing + [`PlanCache`] +
+//! [`crate::exec::ExecutionSession`]) are the two instantiations, so the
+//! whole pipeline runs — and is load-tested — without XLA, artifacts, or a
+//! GPU.
+
+pub mod driver;
+pub mod server;
+pub mod sim_exec;
+
+pub use crate::moe::plan_cache::{CacheStats, PlanCache};
+pub use driver::{run_traffic, TrafficConfig, TrafficReport};
+pub use server::{Server, ServerConfig};
+pub use sim_exec::{SimServeConfig, SimStepExecutor};
+
+use crate::exec::ExecError;
+
+/// One formed batch, packed for execution: `rows` requests padded to
+/// `bucket` tokens each, row-major in `tokens` (`rows * bucket` ids).
+pub struct StepInput<'a> {
+    pub bucket: usize,
+    pub rows: usize,
+    pub tokens: &'a [i32],
+}
+
+/// What one executed step produced.
+pub struct StepOutput {
+    /// Per-position argmax, row-major, `rows * bucket` entries (the server
+    /// slices each request's prefix back out).
+    pub argmax: Vec<i32>,
+    /// Per-expert routed row counts for this step, when the executor
+    /// routes through an MoE layer (empty otherwise).
+    pub expert_rows: Vec<i32>,
+    /// Per-row failures `(row index, error)` for executors that dispatch
+    /// rows independently (the PJRT LM path): listed rows carry
+    /// placeholder argmax entries and the server fails only their
+    /// requests, preserving per-request error isolation inside a batch.
+    pub failed: Vec<(usize, String)>,
+}
+
+/// The execution step of the serving loop: everything between a formed
+/// batch and its raw outputs.  Implementations own their runtime state
+/// (compiled executables, sessions, caches) and are driven from the
+/// server's worker loop — one call per batch, never per request.
+pub trait StepExecutor {
+    /// Display name for logs and reports.
+    fn name(&self) -> &'static str;
+
+    /// Sequence buckets this executor can serve, ascending.  The server
+    /// adopts these as its batch policy's buckets.
+    fn buckets(&self) -> Vec<usize>;
+
+    /// Upper bound on padded tokens per step, when the executor has a
+    /// fixed capacity; the server clamps its batch policy's token budget
+    /// to it at construction so misconfiguration cannot surface as
+    /// whole-batch runtime failures.
+    fn max_step_tokens(&self) -> Option<usize> {
+        None
+    }
+
+    /// Execute one formed batch.
+    fn execute_step(&mut self, step: &StepInput<'_>) -> Result<StepOutput, ExecError>;
+
+    /// Plan-cache counters, when the executor plans through a
+    /// [`PlanCache`]; the server mirrors them into its metrics after every
+    /// step.
+    fn cache_stats(&self) -> Option<CacheStats> {
+        None
+    }
+}

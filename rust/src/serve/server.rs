@@ -1,0 +1,375 @@
+//! [`Server`]: the backend-generic serving loop.
+//!
+//! Owns the admission queue, batch policy, metrics, and stop flag; drives
+//! any [`StepExecutor`] with one `execute_step` call per formed batch —
+//! requests are packed before execution and fanned back out after, so the
+//! executor amortizes its per-dispatch overhead across the whole batch
+//! (the serving-level mirror of the paper's kernel-level batching).
+//!
+//! The loop runs on the caller's thread ([`Server::serve`]); executors are
+//! deliberately not required to be `Send` (the PJRT client is pinned to
+//! its thread, and `ExecutionSession` holds an unsendable boxed backend).
+//! Producers push into [`Server::queue`] from any thread; closing the
+//! queue drains and stops the loop.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::{BatchPolicy, FormedBatch};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::queue::AdmissionQueue;
+use crate::coordinator::request::Response;
+use crate::serve::{StepExecutor, StepInput};
+
+/// Serving-core configuration (executor-independent knobs).
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Batch formation policy.  `buckets` is overwritten with the
+    /// executor's buckets at construction.
+    pub policy: BatchPolicy,
+    /// Admission queue capacity (backpressure bound).
+    pub queue_capacity: usize,
+    /// Queue poll interval of the worker loop (shutdown latency bound).
+    pub poll: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            policy: BatchPolicy::default(),
+            queue_capacity: 256,
+            poll: Duration::from_millis(50),
+        }
+    }
+}
+
+/// The backend-generic serving core.  See module docs.
+pub struct Server<E: StepExecutor> {
+    queue: Arc<AdmissionQueue>,
+    metrics: Arc<Metrics>,
+    policy: BatchPolicy,
+    poll: Duration,
+    stop: Arc<AtomicBool>,
+    executor: E,
+}
+
+impl<E: StepExecutor> Server<E> {
+    pub fn new(cfg: ServerConfig, executor: E) -> Self {
+        let mut policy = cfg.policy;
+        let buckets = executor.buckets();
+        if !buckets.is_empty() {
+            policy.buckets = buckets;
+        }
+        if let Some(cap) = executor.max_step_tokens() {
+            policy.max_tokens = policy.max_tokens.min(cap);
+        }
+        Server {
+            queue: Arc::new(AdmissionQueue::new(cfg.queue_capacity)),
+            metrics: Arc::new(Metrics::new()),
+            policy,
+            poll: cfg.poll,
+            stop: Arc::new(AtomicBool::new(false)),
+            executor,
+        }
+    }
+
+    /// The admission queue (share with producer threads).
+    pub fn queue(&self) -> Arc<AdmissionQueue> {
+        Arc::clone(&self.queue)
+    }
+
+    /// The metrics sink (share with reporting threads).
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Cooperative stop flag: set it (or close the queue) to end
+    /// [`Server::serve`].
+    pub fn stopper(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    pub fn policy(&self) -> &BatchPolicy {
+        &self.policy
+    }
+
+    pub fn executor(&self) -> &E {
+        &self.executor
+    }
+
+    pub fn executor_mut(&mut self) -> &mut E {
+        &mut self.executor
+    }
+
+    /// Serve until the queue is closed and drained, or the stop flag is
+    /// set.  Runs on the calling thread; producers push into the queue
+    /// from anywhere.
+    pub fn serve(&mut self) {
+        log::info!(
+            "{} serving: buckets {:?}",
+            self.executor.name(),
+            self.policy.buckets
+        );
+        while !self.stop.load(Ordering::Relaxed) {
+            let Some(first) = self.queue.pop(self.poll) else {
+                if self.queue.is_closed() && self.queue.is_empty() {
+                    break;
+                }
+                continue;
+            };
+            // form a batch: the popped request plus whatever is waiting
+            let mut pending = vec![first];
+            pending
+                .extend(self.queue.drain_up_to(self.policy.max_requests.saturating_sub(1)));
+            let (batches, rejected) = self.policy.form(pending);
+            for r in rejected {
+                self.metrics.record_error();
+                let _ = r.respond.send(Response::failed(
+                    r.id,
+                    format!("request of {} tokens exceeds largest bucket", r.tokens.len()),
+                ));
+            }
+            for batch in batches {
+                self.step(batch);
+            }
+            self.sync_cache_metrics();
+        }
+        log::info!("{} stopped", self.executor.name());
+    }
+
+    /// Execute one formed batch: pack, dispatch once, fan responses out.
+    fn step(&mut self, batch: FormedBatch) {
+        let bucket = batch.bucket;
+        let rows = batch.requests.len();
+        let mut tokens = Vec::with_capacity(rows * bucket);
+        for r in &batch.requests {
+            tokens.extend(self.policy.pad(&r.tokens, bucket));
+        }
+        let t0 = Instant::now();
+        let result = self
+            .executor
+            .execute_step(&StepInput { bucket, rows, tokens: &tokens })
+            .and_then(|out| {
+                if out.argmax.len() == rows * bucket {
+                    Ok(out)
+                } else {
+                    Err(crate::exec::ExecError::Backend {
+                        backend: self.executor.name(),
+                        detail: format!(
+                            "step returned {} argmax entries for a {rows}x{bucket} batch",
+                            out.argmax.len()
+                        ),
+                    })
+                }
+            });
+        match result {
+            Ok(out) => {
+                // per-batch exec metric: one executor dispatch per batch
+                self.metrics.record_exec(t0.elapsed().as_secs_f64(), rows);
+                if !out.expert_rows.is_empty() {
+                    self.metrics.record_expert_rows(&out.expert_rows);
+                }
+                for (i, r) in batch.requests.into_iter().enumerate() {
+                    // per-request error isolation: a row the executor
+                    // reported failed gets its own error response, the
+                    // rest of the batch still succeeds
+                    if let Some((_, msg)) = out.failed.iter().find(|(row, _)| *row == i) {
+                        self.metrics.record_error();
+                        let _ = r.respond.send(Response::failed(r.id, msg.clone()));
+                        continue;
+                    }
+                    let latency = r.enqueued.elapsed().as_secs_f64();
+                    self.metrics.record_request(latency, r.tokens.len());
+                    let row = &out.argmax[i * bucket..(i + 1) * bucket];
+                    let _ = r.respond.send(Response {
+                        id: r.id,
+                        argmax: row[..r.tokens.len()].to_vec(),
+                        latency_s: latency,
+                        bucket,
+                        error: None,
+                    });
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for r in batch.requests {
+                    self.metrics.record_error();
+                    let _ = r.respond.send(Response::failed(r.id, msg.clone()));
+                }
+            }
+        }
+    }
+
+    fn sync_cache_metrics(&self) {
+        if let Some(s) = self.executor.cache_stats() {
+            self.metrics.set_plan_cache(s.hits, s.misses);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Request;
+    use crate::exec::ExecError;
+    use crate::serve::{StepExecutor, StepOutput};
+    use std::sync::mpsc::{channel, Receiver};
+
+    /// Echo executor: argmax[i] = token[i] + 1; fails whole steps or
+    /// single rows when asked to.
+    struct Echo {
+        steps: Vec<(usize, usize)>,
+        fail: bool,
+        fail_row: Option<usize>,
+    }
+
+    impl StepExecutor for Echo {
+        fn name(&self) -> &'static str {
+            "echo"
+        }
+
+        fn buckets(&self) -> Vec<usize> {
+            vec![4, 8]
+        }
+
+        fn max_step_tokens(&self) -> Option<usize> {
+            Some(24)
+        }
+
+        fn execute_step(&mut self, step: &StepInput<'_>) -> Result<StepOutput, ExecError> {
+            if self.fail {
+                return Err(ExecError::Backend { backend: "echo", detail: "boom".into() });
+            }
+            self.steps.push((step.bucket, step.rows));
+            let failed = match self.fail_row {
+                Some(row) if row < step.rows => vec![(row, "row boom".to_string())],
+                _ => Vec::new(),
+            };
+            Ok(StepOutput {
+                argmax: step.tokens.iter().map(|&t| t + 1).collect(),
+                expert_rows: Vec::new(),
+                failed,
+            })
+        }
+    }
+
+    fn req(id: u64, tokens: Vec<i32>) -> (Request, Receiver<Response>) {
+        let (tx, rx) = channel();
+        (Request { id, tokens, enqueued: Instant::now(), respond: tx }, rx)
+    }
+
+    fn server(fail: bool) -> Server<Echo> {
+        let cfg = ServerConfig {
+            policy: BatchPolicy { buckets: Vec::new(), max_requests: 4, max_tokens: 64 },
+            queue_capacity: 32,
+            poll: Duration::from_millis(1),
+        };
+        Server::new(cfg, Echo { steps: Vec::new(), fail, fail_row: None })
+    }
+
+    #[test]
+    fn adopts_executor_buckets_and_clamps_token_budget() {
+        let s = server(false);
+        assert_eq!(s.policy().buckets, vec![4, 8]);
+        // policy asked for 64 tokens/batch but the executor caps a step at
+        // 24 — clamped at construction, not failed at serve time
+        assert_eq!(s.policy().max_tokens, 24);
+    }
+
+    #[test]
+    fn batches_execute_once_and_fan_out() {
+        let mut s = server(false);
+        let q = s.queue();
+        let mut rxs = Vec::new();
+        for id in 0..3u64 {
+            let (r, rx) = req(id, vec![10 + id as i32, 20]);
+            q.try_push(r);
+            rxs.push(rx);
+        }
+        q.close();
+        s.serve();
+        // one packed step for the whole batch, not one per request
+        assert_eq!(s.executor().steps, vec![(4, 3)]);
+        for (id, rx) in rxs.iter().enumerate() {
+            let resp = rx.try_recv().expect("response delivered");
+            assert_eq!(resp.id, id as u64);
+            assert!(resp.error.is_none());
+            assert_eq!(resp.argmax, vec![10 + id as i32 + 1, 21]);
+            assert_eq!(resp.bucket, 4);
+        }
+        let snap = s.metrics().snapshot();
+        assert_eq!(snap.requests, 3);
+        assert_eq!(snap.tokens, 6);
+        assert!((snap.mean_batch - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_row_failure_only_fails_that_request() {
+        let cfg = ServerConfig {
+            policy: BatchPolicy { buckets: Vec::new(), max_requests: 4, max_tokens: 64 },
+            queue_capacity: 32,
+            poll: Duration::from_millis(1),
+        };
+        let mut s = Server::new(cfg, Echo { steps: Vec::new(), fail: false, fail_row: Some(1) });
+        let q = s.queue();
+        let mut rxs = Vec::new();
+        for id in 0..3u64 {
+            let (r, rx) = req(id, vec![5, 6]);
+            q.try_push(r);
+            rxs.push(rx);
+        }
+        q.close();
+        s.serve();
+        for (i, rx) in rxs.iter().enumerate() {
+            let resp = rx.try_recv().expect("response delivered");
+            if i == 1 {
+                assert!(resp.error.as_deref().unwrap_or("").contains("row boom"));
+            } else {
+                assert!(resp.error.is_none());
+                assert_eq!(resp.argmax, vec![6, 7]);
+            }
+        }
+        let snap = s.metrics().snapshot();
+        assert_eq!(snap.requests, 2);
+        assert_eq!(snap.errors, 1);
+    }
+
+    #[test]
+    fn executor_failure_fails_every_request_in_the_batch() {
+        let mut s = server(true);
+        let q = s.queue();
+        let (r0, rx0) = req(0, vec![1]);
+        let (r1, rx1) = req(1, vec![2]);
+        q.try_push(r0);
+        q.try_push(r1);
+        q.close();
+        s.serve();
+        for rx in [rx0, rx1] {
+            let resp = rx.try_recv().expect("failure response delivered");
+            assert!(resp.error.as_deref().unwrap_or("").contains("boom"));
+        }
+        assert_eq!(s.metrics().snapshot().errors, 2);
+    }
+
+    #[test]
+    fn oversized_requests_rejected_without_execution() {
+        let mut s = server(false);
+        let q = s.queue();
+        let (r, rx) = req(7, vec![0; 100]);
+        q.try_push(r);
+        q.close();
+        s.serve();
+        let resp = rx.try_recv().expect("rejection delivered");
+        assert!(resp.error.as_deref().unwrap_or("").contains("exceeds largest bucket"));
+        assert!(s.executor().steps.is_empty());
+        assert_eq!(s.metrics().snapshot().errors, 1);
+    }
+
+    #[test]
+    fn stop_flag_ends_the_loop() {
+        let mut s = server(false);
+        s.stopper().store(true, Ordering::Relaxed);
+        s.serve(); // returns immediately despite the open queue
+    }
+}

@@ -1,0 +1,160 @@
+//! End-to-end serving-core test under DEFAULT features: no PJRT, no
+//! artifacts, no GPU.  Drives 64 mixed-length requests of Zipf-valued
+//! prompts through the sim/CPU-backed server and checks the full
+//! request → queue → batch → plan(+cache) → execute → respond pipeline:
+//! every response arrives, metrics totals match the traffic, and repeated
+//! load signatures hit the plan cache.
+
+use std::sync::mpsc::{channel, Receiver};
+use std::time::{Duration, Instant};
+
+use staticbatch::coordinator::batcher::BatchPolicy;
+use staticbatch::coordinator::request::{Request, Response};
+use staticbatch::serve::{Server, ServerConfig, SimServeConfig, SimStepExecutor, StepExecutor};
+use staticbatch::util::rng::{zipf_weights, Rng};
+
+fn zipf_prompt(len: usize, rng: &mut Rng, weights: &[f64]) -> Vec<i32> {
+    (0..len).map(|_| rng.zipf(weights) as i32 + 1).collect()
+}
+
+#[test]
+fn sim_server_serves_64_requests_end_to_end_with_cache_hits() {
+    let executor = SimStepExecutor::new(SimServeConfig {
+        buckets: vec![16, 64, 256],
+        max_tokens: 2048,
+        experts: 16,
+        top_k: 2,
+        d_model: 16,
+        d_ff: 32,
+        cache_capacity: 64,
+        numeric: true,
+        seed: 9,
+    });
+    let mut server = Server::new(
+        ServerConfig {
+            policy: BatchPolicy { buckets: Vec::new(), max_requests: 8, max_tokens: 2048 },
+            queue_capacity: 128,
+            poll: Duration::from_millis(1),
+        },
+        executor,
+    );
+    assert_eq!(server.policy().buckets, vec![16, 64, 256]);
+
+    // Zipf-valued prompts, one distinct prompt per length class: popular
+    // queries repeat in real serving traffic, so batches of equal
+    // composition recur — and with them, load signatures the plan cache
+    // can hit.
+    let mut rng = Rng::new(3);
+    let w = zipf_weights(500, 1.3);
+    let short = zipf_prompt(12, &mut rng, &w); // bucket 16
+    let medium = zipf_prompt(48, &mut rng, &w); // bucket 64
+    let long = zipf_prompt(200, &mut rng, &w); // bucket 256
+
+    // All 64 requests are admitted before the worker starts, so batch
+    // formation is deterministic: each drain of 8 FIFO requests yields
+    // (per 16-request cycle) one 8x short batch, one 5x medium batch, and
+    // one 3x long batch — 12 batches, each shape repeated 4 times.
+    let queue = server.queue();
+    let mut receivers: Vec<(u64, usize, Receiver<Response>)> = Vec::new();
+    let mut expected_tokens = 0u64;
+    for i in 0..64u64 {
+        let tokens = match i % 16 {
+            0..=7 => short.clone(),
+            8..=12 => medium.clone(),
+            _ => long.clone(),
+        };
+        expected_tokens += tokens.len() as u64;
+        let (tx, rx) = channel();
+        let len = tokens.len();
+        queue.try_push(Request { id: i, tokens, enqueued: Instant::now(), respond: tx });
+        receivers.push((i, len, rx));
+    }
+    assert_eq!(queue.len(), 64, "all requests admitted up front");
+    queue.close();
+    server.serve(); // drains the closed queue and returns
+
+    // every response arrives, in order, error-free, with full-length argmax
+    let mut by_len: std::collections::BTreeMap<usize, Vec<i32>> = std::collections::BTreeMap::new();
+    for (id, len, rx) in &receivers {
+        let resp = rx.try_recv().unwrap_or_else(|_| panic!("response {id} missing"));
+        assert_eq!(resp.id, *id);
+        assert!(resp.error.is_none(), "request {id} failed: {:?}", resp.error);
+        assert_eq!(resp.argmax.len(), *len);
+        // identical prompts must produce identical outputs, regardless of
+        // which batch they landed in (per-token numerics are independent)
+        let prev = by_len.entry(*len).or_insert_with(|| resp.argmax.clone());
+        assert_eq!(prev, &resp.argmax, "prompt of len {len} diverged across batches");
+    }
+
+    // metrics totals match the traffic exactly
+    let snap = server.metrics().snapshot();
+    assert_eq!(snap.requests, 64);
+    assert_eq!(snap.tokens, expected_tokens);
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.batches, 12, "deterministic formation: 12 executed batches");
+    assert!((snap.mean_batch - 64.0 / 12.0).abs() < 1e-9);
+    assert!(snap.latency_p99_ms >= snap.latency_p50_ms);
+    let routed: u64 = snap.expert_rows.iter().sum();
+    // every padded token of every batch routes to top_k experts
+    assert_eq!(routed, (8 * 16 + 5 * 64 + 3 * 256) * 4 * 2);
+
+    // plan-cache hits on repeated load signatures: 3 distinct batch
+    // shapes, each seen 4 times -> 3 misses, 9 hits
+    assert_eq!(snap.plan_cache_misses, 3);
+    assert_eq!(snap.plan_cache_hits, 9);
+    assert!((snap.plan_cache_hit_rate() - 0.75).abs() < 1e-12);
+    let stats = server.executor().cache_stats().expect("sim executor caches plans");
+    assert_eq!(stats.hits + stats.misses, snap.batches);
+    assert_eq!(stats.entries, 3);
+}
+
+#[test]
+fn mixed_valid_and_oversized_traffic_accounts_cleanly() {
+    let executor = SimStepExecutor::new(SimServeConfig {
+        buckets: vec![16],
+        max_tokens: 256,
+        numeric: false,
+        ..SimServeConfig::default()
+    });
+    let mut server = Server::new(
+        ServerConfig {
+            policy: BatchPolicy { buckets: Vec::new(), max_requests: 4, max_tokens: 256 },
+            queue_capacity: 32,
+            poll: Duration::from_millis(1),
+        },
+        executor,
+    );
+    let queue = server.queue();
+    let mut receivers = Vec::new();
+    for i in 0..6u64 {
+        // request 3 is longer than every compiled bucket
+        let len = if i == 3 { 40 } else { 5 };
+        let (tx, rx) = channel();
+        queue.try_push(Request {
+            id: i,
+            tokens: vec![1; len],
+            enqueued: Instant::now(),
+            respond: tx,
+        });
+        receivers.push((i, rx));
+    }
+    queue.close();
+    server.serve();
+
+    let mut ok = 0;
+    let mut failed = 0;
+    for (id, rx) in receivers {
+        let resp = rx.try_recv().expect("every request gets an answer");
+        if resp.error.is_some() {
+            assert_eq!(id, 3);
+            failed += 1;
+        } else {
+            assert_eq!(resp.bucket, 16);
+            ok += 1;
+        }
+    }
+    assert_eq!((ok, failed), (5, 1));
+    let snap = server.metrics().snapshot();
+    assert_eq!(snap.requests, 5);
+    assert_eq!(snap.errors, 1);
+}
