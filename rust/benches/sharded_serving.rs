@@ -1,0 +1,57 @@
+//! Sharded-serving bench (default features): identical Zipf burst traffic
+//! through the expert-parallel executor under both placement policies, then
+//! the SHARD placement × EP-width sweep table.  No GPU, artifacts, or XLA —
+//! this is the load-test half of the DESIGN.md experiment index entry
+//! "SHARD".
+
+use staticbatch::coordinator::batcher::BatchPolicy;
+use staticbatch::serve::{
+    run_traffic, PlacementKind, Server, ServerConfig, ShardedServeConfig, ShardedStepExecutor,
+    SimServeConfig, TrafficConfig,
+};
+
+fn main() {
+    for placement in [PlacementKind::Static, PlacementKind::Balanced] {
+        println!(
+            "== sharded serving: ep=4 {} placement, 256-request Zipf burst ==",
+            placement.name()
+        );
+        let cfg = ShardedServeConfig {
+            // serving-scale widths so shard kernel times track routed rows
+            base: SimServeConfig {
+                d_model: 1024,
+                d_ff: 2048,
+                numeric: false,
+                seed: 1,
+                ..SimServeConfig::default()
+            },
+            ep: 4,
+            placement,
+            rebalance_threshold: 1.1,
+            ..ShardedServeConfig::default()
+        };
+        let max_tokens = cfg.base.max_tokens;
+        let mut server = Server::new(
+            ServerConfig {
+                policy: BatchPolicy { buckets: Vec::new(), max_requests: 16, max_tokens },
+                queue_capacity: 1024,
+                poll: std::time::Duration::from_millis(1),
+            },
+            ShardedStepExecutor::new(cfg),
+        );
+        let report = run_traffic(
+            &mut server,
+            TrafficConfig {
+                requests: 256,
+                rate_hz: 0.0,
+                zipf_alpha: 1.4,
+                ..TrafficConfig::default()
+            },
+        );
+        print!("{}", report.render());
+        println!();
+    }
+
+    println!("== SHARD: placement x EP-width sweep ==");
+    print!("{}", staticbatch::reports::sharded_serving_table(256, 1));
+}

@@ -16,11 +16,6 @@ use crate::batching::task::{TaskDescriptor, TaskKind};
 /// Arguments: context, task descriptor, task index, tile index within task.
 pub type DeviceFn<C> = Box<dyn Fn(&mut C, &TaskDescriptor, u32, u32)>;
 
-/// Legacy name for [`DeviceFn`], kept for the one-release deprecation
-/// window of the old `StaticBatch::register` path.
-#[deprecated(note = "use batching::dispatch::DeviceFn")]
-pub type TaskFunc<C> = DeviceFn<C>;
-
 /// One dispatch event: which device function ran, for which task and tile.
 /// Backends record these when asked so cross-backend agreement can be
 /// asserted (the sim and CPU executors must dispatch identical sequences).
@@ -120,30 +115,22 @@ pub struct DispatchTable<C> {
 }
 
 impl<C> DispatchTable<C> {
-    /// An empty table — only reachable through the deprecated
-    /// `StaticBatch::new`/`register` shim, which keeps the legacy
-    /// panic-at-launch behavior for one release.
-    pub(crate) fn empty() -> Self {
-        DispatchTable { entries: BTreeMap::new() }
-    }
-
-    /// Unchecked insert used by the deprecated `register` shim.
-    pub(crate) fn insert_unchecked(&mut self, dispatch_id: usize, f: DeviceFn<C>) {
-        self.entries.insert(dispatch_id, f);
-    }
-
+    /// The device function for a task kind, if registered.
     pub fn get(&self, kind: &TaskKind) -> Option<&DeviceFn<C>> {
         self.entries.get(&kind.dispatch_id())
     }
 
+    /// Whether this table has a device function for `kind`.
     pub fn covers(&self, kind: &TaskKind) -> bool {
         self.entries.contains_key(&kind.dispatch_id())
     }
 
+    /// Registered device functions.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// True when no device function is registered (empty batches only).
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }

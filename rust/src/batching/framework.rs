@@ -11,22 +11,17 @@
 //! [`DispatchTableBuilder`]: coverage of every task kind in the batch is
 //! checked *before* launch, so an unhandled kind is a build error (like a
 //! missing `taskFunc_i` symbol at CUDA link time) rather than a panic in
-//! the middle of the grid.  The pre-table `new`/`register` API survives
-//! one release as a deprecated shim with the old panic behavior.
+//! the middle of the grid.  (The pre-0.2 panic-at-launch `new`/`register`
+//! shim served its one-release deprecation window and is gone.)
 //!
 //! The framework is generic over the execution context `C`, so the same
 //! dispatch structure drives (a) the CPU numeric executor in
 //! [`crate::moe::cpu_exec`] and (b) pure accounting runs in the simulator.
 
-use crate::batching::dispatch::{DeviceFn, DispatchError, DispatchTable, DispatchTableBuilder};
+use crate::batching::dispatch::{DispatchError, DispatchTable, DispatchTableBuilder};
 use crate::batching::mapping::TileMapping;
 use crate::batching::task::TaskDescriptor;
 use crate::batching::two_stage::TwoStageMap;
-
-// The closure alias historically lived here; keep the old path importable
-// for the same one-release window as `new`/`register`.
-#[allow(deprecated)]
-pub use crate::batching::dispatch::TaskFunc;
 
 /// A statically batched set of heterogeneous tasks, ready to "launch".
 pub struct StaticBatch<C> {
@@ -48,36 +43,17 @@ impl<C> StaticBatch<C> {
         Ok(StaticBatch { tasks, map, table })
     }
 
-    /// Legacy constructor without a dispatch table.
-    #[deprecated(
-        since = "0.2.0",
-        note = "use StaticBatch::try_new with a DispatchTableBuilder; this path panics at \
-                launch when a task kind has no device function"
-    )]
-    pub fn new(tasks: Vec<TaskDescriptor>) -> Self {
-        let map = TwoStageMap::from_tasks(&tasks);
-        StaticBatch { tasks, map, table: DispatchTable::empty() }
-    }
-
-    /// Legacy per-id registration (`taskFunc_i`), unchecked.
-    #[deprecated(
-        since = "0.2.0",
-        note = "register device functions on a DispatchTableBuilder and pass it to \
-                StaticBatch::try_new"
-    )]
-    pub fn register(&mut self, dispatch_id: usize, f: DeviceFn<C>) -> &mut Self {
-        self.table.insert_unchecked(dispatch_id, f);
-        self
-    }
-
+    /// The batch's task descriptors, grid order.
     pub fn tasks(&self) -> &[TaskDescriptor] {
         &self.tasks
     }
 
+    /// The two-stage mapping built over the tasks (Algorithms 1/2/4).
     pub fn mapping(&self) -> &TwoStageMap {
         &self.map
     }
 
+    /// The validated kind → device-function table.
     pub fn dispatch_table(&self) -> &DispatchTable<C> {
         &self.table
     }
@@ -93,17 +69,15 @@ impl<C> StaticBatch<C> {
     }
 
     /// The single dispatch site both launch modes funnel through: resolve
-    /// the block's task, look up its device function, run the tile.
-    ///
-    /// Unreachable-miss on the `try_new` path (coverage was validated at
-    /// build); on the deprecated `new`/`register` path a missing function
-    /// keeps the historical panic message.
+    /// the block's task, look up its device function, run the tile.  The
+    /// lookup cannot miss — [`StaticBatch::try_new`] validated coverage of
+    /// every task kind at construction.
     fn dispatch_block(&self, ctx: &mut C, m: TileMapping) {
         let task = &self.tasks[m.task as usize];
         let f = self
             .table
             .get(&task.kind)
-            .unwrap_or_else(|| panic!("no device function for {:?}", task.kind));
+            .expect("DispatchTable coverage validated at construction");
         f(ctx, task, m.task, m.tile);
     }
 
@@ -227,20 +201,5 @@ mod tests {
                 task_index: 0,
             }
         ));
-    }
-
-    /// Pins the legacy behavior (and its panic message) for the one-release
-    /// deprecation window of `new`/`register`.
-    #[test]
-    #[should_panic(expected = "no device function")]
-    #[allow(deprecated)]
-    fn deprecated_register_path_still_panics_at_launch() {
-        let mut batch: StaticBatch<Recorder> = StaticBatch::new(vec![gemm(64, 7)]);
-        batch.register(
-            TaskKind::ReduceSum.dispatch_id(),
-            Box::new(|_, _, _, _| {}),
-        );
-        let mut ctx = Recorder::default();
-        batch.run(&mut ctx);
     }
 }

@@ -3,7 +3,66 @@
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::moe::plan_cache::CacheStats;
 use crate::util::stats::{Samples, Welford};
+
+/// Cumulative multi-shard (EP/TP) accounting for one sharded executor:
+/// filled per step by [`crate::serve::ShardedStepExecutor`] and mirrored
+/// into [`Metrics`] by the serving loop, like the plan-cache counters.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ShardingStats {
+    /// Expert-parallel ways (shard lanes).
+    pub ep: usize,
+    /// Tensor-parallel ways.
+    pub tp: usize,
+    /// Sharded steps executed.
+    pub steps: u64,
+    /// Cumulative simulated kernel seconds per shard lane.
+    pub busy_s: Vec<f64>,
+    /// Cumulative critical-path kernel seconds (Σ per-step max over shards).
+    pub critical_s: f64,
+    /// Cumulative collective seconds (EP all-to-all + TP all-reduce).
+    pub collective_s: f64,
+    /// Cumulative simulated step seconds (critical path + collectives).
+    pub step_s: f64,
+    /// Σ of per-step device-load imbalance ratios (max/mean over shards,
+    /// idle shards included).
+    pub imbalance_sum: f64,
+    /// Times the placement policy moved experts between shards.
+    pub reshards: u64,
+    /// Plan-cache counters of each shard lane.
+    pub shard_cache: Vec<CacheStats>,
+}
+
+impl ShardingStats {
+    /// Mean per-step device-load imbalance: 1.0 is perfectly balanced,
+    /// `ep` is one shard doing all the work; 0.0 before any step.
+    pub fn imbalance_ratio(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.imbalance_sum / self.steps as f64
+        }
+    }
+
+    /// Fraction of simulated step time spent in collectives.
+    pub fn collective_share(&self) -> f64 {
+        if self.step_s > 0.0 {
+            self.collective_s / self.step_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Per-shard utilization: shard busy time over the critical-path time
+    /// (1.0 = that shard is the bottleneck every step).
+    pub fn utilization(&self) -> Vec<f64> {
+        self.busy_s
+            .iter()
+            .map(|&b| if self.critical_s > 0.0 { b / self.critical_s } else { 0.0 })
+            .collect()
+    }
+}
 
 /// Thread-safe metrics sink shared by engine workers.
 #[derive(Default)]
@@ -26,6 +85,8 @@ struct Inner {
     /// plan-cache lookup counters, mirrored from the step executor
     plan_hits: u64,
     plan_misses: u64,
+    /// multi-shard accounting, mirrored from a sharded step executor
+    sharding: Option<ShardingStats>,
 }
 
 /// A snapshot for reporting.
@@ -49,6 +110,8 @@ pub struct Snapshot {
     pub plan_cache_hits: u64,
     /// Plan-cache lookups that built a fresh plan.
     pub plan_cache_misses: u64,
+    /// Multi-shard accounting, when a sharded executor is serving.
+    pub sharding: Option<ShardingStats>,
 }
 
 impl Metrics {
@@ -82,6 +145,12 @@ impl Metrics {
         let mut g = self.inner.lock().unwrap();
         g.plan_hits = hits;
         g.plan_misses = misses;
+    }
+
+    /// Mirror a sharded executor's cumulative multi-shard accounting
+    /// (absolute values; the executor owns the counting).
+    pub fn set_sharding(&self, stats: ShardingStats) {
+        self.inner.lock().unwrap().sharding = Some(stats);
     }
 
     pub fn record_expert_rows(&self, counts: &[i32]) {
@@ -123,6 +192,7 @@ impl Metrics {
             expert_rows: g.expert_rows.clone(),
             plan_cache_hits: g.plan_hits,
             plan_cache_misses: g.plan_misses,
+            sharding: g.sharding.clone(),
         }
     }
 }
@@ -161,6 +231,33 @@ impl Snapshot {
                 self.plan_cache_misses,
                 self.plan_cache_hit_rate() * 100.0,
             ));
+        }
+        if let Some(sh) = &self.sharding {
+            if sh.steps > 0 {
+                let util: Vec<String> = sh
+                    .utilization()
+                    .iter()
+                    .map(|u| format!("{:.0}%", u * 100.0))
+                    .collect();
+                let cache: Vec<String> = sh
+                    .shard_cache
+                    .iter()
+                    .map(|c| format!("{}/{}", c.hits, c.misses))
+                    .collect();
+                s.push_str(&format!(
+                    "\nsharded ep={} tp={}: {} steps  imbalance {:.2}  \
+                     collectives {:.1}%  reshards {}\nshard util [{}]  \
+                     shard cache h/m [{}]",
+                    sh.ep,
+                    sh.tp,
+                    sh.steps,
+                    sh.imbalance_ratio(),
+                    sh.collective_share() * 100.0,
+                    sh.reshards,
+                    util.join(" "),
+                    cache.join(" "),
+                ));
+            }
         }
         s
     }
@@ -221,5 +318,57 @@ mod tests {
         m.record_exec(0.001, 4);
         m.record_exec(0.002, 2);
         assert_eq!(m.snapshot().batches, 2);
+    }
+
+    #[test]
+    fn sharding_stats_derive_ratios() {
+        let s = ShardingStats {
+            ep: 2,
+            tp: 1,
+            steps: 4,
+            busy_s: vec![0.8, 1.0],
+            critical_s: 1.0,
+            collective_s: 0.5,
+            step_s: 2.0,
+            imbalance_sum: 5.0,
+            reshards: 1,
+            shard_cache: vec![CacheStats::default(); 2],
+        };
+        assert!((s.imbalance_ratio() - 1.25).abs() < 1e-12);
+        assert!((s.collective_share() - 0.25).abs() < 1e-12);
+        assert_eq!(s.utilization(), vec![0.8, 1.0]);
+        // empty stats stay finite
+        let z = ShardingStats::default();
+        assert_eq!(z.imbalance_ratio(), 0.0);
+        assert_eq!(z.collective_share(), 0.0);
+        assert!(z.utilization().is_empty());
+    }
+
+    #[test]
+    fn sharding_surfaces_in_snapshot_and_render() {
+        let m = Metrics::new();
+        m.record_request(0.01, 5);
+        assert!(m.snapshot().sharding.is_none());
+        assert!(!m.snapshot().render().contains("sharded"));
+        m.set_sharding(ShardingStats {
+            ep: 4,
+            tp: 2,
+            steps: 3,
+            busy_s: vec![0.1; 4],
+            critical_s: 0.1,
+            collective_s: 0.02,
+            step_s: 0.12,
+            imbalance_sum: 3.9,
+            reshards: 2,
+            shard_cache: vec![CacheStats { hits: 2, misses: 1, entries: 1 }; 4],
+        });
+        let snap = m.snapshot();
+        let sh = snap.sharding.as_ref().expect("mirrored");
+        assert_eq!((sh.ep, sh.tp, sh.steps), (4, 2, 3));
+        let r = snap.render();
+        assert!(r.contains("sharded ep=4 tp=2"));
+        assert!(r.contains("imbalance 1.30"));
+        assert!(r.contains("reshards 2"));
+        assert!(r.contains("2/1"));
     }
 }

@@ -70,15 +70,18 @@ pub struct ExecContext<'a> {
 }
 
 impl<'a> ExecContext<'a> {
+    /// A context with only a hardware model (accounting backends).
     pub fn new(spec: GpuSpec) -> Self {
         ExecContext { spec, numeric: None, record_dispatch: false }
     }
 
+    /// Attach real tensors (numeric backends).
     pub fn with_numeric(mut self, numeric: &'a NumericInputs) -> Self {
         self.numeric = Some(numeric);
         self
     }
 
+    /// Ask the backend to record its per-block dispatch sequence.
     pub fn recording(mut self) -> Self {
         self.record_dispatch = true;
         self

@@ -29,26 +29,32 @@ pub struct SimBackend {
 }
 
 impl SimBackend {
+    /// A simulator charging the given mapping mechanism's overheads.
     pub fn new(mode: SimMode) -> Self {
         SimBackend { mode }
     }
 
+    /// The paper's mechanism: compressed TilePrefix + σ ([`SimMode::Ours`]).
     pub fn ours() -> Self {
         Self::new(SimMode::Ours)
     }
 
+    /// Per-block mapping array ablation ([`SimMode::PerBlockArray`]).
     pub fn per_block_array() -> Self {
         Self::new(SimMode::PerBlockArray)
     }
 
+    /// No-σ dense mapping ablation ([`SimMode::DenseMapping`]).
     pub fn dense_mapping() -> Self {
         Self::new(SimMode::DenseMapping)
     }
 
+    /// Padded-empty-task ablation ([`SimMode::PaddedEmpty`]).
     pub fn padded_empty() -> Self {
         Self::new(SimMode::PaddedEmpty)
     }
 
+    /// The mapping mode this simulator charges for.
     pub fn mode(&self) -> SimMode {
         self.mode
     }

@@ -10,7 +10,7 @@
 //! behind the same [`Backend`] trait, and every call site builds and runs
 //! plans through one [`ExecutionSession`] builder:
 //!
-//! ```no_run
+//! ```
 //! use staticbatch::exec::{ExecutionSession, SimBackend};
 //! use staticbatch::moe::config::MoeShape;
 //! use staticbatch::moe::ordering::OrderingStrategy;
@@ -25,6 +25,7 @@
 //!     .gpu(GpuSpec::h800())
 //!     .run(&load)
 //!     .unwrap();
+//! assert!(outcome.time_s() > 0.0);
 //! println!("{}", outcome.summary());
 //! ```
 //!

@@ -127,16 +127,26 @@ impl ExecutionSession {
         self.numeric = numeric;
     }
 
+    /// Mutable access to the numeric inputs, when set.  The in-place
+    /// alternative to [`Self::set_inputs`] for executors that stream new
+    /// activations per step while the parts that never change (the serving
+    /// analog of device-resident weights) stay put uncopied.
+    pub fn inputs_mut(&mut self) -> Option<&mut NumericInputs> {
+        self.numeric.as_mut()
+    }
+
     /// Ask the backend to record its per-block dispatch sequence.
     pub fn record_dispatch(mut self) -> Self {
         self.record_dispatch = true;
         self
     }
 
+    /// Display name of the session's backend.
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
     }
 
+    /// The problem shape this session plans for.
     pub fn shape(&self) -> MoeShape {
         self.planner.shape
     }

@@ -23,7 +23,7 @@
 //! [`exec::Backend`] trait, and every call site builds and executes plans
 //! through the [`exec::ExecutionSession`] builder:
 //!
-//! ```no_run
+//! ```
 //! use staticbatch::exec::{ExecutionSession, SimBackend};
 //! use staticbatch::moe::config::MoeShape;
 //! use staticbatch::moe::routing::LoadScenario;
@@ -39,6 +39,7 @@
 //!     .unwrap();
 //! // ... or run real numerics on CPU: same session shape, one call changed
 //! // (CpuBackend additionally needs `.inputs(...)` tensors).
+//! assert!(sim.time_s() > 0.0);
 //! println!("{}", sim.summary());
 //! ```
 //!
@@ -54,14 +55,43 @@
 //! The request path — admission queue → continuous batcher → plan cache →
 //! execution → metrics → responses — is the backend-generic
 //! [`serve::Server`], driven by a small [`serve::StepExecutor`] trait with
-//! two instantiations: [`serve::SimStepExecutor`] (default features; CPU
-//! numerics or accounting simulation through one
-//! [`exec::ExecutionSession`] with an LRU [`serve::PlanCache`]) and the
-//! PJRT engine (`coordinator::engine::Engine`, feature `pjrt`).  Explore
-//! it without a GPU via `staticbatch serve-sim`.
+//! three instantiations: [`serve::SimStepExecutor`] (default features; CPU
+//! numerics or accounting simulation through one [`exec::ExecutionSession`]
+//! with an LRU [`serve::PlanCache`]), the expert-parallel
+//! [`serve::ShardedStepExecutor`] (per-shard sessions and plan-cache lanes,
+//! EP all-to-all / TP all-reduce accounting from [`moe::parallel`], and a
+//! pluggable [`serve::PlacementKind`]), and the PJRT engine
+//! (`coordinator::engine::Engine`, feature `pjrt`).  Explore it without a
+//! GPU via `staticbatch serve-sim` (add `--ep 4 --placement balanced` for
+//! the sharded path).
+//!
+//! Serving one batch through the single-shard executor, end to end:
+//!
+//! ```
+//! use staticbatch::serve::{SimServeConfig, SimStepExecutor, StepExecutor, StepInput};
+//!
+//! let mut executor = SimStepExecutor::new(SimServeConfig {
+//!     buckets: vec![8],
+//!     max_tokens: 64,
+//!     experts: 8,
+//!     top_k: 2,
+//!     d_model: 8,
+//!     d_ff: 12,
+//!     cache_capacity: 8,
+//!     numeric: true,
+//!     seed: 1,
+//! });
+//! let tokens: Vec<i32> = (0..16).collect(); // two requests padded to bucket 8
+//! let step = StepInput { bucket: 8, rows: 2, tokens: &tokens };
+//! let out = executor.execute_step(&step).unwrap();
+//! assert_eq!(out.argmax.len(), 16);
+//! // repeated load signatures hit the plan cache
+//! executor.execute_step(&step).unwrap();
+//! assert_eq!(executor.cache_stats().unwrap().hits, 1);
+//! ```
 //!
 //! See `DESIGN.md` at the repository root for the architecture inventory
-//! and the experiment index.
+//! and the experiment index, and `README.md` for the quickstart.
 //!
 //! ## Feature flags
 //!

@@ -12,7 +12,8 @@
 //!   plan          print the static batch plan for a scenario
 //!   serve         start the TCP serving coordinator (needs artifacts)
 //!   serve-sim     drive synthetic open-loop traffic through the sim-backed
-//!                 serving core (no GPU, no artifacts)
+//!                 serving core (no GPU, no artifacts); --ep/--tp/--placement
+//!                 run it expert-parallel sharded
 //!   client        send synthetic requests to a running server
 //!   selftest      quick numeric self-check (CPU executor vs reference)
 
@@ -234,11 +235,14 @@ fn cmd_serve(_args: &[String]) -> i32 {
 
 /// Synthetic open-loop traffic against the sim-backed serving core: the
 /// full queue → batcher → PlanCache → execute → respond pipeline with no
-/// GPU, artifacts, or XLA anywhere.
+/// GPU, artifacts, or XLA anywhere.  With `--ep`/`--tp` above 1 the batches
+/// run through the expert-parallel sharded executor instead (per-shard plan
+/// caches, EP all-to-all / TP all-reduce accounting, pluggable placement).
 fn cmd_serve_sim(args: &[String]) -> i32 {
     use staticbatch::coordinator::batcher::BatchPolicy;
     use staticbatch::serve::{
-        run_traffic, Server, ServerConfig, SimServeConfig, SimStepExecutor, TrafficConfig,
+        run_traffic, PlacementKind, Server, ServerConfig, ShardedServeConfig,
+        ShardedStepExecutor, SimServeConfig, SimStepExecutor, StepExecutor, TrafficConfig,
     };
 
     let cmd = Command::new("serve-sim", "synthetic traffic through the sim serving core")
@@ -248,9 +252,13 @@ fn cmd_serve_sim(args: &[String]) -> i32 {
         .flag("distinct", Some("8"), "distinct prompts in the pool")
         .flag("experts", Some("16"), "experts in the sim MoE layer")
         .flag("topk", Some("2"), "experts per token")
-        .flag("cache", Some("128"), "plan cache capacity (LRU entries)")
+        .flag("cache", Some("128"), "plan cache capacity (LRU entries) per lane")
         .flag("max-requests", Some("16"), "max requests per formed batch")
         .flag("seed", Some("1"), "traffic + weight seed")
+        .flag("ep", Some("1"), "expert-parallel shards (>1 = sharded executor)")
+        .flag("tp", Some("1"), "tensor-parallel ways (must divide d_ff)")
+        .flag("placement", Some("static"), "expert placement: static|balanced")
+        .flag("rebalance", Some("1.25"), "re-shard imbalance threshold (balanced)")
         .switch("accounting", "skip CPU numerics (roofline accounting only)");
     let p = match cmd.parse(args) {
         Ok(p) => p,
@@ -268,7 +276,6 @@ fn cmd_serve_sim(args: &[String]) -> i32 {
         ..SimServeConfig::default()
     };
     let max_tokens = sim_cfg.max_tokens;
-    let executor = SimStepExecutor::new(sim_cfg);
     let server_cfg = ServerConfig {
         policy: BatchPolicy {
             buckets: Vec::new(), // adopted from the executor
@@ -278,7 +285,6 @@ fn cmd_serve_sim(args: &[String]) -> i32 {
         queue_capacity: 512,
         poll: std::time::Duration::from_millis(5),
     };
-    let mut server = Server::new(server_cfg, executor);
     let traffic = TrafficConfig {
         requests: p.usize("requests").unwrap_or(256),
         rate_hz: p.f64("rate").unwrap_or(500.0),
@@ -287,19 +293,55 @@ fn cmd_serve_sim(args: &[String]) -> i32 {
         seed: p.u64("seed").unwrap_or(1),
         ..TrafficConfig::default()
     };
-    println!(
-        "serve-sim: {} requests at {} req/s, {} distinct prompts, zipf {:.2}",
-        traffic.requests,
-        if traffic.rate_hz > 0.0 { traffic.rate_hz.to_string() } else { "burst".into() },
-        traffic.distinct,
-        traffic.zipf_alpha
-    );
-    let report = run_traffic(&mut server, traffic);
-    print!("{}", report.render());
-    if report.failed > 0 {
-        1
+    let ep = p.usize("ep").unwrap_or(1).max(1);
+    let tp = p.usize("tp").unwrap_or(1).max(1);
+
+    fn drive<E: StepExecutor>(
+        executor: E,
+        server_cfg: ServerConfig,
+        traffic: TrafficConfig,
+    ) -> i32 {
+        println!(
+            "serve-sim [{}]: {} requests at {} req/s, {} distinct prompts, zipf {:.2}",
+            executor.name(),
+            traffic.requests,
+            if traffic.rate_hz > 0.0 { traffic.rate_hz.to_string() } else { "burst".into() },
+            traffic.distinct,
+            traffic.zipf_alpha
+        );
+        let mut server = Server::new(server_cfg, executor);
+        let report = run_traffic(&mut server, traffic);
+        print!("{}", report.render());
+        if report.failed > 0 {
+            1
+        } else {
+            0
+        }
+    }
+
+    if ep > 1 || tp > 1 {
+        let placement = match PlacementKind::from_name(&p.str("placement")) {
+            Some(k) => k,
+            None => {
+                eprintln!("unknown placement '{}' (static|balanced)", p.str("placement"));
+                return 2;
+            }
+        };
+        if sim_cfg.d_ff % tp != 0 {
+            eprintln!("--tp {tp} does not divide d_ff {}", sim_cfg.d_ff);
+            return 2;
+        }
+        let cfg = ShardedServeConfig {
+            base: sim_cfg,
+            ep,
+            tp,
+            placement,
+            rebalance_threshold: p.f64("rebalance").unwrap_or(1.25),
+            ..ShardedServeConfig::default()
+        };
+        drive(ShardedStepExecutor::new(cfg), server_cfg, traffic)
     } else {
-        0
+        drive(SimStepExecutor::new(sim_cfg), server_cfg, traffic)
     }
 }
 

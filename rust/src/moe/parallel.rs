@@ -33,12 +33,44 @@ pub struct ParallelConfig {
 }
 
 impl ParallelConfig {
+    /// An `ep x tp` grid with NVLink-class interconnect defaults.
     pub fn new(ep: usize, tp: usize) -> Self {
         ParallelConfig { ep, tp, link_gbps: 200.0, coll_latency_us: 10.0 }
     }
 
+    /// Total GPUs in the grid.
     pub fn gpus(&self) -> usize {
         self.ep * self.tp
+    }
+
+    /// EP all-to-all time for one step: every rank sends/receives its share
+    /// of routed rows (`d_model`-wide activations), and the exchange
+    /// completes when the slowest rank's volume (`max_rows_in`) lands.
+    /// Zero when `ep == 1`.  Shared by [`simulate`] and the serving-side
+    /// [`crate::serve::ShardedStepExecutor`].
+    pub fn all_to_all_time_s(
+        &self,
+        max_rows_in: usize,
+        d_model: usize,
+        dtype_bytes: usize,
+    ) -> f64 {
+        if self.ep == 1 {
+            return 0.0;
+        }
+        let bytes = (max_rows_in * d_model * dtype_bytes) as f64;
+        self.coll_latency_us * 1e-6 + bytes / (self.link_gbps * 1e9)
+    }
+
+    /// TP ring all-reduce of the layer output across the TP group:
+    /// `2 (tp-1)/tp` of the `tokens x d_model` output volume.  Zero when
+    /// `tp == 1`.
+    pub fn all_reduce_time_s(&self, tokens: usize, d_model: usize, dtype_bytes: usize) -> f64 {
+        if self.tp == 1 {
+            return 0.0;
+        }
+        let bytes = (tokens * d_model * dtype_bytes) as f64;
+        let factor = 2.0 * (self.tp - 1) as f64 / self.tp as f64;
+        self.coll_latency_us * 1e-6 + bytes * factor / (self.link_gbps * 1e9)
     }
 }
 
@@ -90,26 +122,16 @@ pub fn partition(shape: &MoeShape, load: &ExpertLoad, cfg: &ParallelConfig) -> V
         .collect()
 }
 
-/// All-to-all time: each rank sends/receives its share of routed rows
-/// (d_model-wide activations), limited by the slowest rank's volume.
+/// All-to-all time for a partitioned step: limited by the slowest rank's
+/// received volume.
 fn all_to_all_s(shape: &MoeShape, ranks: &[RankProblem], cfg: &ParallelConfig) -> f64 {
-    if cfg.ep == 1 {
-        return 0.0;
-    }
     let max_rows = ranks.iter().map(|r| r.rows_in).max().unwrap_or(0);
-    let bytes = (max_rows * shape.d_model * shape.dtype_bytes) as f64;
-    cfg.coll_latency_us * 1e-6 + bytes / (cfg.link_gbps * 1e9)
+    cfg.all_to_all_time_s(max_rows, shape.d_model, shape.dtype_bytes)
 }
 
 /// TP all-reduce of the layer output across the TP group.
 fn all_reduce_s(shape: &MoeShape, cfg: &ParallelConfig) -> f64 {
-    if cfg.tp == 1 {
-        return 0.0;
-    }
-    // ring all-reduce: 2 (tp-1)/tp of the output volume
-    let bytes = (shape.seq * shape.d_model * shape.dtype_bytes) as f64;
-    let factor = 2.0 * (cfg.tp - 1) as f64 / cfg.tp as f64;
-    cfg.coll_latency_us * 1e-6 + bytes * factor / (cfg.link_gbps * 1e9)
+    cfg.all_reduce_time_s(shape.seq, shape.d_model, shape.dtype_bytes)
 }
 
 /// Simulate one MoE step across the device grid: per-rank kernels through
@@ -228,5 +250,26 @@ mod tests {
     fn invalid_partition_rejected() {
         let load = LoadScenario::Balanced.counts(&shape(), 0);
         partition(&shape(), &load, &ParallelConfig::new(7, 1));
+    }
+
+    #[test]
+    fn public_collective_costs_match_simulated_step() {
+        // the serving executor charges collectives through the public
+        // methods; they must agree with what `simulate` charges internally
+        let load = LoadScenario::Zipf(1.2).counts(&shape(), 3);
+        let cfg = ParallelConfig::new(4, 2);
+        let ranks = partition(&shape(), &load, &cfg);
+        let max_rows = ranks.iter().map(|r| r.rows_in).max().unwrap();
+        let r = simulate(&shape(), &load, &cfg, &GpuSpec::h800());
+        let s = shape();
+        assert_eq!(
+            r.all_to_all_s,
+            cfg.all_to_all_time_s(max_rows, s.d_model, s.dtype_bytes)
+        );
+        assert_eq!(r.all_reduce_s, cfg.all_reduce_time_s(s.seq, s.d_model, s.dtype_bytes));
+        // degenerate grids pay nothing
+        let single = ParallelConfig::new(1, 1);
+        assert_eq!(single.all_to_all_time_s(1000, 64, 4), 0.0);
+        assert_eq!(single.all_reduce_time_s(1000, 64, 4), 0.0);
     }
 }

@@ -179,6 +179,62 @@ mod tests {
     }
 
     #[test]
+    fn capacity_pressure_never_exceeds_bound_and_counts_correctly() {
+        // more distinct load signatures than capacity: occupancy must stay
+        // at the bound and every lookup must be a counted miss
+        let planner = Planner::new(shape());
+        let mut cache = PlanCache::new(4);
+        for k in 0..12usize {
+            let mut counts = vec![1usize; shape().experts];
+            counts[k % shape().experts] = 10 + k; // 12 distinct signatures
+            cache.get_or_plan(&planner, &ExpertLoad { counts });
+            assert!(cache.len() <= 4, "occupancy {} exceeds capacity", cache.len());
+        }
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 12, 4));
+        assert!((s.hit_rate() - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sequential_scan_over_capacity_thrashes_in_lru_order() {
+        // capacity 2, cycling a -> b -> c: LRU always evicts the signature
+        // that comes next, so every single lookup misses (the classic
+        // sequential-scan thrash) and the counters must show exactly that
+        let planner = Planner::new(shape());
+        let mut cache = PlanCache::new(2);
+        let a = LoadScenario::Balanced.counts(&shape(), 0);
+        let b = LoadScenario::Best.counts(&shape(), 0);
+        let c = LoadScenario::Worst.counts(&shape(), 0);
+        for _ in 0..3 {
+            for load in [&a, &b, &c] {
+                cache.get_or_plan(&planner, load);
+            }
+        }
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 9, 2));
+    }
+
+    #[test]
+    fn touch_refresh_under_pressure_protects_the_hot_signature() {
+        // capacity 2 with a hot signature touched between cold inserts: the
+        // hot entry must survive every eviction round
+        let planner = Planner::new(shape());
+        let mut cache = PlanCache::new(2);
+        let hot = LoadScenario::Balanced.counts(&shape(), 0);
+        cache.get_or_plan(&planner, &hot);
+        for k in 0..5usize {
+            let mut counts = vec![1usize; shape().experts];
+            counts[0] = 100 + k; // distinct cold signatures
+            cache.get_or_plan(&planner, &ExpertLoad { counts });
+            cache.get_or_plan(&planner, &hot); // refresh: cold entry is LRU
+        }
+        let s = cache.stats();
+        assert_eq!(s.hits, 5, "hot signature must stay resident throughout");
+        assert_eq!(s.misses, 6, "initial hot insert + 5 distinct cold inserts");
+        assert_eq!(s.entries, 2);
+    }
+
+    #[test]
     fn clear_drops_entries_but_keeps_counters() {
         let planner = Planner::new(shape());
         let mut cache = PlanCache::new(4);

@@ -336,6 +336,76 @@ pub fn serving_sim_table(requests: usize, seed: u64) -> String {
     t.render()
 }
 
+/// **SHARD**: expert-parallel sharded serving — identical Zipf burst
+/// traffic through [`crate::serve::ShardedStepExecutor`] per EP width,
+/// static vs load-balanced placement.  Reports the mean per-step device
+/// imbalance (max/mean shard kernel time), the collective share of step
+/// time, the aggregate plan-cache hit rate across shard lanes, and how
+/// often the balanced policy re-sharded.  Accounting backend, so the table
+/// regenerates in milliseconds.
+pub fn sharded_serving_table(requests: usize, seed: u64) -> String {
+    use crate::coordinator::batcher::BatchPolicy;
+    use crate::serve::{
+        run_traffic, PlacementKind, Server, ServerConfig, ShardedServeConfig,
+        ShardedStepExecutor, SimServeConfig, TrafficConfig,
+    };
+
+    let mut t = Table::new(&[
+        "placement", "ep", "steps", "imbalance", "collective%", "hit rate", "reshards",
+    ]);
+    for ep in [2usize, 4] {
+        for placement in [PlacementKind::Static, PlacementKind::Balanced] {
+            let cfg = ShardedServeConfig {
+                // serving-scale widths so shard kernel time tracks routed
+                // rows (toy widths are latency-flat on a 132-SM device)
+                base: SimServeConfig {
+                    d_model: 1024,
+                    d_ff: 2048,
+                    numeric: false,
+                    seed,
+                    ..SimServeConfig::default()
+                },
+                ep,
+                placement,
+                rebalance_threshold: 1.1,
+                ..ShardedServeConfig::default()
+            };
+            let max_tokens = cfg.base.max_tokens;
+            let mut server = Server::new(
+                ServerConfig {
+                    policy: BatchPolicy { buckets: Vec::new(), max_requests: 16, max_tokens },
+                    queue_capacity: requests.max(16),
+                    poll: std::time::Duration::from_millis(1),
+                },
+                ShardedStepExecutor::new(cfg),
+            );
+            let report = run_traffic(
+                &mut server,
+                TrafficConfig {
+                    requests,
+                    rate_hz: 0.0,
+                    zipf_alpha: 1.4,
+                    distinct: 8,
+                    seed,
+                    ..TrafficConfig::default()
+                },
+            );
+            let sh = report.snapshot.sharding.clone().unwrap_or_default();
+            let c = report.cache.unwrap_or_default();
+            t.row(&[
+                placement.name().into(),
+                ep.to_string(),
+                sh.steps.to_string(),
+                format!("{:.2}", sh.imbalance_ratio()),
+                format!("{:.1}%", sh.collective_share() * 100.0),
+                format!("{:.1}%", c.hit_rate() * 100.0),
+                sh.reshards.to_string(),
+            ]);
+        }
+    }
+    t.render()
+}
+
 /// Zipf-imbalance sweep: ours vs grouped GEMM crossover analysis.
 pub fn sweep_table(gpu: &str, seeds: u64) -> String {
     let spec = GpuSpec::by_name(gpu).unwrap_or_else(GpuSpec::h800);
@@ -406,6 +476,15 @@ mod tests {
         let s = super::serving_sim_table(48, 7);
         assert_eq!(s.lines().count(), 2 + 3, "header + 3 traffic rows:\n{s}");
         for name in ["hot pool", "mixed pool", "wide pool", "hit rate"] {
+            assert!(s.contains(name), "missing {name} in:\n{s}");
+        }
+    }
+
+    #[test]
+    fn sharded_serving_table_covers_placements_and_widths() {
+        let s = super::sharded_serving_table(48, 7);
+        assert_eq!(s.lines().count(), 2 + 4, "header + 2 placements x 2 EP widths:\n{s}");
+        for name in ["static", "balanced", "imbalance", "reshards"] {
             assert!(s.contains(name), "missing {name} in:\n{s}");
         }
     }

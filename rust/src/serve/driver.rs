@@ -35,6 +35,7 @@ pub struct TrafficConfig {
     pub distinct: usize,
     /// Prompt lengths, cycled over the pool (mixed-length traffic).
     pub lengths: Vec<usize>,
+    /// Seed for prompt contents and popularity draws.
     pub seed: u64,
 }
 
@@ -55,15 +56,23 @@ impl Default for TrafficConfig {
 /// What one traffic run produced.
 #[derive(Clone, Debug)]
 pub struct TrafficReport {
+    /// Requests generated (admitted + rejected).
     pub sent: usize,
+    /// Requests answered without error.
     pub ok: usize,
+    /// Requests answered with an error (or never answered).
     pub failed: usize,
     /// Requests the bounded queue refused (backpressure).
     pub rejected: usize,
+    /// Wall-clock seconds of the serving loop.
     pub wall_s: f64,
+    /// Median end-to-end request latency, milliseconds.
     pub p50_ms: f64,
+    /// 99th-percentile end-to-end request latency, milliseconds.
     pub p99_ms: f64,
+    /// The executor's plan-cache counters at the end of the run.
     pub cache: Option<CacheStats>,
+    /// The server's metrics snapshot at the end of the run.
     pub snapshot: Snapshot,
 }
 

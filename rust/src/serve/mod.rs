@@ -16,28 +16,71 @@
 //!          └───────────┬───────────┘
 //!          ┌───────────▼───────────┐
 //!          │     StepExecutor      │  one call per formed batch:
-//!          │  (sim / CPU / PJRT)   │  route → PlanCache → plan → execute
+//!          │ (sim / sharded / PJRT)│  route → PlanCache → plan → execute
 //!          └───────────┬───────────┘
 //!          ┌───────────▼───────────┐
-//!          │       Metrics         │  latency, exec, batch, plan cache
-//!          └───────────┬───────────┘
+//!          │       Metrics         │  latency, exec, batch, plan cache,
+//!          └───────────┬───────────┘  shard utilization/imbalance
 //!                  responses
 //! ```
 //!
-//! [`Server`] is generic over a small [`StepExecutor`] trait; the
-//! PJRT engine (`coordinator::engine::Engine`, feature `pjrt`) and the
-//! default-features [`SimStepExecutor`] (routing + [`PlanCache`] +
-//! [`crate::exec::ExecutionSession`]) are the two instantiations, so the
-//! whole pipeline runs — and is load-tested — without XLA, artifacts, or a
-//! GPU.
+//! [`Server`] is generic over a small [`StepExecutor`] trait with three
+//! instantiations: the default-features [`SimStepExecutor`] (routing +
+//! [`PlanCache`] + [`crate::exec::ExecutionSession`]), the expert-parallel
+//! [`ShardedStepExecutor`] (per-shard sessions and plan-cache lanes, EP/TP
+//! collectives, pluggable [`PlacementKind`]), and the PJRT engine
+//! (`coordinator::engine::Engine`, feature `pjrt`) — so the whole pipeline
+//! runs, and is load-tested, without XLA, artifacts, or a GPU.
+//!
+//! Implementing [`StepExecutor`] is all it takes to put a new execution
+//! surface behind the serving loop:
+//!
+//! ```
+//! use staticbatch::coordinator::request::{Request, Response};
+//! use staticbatch::exec::ExecError;
+//! use staticbatch::serve::{Server, ServerConfig, StepExecutor, StepInput, StepOutput};
+//! use std::sync::mpsc::channel;
+//! use std::time::Instant;
+//!
+//! /// Echoes every token incremented — the smallest possible executor.
+//! struct Echo;
+//!
+//! impl StepExecutor for Echo {
+//!     fn name(&self) -> &'static str {
+//!         "echo"
+//!     }
+//!     fn buckets(&self) -> Vec<usize> {
+//!         vec![4, 8]
+//!     }
+//!     fn execute_step(&mut self, step: &StepInput<'_>) -> Result<StepOutput, ExecError> {
+//!         Ok(StepOutput {
+//!             argmax: step.tokens.iter().map(|&t| t + 1).collect(),
+//!             expert_rows: Vec::new(),
+//!             failed: Vec::new(),
+//!         })
+//!     }
+//! }
+//!
+//! let mut server = Server::new(ServerConfig::default(), Echo);
+//! let queue = server.queue();
+//! let (tx, rx) = channel();
+//! queue.try_push(Request { id: 0, tokens: vec![1, 2, 3], enqueued: Instant::now(), respond: tx });
+//! queue.close();
+//! server.serve(); // drains the closed queue, then returns
+//! let response: Response = rx.try_recv().unwrap();
+//! assert_eq!(response.argmax, vec![2, 3, 4]);
+//! ```
 
 pub mod driver;
 pub mod server;
+pub mod sharded;
 pub mod sim_exec;
 
+pub use crate::coordinator::metrics::ShardingStats;
 pub use crate::moe::plan_cache::{CacheStats, PlanCache};
 pub use driver::{run_traffic, TrafficConfig, TrafficReport};
 pub use server::{Server, ServerConfig};
+pub use sharded::{PlacementKind, ShardedServeConfig, ShardedStepExecutor};
 pub use sim_exec::{SimServeConfig, SimStepExecutor};
 
 use crate::exec::ExecError;
@@ -45,8 +88,11 @@ use crate::exec::ExecError;
 /// One formed batch, packed for execution: `rows` requests padded to
 /// `bucket` tokens each, row-major in `tokens` (`rows * bucket` ids).
 pub struct StepInput<'a> {
+    /// Sequence bucket every request in the batch was padded to.
     pub bucket: usize,
+    /// Requests in the batch (one padded row each).
     pub rows: usize,
+    /// Packed token ids, row-major, `rows * bucket` entries.
     pub tokens: &'a [i32],
 }
 
@@ -92,6 +138,13 @@ pub trait StepExecutor {
     /// [`PlanCache`]; the server mirrors them into its metrics after every
     /// step.
     fn cache_stats(&self) -> Option<CacheStats> {
+        None
+    }
+
+    /// Cumulative multi-shard (EP/TP) accounting, when the executor shards
+    /// its work across lanes; the server mirrors it into its metrics after
+    /// every step, like the plan-cache counters.
+    fn sharding(&self) -> Option<ShardingStats> {
         None
     }
 }

@@ -55,6 +55,8 @@ pub struct Server<E: StepExecutor> {
 }
 
 impl<E: StepExecutor> Server<E> {
+    /// Build a server around `executor`: adopts the executor's buckets and
+    /// clamps the policy's token budget to its step capacity.
     pub fn new(cfg: ServerConfig, executor: E) -> Self {
         let mut policy = cfg.policy;
         let buckets = executor.buckets();
@@ -90,14 +92,17 @@ impl<E: StepExecutor> Server<E> {
         Arc::clone(&self.stop)
     }
 
+    /// The effective batch policy (buckets and budgets after adoption).
     pub fn policy(&self) -> &BatchPolicy {
         &self.policy
     }
 
+    /// The executor driving this server.
     pub fn executor(&self) -> &E {
         &self.executor
     }
 
+    /// Mutable access to the executor (reconfiguration between runs).
     pub fn executor_mut(&mut self) -> &mut E {
         &mut self.executor
     }
@@ -133,7 +138,7 @@ impl<E: StepExecutor> Server<E> {
             for batch in batches {
                 self.step(batch);
             }
-            self.sync_cache_metrics();
+            self.sync_executor_metrics();
         }
         log::info!("{} stopped", self.executor.name());
     }
@@ -201,9 +206,14 @@ impl<E: StepExecutor> Server<E> {
         }
     }
 
-    fn sync_cache_metrics(&self) {
+    /// Mirror the executor's cumulative counters (plan cache, sharding)
+    /// into the metrics sink after each loop iteration.
+    fn sync_executor_metrics(&self) {
         if let Some(s) = self.executor.cache_stats() {
             self.metrics.set_plan_cache(s.hits, s.misses);
+        }
+        if let Some(sh) = self.executor.sharding() {
+            self.metrics.set_sharding(sh);
         }
     }
 }

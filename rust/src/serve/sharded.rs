@@ -1,0 +1,671 @@
+//! [`ShardedStepExecutor`]: expert-parallel sharded serving.
+//!
+//! Paper Section 2.2: under EP/TP "the MoE computation is an irregular
+//! workload from the perspective of each GPU" — each shard owns a subset of
+//! experts, so a skewed route turns expert-load imbalance into *device*
+//! imbalance.  This executor brings that regime into the serving core: each
+//! formed batch is routed once (the same deterministic top-k as the
+//! single-shard [`SimStepExecutor`](crate::serve::SimStepExecutor)), the
+//! routed tokens are partitioned across an expert→shard placement, and every
+//! shard plans + executes its sub-problem through its own
+//! [`ExecutionSession`] with its own [`PlanCache`](crate::serve::PlanCache)
+//! lane.  Simulated step latency is `max(shard kernel) + EP all-to-all +
+//! TP all-reduce`, with collective costs charged from
+//! [`crate::moe::parallel::ParallelConfig`].
+//!
+//! A shard's sub-problem is the *full* expert space masked to the experts it
+//! owns: unowned experts appear as empty tasks, which is exactly the
+//! irregularity the σ/TilePrefix machinery (Algorithm 4) elides — so the
+//! per-shard planner exercises the paper's empty-task path on every step.
+//!
+//! Two [`PlacementKind`]s are built in (the GEM-style knob):
+//!
+//! * [`PlacementKind::Static`] — round-robin, expert `e` on shard `e % ep`.
+//! * [`PlacementKind::Balanced`] — a decayed per-expert load histogram (the
+//!   same counts [`crate::coordinator::metrics::Metrics`] accumulates as
+//!   `expert_rows`) drives an LPT re-shard whenever the observed device
+//!   imbalance crosses a threshold.  A re-shard takes effect from the
+//!   *next* step — each step executes under the placement chosen from past
+//!   load only, with no lookahead into the batch being served.
+//!   Re-sharding changes per-shard load signatures, so it deliberately
+//!   costs plan-cache misses — the migration cost load-aware placement
+//!   systems pay.
+//!
+//! Numerics (when `numeric` is on) run per shard on
+//! [`CpuBackend`](crate::exec::CpuBackend) and the shard outputs are summed
+//! — the serving analog of the EP combine.  With `top_k == 1` each output
+//! row has exactly one expert contribution, so sharded outputs are
+//! bitwise-identical to the single-shard executor's (the integration test
+//! pins this); with `top_k > 1` the combine order differs, which can move
+//! outputs by float-addition reordering noise.  With `tp > 1` each lane
+//! computes the leading `d_ff / tp` output columns (one TP rank's slice) and
+//! the all-reduce is charged in time only.
+
+use crate::coordinator::metrics::ShardingStats;
+use crate::exec::{
+    Backend, CpuBackend, ExecContext, ExecError, ExecutionSession, NumericInputs, SimBackend,
+};
+use crate::moe::config::MoeShape;
+use crate::moe::parallel::ParallelConfig;
+use crate::moe::plan_cache::CacheStats;
+use crate::moe::routing::ExpertLoad;
+use crate::moe::token_index::TokenIndex;
+use crate::serve::sim_exec::{
+    argmax_row, embed_tokens, expert_weights, route_topk, synthetic_argmax, SimServeConfig,
+};
+use crate::serve::{StepExecutor, StepInput, StepOutput};
+use crate::sim::specs::GpuSpec;
+use crate::util::tensor::Tensor;
+
+/// Which expert→shard placement policy the sharded executor runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementKind {
+    /// Fixed round-robin: expert `e` lives on shard `e % ep` forever.
+    Static,
+    /// Load-aware: re-shard (LPT greedy over a decayed per-expert load
+    /// histogram) when observed device imbalance crosses the threshold.
+    Balanced,
+}
+
+impl PlacementKind {
+    /// Parse a CLI name (`static` | `balanced`).
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "static" => Some(PlacementKind::Static),
+            "balanced" => Some(PlacementKind::Balanced),
+            _ => None,
+        }
+    }
+
+    /// Stable display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementKind::Static => "static",
+            PlacementKind::Balanced => "balanced",
+        }
+    }
+}
+
+/// Configuration of the sharded serving executor: the single-lane
+/// [`SimServeConfig`] plus the parallel grid and placement knobs.
+#[derive(Clone, Debug)]
+pub struct ShardedServeConfig {
+    /// Per-lane problem shape and serving knobs, shared with the
+    /// single-shard executor (same route, same embedding, same weights).
+    pub base: SimServeConfig,
+    /// Expert-parallel ways (shard lanes).
+    pub ep: usize,
+    /// Tensor-parallel ways; must divide `base.d_ff`.
+    pub tp: usize,
+    /// Expert→shard placement policy.
+    pub placement: PlacementKind,
+    /// Re-shard when the decayed device-load imbalance (max/mean across
+    /// shards) exceeds this; only the balanced placement acts on it.
+    pub rebalance_threshold: f64,
+    /// Per-step decay of the expert-load histogram, in `[0, 1)`; 0 reacts
+    /// to the last step only, values near 1 average long horizons.
+    pub decay: f64,
+    /// Interconnect model (EP all-to-all, TP all-reduce).
+    pub link_gbps: f64,
+    /// Per-collective base latency, microseconds.
+    pub coll_latency_us: f64,
+    /// GPU spec each shard's kernel time is simulated on.
+    pub gpu: GpuSpec,
+}
+
+impl Default for ShardedServeConfig {
+    fn default() -> Self {
+        ShardedServeConfig {
+            base: SimServeConfig::default(),
+            ep: 2,
+            tp: 1,
+            placement: PlacementKind::Static,
+            rebalance_threshold: 1.25,
+            decay: 0.5,
+            link_gbps: 200.0,
+            coll_latency_us: 10.0,
+            gpu: GpuSpec::h800(),
+        }
+    }
+}
+
+/// Longest-processing-time greedy: heaviest expert first onto the currently
+/// least-loaded shard.  Ties break toward the lower expert / shard index,
+/// so the assignment is deterministic.
+fn lpt_assignment(hist: &[f64], ep: usize) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..hist.len()).collect();
+    order.sort_by(|&a, &b| {
+        hist[b]
+            .partial_cmp(&hist[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut load = vec![0.0f64; ep];
+    let mut assign = vec![0usize; hist.len()];
+    for e in order {
+        let mut best = 0usize;
+        for s in 1..ep {
+            if load[s] < load[best] {
+                best = s;
+            }
+        }
+        assign[e] = best;
+        load[best] += hist[e];
+    }
+    assign
+}
+
+/// The expert→shard placement state: current assignment plus the decayed
+/// load histogram the balanced policy re-shards from.
+struct Placement {
+    kind: PlacementKind,
+    ep: usize,
+    assign: Vec<usize>,
+    hist: Vec<f64>,
+    decay: f64,
+    threshold: f64,
+    reshards: u64,
+}
+
+impl Placement {
+    fn new(kind: PlacementKind, experts: usize, ep: usize, decay: f64, threshold: f64) -> Self {
+        Placement {
+            kind,
+            ep,
+            assign: (0..experts).map(|e| e % ep).collect(),
+            hist: vec![0.0; experts],
+            decay,
+            threshold,
+            reshards: 0,
+        }
+    }
+
+    /// Device-load imbalance of the decayed histogram under the current
+    /// assignment: max over shards / mean over shards (idle shards count —
+    /// that is the whole point).
+    fn imbalance(&self) -> f64 {
+        let mut shard = vec![0.0f64; self.ep];
+        for (e, &s) in self.assign.iter().enumerate() {
+            shard[s] += self.hist[e];
+        }
+        let total: f64 = shard.iter().sum();
+        if total <= 0.0 {
+            return 1.0;
+        }
+        let max = shard.iter().cloned().fold(0.0, f64::max);
+        max * self.ep as f64 / total
+    }
+
+    /// Fold this step's routed counts into the histogram; the balanced
+    /// policy re-shards if the observed imbalance crosses the threshold.
+    fn observe(&mut self, counts: &[usize]) {
+        for (h, &c) in self.hist.iter_mut().zip(counts) {
+            *h = *h * self.decay + c as f64;
+        }
+        if self.kind == PlacementKind::Balanced && self.imbalance() > self.threshold {
+            let next = lpt_assignment(&self.hist, self.ep);
+            if next != self.assign {
+                self.assign = next;
+                self.reshards += 1;
+            }
+        }
+    }
+}
+
+/// The expert-parallel sharded [`StepExecutor`].  See module docs.
+pub struct ShardedStepExecutor {
+    cfg: ShardedServeConfig,
+    /// Per-shard problem shape: full expert space, `d_ff / tp` columns.
+    shard_shape: MoeShape,
+    parallel: ParallelConfig,
+    placement: Placement,
+    /// One session (planner + plan-cache lane + backend) per EP shard.  In
+    /// numeric mode each lane holds its `[experts, d_model, d_ff / tp]`
+    /// weight slice from construction; only activations and routing are
+    /// replaced per step.
+    lanes: Vec<ExecutionSession>,
+    stats: ShardingStats,
+    steps: u64,
+}
+
+impl ShardedStepExecutor {
+    /// Build the shard lanes.  Panics on inconsistent configuration
+    /// (no buckets, `top_k` out of range, `tp` not dividing `d_ff`).
+    pub fn new(cfg: ShardedServeConfig) -> Self {
+        assert!(cfg.ep >= 1 && cfg.tp >= 1, "ep and tp must be at least 1");
+        assert!(!cfg.base.buckets.is_empty(), "at least one bucket");
+        assert!(
+            cfg.base.top_k >= 1 && cfg.base.top_k <= cfg.base.experts,
+            "1 <= top_k <= experts"
+        );
+        assert!(cfg.base.d_ff % cfg.tp == 0, "tp must divide d_ff");
+        assert!((0.0..1.0).contains(&cfg.decay), "decay must be in [0, 1)");
+        let shard_shape = MoeShape {
+            seq: cfg.base.max_tokens,
+            d_model: cfg.base.d_model,
+            d_ff: cfg.base.d_ff / cfg.tp,
+            experts: cfg.base.experts,
+            top_k: cfg.base.top_k,
+            dtype_bytes: 4,
+        };
+        let b = &cfg.base;
+        let full = expert_weights(b.experts, b.d_model, b.d_ff, b.seed);
+        let weights = if cfg.tp == 1 {
+            full
+        } else {
+            slice_columns(&full, b.experts, b.d_model, b.d_ff, shard_shape.d_ff)
+        };
+        let lanes = (0..cfg.ep)
+            .map(|_| {
+                let mut session = ExecutionSession::new(shard_shape)
+                    .gpu(cfg.gpu.clone())
+                    .plan_cache(cfg.base.cache_capacity);
+                if cfg.base.numeric {
+                    // each lane holds its weight slice from construction
+                    // (the serving analog of device-resident parameters);
+                    // only activations/routing are replaced per step
+                    session = session.backend(CpuBackend).inputs(NumericInputs {
+                        tokens: Tensor::zeros(&[shard_shape.seq, shard_shape.d_model]),
+                        weights: weights.clone(),
+                        token_index: TokenIndex {
+                            index: vec![Vec::new(); cfg.base.experts],
+                        },
+                        gates: vec![Vec::new(); cfg.base.experts],
+                    });
+                }
+                session
+            })
+            .collect();
+        let placement = Placement::new(
+            cfg.placement,
+            cfg.base.experts,
+            cfg.ep,
+            cfg.decay,
+            cfg.rebalance_threshold,
+        );
+        let stats = ShardingStats {
+            ep: cfg.ep,
+            tp: cfg.tp,
+            busy_s: vec![0.0; cfg.ep],
+            shard_cache: vec![CacheStats::default(); cfg.ep],
+            ..ShardingStats::default()
+        };
+        let parallel = ParallelConfig {
+            ep: cfg.ep,
+            tp: cfg.tp,
+            link_gbps: cfg.link_gbps,
+            coll_latency_us: cfg.coll_latency_us,
+        };
+        ShardedStepExecutor { cfg, shard_shape, parallel, placement, lanes, stats, steps: 0 }
+    }
+
+    /// Steps executed so far.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// The cumulative multi-shard accounting (also mirrored into the
+    /// server's metrics via [`StepExecutor::sharding`]).
+    pub fn stats(&self) -> &ShardingStats {
+        &self.stats
+    }
+
+    /// The current expert→shard assignment.
+    pub fn assignment(&self) -> &[usize] {
+        &self.placement.assign
+    }
+
+    /// The configured placement policy.
+    pub fn placement_kind(&self) -> PlacementKind {
+        self.cfg.placement
+    }
+}
+
+/// Keep the leading `keep` of `d_ff` columns of every `[d_model, d_ff]`
+/// expert plane (one TP rank's weight slice).
+fn slice_columns(
+    full: &Tensor,
+    experts: usize,
+    d_model: usize,
+    d_ff: usize,
+    keep: usize,
+) -> Tensor {
+    let mut data = Vec::with_capacity(experts * d_model * keep);
+    for e in 0..experts {
+        let plane = full.plane(e);
+        for k in 0..d_model {
+            data.extend_from_slice(&plane[k * d_ff..k * d_ff + keep]);
+        }
+    }
+    Tensor::from_vec(&[experts, d_model, keep], data)
+}
+
+impl StepExecutor for ShardedStepExecutor {
+    fn name(&self) -> &'static str {
+        if self.cfg.base.numeric {
+            "serve/sharded+cpu"
+        } else {
+            "serve/sharded"
+        }
+    }
+
+    fn buckets(&self) -> Vec<usize> {
+        self.cfg.base.buckets.clone()
+    }
+
+    fn max_step_tokens(&self) -> Option<usize> {
+        Some(self.shard_shape.seq)
+    }
+
+    fn execute_step(&mut self, step: &StepInput<'_>) -> Result<StepOutput, ExecError> {
+        let total = step.rows * step.bucket;
+        if total > self.shard_shape.seq {
+            return Err(ExecError::PlanMismatch {
+                backend: self.name(),
+                detail: format!(
+                    "batch of {total} tokens exceeds the shard capacity of {}",
+                    self.shard_shape.seq
+                ),
+            });
+        }
+        debug_assert_eq!(step.tokens.len(), total);
+        // one global route; the placement decides who owns each expert
+        let (token_index, load) =
+            route_topk(step.tokens, self.cfg.base.experts, self.cfg.base.top_k);
+        // This step executes under the placement chosen from PAST load
+        // only; observing this step's counts (and any re-shard it
+        // triggers) takes effect from the next step — a real placement
+        // system has no lookahead into the batch it is about to serve.
+        let assign = self.placement.assign.clone();
+        self.placement.observe(&load.counts);
+
+        let embedded = self.cfg.base.numeric.then(|| {
+            embed_tokens(
+                step.tokens,
+                self.shard_shape.seq,
+                self.shard_shape.d_model,
+                self.cfg.base.seed,
+            )
+        });
+        let gate = 1.0 / self.cfg.base.top_k as f32;
+
+        let mut kernel_s = vec![0.0f64; self.cfg.ep];
+        let mut max_rows_in = 0usize;
+        let mut combined: Option<Tensor> = None;
+        let mut sim = SimBackend::ours();
+        for shard in 0..self.cfg.ep {
+            // The shard's sub-problem: the full expert space masked to the
+            // experts it owns.  Unowned experts are empty tasks — the
+            // σ/TilePrefix machinery elides them per shard.
+            let index: Vec<Vec<u32>> = token_index
+                .index
+                .iter()
+                .enumerate()
+                .map(|(e, rows)| if assign[e] == shard { rows.clone() } else { Vec::new() })
+                .collect();
+            let local = TokenIndex { index };
+            let counts = local.counts();
+            let rows_in: usize = counts.iter().sum();
+            max_rows_in = max_rows_in.max(rows_in);
+            if rows_in == 0 {
+                continue;
+            }
+            let local_load = ExpertLoad { counts };
+            let session = &mut self.lanes[shard];
+            let plan = session.plan_shared(&local_load);
+            // shard kernel time always comes from the accounting simulator
+            // on the very plan the lane executes; host-side launch overhead
+            // is excluded — it is paid per GPU, not a device-load signal
+            let timing = sim.execute(&plan, &mut ExecContext::new(self.cfg.gpu.clone()))?;
+            let r = timing.sim();
+            kernel_s[shard] = (r.time_s - r.host_time_s).max(0.0);
+            if let Some(embedded) = &embedded {
+                let gates: Vec<Vec<f32>> =
+                    local.index.iter().map(|rows| vec![gate; rows.len()]).collect();
+                // in-place input update: the lane's weights stay resident,
+                // only activations and routing change per step
+                let inputs = session.inputs_mut().expect("numeric lanes hold inputs");
+                inputs.tokens = embedded.clone();
+                inputs.token_index = local;
+                inputs.gates = gates;
+                let out = session.run_plan(&plan)?;
+                let t = out.output.expect("cpu backend returns a tensor");
+                combined = Some(match combined.take() {
+                    None => t,
+                    Some(mut acc) => {
+                        // EP combine: shard partials sum per row
+                        for (a, b) in acc.data.iter_mut().zip(&t.data) {
+                            *a += b;
+                        }
+                        acc
+                    }
+                });
+            }
+        }
+
+        let a2a = self.parallel.all_to_all_time_s(
+            max_rows_in,
+            self.shard_shape.d_model,
+            self.shard_shape.dtype_bytes,
+        );
+        let ar = self.parallel.all_reduce_time_s(
+            total,
+            self.shard_shape.d_model,
+            self.shard_shape.dtype_bytes,
+        );
+        let critical = kernel_s.iter().cloned().fold(0.0, f64::max);
+        let mean = kernel_s.iter().sum::<f64>() / self.cfg.ep as f64;
+
+        self.stats.steps += 1;
+        for (b, k) in self.stats.busy_s.iter_mut().zip(&kernel_s) {
+            *b += k;
+        }
+        self.stats.critical_s += critical;
+        self.stats.collective_s += a2a + ar;
+        self.stats.step_s += critical + a2a + ar;
+        if mean > 0.0 {
+            self.stats.imbalance_sum += critical / mean;
+        }
+        self.stats.reshards = self.placement.reshards;
+        for (c, lane) in self.stats.shard_cache.iter_mut().zip(&self.lanes) {
+            *c = lane.cache_stats().unwrap_or_default();
+        }
+
+        let argmax = match &combined {
+            Some(t) => (0..total).map(|r| argmax_row(t.row(r))).collect(),
+            None => step.tokens.iter().map(|&v| synthetic_argmax(v)).collect(),
+        };
+        self.steps += 1;
+        Ok(StepOutput {
+            argmax,
+            expert_rows: load.counts.iter().map(|&c| c as i32).collect(),
+            failed: Vec::new(),
+        })
+    }
+
+    fn cache_stats(&self) -> Option<CacheStats> {
+        let mut agg = CacheStats::default();
+        for lane in &self.lanes {
+            if let Some(s) = lane.cache_stats() {
+                agg.hits += s.hits;
+                agg.misses += s.misses;
+                agg.entries += s.entries;
+            }
+        }
+        Some(agg)
+    }
+
+    fn sharding(&self) -> Option<ShardingStats> {
+        Some(self.stats.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn base(numeric: bool, top_k: usize) -> SimServeConfig {
+        SimServeConfig {
+            buckets: vec![8, 16],
+            max_tokens: 128,
+            experts: 8,
+            top_k,
+            d_model: 8,
+            d_ff: 12,
+            cache_capacity: 8,
+            numeric,
+            seed: 3,
+        }
+    }
+
+    fn step_tokens(bucket: usize, rows: usize, seed: u64) -> Vec<i32> {
+        let mut rng = Rng::new(seed);
+        (0..rows * bucket).map(|_| rng.below(50) as i32).collect()
+    }
+
+    #[test]
+    fn lpt_balances_a_skewed_histogram() {
+        let hist = vec![8.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0];
+        let assign = lpt_assignment(&hist, 2);
+        let s0: f64 = hist.iter().zip(&assign).filter(|(_, &s)| s == 0).map(|(h, _)| h).sum();
+        let s1: f64 = hist.iter().zip(&assign).filter(|(_, &s)| s == 1).map(|(h, _)| h).sum();
+        // the hot expert sits alone; everything else lands opposite it
+        assert_eq!(s0.max(s1), 8.0);
+        assert_eq!(s0.min(s1), 7.0);
+    }
+
+    #[test]
+    fn static_placement_never_reshards() {
+        let mut p = Placement::new(PlacementKind::Static, 8, 4, 0.5, 1.01);
+        let before = p.assign.clone();
+        for _ in 0..10 {
+            p.observe(&[40, 1, 1, 1, 1, 1, 1, 1]);
+        }
+        assert_eq!(p.assign, before);
+        assert_eq!(p.reshards, 0);
+        assert!(p.imbalance() > 1.01, "skew observed: {}", p.imbalance());
+    }
+
+    #[test]
+    fn balanced_placement_reshards_past_threshold() {
+        let mut p = Placement::new(PlacementKind::Balanced, 8, 4, 0.5, 1.1);
+        p.observe(&[40, 1, 1, 1, 1, 1, 1, 1]);
+        assert_eq!(p.reshards, 1);
+        // the hot expert must sit alone on its shard
+        let hot = p.assign[0];
+        assert!(p.assign[1..].iter().all(|&s| s != hot), "{:?}", p.assign);
+    }
+
+    #[test]
+    fn accounting_step_produces_synthetic_argmax_and_stats() {
+        let cfg = ShardedServeConfig {
+            base: base(false, 2),
+            ep: 4,
+            ..ShardedServeConfig::default()
+        };
+        let mut ex = ShardedStepExecutor::new(cfg);
+        let tokens = step_tokens(16, 4, 2);
+        let out = ex
+            .execute_step(&StepInput { bucket: 16, rows: 4, tokens: &tokens })
+            .expect("sharded step");
+        assert_eq!(out.argmax.len(), 64);
+        assert_eq!(
+            out.argmax,
+            tokens.iter().map(|&v| synthetic_argmax(v)).collect::<Vec<_>>()
+        );
+        assert_eq!(out.expert_rows.iter().sum::<i32>(), 64 * 2);
+        let s = ex.stats();
+        assert_eq!(s.steps, 1);
+        assert_eq!(s.busy_s.len(), 4);
+        assert!(s.critical_s > 0.0);
+        assert!(s.imbalance_ratio() >= 1.0);
+        // ep > 1 pays all-to-all on every step
+        assert!(s.collective_s > 0.0);
+        assert_eq!(ex.steps(), 1);
+    }
+
+    #[test]
+    fn repeated_steps_hit_per_shard_plan_caches() {
+        let cfg = ShardedServeConfig {
+            base: base(false, 2),
+            ep: 2,
+            ..ShardedServeConfig::default()
+        };
+        let mut ex = ShardedStepExecutor::new(cfg);
+        let tokens = step_tokens(8, 3, 5);
+        let s = StepInput { bucket: 8, rows: 3, tokens: &tokens };
+        ex.execute_step(&s).expect("step 1");
+        ex.execute_step(&s).expect("step 2");
+        let agg = ex.cache_stats().expect("lanes cache plans");
+        // each busy lane misses once then hits once
+        assert_eq!(agg.hits, agg.misses);
+        assert!(agg.hits > 0);
+        let sh = ex.sharding().expect("sharded executor reports stats");
+        assert_eq!(sh.shard_cache.len(), 2);
+        assert_eq!(
+            sh.shard_cache.iter().map(|c| c.hits + c.misses).sum::<u64>(),
+            agg.hits + agg.misses
+        );
+    }
+
+    #[test]
+    fn tp_shrinks_columns_and_charges_allreduce() {
+        let cfg = ShardedServeConfig {
+            base: base(true, 2),
+            ep: 1,
+            tp: 2,
+            ..ShardedServeConfig::default()
+        };
+        let mut ex = ShardedStepExecutor::new(cfg);
+        assert_eq!(ex.shard_shape.d_ff, 6);
+        let lane_weights_shape = ex.lanes[0]
+            .inputs_mut()
+            .expect("numeric lane holds inputs")
+            .weights
+            .shape
+            .clone();
+        assert_eq!(lane_weights_shape, vec![8, 8, 6]);
+        let tokens = step_tokens(8, 2, 7);
+        let out = ex
+            .execute_step(&StepInput { bucket: 8, rows: 2, tokens: &tokens })
+            .expect("tp step");
+        // argmax over the local d_ff/tp slice
+        assert!(out.argmax.iter().all(|&a| (0..6).contains(&a)));
+        let s = ex.stats();
+        assert!(s.collective_s > 0.0, "tp=2 must pay an all-reduce");
+        // ep=1: no all-to-all, so the whole collective cost is the all-reduce
+        assert_eq!(s.busy_s.len(), 1);
+    }
+
+    #[test]
+    fn weight_slice_keeps_leading_columns() {
+        let full = expert_weights(2, 3, 4, 9);
+        let sliced = slice_columns(&full, 2, 3, 4, 2);
+        for e in 0..2 {
+            for k in 0..3 {
+                for j in 0..2 {
+                    assert_eq!(
+                        sliced.plane(e)[k * 2 + j],
+                        full.plane(e)[k * 4 + j],
+                        "e={e} k={k} j={j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_batch_is_a_typed_error() {
+        let mut ex = ShardedStepExecutor::new(ShardedServeConfig {
+            base: base(false, 2),
+            ep: 2,
+            ..ShardedServeConfig::default()
+        });
+        let tokens = vec![0; 10 * 16];
+        let err = ex
+            .execute_step(&StepInput { bucket: 16, rows: 10, tokens: &tokens })
+            .unwrap_err();
+        assert!(matches!(err, ExecError::PlanMismatch { .. }));
+    }
+}

@@ -19,6 +19,68 @@ use crate::serve::{StepExecutor, StepInput, StepOutput};
 use crate::util::rng::{Rng, SplitMix64};
 use crate::util::tensor::Tensor;
 
+/// Deterministic top-k route over packed token values: token `v` lands on
+/// experts `(|v| + j * experts/top_k) mod experts` for `j in 0..top_k`, so
+/// skewed token popularity (Zipf prompts) produces skewed expert load, and
+/// equal token multisets produce equal load signatures — the property the
+/// plan cache exploits.  Shared by [`SimStepExecutor`] and
+/// [`crate::serve::ShardedStepExecutor`] so the sharded path routes exactly
+/// like the single-shard path.
+pub fn route_topk(tokens: &[i32], experts: usize, top_k: usize) -> (TokenIndex, ExpertLoad) {
+    let stride = (experts / top_k).max(1);
+    let mut pairs = Vec::with_capacity(tokens.len() * top_k);
+    for (row, &v) in tokens.iter().enumerate() {
+        let base = v.unsigned_abs() as usize;
+        for j in 0..top_k {
+            pairs.push((row as u32, ((base + j * stride) % experts) as u32));
+        }
+    }
+    let ti = TokenIndex::build(experts, &pairs);
+    let load = ExpertLoad { counts: ti.counts() };
+    (ti, load)
+}
+
+/// Deterministic embedding of token values into `[seq, d_model]`
+/// activations (rows past the batch stay zero).  Equal `(token, seed)`
+/// pairs embed identically, so both serving executors see the same
+/// activations for the same traffic.
+pub fn embed_tokens(tokens: &[i32], seq: usize, d_model: usize, seed: u64) -> Tensor {
+    let mut t = Tensor::zeros(&[seq, d_model]);
+    for (r, &v) in tokens.iter().enumerate() {
+        let mut sm = SplitMix64((v as i64 as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ seed);
+        for x in t.row_mut(r) {
+            *x = (sm.next_u64() >> 40) as f32 / (1u64 << 24) as f32 - 0.5;
+        }
+    }
+    t
+}
+
+/// The deterministic synthetic expert weights the serving executors
+/// materialize once (`[experts, d_model, d_ff]`, the serving analog of
+/// device-resident parameters).  Seeded, so single-shard and sharded
+/// executors built from the same config hold bitwise-identical weights.
+pub fn expert_weights(experts: usize, d_model: usize, d_ff: usize, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    Tensor::randn(&[experts, d_model, d_ff], 0.1, &mut rng)
+}
+
+/// Synthetic next-token id for accounting-mode steps (no numerics ran):
+/// a fixed mix of the input token value.
+pub fn synthetic_argmax(v: i32) -> i32 {
+    (v.wrapping_mul(31).wrapping_add(7)) & 0x7FFF
+}
+
+/// Argmax over one output row (first index wins ties).
+pub(crate) fn argmax_row(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
 /// Configuration of the sim/CPU serving executor.
 #[derive(Clone, Debug)]
 pub struct SimServeConfig {
@@ -27,9 +89,13 @@ pub struct SimServeConfig {
     /// Token capacity of one formed batch (the session's `seq`); the batch
     /// policy's `max_tokens` must not exceed it.
     pub max_tokens: usize,
+    /// Experts in the simulated MoE layer.
     pub experts: usize,
+    /// Experts each token routes to.
     pub top_k: usize,
+    /// Activation width.
     pub d_model: usize,
+    /// Expert FFN width (output columns of each expert GEMM).
     pub d_ff: usize,
     /// LRU capacity of the plan cache.
     pub cache_capacity: usize,
@@ -60,14 +126,18 @@ impl Default for SimServeConfig {
 pub struct SimStepExecutor {
     cfg: SimServeConfig,
     shape: MoeShape,
+    /// The long-lived session.  In numeric mode it holds the synthetic
+    /// expert weights from construction (the serving analog of
+    /// device-resident parameters); only activations and routing are
+    /// replaced per step.
     session: ExecutionSession,
-    /// Synthetic expert weights, materialized once (the serving analog of
-    /// device-resident parameters) and cloned into each step's inputs.
-    weights: Tensor,
     steps: u64,
 }
 
 impl SimStepExecutor {
+    /// Build the executor: one long-lived session (plan cache included)
+    /// plus the synthetic expert weights.  Panics on inconsistent
+    /// configuration (no buckets, `top_k` out of range).
     pub fn new(cfg: SimServeConfig) -> Self {
         assert!(!cfg.buckets.is_empty(), "at least one bucket");
         assert!(cfg.top_k >= 1 && cfg.top_k <= cfg.experts, "1 <= top_k <= experts");
@@ -81,14 +151,17 @@ impl SimStepExecutor {
         };
         let mut session = ExecutionSession::new(shape).plan_cache(cfg.cache_capacity);
         if cfg.numeric {
-            session = session.backend(CpuBackend);
+            session = session.backend(CpuBackend).inputs(NumericInputs {
+                tokens: Tensor::zeros(&[shape.seq, shape.d_model]),
+                weights: expert_weights(cfg.experts, cfg.d_model, cfg.d_ff, cfg.seed),
+                token_index: TokenIndex { index: vec![Vec::new(); cfg.experts] },
+                gates: vec![Vec::new(); cfg.experts],
+            });
         }
-        let mut rng = Rng::new(cfg.seed);
-        let weights =
-            Tensor::randn(&[cfg.experts, cfg.d_model, cfg.d_ff], 0.1, &mut rng);
-        SimStepExecutor { cfg, shape, session, weights, steps: 0 }
+        SimStepExecutor { cfg, shape, session, steps: 0 }
     }
 
+    /// The session's problem shape (`seq` is the step token capacity).
     pub fn shape(&self) -> MoeShape {
         self.shape
     }
@@ -98,51 +171,17 @@ impl SimStepExecutor {
         self.steps
     }
 
-    /// Deterministic top-k route over packed token values: token `v` lands
-    /// on experts `(v + j * experts/top_k) mod experts`, so skewed token
-    /// popularity (Zipf prompts) produces skewed expert load, and equal
-    /// token multisets produce equal load signatures — the property the
-    /// plan cache exploits.
+    /// Route the packed tokens through the shared deterministic top-k
+    /// router ([`route_topk`]).
     fn route(&self, tokens: &[i32]) -> (TokenIndex, ExpertLoad) {
-        let e = self.cfg.experts;
-        let stride = (e / self.cfg.top_k).max(1);
-        let mut pairs = Vec::with_capacity(tokens.len() * self.cfg.top_k);
-        for (row, &v) in tokens.iter().enumerate() {
-            let base = v.unsigned_abs() as usize;
-            for j in 0..self.cfg.top_k {
-                pairs.push((row as u32, ((base + j * stride) % e) as u32));
-            }
-        }
-        let ti = TokenIndex::build(e, &pairs);
-        let load = ExpertLoad { counts: ti.counts() };
-        (ti, load)
+        route_topk(tokens, self.cfg.experts, self.cfg.top_k)
     }
 
-    /// Deterministic embedding of token values into `[seq, d_model]`
-    /// activations (rows past the batch stay zero).
+    /// Embed the packed tokens through the shared deterministic embedding
+    /// ([`embed_tokens`]).
     fn embed(&self, tokens: &[i32]) -> Tensor {
-        let mut t = Tensor::zeros(&[self.shape.seq, self.shape.d_model]);
-        for (r, &v) in tokens.iter().enumerate() {
-            let mut sm = SplitMix64(
-                (v as i64 as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ self.cfg.seed,
-            );
-            for x in t.row_mut(r) {
-                *x = (sm.next_u64() >> 40) as f32 / (1u64 << 24) as f32 - 0.5;
-            }
-        }
-        t
+        embed_tokens(tokens, self.shape.seq, self.shape.d_model, self.cfg.seed)
     }
-}
-
-/// Argmax over one output row.
-fn argmax_row(row: &[f32]) -> i32 {
-    let mut best = 0usize;
-    for (i, &v) in row.iter().enumerate() {
-        if v > row[best] {
-            best = i;
-        }
-    }
-    best as i32
 }
 
 impl StepExecutor for SimStepExecutor {
@@ -183,23 +222,20 @@ impl StepExecutor for SimStepExecutor {
                 .map(|rows| vec![gate; rows.len()])
                 .collect();
             let tokens = self.embed(step.tokens);
-            // NumericInputs owns its tensors, so the (sim-scale, ~100 KB)
-            // weights are cloned per step; a real deployment keeps weights
-            // device-resident (PjrtBackend::warm) instead
-            let weights = self.weights.clone();
-            self.session
-                .set_inputs(Some(NumericInputs { tokens, weights, token_index, gates }));
+            // in-place input update: the weights set at construction stay
+            // resident (like PjrtBackend::warm); only activations and
+            // routing change per step
+            let inputs = self.session.inputs_mut().expect("numeric session holds inputs");
+            inputs.tokens = tokens;
+            inputs.token_index = token_index;
+            inputs.gates = gates;
         }
         let out = self.session.run(&load)?;
         let argmax = match &out.output {
             // real numerics: argmax of each token's combined [d_ff] output
             Some(t) => (0..total).map(|r| argmax_row(t.row(r))).collect(),
             // accounting backend: deterministic synthetic next-token ids
-            None => step
-                .tokens
-                .iter()
-                .map(|&v| (v.wrapping_mul(31).wrapping_add(7)) & 0x7FFF)
-                .collect(),
+            None => step.tokens.iter().map(|&v| synthetic_argmax(v)).collect(),
         };
         self.steps += 1;
         Ok(StepOutput {

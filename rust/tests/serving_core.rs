@@ -109,6 +109,63 @@ fn sim_server_serves_64_requests_end_to_end_with_cache_hits() {
 }
 
 #[test]
+fn plan_cache_under_capacity_pressure_evicts_and_keeps_counting() {
+    // 3 distinct batch shapes cycle through a 2-entry cache: the LRU entry
+    // is always the shape about to recur, so every step misses (sequential
+    // scan thrash) while occupancy stays at the bound — the eviction path
+    // the hit-path test above never reaches.
+    let executor = SimStepExecutor::new(SimServeConfig {
+        buckets: vec![16, 64, 256],
+        max_tokens: 2048,
+        experts: 16,
+        top_k: 2,
+        d_model: 16,
+        d_ff: 32,
+        cache_capacity: 2, // deliberately below the 3 distinct signatures
+        numeric: false,
+        seed: 9,
+    });
+    let mut server = Server::new(
+        ServerConfig {
+            policy: BatchPolicy { buckets: Vec::new(), max_requests: 8, max_tokens: 2048 },
+            queue_capacity: 128,
+            poll: Duration::from_millis(1),
+        },
+        executor,
+    );
+    let mut rng = Rng::new(3);
+    let w = zipf_weights(500, 1.3);
+    let short = zipf_prompt(12, &mut rng, &w);
+    let medium = zipf_prompt(48, &mut rng, &w);
+    let long = zipf_prompt(200, &mut rng, &w);
+    let queue = server.queue();
+    let mut receivers = Vec::new();
+    for i in 0..64u64 {
+        let tokens = match i % 16 {
+            0..=7 => short.clone(),
+            8..=12 => medium.clone(),
+            _ => long.clone(),
+        };
+        let (tx, rx) = channel();
+        queue.try_push(Request { id: i, tokens, enqueued: Instant::now(), respond: tx });
+        receivers.push(rx);
+    }
+    queue.close();
+    server.serve();
+    for rx in &receivers {
+        assert!(rx.try_recv().expect("response").error.is_none());
+    }
+    // same deterministic formation as above: 12 batches, 3 distinct load
+    // signatures cycling short -> medium -> long
+    let snap = server.metrics().snapshot();
+    assert_eq!(snap.batches, 12);
+    assert_eq!(snap.plan_cache_misses, 12, "every lookup thrashes the 2-entry LRU");
+    assert_eq!(snap.plan_cache_hits, 0);
+    let stats = server.executor().cache_stats().expect("sim executor caches plans");
+    assert_eq!(stats.entries, 2, "occupancy pinned at capacity");
+}
+
+#[test]
 fn mixed_valid_and_oversized_traffic_accounts_cleanly() {
     let executor = SimStepExecutor::new(SimServeConfig {
         buckets: vec![16],
