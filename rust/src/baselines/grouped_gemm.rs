@@ -81,7 +81,7 @@ impl Backend for GroupedGemm {
         ctx: &mut ExecContext<'_>,
     ) -> Result<Outcome, ExecError> {
         let load = plan.expert_load();
-        let (sim, blocks) = Self::simulate_load(&plan.shape, &load, &ctx.spec);
+        let (sim, blocks) = Self::simulate_load(&plan.shape(), &load, &ctx.spec);
         Ok(Outcome { backend: self.name(), blocks, sim: Some(sim), output: None, trace: None })
     }
 }

@@ -207,6 +207,113 @@ mod tests {
     }
 
     #[test]
+    fn property_two_level_and_warp_match_scalar_at_scale() {
+        // N ≫ 32 tasks — the regime the flat prefix needs multiple warp
+        // passes for and the 2-level prefix exists for — with ~half the
+        // tasks empty, under both padding schemes (repeat-last and the
+        // PAD_MAX sentinel).
+        prop::check(
+            "two-level-at-scale",
+            40,
+            |g| {
+                let n = 33 + g.rng.usize_below(g.size * 30 + 200);
+                let tiles: Vec<u32> = (0..n)
+                    .map(|_| if g.rng.below(2) == 0 { 0 } else { g.rng.below(4) as u32 + 1 })
+                    .collect();
+                let group = 8 + g.rng.usize_below(64);
+                (tiles, group)
+            },
+            |(tiles, group)| {
+                let prefix = build_from_counts(tiles);
+                let total: u32 = tiles.iter().sum();
+                let width = prefix.len().div_ceil(WARP_SIZE) * WARP_SIZE;
+                let padded = pad_to(&prefix, width);
+                let sentinel = pad_to_max(&prefix, width);
+                let tl = TwoLevelPrefix::build(tiles, *group);
+                if tl.total_tiles() != total {
+                    return Err(format!("two-level total {} != {total}", tl.total_tiles()));
+                }
+                if total == 0 {
+                    // all-empty prefix: nothing to decode, nothing to launch
+                    return Ok(());
+                }
+                // sample the grid (always including the boundary blocks)
+                let step = (total as usize / 97).max(1);
+                let blocks = (0..total).step_by(step).chain([total - 1]);
+                for b in blocks {
+                    let want = map_scalar(&prefix, b);
+                    let (w1, p1) = map_warp(&padded, b);
+                    let (w2, p2) = map_warp(&sentinel, b);
+                    let (t, pt) = map_two_level(&tl, b);
+                    if w1 != want || w2 != want {
+                        return Err(format!("warp decode diverges at block {b}"));
+                    }
+                    if t != want {
+                        return Err(format!("two-level decode diverges at block {b}"));
+                    }
+                    // pass-count sanity: never more than a full scan
+                    let max_flat = prefix.len().div_ceil(WARP_SIZE);
+                    if p1 > max_flat || p2 > max_flat {
+                        return Err(format!("flat passes {p1}/{p2} exceed scan bound"));
+                    }
+                    let max_two = tl.l1.len().div_ceil(WARP_SIZE)
+                        + (*group).min(tl.l0.len()).div_ceil(WARP_SIZE);
+                    if pt > max_two {
+                        return Err(format!("two-level passes {pt} exceed bound {max_two}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn warp_pass_counts_monotone_in_task_count() {
+        // decoding the LAST block is the worst case: the flat prefix scans
+        // ⌈N/32⌉ chunks, so passes must grow monotonically with N, while
+        // the 2-level prefix stays at 2 passes until N outgrows 32 groups
+        let mut last_flat = 0usize;
+        let mut last_two = 0usize;
+        for n in [32usize, 64, 128, 256, 512, 1024] {
+            let tiles = vec![1u32; n];
+            let prefix = build_from_counts(&tiles);
+            let last_block = (n - 1) as u32;
+            let (m, flat) = map_warp(&prefix, last_block);
+            assert_eq!(m, TileMapping { task: last_block, tile: 0 });
+            assert_eq!(flat, n.div_ceil(32), "flat passes scan the whole prefix");
+            assert!(flat >= last_flat, "flat passes must be monotone in N");
+            let tl = TwoLevelPrefix::build(&tiles, 32);
+            let (m2, two) = map_two_level(&tl, last_block);
+            assert_eq!(m2, map_scalar(&prefix, last_block));
+            assert!(two >= last_two, "two-level passes must be monotone in N");
+            if n > 64 {
+                assert!(
+                    two < flat,
+                    "two-level must beat the flat scan for N={n}: {two} vs {flat}"
+                );
+            }
+            last_flat = flat;
+            last_two = two;
+        }
+        // the whole point of the 2-level prefix: 1024 tasks in 2 passes
+        assert_eq!(last_two, 2);
+        assert_eq!(last_flat, 32);
+    }
+
+    #[test]
+    fn all_empty_prefix_decodes_nothing_under_every_variant() {
+        // every task empty: total is 0, and the padded/sentinel arrays
+        // must report 0 launchable tiles rather than decoding garbage
+        let tiles = vec![0u32; 100];
+        let prefix = build_from_counts(&tiles);
+        assert_eq!(*prefix.last().unwrap(), 0);
+        let sentinel = pad_to_max(&prefix, 128);
+        assert_eq!(crate::batching::tile_prefix::total_tiles(&sentinel), 0);
+        let tl = TwoLevelPrefix::build(&tiles, 32);
+        assert_eq!(tl.total_tiles(), 0);
+    }
+
+    #[test]
     fn property_all_variants_agree_and_invert() {
         prop::check(
             "mapping-inverts-prefix",

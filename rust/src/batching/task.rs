@@ -17,6 +17,11 @@ pub enum TaskKind {
     ReduceSum,
     /// Element-wise map — memory bound, trivially tileable.
     ElementWise,
+    /// Decode-step attention over one sequence's KV cache, chunked by the
+    /// KV-tiling strategy `strategy` (index into
+    /// [`crate::workload::ragged::KV_CATALOG`]).  `rows` is the KV length,
+    /// `cols` the head count, `inner` the head dim.
+    AttentionDecode { strategy: usize },
 }
 
 impl TaskKind {
@@ -26,6 +31,9 @@ impl TaskKind {
             TaskKind::Gemm { strategy } => 16 + strategy,
             TaskKind::ReduceSum => 0,
             TaskKind::ElementWise => 1,
+            // ids 4.. stay clear of the GEMM range (16..) for any
+            // realistically sized KV catalog
+            TaskKind::AttentionDecode { strategy } => 4 + strategy,
         }
     }
 }
@@ -70,6 +78,10 @@ impl TaskDescriptor {
             TaskKind::Gemm { .. } => 2 * self.rows as u64 * self.cols as u64 * self.inner as u64,
             TaskKind::ReduceSum => (self.rows as u64) * (self.inner as u64),
             TaskKind::ElementWise => (self.rows as u64) * (self.cols as u64),
+            // per head: QKᵀ (2·L·D) + PV (2·L·D)
+            TaskKind::AttentionDecode { .. } => {
+                4 * self.rows as u64 * self.cols as u64 * self.inner as u64
+            }
         }
     }
 
@@ -85,6 +97,11 @@ impl TaskDescriptor {
             }
             TaskKind::ReduceSum => self.rows as u64 * self.inner as u64 + self.rows as u64,
             TaskKind::ElementWise => 2 * self.rows as u64 * self.cols as u64,
+            TaskKind::AttentionDecode { .. } => {
+                // K + V reads per head, plus the query and output vectors
+                2 * self.rows as u64 * self.cols as u64 * self.inner as u64
+                    + 2 * self.cols as u64 * self.inner as u64
+            }
         }
     }
 }
@@ -125,6 +142,8 @@ mod tests {
         let ids = [
             TaskKind::ReduceSum.dispatch_id(),
             TaskKind::ElementWise.dispatch_id(),
+            TaskKind::AttentionDecode { strategy: 0 }.dispatch_id(),
+            TaskKind::AttentionDecode { strategy: 3 }.dispatch_id(),
             TaskKind::Gemm { strategy: 0 }.dispatch_id(),
             TaskKind::Gemm { strategy: 1 }.dispatch_id(),
         ];

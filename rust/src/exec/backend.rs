@@ -1,18 +1,30 @@
 //! The [`Backend`] trait and its execution context / outcome types.
+//!
+//! Both are generic over the [`Workload`] being executed (defaulting to
+//! [`MoeWorkload`] so MoE call sites read as before): an accounting
+//! backend like [`crate::exec::SimBackend`] implements `Backend<W>` for
+//! every workload, while numeric backends implement it per workload they
+//! know how to compute — [`crate::exec::CpuBackend`] for MoE here and for
+//! ragged attention in [`crate::workload::ragged`], the PJRT deployment
+//! backend for MoE only.
 
 use crate::batching::dispatch::DispatchRecord;
 use crate::exec::error::ExecError;
 use crate::moe::config::MoeShape;
-use crate::moe::planner::ExecutionPlan;
+use crate::moe::planner::MoeWorkload;
 use crate::moe::routing::ExpertLoad;
 use crate::moe::token_index::TokenIndex;
 use crate::sim::specs::GpuSpec;
 use crate::sim::trace::SimResult;
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
+use crate::workload::plan::Plan;
+use crate::workload::Workload;
 
 /// Real tensors for one MoE step — required by numeric backends (CPU,
 /// PJRT), ignored by accounting-only backends (simulator, baselines).
+/// This is [`MoeWorkload`]'s `Inputs` type; ragged attention has its own
+/// ([`crate::workload::ragged::RaggedInputs`]).
 pub struct NumericInputs {
     /// `[seq, d_model]` original token sequence.
     pub tokens: Tensor,
@@ -51,32 +63,32 @@ impl NumericInputs {
 
 /// Everything a backend may need beyond the plan itself.
 ///
-/// The same context type serves all backends; each consumes the parts it
-/// needs and errors with [`ExecError::MissingInputs`] when a required part
-/// is absent — so call sites wire up *one* structure regardless of which
-/// backend runs.
-pub struct ExecContext<'a> {
+/// The same context type serves all backends of a workload; each consumes
+/// the parts it needs and errors with [`ExecError::MissingInputs`] when a
+/// required part is absent — so call sites wire up *one* structure
+/// regardless of which backend runs.
+pub struct ExecContext<'a, W: Workload = MoeWorkload> {
     /// Hardware model the accounting backends charge costs against.
     pub spec: GpuSpec,
-    /// Real tensors for numeric backends.
-    pub numeric: Option<&'a NumericInputs>,
+    /// Real tensors for numeric backends (the workload's `Inputs` type).
+    pub numeric: Option<&'a W::Inputs>,
     /// When set, backends that execute the plan's grid (sim, CPU,
     /// two-phase) record their per-block dispatch sequence in
     /// [`Outcome::trace`] (used by cross-backend agreement tests).
     /// Backends that re-schedule the work under their own tiling
-    /// (grouped GEMM, naive loop) have no plan-shaped sequence to record
-    /// and return `None`.
+    /// (grouped GEMM, naive loop, padded-dense) have no plan-shaped
+    /// sequence to record and return `None`.
     pub record_dispatch: bool,
 }
 
-impl<'a> ExecContext<'a> {
+impl<'a, W: Workload> ExecContext<'a, W> {
     /// A context with only a hardware model (accounting backends).
     pub fn new(spec: GpuSpec) -> Self {
         ExecContext { spec, numeric: None, record_dispatch: false }
     }
 
     /// Attach real tensors (numeric backends).
-    pub fn with_numeric(mut self, numeric: &'a NumericInputs) -> Self {
+    pub fn with_numeric(mut self, numeric: &'a W::Inputs) -> Self {
         self.numeric = Some(numeric);
         self
     }
@@ -98,7 +110,7 @@ pub struct Outcome {
     pub blocks: u32,
     /// Simulated timing/throughput (accounting backends).
     pub sim: Option<SimResult>,
-    /// Numeric output (CPU: `[seq, d_ff]` combined; PJRT: packed rows).
+    /// Numeric output (CPU: combined rows; PJRT: packed rows).
     pub output: Option<Tensor>,
     /// Per-block dispatch sequence, when requested via
     /// [`ExecContext::record_dispatch`].
@@ -131,27 +143,29 @@ impl Outcome {
 }
 
 /// One typed execution surface for every way this crate can run a static
-/// batch plan: roofline simulation, CPU numerics, the paper's baselines,
-/// and (behind the `pjrt` feature) the AOT Pallas kernel.
+/// batch plan of workload `W`: roofline simulation, CPU numerics, the
+/// paper's baselines, and (behind the `pjrt` feature) the AOT Pallas
+/// kernel.
 ///
 /// Backends are intentionally `&mut self`: real runtimes hold compiled
 /// executables and device-resident buffers.
-pub trait Backend {
+pub trait Backend<W: Workload = MoeWorkload> {
     /// Stable display name (`sim/ours`, `cpu`, `baseline/grouped-gemm`, ...).
     fn name(&self) -> &'static str;
 
     /// Execute `plan` and report what happened.
     fn execute(
         &mut self,
-        plan: &ExecutionPlan,
-        ctx: &mut ExecContext<'_>,
+        plan: &Plan<W>,
+        ctx: &mut ExecContext<'_, W>,
     ) -> Result<Outcome, ExecError>;
 }
 
 /// The dispatch sequence the fused kernel performs for `plan`: block index
 /// → Algorithm 4 two-stage decode → (task, tile, kind).  This is the
-/// ground truth accounting backends report when tracing is requested.
-pub fn mapping_trace(plan: &ExecutionPlan) -> Vec<DispatchRecord> {
+/// ground truth accounting backends report when tracing is requested, for
+/// any workload.
+pub fn mapping_trace<W: Workload>(plan: &Plan<W>) -> Vec<DispatchRecord> {
     let descs = plan.descriptors();
     (0..plan.total_tiles())
         .map(|block| {
@@ -167,6 +181,7 @@ mod tests {
     use crate::moe::config::MoeShape;
     use crate::moe::planner::Planner;
     use crate::moe::routing::LoadScenario;
+    use crate::workload::ragged::{RaggedAttentionWorkload, RaggedLoad};
 
     #[test]
     fn mapping_trace_covers_every_block_in_order() {
@@ -180,6 +195,19 @@ mod tests {
         for r in &trace {
             assert_eq!(r.tile, seen_tiles[r.task as usize]);
             seen_tiles[r.task as usize] += 1;
+        }
+    }
+
+    #[test]
+    fn mapping_trace_is_workload_generic() {
+        let w = RaggedAttentionWorkload { heads: 2, head_dim: 8, dtype_bytes: 4 };
+        let plan = crate::workload::plan::Planner::for_workload(w)
+            .plan(&RaggedLoad { lens: vec![40, 0, 7] });
+        let trace = mapping_trace(&plan);
+        assert_eq!(trace.len() as u32, plan.total_tiles());
+        let descs = plan.descriptors();
+        for r in &trace {
+            assert_eq!(r.kind, descs[r.task as usize].kind);
         }
     }
 

@@ -1,13 +1,15 @@
-//! First-party backends: the roofline simulator (four mapping modes) and
-//! the CPU numeric executor.  The paper's baselines implement [`Backend`]
-//! in [`crate::baselines`]; the PJRT deployment backend lives in
-//! [`crate::runtime`] behind the `pjrt` feature.
+//! First-party backends: the roofline simulator (four mapping modes,
+//! workload-generic) and the CPU numeric executor.  The paper's baselines
+//! implement [`Backend`] in [`crate::baselines`]; the PJRT deployment
+//! backend lives in [`crate::runtime`] behind the `pjrt` feature.
 
-use crate::exec::backend::{Backend, ExecContext, mapping_trace, Outcome};
+use crate::exec::backend::{mapping_trace, Backend, ExecContext, Outcome};
 use crate::exec::error::ExecError;
 use crate::moe::cpu_exec;
-use crate::moe::planner::ExecutionPlan;
+use crate::moe::planner::MoeWorkload;
 use crate::sim::kernel_sim;
+use crate::workload::plan::Plan;
+use crate::workload::Workload;
 
 /// Which mapping mechanism the simulator charges for (experiments A2/A4).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -23,7 +25,10 @@ pub enum SimMode {
     PaddedEmpty,
 }
 
-/// The calibrated GPU execution simulator as a [`Backend`].
+/// The calibrated GPU execution simulator as a [`Backend`].  Purely
+/// accounting, so one implementation serves *every* [`Workload`] — the
+/// workload supplies its tile cost stream via
+/// [`Workload::tiles`](crate::workload::Workload::tiles).
 pub struct SimBackend {
     mode: SimMode,
 }
@@ -60,7 +65,7 @@ impl SimBackend {
     }
 }
 
-impl Backend for SimBackend {
+impl<W: Workload> Backend<W> for SimBackend {
     fn name(&self) -> &'static str {
         match self.mode {
             SimMode::Ours => "sim/ours",
@@ -72,8 +77,8 @@ impl Backend for SimBackend {
 
     fn execute(
         &mut self,
-        plan: &ExecutionPlan,
-        ctx: &mut ExecContext<'_>,
+        plan: &Plan<W>,
+        ctx: &mut ExecContext<'_, W>,
     ) -> Result<Outcome, ExecError> {
         let sim = match self.mode {
             SimMode::Ours => kernel_sim::simulate_ours(plan, &ctx.spec),
@@ -83,7 +88,7 @@ impl Backend for SimBackend {
         };
         let trace = ctx.record_dispatch.then(|| mapping_trace(plan));
         Ok(Outcome {
-            backend: self.name(),
+            backend: <Self as Backend<W>>::name(self),
             blocks: plan.total_tiles(),
             sim: Some(sim),
             output: None,
@@ -93,19 +98,21 @@ impl Backend for SimBackend {
 }
 
 /// The CPU numeric executor as a [`Backend`]: runs the plan *through the
-/// framework dispatch* on real tensors and returns `[seq, d_ff]` combined
-/// outputs.  Requires [`ExecContext::numeric`].
+/// framework dispatch* on real tensors and returns combined outputs.
+/// Implemented per workload it can compute — for MoE here (expert GEMMs +
+/// gated combine; requires [`ExecContext::numeric`]) and for ragged
+/// attention in [`crate::workload::ragged`] (flash-decode numerics).
 pub struct CpuBackend;
 
-impl Backend for CpuBackend {
+impl Backend<MoeWorkload> for CpuBackend {
     fn name(&self) -> &'static str {
         "cpu"
     }
 
     fn execute(
         &mut self,
-        plan: &ExecutionPlan,
-        ctx: &mut ExecContext<'_>,
+        plan: &Plan<MoeWorkload>,
+        ctx: &mut ExecContext<'_, MoeWorkload>,
     ) -> Result<Outcome, ExecError> {
         let n = ctx
             .numeric
@@ -118,7 +125,7 @@ impl Backend for CpuBackend {
         };
         let (output, trace) = cpu_exec::execute_traced(plan, &inputs, ctx.record_dispatch)?;
         Ok(Outcome {
-            backend: self.name(),
+            backend: "cpu",
             blocks: plan.total_tiles(),
             sim: None,
             output: Some(output),
@@ -134,6 +141,7 @@ mod tests {
     use crate::moe::planner::Planner;
     use crate::moe::routing::LoadScenario;
     use crate::sim::specs::GpuSpec;
+    use crate::workload::ragged::{RaggedAttentionWorkload, RaggedLoad};
 
     #[test]
     fn sim_backend_matches_direct_kernel_sim() {
@@ -155,6 +163,18 @@ mod tests {
         let out = SimBackend::ours().execute(&plan, &mut ctx).unwrap();
         let trace = out.trace.expect("trace requested");
         assert_eq!(trace.len() as u32, plan.total_tiles());
+    }
+
+    #[test]
+    fn sim_backend_is_workload_generic() {
+        // the same SimBackend value type executes a ragged-attention plan
+        let w = RaggedAttentionWorkload { heads: 4, head_dim: 16, dtype_bytes: 2 };
+        let plan = crate::workload::plan::Planner::for_workload(w)
+            .plan(&RaggedLoad { lens: vec![600, 0, 31, 4] });
+        let mut ctx = ExecContext::new(GpuSpec::h800());
+        let out = SimBackend::ours().execute(&plan, &mut ctx).unwrap();
+        assert_eq!(out.blocks, plan.total_tiles());
+        assert!(out.time_s() > 0.0);
     }
 
     #[test]

@@ -7,15 +7,15 @@
 use crate::exec::backend::Outcome;
 use crate::exec::error::ExecError;
 use crate::exec::session::ExecutionSession;
-use crate::moe::routing::ExpertLoad;
 use crate::util::bench::{self, Timing};
+use crate::workload::Workload;
 
-/// Wallclock-time `session.run(load)` (`warmup` + `iters` runs).  Returns
-/// the timing stats and the outcome of the final run.
-pub fn time_session(
+/// Wallclock-time `session.run(load)` (`warmup` + `iters` runs) for any
+/// workload.  Returns the timing stats and the outcome of the final run.
+pub fn time_session<W: Workload>(
     label: &str,
-    session: &mut ExecutionSession,
-    load: &ExpertLoad,
+    session: &mut ExecutionSession<W>,
+    load: &W::Load,
     warmup: usize,
     iters: usize,
 ) -> Result<(Timing, Outcome), ExecError> {

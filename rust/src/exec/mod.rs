@@ -3,12 +3,18 @@
 //! The paper's central claim is that *one* static batching framework
 //! (two-stage mapping + per-task dispatch) drives heterogeneous workloads
 //! through a single kernel entry point.  This module is the Rust-side
-//! mirror of that claim: every way the crate can execute an
-//! [`ExecutionPlan`](crate::moe::planner::ExecutionPlan) — the calibrated
-//! roofline simulator, the CPU numeric executor, the three paper
-//! baselines, and (behind the `pjrt` feature) the AOT Pallas kernel — sits
-//! behind the same [`Backend`] trait, and every call site builds and runs
-//! plans through one [`ExecutionSession`] builder:
+//! mirror of that claim: every way the crate can execute a
+//! [`Plan`](crate::workload::plan::Plan) of any
+//! [`Workload`](crate::workload::Workload) — the calibrated roofline
+//! simulator, the CPU numeric executors, the three paper baselines, and
+//! (behind the `pjrt` feature) the AOT Pallas kernel — sits behind the
+//! same [`Backend`] trait, and every call site builds and runs plans
+//! through one [`ExecutionSession`] builder.  `Backend`, `ExecContext`,
+//! and `ExecutionSession` default their workload parameter to
+//! [`MoeWorkload`](crate::moe::planner::MoeWorkload), so the MoE surface
+//! reads exactly as before; `ExecutionSession::for_workload` opens the
+//! same builder for any other workload (e.g.
+//! [`crate::workload::ragged::RaggedAttentionWorkload`]):
 //!
 //! ```
 //! use staticbatch::exec::{ExecutionSession, SimBackend};
@@ -46,6 +52,7 @@ pub use error::ExecError;
 pub use session::ExecutionSession;
 
 // plan-cache types, re-exported for `ExecutionSession::plan_cache` callers
+// (the MoE instantiation; the generic cache is `crate::workload::cache`)
 pub use crate::moe::plan_cache::{CacheStats, PlanCache};
 
 use crate::baselines::{GroupedGemm, NaiveLoop, TwoPhase};

@@ -1,62 +1,82 @@
 //! [`ExecutionSession`]: the one builder every call site uses to go from a
-//! routing outcome to an executed plan.
+//! load to an executed plan — for any [`Workload`].
 //!
 //! ```text
-//! ExecutionSession::new(shape)
+//! ExecutionSession::new(shape)                 // MoE (the default workload)
 //!     .ordering(OrderingStrategy::HalfInterval)
 //!     .backend(SimBackend::ours())
 //!     .gpu(GpuSpec::h800())
 //!     .run(&load)?
+//!
+//! ExecutionSession::for_workload(ragged)       // any other Workload
+//!     .backend(SimBackend::ours())
+//!     .run(&ragged_load)?
 //! ```
 //!
 //! The session owns plan construction (ordering + tiling policy → the
-//! [`Planner`]) and the backend; `run` builds the [`ExecutionPlan`] and an
-//! [`ExecContext`] and hands both to the backend.  Swapping the executor —
-//! simulator, CPU numerics, a baseline, the PJRT deployment path — is one
-//! builder call, with no other changes at the call site.
+//! [`Planner`]) and the backend; `run` builds the plan (through the plan
+//! cache when one is enabled) and an [`ExecContext`] and hands both to the
+//! backend.  Swapping the executor — simulator, CPU numerics, a baseline,
+//! the PJRT deployment path — is one builder call, with no other changes
+//! at the call site.
 
 use std::sync::Arc;
 
-use crate::exec::backend::{Backend, ExecContext, NumericInputs, Outcome};
+use crate::exec::backend::{Backend, ExecContext, Outcome};
 use crate::exec::backends::SimBackend;
 use crate::exec::error::ExecError;
 use crate::moe::config::MoeShape;
 use crate::moe::ordering::OrderingStrategy;
-use crate::moe::plan_cache::{CacheStats, PlanCache};
-use crate::moe::planner::{ExecutionPlan, Planner};
-use crate::moe::routing::ExpertLoad;
+use crate::moe::planner::MoeWorkload;
 use crate::moe::tiling::StrategyId;
 use crate::sim::specs::GpuSpec;
+use crate::workload::cache::{CacheStats, PlanCache};
+use crate::workload::plan::{Plan, Planner};
+use crate::workload::Workload;
 
 /// The one place a session's configuration becomes an [`ExecContext`] —
-/// both run paths (owned backend, caller-owned backend) go through here.
-fn make_ctx<'a>(
+/// all run paths (owned backend, caller-owned backend) go through here.
+fn make_ctx<'a, W: Workload>(
     spec: &GpuSpec,
-    numeric: Option<&'a NumericInputs>,
+    numeric: Option<&'a W::Inputs>,
     record_dispatch: bool,
-) -> ExecContext<'a> {
+) -> ExecContext<'a, W> {
     ExecContext { spec: spec.clone(), numeric, record_dispatch }
 }
 
 /// Builder + runner for plan execution. See module docs.
-pub struct ExecutionSession {
-    planner: Planner,
+pub struct ExecutionSession<W: Workload = MoeWorkload> {
+    planner: Planner<W>,
     spec: GpuSpec,
-    numeric: Option<NumericInputs>,
+    numeric: Option<W::Inputs>,
     record_dispatch: bool,
-    backend: Box<dyn Backend>,
+    backend: Box<dyn Backend<W>>,
     /// Optional LRU plan cache between routing and the planner; entries are
     /// valid for exactly this session's planner configuration, so any
     /// ordering/tiling change clears it.
-    cache: Option<PlanCache>,
+    cache: Option<PlanCache<W>>,
 }
 
-impl ExecutionSession {
-    /// New session for a problem shape. Defaults: half-interval ordering,
-    /// per-task tiling, [`SimBackend::ours`] on H800, no plan cache.
+impl ExecutionSession<MoeWorkload> {
+    /// New MoE session for a problem shape. Defaults: half-interval
+    /// ordering, per-task tiling, [`SimBackend::ours`] on H800, no plan
+    /// cache.
     pub fn new(shape: MoeShape) -> Self {
+        Self::for_workload(MoeWorkload::new(shape))
+    }
+
+    /// The MoE problem shape this session plans for.
+    pub fn shape(&self) -> MoeShape {
+        self.planner.workload().shape
+    }
+}
+
+impl<W: Workload> ExecutionSession<W> {
+    /// New session for any workload, same defaults as
+    /// [`ExecutionSession::new`].
+    pub fn for_workload(workload: W) -> Self {
         ExecutionSession {
-            planner: Planner::new(shape),
+            planner: Planner::for_workload(workload),
             spec: GpuSpec::h800(),
             numeric: None,
             record_dispatch: false,
@@ -65,9 +85,15 @@ impl ExecutionSession {
         }
     }
 
-    /// Expert ordering strategy (paper Section 4.2).
+    /// The workload this session plans for.
+    pub fn workload(&self) -> &W {
+        self.planner.workload()
+    }
+
+    /// Task ordering strategy (paper Section 4.2).  Clears the plan cache:
+    /// cached plans are valid for exactly one planner configuration.
     pub fn ordering(mut self, ordering: OrderingStrategy) -> Self {
-        self.planner.ordering = ordering;
+        self.planner.set_ordering(ordering);
         if let Some(c) = &mut self.cache {
             c.clear();
         }
@@ -75,18 +101,20 @@ impl ExecutionSession {
     }
 
     /// Force one tiling strategy for every task (grouped-GEMM style);
-    /// default is per-task selection from the catalog.
+    /// default is per-task selection from the catalog.  Clears the plan
+    /// cache, like [`Self::ordering`].
     pub fn tiling(mut self, strategy: StrategyId) -> Self {
-        self.planner.force_strategy = Some(strategy);
+        self.planner.set_force_strategy(Some(strategy));
         if let Some(c) = &mut self.cache {
             c.clear();
         }
         self
     }
 
-    /// Cache built plans in an LRU of `capacity` entries keyed by the load
-    /// signature (per-expert counts), so repeated load shapes skip the
-    /// σ / ordering / tiling / TilePrefix reconstruction on the hot path.
+    /// Cache built plans in an LRU of `capacity` entries keyed by the
+    /// workload's load signature (per-expert counts for MoE, KV lengths
+    /// for ragged attention), so repeated load shapes skip the σ /
+    /// ordering / tiling / TilePrefix reconstruction on the hot path.
     pub fn plan_cache(mut self, capacity: usize) -> Self {
         self.cache = Some(PlanCache::new(capacity));
         self
@@ -98,12 +126,12 @@ impl ExecutionSession {
     }
 
     /// The backend that will execute plans.
-    pub fn backend(self, backend: impl Backend + 'static) -> Self {
+    pub fn backend(self, backend: impl Backend<W> + 'static) -> Self {
         self.boxed_backend(Box::new(backend))
     }
 
     /// Like [`Self::backend`], for already-boxed backends (registry loops).
-    pub fn boxed_backend(mut self, backend: Box<dyn Backend>) -> Self {
+    pub fn boxed_backend(mut self, backend: Box<dyn Backend<W>>) -> Self {
         self.backend = backend;
         self
     }
@@ -115,7 +143,7 @@ impl ExecutionSession {
     }
 
     /// Attach real tensors for numeric backends (CPU, PJRT).
-    pub fn inputs(mut self, numeric: NumericInputs) -> Self {
+    pub fn inputs(mut self, numeric: W::Inputs) -> Self {
         self.numeric = Some(numeric);
         self
     }
@@ -123,7 +151,7 @@ impl ExecutionSession {
     /// Replace (or drop) the numeric inputs on an already-built session —
     /// the per-step path for serving executors that stream new tensors
     /// through one long-lived session.
-    pub fn set_inputs(&mut self, numeric: Option<NumericInputs>) {
+    pub fn set_inputs(&mut self, numeric: Option<W::Inputs>) {
         self.numeric = numeric;
     }
 
@@ -131,7 +159,7 @@ impl ExecutionSession {
     /// alternative to [`Self::set_inputs`] for executors that stream new
     /// activations per step while the parts that never change (the serving
     /// analog of device-resident weights) stay put uncopied.
-    pub fn inputs_mut(&mut self) -> Option<&mut NumericInputs> {
+    pub fn inputs_mut(&mut self) -> Option<&mut W::Inputs> {
         self.numeric.as_mut()
     }
 
@@ -146,50 +174,48 @@ impl ExecutionSession {
         self.backend.name()
     }
 
-    /// The problem shape this session plans for.
-    pub fn shape(&self) -> MoeShape {
-        self.planner.shape
-    }
-
-    /// Build the static batch plan for a routing outcome (host-side work:
-    /// σ, ordering, per-task tiling, compressed TilePrefix).  Always plans
+    /// Build the static batch plan for a load (host-side work: σ,
+    /// ordering, per-task tiling, compressed TilePrefix).  Always plans
     /// fresh; the cached path is [`Self::plan_shared`].
-    pub fn plan(&self, load: &ExpertLoad) -> ExecutionPlan {
+    pub fn plan(&self, load: &W::Load) -> Plan<W> {
         self.planner.plan(load)
     }
 
     /// Plan through the cache when one is enabled (shared `Arc` on hits),
     /// falling back to a fresh build otherwise.
-    pub fn plan_shared(&mut self, load: &ExpertLoad) -> Arc<ExecutionPlan> {
+    pub fn plan_shared(&mut self, load: &W::Load) -> Arc<Plan<W>> {
         match &mut self.cache {
             Some(c) => c.get_or_plan(&self.planner, load),
             None => Arc::new(self.planner.plan(load)),
         }
     }
 
-    /// Plan + execute one routing outcome on the session's backend.
-    pub fn run(&mut self, load: &ExpertLoad) -> Result<Outcome, ExecError> {
+    /// Plan + execute one load on the session's backend.
+    pub fn run(&mut self, load: &W::Load) -> Result<Outcome, ExecError> {
         let plan = self.plan_shared(load);
-        self.run_plan(&plan)
+        self.run_plan(plan.as_ref())
     }
 
     /// Execute an already-built plan on the session's backend.
-    pub fn run_plan(&mut self, plan: &ExecutionPlan) -> Result<Outcome, ExecError> {
+    pub fn run_plan(&mut self, plan: &Plan<W>) -> Result<Outcome, ExecError> {
         // field-level borrows: ctx borrows `numeric`, execute borrows `backend`
         let mut ctx = make_ctx(&self.spec, self.numeric.as_ref(), self.record_dispatch);
         self.backend.execute(plan, &mut ctx)
     }
 
     /// Execute through a caller-owned backend (for backends that borrow
-    /// non-`'static` state, e.g. a PJRT executor pool).
+    /// non-`'static` state, e.g. a PJRT executor pool).  Plans through the
+    /// session's plan cache exactly like [`Self::run`] — this path used to
+    /// bypass it, replanning fresh on every call even with a cache
+    /// enabled.
     pub fn run_on(
-        &self,
-        backend: &mut dyn Backend,
-        load: &ExpertLoad,
+        &mut self,
+        backend: &mut dyn Backend<W>,
+        load: &W::Load,
     ) -> Result<Outcome, ExecError> {
-        let plan = self.planner.plan(load);
+        let plan = self.plan_shared(load);
         let mut ctx = make_ctx(&self.spec, self.numeric.as_ref(), self.record_dispatch);
-        backend.execute(&plan, &mut ctx)
+        backend.execute(plan.as_ref(), &mut ctx)
     }
 }
 
@@ -197,6 +223,7 @@ impl ExecutionSession {
 mod tests {
     use super::*;
     use crate::exec::backends::CpuBackend;
+    use crate::exec::backend::NumericInputs;
     use crate::moe::routing::LoadScenario;
 
     #[test]
@@ -237,6 +264,27 @@ mod tests {
     }
 
     #[test]
+    fn run_on_routes_through_the_plan_cache() {
+        // regression: run_on used to always plan fresh, so a caller-owned
+        // backend never benefited from an enabled cache
+        let shape = MoeShape::paper_table1();
+        let load = LoadScenario::Zipf(1.3).counts(&shape, 4);
+        let mut s = ExecutionSession::new(shape).plan_cache(4);
+        let mut backend = SimBackend::per_block_array();
+        s.run_on(&mut backend, &load).expect("run_on 1");
+        s.run_on(&mut backend, &load).expect("run_on 2");
+        let stats = s.cache_stats().expect("cache enabled");
+        assert_eq!(
+            (stats.hits, stats.misses),
+            (1, 1),
+            "second run_on must hit the cache, not replan"
+        );
+        // and the owned-backend path shares the same cache lane
+        s.run(&load).expect("run 3");
+        assert_eq!(s.cache_stats().unwrap().hits, 2);
+    }
+
+    #[test]
     fn session_ordering_and_tiling_flow_into_the_plan() {
         let shape = MoeShape::paper_table1();
         let load = LoadScenario::Worst.counts(&shape, 0);
@@ -251,5 +299,22 @@ mod tests {
         let mut sorted = nonempty.clone();
         sorted.sort_unstable();
         assert_eq!(nonempty, sorted);
+    }
+
+    #[test]
+    fn reconfiguring_a_cached_session_invalidates_entries() {
+        let shape = MoeShape::paper_table1();
+        let load = LoadScenario::Zipf(1.2).counts(&shape, 7);
+        let mut s = ExecutionSession::new(shape).plan_cache(4);
+        s.run(&load).expect("warm the cache");
+        // ordering change must clear the cache (same signature, different plan)
+        let mut s = s.ordering(OrderingStrategy::Natural);
+        s.run(&load).expect("replan after reconfigure");
+        let stats = s.cache_stats().expect("cache enabled");
+        assert_eq!(
+            (stats.hits, stats.misses),
+            (0, 2),
+            "a reconfigured session must never serve a stale plan"
+        );
     }
 }

@@ -17,11 +17,23 @@
 //!   `pjrt` feature — the PJRT runtime ([`runtime`]) that executes the AOT
 //!   artifacts with Python nowhere on the request path.
 //!
+//! ## One workload abstraction
+//!
+//! The framework's generality is an API, not a slogan: the
+//! [`workload::Workload`] trait describes how a domain decomposes a load
+//! into tasks, and the planner, plan cache, execution surface, and
+//! session are generic over it.  MoE
+//! ([`moe::planner::MoeWorkload`]) and ragged batched attention decode
+//! ([`workload::ragged::RaggedAttentionWorkload`]) both run through the
+//! identical σ / ordering / TilePrefix machinery — `staticbatch ragged`
+//! tabulates the second workload against its padded-dense baseline.
+//!
 //! ## One execution surface
 //!
 //! Everything that can run a static batch plan implements the
-//! [`exec::Backend`] trait, and every call site builds and executes plans
-//! through the [`exec::ExecutionSession`] builder:
+//! [`exec::Backend`] trait (generic over the workload, defaulting to
+//! MoE), and every call site builds and executes plans through the
+//! [`exec::ExecutionSession`] builder:
 //!
 //! ```
 //! use staticbatch::exec::{ExecutionSession, SimBackend};
@@ -111,6 +123,7 @@ pub mod runtime;
 pub mod serve;
 pub mod sim;
 pub mod util;
+pub mod workload;
 
 /// Crate version, reported by the CLI and the serving handshake.
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

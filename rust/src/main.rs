@@ -7,6 +7,7 @@
 //!   ordering      expert-ordering ablation (A3)
 //!   empty-tasks   empty-task two-stage mapping ablation (A4)
 //!   token-copy    token-copy elimination accounting (A5)
+//!   ragged        ragged-attention decode (second workload) vs padded-dense
 //!   sweep         zipf imbalance sweep, ours vs grouped GEMM
 //!   simulate      one scenario end to end with the wave trace
 //!   plan          print the static batch plan for a scenario
@@ -73,6 +74,7 @@ fn main() {
             print!("{}", reports::swizzle_table());
             0
         }
+        "ragged" => cmd_ragged(rest),
         "sweep" => cmd_sweep(rest),
         "simulate" => cmd_simulate(rest),
         "plan" => cmd_plan(rest),
@@ -84,7 +86,7 @@ fn main() {
             eprintln!(
                 "staticbatch {} — static batching of irregular workloads\n\n\
                  usage: staticbatch <table1|baselines|mapping|ordering|empty-tasks|swizzle|\n\
-                        token-copy|sweep|simulate|plan|serve|serve-sim|client|selftest> [flags]\n\
+                        token-copy|ragged|sweep|simulate|plan|serve|serve-sim|client|selftest> [flags]\n\
                  run a subcommand with --help for its flags",
                 staticbatch::VERSION
             );
@@ -92,6 +94,28 @@ fn main() {
         }
     };
     std::process::exit(code);
+}
+
+/// The second irregular workload through the same planning stack: ragged
+/// batched attention decode (per-sequence KV lengths) statically batched
+/// via σ/TilePrefix vs the padded-dense grid, on the GPU simulator.
+fn cmd_ragged(args: &[String]) -> i32 {
+    let cmd = Command::new("ragged", "ragged-attention decode vs padded-dense baseline")
+        .flag("seqs", Some("256"), "decode sequences in the batch")
+        .flag("seed", Some("0"), "KV-length sampling seed");
+    match cmd.parse(args) {
+        Ok(p) => {
+            print!(
+                "{}",
+                reports::ragged_table(p.usize("seqs").unwrap_or(256).max(1), p.u64("seed").unwrap_or(0))
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            2
+        }
+    }
 }
 
 fn cmd_sweep(args: &[String]) -> i32 {

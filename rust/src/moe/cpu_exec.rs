@@ -65,7 +65,7 @@ pub fn execute_traced(
     inputs: &MoeInputs,
     record_dispatch: bool,
 ) -> Result<(Tensor, Option<Vec<DispatchRecord>>), DispatchError> {
-    let shape = plan.shape;
+    let shape = plan.shape();
     let d_ff = shape.d_ff;
 
     // packed row offsets per task in grid order
@@ -92,14 +92,14 @@ pub fn execute_traced(
             let row0 = mi as usize * tm;
             let col0 = ni as usize * tn;
             let rows = (task.rows - row0).min(tm);
-            let cols = (ctx.plan.shape.d_ff - col0).min(tn);
+            let cols = (ctx.plan.shape().d_ff - col0).min(tn);
             // gather indices for this tile's rows (token index array)
             let ids = &ctx.inputs.token_index.index[task.expert as usize]
                 [row0..row0 + rows];
             // weight plane slice [d_model, col0..col0+cols]
             let w = ctx.inputs.weights.plane(task.expert as usize);
-            let d_ff_full = ctx.plan.shape.d_ff;
-            let k = ctx.plan.shape.d_model;
+            let d_ff_full = ctx.plan.shape().d_ff;
+            let k = ctx.plan.shape().d_model;
             // tile-local output, then scatter into packed buffer
             let mut local = vec![0.0f32; rows * cols];
             // build a column-sliced weight view: w is [k, d_ff]; we

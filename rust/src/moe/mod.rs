@@ -10,12 +10,14 @@
 //!   headline capability).
 //! * [`ordering`] — expert ordering strategies (Section 4.2): natural,
 //!   alternating, half-interval, random, sorted.
-//! * [`planner`] — builds the [`planner::ExecutionPlan`]: σ over non-empty
-//!   experts, ordering, per-expert tiling, TilePrefix — the one artifact
-//!   both the simulator and the CPU executor consume.
-//! * [`plan_cache`] — LRU cache from normalized load signature to built
-//!   plan, so serving traffic that repeats load shapes skips the σ /
-//!   TilePrefix reconstruction.
+//! * [`planner`] — [`planner::MoeWorkload`], the MoE instance of the
+//!   workload-generic planning stack ([`crate::workload`]): one GEMM task
+//!   per expert, per-expert tiling selection, per-expert-count cache
+//!   signature.  [`planner::ExecutionPlan`] — σ over non-empty experts,
+//!   ordering, TilePrefix — is the one artifact every executor consumes.
+//! * [`plan_cache`] — the MoE instantiation of the workload-generic LRU
+//!   plan cache ([`crate::workload::cache`]), so serving traffic that
+//!   repeats load shapes skips the σ / TilePrefix reconstruction.
 //! * [`cpu_exec`] — executes a plan numerically on CPU *through the
 //!   framework dispatch*, validating mapping + gather correctness against
 //!   the dense reference.

@@ -1,125 +1,27 @@
-//! LRU plan cache: skip σ/ordering/tiling/TilePrefix reconstruction when a
-//! routing outcome repeats.
+//! The MoE instantiation of the workload-generic LRU plan cache.
 //!
-//! The paper's framework builds a fresh plan every inference iteration, but
-//! serving traffic repeats load shapes constantly — popular prompts, padded
-//! batches of equal composition, steady-state balanced routing.  The cache
-//! sits between routing and [`Planner::plan`]: the key is the *normalized
-//! load signature* (the per-expert row counts, which are the canonical form
-//! of a routing outcome — two routings with the same counts produce the
-//! same plan under a fixed planner configuration), and the value is the
-//! finished [`ExecutionPlan`] behind an [`Arc`] so hits are O(key) with no
-//! plan clone.
-//!
-//! A cache is valid for exactly one planner configuration (ordering +
-//! tiling policy): [`crate::exec::ExecutionSession`] owns one of each and
-//! clears the cache whenever the planner changes.
+//! The cache itself lives in [`crate::workload::cache`]; here it is keyed
+//! by [`MoeWorkload::signature`](crate::workload::Workload::signature) —
+//! the normalized per-expert row counts, the canonical form of a routing
+//! outcome (two routings with the same counts produce the same plan under
+//! a fixed planner configuration).  Serving traffic repeats load shapes
+//! constantly — popular prompts, padded batches of equal composition,
+//! steady-state balanced routing — which is what makes the cache pay.
 
-use std::collections::HashMap;
-use std::sync::Arc;
+use crate::moe::planner::MoeWorkload;
 
-use crate::moe::planner::{ExecutionPlan, Planner};
-use crate::moe::routing::ExpertLoad;
+pub use crate::workload::cache::CacheStats;
 
-/// Hit/miss counters plus current occupancy, for metrics surfaces.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub struct CacheStats {
-    pub hits: u64,
-    pub misses: u64,
-    pub entries: usize,
-}
-
-impl CacheStats {
-    /// Hits over total lookups; 0.0 before any lookup.
-    pub fn hit_rate(&self) -> f64 {
-        let total = self.hits + self.misses;
-        if total == 0 {
-            0.0
-        } else {
-            self.hits as f64 / total as f64
-        }
-    }
-}
-
-struct Entry {
-    plan: Arc<ExecutionPlan>,
-    /// Logical timestamp of the last lookup that returned this entry.
-    last_used: u64,
-}
-
-/// Bounded LRU cache from load signature to built plan.
-pub struct PlanCache {
-    capacity: usize,
-    map: HashMap<Vec<usize>, Entry>,
-    tick: u64,
-    hits: u64,
-    misses: u64,
-}
-
-impl PlanCache {
-    /// A cache holding at most `capacity` plans (at least one).
-    pub fn new(capacity: usize) -> Self {
-        PlanCache {
-            capacity: capacity.max(1),
-            map: HashMap::new(),
-            tick: 0,
-            hits: 0,
-            misses: 0,
-        }
-    }
-
-    pub fn len(&self) -> usize {
-        self.map.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
-    }
-
-    pub fn stats(&self) -> CacheStats {
-        CacheStats { hits: self.hits, misses: self.misses, entries: self.map.len() }
-    }
-
-    /// Drop every entry (the planner configuration changed); counters keep
-    /// accumulating across clears.
-    pub fn clear(&mut self) {
-        self.map.clear();
-    }
-
-    /// Return the cached plan for this load signature, or build it with
-    /// `planner` and cache it, evicting the least-recently-used entry when
-    /// full.
-    pub fn get_or_plan(&mut self, planner: &Planner, load: &ExpertLoad) -> Arc<ExecutionPlan> {
-        self.tick += 1;
-        let tick = self.tick;
-        if let Some(entry) = self.map.get_mut(load.counts.as_slice()) {
-            entry.last_used = tick;
-            self.hits += 1;
-            return Arc::clone(&entry.plan);
-        }
-        self.misses += 1;
-        let plan = Arc::new(planner.plan(load));
-        if self.map.len() >= self.capacity {
-            let evict = self
-                .map
-                .iter()
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(k, _)| k.clone());
-            if let Some(k) = evict {
-                self.map.remove(&k);
-            }
-        }
-        self.map
-            .insert(load.counts.clone(), Entry { plan: Arc::clone(&plan), last_used: tick });
-        plan
-    }
-}
+/// LRU cache from per-expert-count load signature to built MoE plan.
+pub type PlanCache = crate::workload::cache::PlanCache<MoeWorkload>;
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::moe::config::MoeShape;
-    use crate::moe::routing::LoadScenario;
+    use crate::moe::planner::Planner;
+    use crate::moe::routing::{ExpertLoad, LoadScenario};
+    use std::sync::Arc;
 
     fn shape() -> MoeShape {
         MoeShape::tiny()

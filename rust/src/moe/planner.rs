@@ -1,10 +1,14 @@
-//! The static batch planner: routing counts → [`ExecutionPlan`].
+//! MoE as a [`Workload`]: routing counts → [`ExecutionPlan`].
 //!
 //! This is the host-side step the paper performs each inference iteration
 //! after the token route: decide which experts are non-empty (σ), order them
 //! (Section 4.2), pick a tiling strategy per expert (Section 4), and build
-//! the compressed TilePrefix (Algorithm 1).  The resulting plan is consumed
-//! by three different executors, all driving identical mappings:
+//! the compressed TilePrefix (Algorithm 1).  All of that machinery is the
+//! workload-generic [`crate::workload::plan::Planner`]; this module
+//! contributes [`MoeWorkload`] — the decomposition of an [`ExpertLoad`]
+//! into per-expert GEMM tasks — and the MoE-specific plan accessors.  The
+//! resulting plan is consumed by three different executors, all driving
+//! identical mappings:
 //!
 //! * the GPU simulator ([`crate::sim::kernel_sim`]) for the paper's
 //!   performance experiments,
@@ -14,11 +18,13 @@
 //!   hypothesis suite and the Rust proptest suite pin both to Algorithm 1/4).
 
 use crate::batching::task::{TaskDescriptor, TaskKind};
-use crate::batching::two_stage::TwoStageMap;
 use crate::moe::config::MoeShape;
-use crate::moe::ordering::OrderingStrategy;
 use crate::moe::routing::ExpertLoad;
 use crate::moe::tiling::{self, StrategyId, CATALOG};
+use crate::sim::cost::Dtype;
+use crate::workload::{PlanKey, Workload};
+
+pub use crate::workload::plan::{Plan, Planner};
 
 /// One expert's GEMM task in the plan.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -48,100 +54,100 @@ impl ExpertTask {
     }
 }
 
-/// The static batch plan for one MoE step.
-#[derive(Clone, Debug, PartialEq)]
-pub struct ExecutionPlan {
+/// The MoE expert-GEMM batch as a [`Workload`]: one task per expert, with
+/// the per-expert tiling selection and the per-expert-count cache
+/// signature the paper's application section describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MoeWorkload {
     pub shape: MoeShape,
-    /// Tasks in grid order: ordered non-empty experts first, then empty
-    /// experts (which receive no tiles).
-    pub tasks: Vec<ExpertTask>,
-    /// σ + compressed TilePrefix over the non-empty prefix of `tasks`.
-    pub two_stage: TwoStageMap,
 }
 
-/// Plan builder; configurable ordering and tiling policy.
-#[derive(Clone, Debug)]
-pub struct Planner {
-    pub shape: MoeShape,
-    pub ordering: OrderingStrategy,
-    /// Force one strategy for every task (used by the grouped-GEMM
-    /// baseline); `None` = per-task selection.
-    pub force_strategy: Option<StrategyId>,
-}
-
-impl Planner {
+impl MoeWorkload {
     pub fn new(shape: MoeShape) -> Self {
-        Planner { shape, ordering: OrderingStrategy::HalfInterval, force_strategy: None }
+        MoeWorkload { shape }
+    }
+}
+
+impl Workload for MoeWorkload {
+    type Load = ExpertLoad;
+    type Task = ExpertTask;
+    type Inputs = crate::exec::backend::NumericInputs;
+
+    fn name(&self) -> &'static str {
+        "moe"
     }
 
-    pub fn with_ordering(mut self, ordering: OrderingStrategy) -> Self {
-        self.ordering = ordering;
-        self
-    }
-
-    pub fn with_single_strategy(mut self, s: StrategyId) -> Self {
-        self.force_strategy = Some(s);
-        self
-    }
-
-    /// Build the plan for one routing outcome.
-    pub fn plan(&self, load: &ExpertLoad) -> ExecutionPlan {
+    fn tasks(&self, load: &ExpertLoad, force_strategy: Option<StrategyId>) -> Vec<ExpertTask> {
         assert_eq!(load.counts.len(), self.shape.experts);
-        // non-empty experts with their loads
-        let nonempty: Vec<(u32, usize)> = load
-            .counts
+        load.counts
             .iter()
             .enumerate()
-            .filter(|&(_, &c)| c > 0)
-            .map(|(e, &c)| (e as u32, c))
-            .collect();
-        let ordered = self.ordering.order(&nonempty);
-
-        let mut tasks: Vec<ExpertTask> = ordered
-            .iter()
-            .map(|&e| {
-                let rows = load.counts[e as usize];
-                let strategy = self
-                    .force_strategy
-                    .unwrap_or_else(|| tiling::select(rows));
-                ExpertTask { expert: e, rows, strategy }
+            .map(|(e, &rows)| {
+                let strategy = force_strategy.unwrap_or_else(|| {
+                    if rows > 0 {
+                        tiling::select(rows)
+                    } else {
+                        CATALOG.len() - 1
+                    }
+                });
+                ExpertTask { expert: e as u32, rows, strategy }
             })
-            .collect();
-        // append empty experts (zero tiles; the σ stage elides them)
-        for (e, &c) in load.counts.iter().enumerate() {
-            if c == 0 {
-                let strategy = self.force_strategy.unwrap_or(CATALOG.len() - 1);
-                tasks.push(ExpertTask { expert: e as u32, rows: 0, strategy });
-            }
-        }
+            .collect()
+    }
 
-        let descriptors: Vec<TaskDescriptor> =
-            tasks.iter().map(|t| t.descriptor(&self.shape)).collect();
-        let two_stage = TwoStageMap::from_tasks(&descriptors);
-        ExecutionPlan { shape: self.shape, tasks, two_stage }
+    fn descriptor(&self, task: &ExpertTask) -> TaskDescriptor {
+        task.descriptor(&self.shape)
+    }
+
+    fn weight(&self, task: &ExpertTask) -> usize {
+        task.rows
+    }
+
+    fn signature(&self, load: &ExpertLoad) -> PlanKey {
+        PlanKey(load.counts.iter().map(|&c| c as u64).collect())
+    }
+
+    fn dtype(&self) -> Dtype {
+        self.shape.dtype()
+    }
+
+    fn operand_bytes(&self, tasks: &[ExpertTask]) -> f64 {
+        // weights of the non-empty experts + the full routed token/output
+        // traffic of the step (shape-derived, like the kernel staging does)
+        let s = self.shape;
+        let nonempty = tasks.iter().filter(|t| t.rows > 0).count();
+        let weights = nonempty as f64 * s.weight_bytes() as f64;
+        let tokens = (s.total_rows() * s.d_model * s.dtype_bytes) as f64;
+        let outs = (s.total_rows() * s.d_ff * s.dtype_bytes) as f64;
+        weights + tokens + outs
     }
 }
 
-impl ExecutionPlan {
-    /// Task descriptors in grid order (including empty tasks), derived
-    /// directly from each [`ExpertTask`] and the plan's shape.
-    pub fn descriptors(&self) -> Vec<TaskDescriptor> {
-        self.tasks.iter().map(|t| t.descriptor(&self.shape)).collect()
+/// The static batch plan for one MoE step.
+pub type ExecutionPlan = Plan<MoeWorkload>;
+
+impl Planner<MoeWorkload> {
+    /// An MoE planner for `shape` (half-interval ordering, per-task tiling).
+    pub fn new(shape: MoeShape) -> Self {
+        Planner::for_workload(MoeWorkload::new(shape))
     }
 
-    /// Total thread blocks the fused kernel launches.
-    pub fn total_tiles(&self) -> u32 {
-        self.two_stage.total_tiles
+    /// The MoE problem shape this planner plans for.
+    pub fn shape(&self) -> MoeShape {
+        self.workload().shape
     }
+}
 
-    pub fn num_nonempty(&self) -> usize {
-        self.two_stage.num_nonempty
+impl Plan<MoeWorkload> {
+    /// The MoE problem shape this plan batches.
+    pub fn shape(&self) -> MoeShape {
+        self.workload.shape
     }
 
     /// Reconstruct the routing outcome this plan was built from (baseline
     /// backends re-plan it with their own tiling/scheduling defects).
     pub fn expert_load(&self) -> ExpertLoad {
-        let mut counts = vec![0usize; self.shape.experts];
+        let mut counts = vec![0usize; self.workload.shape.experts];
         for t in &self.tasks {
             counts[t.expert as usize] = t.rows;
         }
@@ -151,14 +157,15 @@ impl ExecutionPlan {
     /// Metadata bytes shipped to the device per step (σ + prefix + token
     /// index arrays).
     pub fn metadata_bytes(&self) -> usize {
-        self.two_stage.metadata_bytes() + 4 * self.shape.total_rows()
+        self.two_stage.metadata_bytes() + 4 * self.workload.shape.total_rows()
     }
 
     /// Useful FLOPs in this plan.
     pub fn useful_flops(&self) -> f64 {
+        let s = self.workload.shape;
         self.tasks
             .iter()
-            .map(|t| 2.0 * t.rows as f64 * self.shape.d_ff as f64 * self.shape.d_model as f64)
+            .map(|t| 2.0 * t.rows as f64 * s.d_ff as f64 * s.d_model as f64)
             .sum()
     }
 }
@@ -166,6 +173,7 @@ impl ExecutionPlan {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::moe::ordering::OrderingStrategy;
     use crate::moe::routing::LoadScenario;
     use crate::util::prop;
 
@@ -234,6 +242,25 @@ mod tests {
             let plan = Planner::new(s).plan(&sc.counts(&s, 0));
             assert!((plan.useful_flops() - s.total_flops()).abs() / s.total_flops() < 1e-12);
         }
+    }
+
+    #[test]
+    fn planner_setters_are_the_only_mutation_path() {
+        // the pre-0.3 stale-cache hole was direct field mutation; fields
+        // are private now and the setters observably change the next plan
+        let load = LoadScenario::Worst.counts(&shape(), 0);
+        let mut p = Planner::new(shape());
+        p.set_force_strategy(Some(0));
+        assert_eq!(p.force_strategy(), Some(0));
+        assert!(p.plan(&load).tasks.iter().all(|t| t.strategy == 0));
+        p.set_force_strategy(None);
+        p.set_ordering(OrderingStrategy::SortedDesc);
+        assert_eq!(p.ordering(), OrderingStrategy::SortedDesc);
+        let plan = p.plan(&load);
+        // sorted-desc: row counts non-increasing over the non-empty prefix
+        let rows: Vec<usize> =
+            plan.tasks[..plan.num_nonempty()].iter().map(|t| t.rows).collect();
+        assert!(rows.windows(2).all(|w| w[0] >= w[1]));
     }
 
     #[test]

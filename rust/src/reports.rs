@@ -406,6 +406,51 @@ pub fn sharded_serving_table(requests: usize, seed: u64) -> String {
     t.render()
 }
 
+/// **RAGGED**: the second irregular workload — a decode-step batch of
+/// ragged attention reads (per-sequence KV lengths Zipf/uniform
+/// distributed) planned through the *same* σ / ordering / TilePrefix
+/// machinery as MoE and simulated on the same wave model, against the
+/// padded-dense baseline a scheme without σ is stuck with (every sequence
+/// padded to the batch max).  Accounting backend, so the table
+/// regenerates in milliseconds.
+pub fn ragged_table(seqs: usize, seed: u64) -> String {
+    use crate::workload::ragged::{PaddedDenseAttention, RaggedAttentionWorkload, RaggedScenario};
+
+    let w = RaggedAttentionWorkload { heads: 32, head_dim: 128, dtype_bytes: 2 };
+    let spec = GpuSpec::h800();
+    let mut t = Table::new(&[
+        "kv lengths", "seqs", "pad%", "static(ms)", "padded-dense(ms)", "padded waste%",
+        "speedup",
+    ]);
+    for sc in [
+        RaggedScenario::Uniform(4096),
+        RaggedScenario::Zipf(1.0, 8192),
+        RaggedScenario::Zipf(1.4, 8192),
+    ] {
+        let load = sc.lens(seqs, seed);
+        let ours = ExecutionSession::for_workload(w)
+            .gpu(spec.clone())
+            .backend(SimBackend::ours())
+            .run(&load)
+            .unwrap();
+        let padded = ExecutionSession::for_workload(w)
+            .gpu(spec.clone())
+            .backend(PaddedDenseAttention)
+            .run(&load)
+            .unwrap();
+        t.row(&[
+            sc.name(),
+            seqs.to_string(),
+            format!("{:.1}", load.padding_frac() * 100.0),
+            format!("{:.3}", ours.time_s() * 1e3),
+            format!("{:.3}", padded.time_s() * 1e3),
+            format!("{:.1}", padded.sim().padding_waste() * 100.0),
+            format!("{:.2}x", padded.time_s() / ours.time_s()),
+        ]);
+    }
+    t.render()
+}
+
 /// Zipf-imbalance sweep: ours vs grouped GEMM crossover analysis.
 pub fn sweep_table(gpu: &str, seeds: u64) -> String {
     let spec = GpuSpec::by_name(gpu).unwrap_or_else(GpuSpec::h800);
@@ -477,6 +522,27 @@ mod tests {
         assert_eq!(s.lines().count(), 2 + 3, "header + 3 traffic rows:\n{s}");
         for name in ["hot pool", "mixed pool", "wide pool", "hit rate"] {
             assert!(s.contains(name), "missing {name} in:\n{s}");
+        }
+    }
+
+    #[test]
+    fn ragged_table_shows_static_beating_padded_dense() {
+        let s = super::ragged_table(128, 7);
+        assert_eq!(s.lines().count(), 2 + 3, "header + 3 length distributions:\n{s}");
+        for (i, line) in s.lines().skip(2).enumerate() {
+            let speedup: f64 = line
+                .split('|')
+                .nth(7)
+                .unwrap()
+                .trim()
+                .trim_end_matches('x')
+                .parse()
+                .unwrap();
+            assert!(speedup >= 1.0, "row {i} regressed: {line}");
+            // the skewed rows (zipf) must show a clear win for static batching
+            if line.contains("zipf(1.4") {
+                assert!(speedup > 1.5, "skewed lengths must pad heavily: {line}");
+            }
         }
     }
 

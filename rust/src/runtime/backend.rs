@@ -107,7 +107,7 @@ impl<'p> PjrtBackend<'p> {
 
     fn check_plan(&self, plan: &ExecutionPlan) -> Result<(), ExecError> {
         let d = self.dims;
-        let s = plan.shape;
+        let s = plan.shape();
         if s.seq != d.seq || s.d_model != d.d_model || s.d_ff != d.d_ff || s.experts != d.experts
         {
             return Err(ExecError::PlanMismatch {

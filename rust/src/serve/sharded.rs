@@ -416,7 +416,7 @@ impl StepExecutor for ShardedStepExecutor {
             // shard kernel time always comes from the accounting simulator
             // on the very plan the lane executes; host-side launch overhead
             // is excluded — it is paid per GPU, not a device-load signal
-            let timing = sim.execute(&plan, &mut ExecContext::new(self.cfg.gpu.clone()))?;
+            let timing = sim.execute(plan.as_ref(), &mut ExecContext::new(self.cfg.gpu.clone()))?;
             let r = timing.sim();
             kernel_s[shard] = (r.time_s - r.host_time_s).max(0.0);
             if let Some(embedded) = &embedded {

@@ -1,16 +1,20 @@
-//! Simulate our statically batched MoE kernel on a GPU spec.
+//! Simulate a statically batched fused kernel on a GPU spec — for any
+//! [`Workload`].
 //!
-//! Converts an [`ExecutionPlan`] into the tile stream the fused kernel
-//! would launch (grid order = plan order, m-outer n-inner per expert) and
-//! runs it through the wave model with the chosen mapping mode's overheads.
+//! Converts a [`Plan`] into the tile stream the fused kernel would launch
+//! (grid order = plan order; each workload expands its own tasks via
+//! [`Workload::tiles`]) and runs it through the wave model with the chosen
+//! mapping mode's overheads.  MoE plans reproduce the paper's performance
+//! experiments; ragged-attention plans run through the *same* four mapping
+//! modes, because the mapping mechanism never looks inside a task.
 
-use crate::moe::planner::ExecutionPlan;
-use crate::moe::tiling::CATALOG;
-use crate::sim::cost::{gemm_tiles, TileWork};
+use crate::sim::cost::TileWork;
 use crate::sim::overhead::MappingMode;
 use crate::sim::specs::GpuSpec;
 use crate::sim::trace::SimResult;
 use crate::sim::wave;
+use crate::workload::plan::Plan;
+use crate::workload::Workload;
 
 /// Warp passes Algorithm 2 needs for the tile of the `h`-th non-empty task.
 fn warp_passes_for_task(h: usize) -> usize {
@@ -19,44 +23,29 @@ fn warp_passes_for_task(h: usize) -> usize {
 
 /// Expand the plan into its tile stream. `decode_ns_for_task(h)` supplies
 /// the per-block decode overhead (h = position among non-empty tasks).
-pub fn tiles_for_plan<F: Fn(usize) -> f64>(
-    plan: &ExecutionPlan,
+pub fn tiles_for_plan<W: Workload, F: Fn(usize) -> f64>(
+    plan: &Plan<W>,
     decode_ns_for_task: F,
 ) -> Vec<TileWork> {
-    let shape = plan.shape;
     let mut tiles = Vec::new();
     let mut h = 0usize;
     for (ti, task) in plan.tasks.iter().enumerate() {
-        if task.rows == 0 {
+        if plan.workload.descriptor(task).num_tiles() == 0 {
             continue;
         }
-        let s = CATALOG[task.strategy];
-        tiles.extend(gemm_tiles(
-            ti as u32,
-            task.rows,
-            shape.d_ff,
-            shape.d_model,
-            s.tm,
-            s.tn,
-            shape.dtype(),
-            decode_ns_for_task(h),
-        ));
+        tiles.extend(plan.workload.tiles(task, ti as u32, decode_ns_for_task(h)));
         h += 1;
     }
     tiles
 }
 
 /// Total operand bytes (used as L2 pressure for the cache models).
-pub fn operand_bytes(plan: &ExecutionPlan) -> f64 {
-    let s = plan.shape;
-    let weights: f64 = plan.num_nonempty() as f64 * s.weight_bytes() as f64;
-    let tokens = (s.total_rows() * s.d_model * s.dtype_bytes) as f64;
-    let outs = (s.total_rows() * s.d_ff * s.dtype_bytes) as f64;
-    weights + tokens + outs
+pub fn operand_bytes<W: Workload>(plan: &Plan<W>) -> f64 {
+    plan.workload.operand_bytes(&plan.tasks)
 }
 
 /// Our kernel: compressed TilePrefix + σ, warp-vote decode (Alg. 2/4).
-pub fn simulate_ours(plan: &ExecutionPlan, spec: &GpuSpec) -> SimResult {
+pub fn simulate_ours<W: Workload>(plan: &Plan<W>, spec: &GpuSpec) -> SimResult {
     let metadata_len = plan.two_stage.tile_prefix.len() + plan.two_stage.sigma.len();
     let mode = MappingMode::CompressedPrefix { metadata_len, warp_passes: 1 };
     let warp_ns = spec.warp_pass_ns;
@@ -67,7 +56,7 @@ pub fn simulate_ours(plan: &ExecutionPlan, spec: &GpuSpec) -> SimResult {
 
 /// Our kernel but decoded through a full per-block mapping array
 /// (PPoPP'19 [10] style) — isolates the mapping mechanism (experiment A2).
-pub fn simulate_per_block_array(plan: &ExecutionPlan, spec: &GpuSpec) -> SimResult {
+pub fn simulate_per_block_array<W: Workload>(plan: &Plan<W>, spec: &GpuSpec) -> SimResult {
     let blocks = plan.total_tiles() as usize;
     let mode = MappingMode::PerBlockArray { blocks };
     let pressure = operand_bytes(plan);
@@ -80,8 +69,8 @@ pub fn simulate_per_block_array(plan: &ExecutionPlan, spec: &GpuSpec) -> SimResu
 /// A "no-elision" variant: empty tasks keep a mapping slot (the dense
 /// Algorithm 2 over all N tasks). Decode scans all N, and σ is skipped.
 /// Used by the empty-task ablation (A4).
-pub fn simulate_dense_mapping(plan: &ExecutionPlan, spec: &GpuSpec) -> SimResult {
-    let n = plan.tasks.len(); // all experts, empty included
+pub fn simulate_dense_mapping<W: Workload>(plan: &Plan<W>, spec: &GpuSpec) -> SimResult {
+    let n = plan.tasks.len(); // all tasks, empty included
     let warp_ns = spec.warp_pass_ns;
     // every block scans the full N-entry prefix (no early-out benefit of
     // compaction); passes = ceil(N/32) in the worst case — charge the mean
@@ -97,29 +86,30 @@ pub fn simulate_dense_mapping(plan: &ExecutionPlan, spec: &GpuSpec) -> SimResult
 
 /// The no-Algorithm-4 strawman a static scheme needs without σ: every empty
 /// task is padded to one tile so the dense mapping stays invertible.  The
-/// padding tiles compute nothing but still stage their weight slice from
-/// HBM and occupy block slots — the waste Section 4.1 eliminates.
-pub fn simulate_padded_empty(plan: &ExecutionPlan, spec: &GpuSpec) -> SimResult {
+/// padding tiles compute nothing but still stage their operand slice from
+/// HBM and occupy block slots — the waste Section 4.1 eliminates.  The
+/// padding tile's cost derives from the task's descriptor (tile shape ×
+/// inner dim), which for MoE is exactly one dummy GEMM tile.
+pub fn simulate_padded_empty<W: Workload>(plan: &Plan<W>, spec: &GpuSpec) -> SimResult {
     let n = plan.tasks.len();
-    let shape = plan.shape;
     let warp_ns = spec.warp_pass_ns;
     let passes = (n as f64 / crate::batching::warp::WARP_SIZE as f64).ceil();
     let mut tiles = tiles_for_plan(plan, |_| warp_ns * passes);
+    let ds = plan.workload.dtype().bytes() as f64;
     for (ti, task) in plan.tasks.iter().enumerate() {
-        if task.rows > 0 {
+        let d = plan.workload.descriptor(task);
+        if d.num_tiles() > 0 {
             continue;
         }
-        let s = CATALOG[task.strategy];
-        let ds = shape.dtype_bytes as f64;
-        tiles.push(crate::sim::cost::TileWork {
+        tiles.push(TileWork {
             task: ti as u32,
             m_tile: 0,
             n_tile: 0,
             useful_flops: 0.0,
-            // the tensor core still cycles through the padded tile
-            occupied_flops: 2.0 * s.tm as f64 * s.tn as f64 * shape.d_model as f64,
-            weight_bytes: shape.d_model as f64 * s.tn as f64 * ds,
-            token_bytes: s.tm as f64 * shape.d_model as f64 * ds,
+            // the compute units still cycle through the padded tile
+            occupied_flops: 2.0 * d.tile_rows as f64 * d.tile_cols as f64 * d.inner as f64,
+            weight_bytes: d.inner as f64 * d.tile_cols as f64 * ds,
+            token_bytes: d.tile_rows as f64 * d.inner as f64 * ds,
             out_bytes: 0.0,
             decode_ns: warp_ns * passes,
         });
@@ -133,7 +123,7 @@ pub fn simulate_padded_empty(plan: &ExecutionPlan, spec: &GpuSpec) -> SimResult 
 mod tests {
     use super::*;
     use crate::moe::config::MoeShape;
-    use crate::moe::planner::Planner;
+    use crate::moe::planner::{ExecutionPlan, Planner};
     use crate::moe::routing::LoadScenario;
 
     #[test]

@@ -1,0 +1,159 @@
+//! The workload layer: what makes the batching framework *general*.
+//!
+//! The paper's central claim is that one static batching scheme —
+//! TilePrefix (Algorithm 1), warp-vote decompression (Algorithm 2), the
+//! fused dispatch loop (Algorithm 3), and the σ two-stage mapping over
+//! empty tasks (Algorithm 4) — serves *any* irregular workload whose
+//! per-task tile counts are known before launch; MoE expert GEMMs are one
+//! application.  This module is that claim as an API: the [`Workload`]
+//! trait describes how a domain decomposes a routing/load outcome into
+//! tasks, and everything downstream — [`plan::Planner`], [`plan::Plan`],
+//! [`cache::PlanCache`], the [`crate::exec::Backend`] surface, and
+//! [`crate::exec::ExecutionSession`] — is generic over it.
+//!
+//! Two instances ship:
+//!
+//! * [`crate::moe::planner::MoeWorkload`] — per-expert GEMMs of one MoE
+//!   layer (the paper's application; [`crate::moe`] owns its load
+//!   scenarios, tiling catalog, and CPU numerics).
+//! * [`ragged::RaggedAttentionWorkload`] — a decode-step batch of
+//!   attention reads over per-sequence KV caches of wildly different
+//!   lengths (the second irregular workload; defined in [`ragged`]).
+//!
+//! Both run through the *same* σ / ordering / TilePrefix machinery; the
+//! cross-workload agreement tests pin that the dispatch sequences decoded
+//! by the simulator match the sequences the CPU executors actually run.
+//!
+//! Planning a ragged-attention decode step looks exactly like planning an
+//! MoE step — only the workload value changes:
+//!
+//! ```
+//! use staticbatch::workload::plan::Planner;
+//! use staticbatch::workload::ragged::{RaggedAttentionWorkload, RaggedLoad};
+//!
+//! let workload = RaggedAttentionWorkload { heads: 4, head_dim: 16, dtype_bytes: 2 };
+//! // four decode sequences; one has an empty KV cache (σ elides it)
+//! let load = RaggedLoad { lens: vec![700, 9, 0, 120] };
+//! let plan = Planner::for_workload(workload).plan(&load);
+//! assert_eq!(plan.num_nonempty(), 3);
+//! // every tile of every non-empty sequence is covered, empty ones launch nothing
+//! let tiles: usize = plan.descriptors().iter().map(|d| d.num_tiles()).sum();
+//! assert_eq!(plan.total_tiles() as usize, tiles);
+//! ```
+
+pub mod cache;
+pub mod plan;
+pub mod ragged;
+
+use crate::batching::task::{TaskDescriptor, TaskKind};
+use crate::moe::tiling::StrategyId;
+use crate::sim::cost::{gemm_tiles, Dtype, TileWork};
+
+/// The cache key a workload derives from a load: two loads with equal keys
+/// must plan identically under a fixed planner configuration.  (For MoE
+/// this is the per-expert row counts; for ragged attention the per-sequence
+/// KV lengths.)
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey(pub Vec<u64>);
+
+/// One irregular workload the framework can statically batch.
+///
+/// A workload knows how to decompose its `Load` (a routing outcome, a
+/// batch of KV lengths, ...) into tasks, and how to describe each task to
+/// the framework: its [`TaskDescriptor`] (kind + tile geometry, from which
+/// ν(T) derives), its ordering weight (paper Section 4.2 interleaves heavy
+/// and light tasks), and its cache signature.  The generic
+/// [`plan::Planner`] does the rest — σ over non-empty tasks, ordering,
+/// compressed TilePrefix — identically for every instance.
+pub trait Workload: Clone + PartialEq + std::fmt::Debug + 'static {
+    /// The per-step load this workload plans from.
+    type Load;
+    /// The workload-specific task payload kept in the plan (grid order).
+    type Task: Clone + PartialEq + std::fmt::Debug;
+    /// Real tensors numeric backends need to execute a plan of this
+    /// workload (accounting backends ignore them).
+    type Inputs;
+
+    /// Stable display name (`moe`, `ragged-attn`, ...).
+    fn name(&self) -> &'static str;
+
+    /// Decompose a load into tasks in *canonical* order (one per expert /
+    /// sequence / ...), empty tasks included.  `force_strategy` pins one
+    /// tiling strategy for every task (the grouped-GEMM-style control);
+    /// `None` selects per task.
+    fn tasks(&self, load: &Self::Load, force_strategy: Option<StrategyId>) -> Vec<Self::Task>;
+
+    /// The framework descriptor of one task (kind, dims, tile shape).
+    fn descriptor(&self, task: &Self::Task) -> TaskDescriptor;
+
+    /// Ordering weight (Section 4.2): how "busy" this task is.  Zero means
+    /// empty — the task is appended after the non-empty prefix and elided
+    /// by σ.
+    fn weight(&self, task: &Self::Task) -> usize;
+
+    /// The plan-cache key of a load (see [`PlanKey`]).
+    fn signature(&self, load: &Self::Load) -> PlanKey;
+
+    /// Element type of the workload's operands (cost accounting).
+    fn dtype(&self) -> Dtype;
+
+    /// Expand one task into the simulator's tile stream.  `decode_ns` is
+    /// the per-block mapping-decode overhead the active mapping mode
+    /// charges.  The default handles GEMM-shaped tasks exactly like the
+    /// MoE kernel simulation; other kinds get a uniform flops/bytes split
+    /// across their tiles.  Override for workload-specific cost shapes.
+    fn tiles(&self, task: &Self::Task, index: u32, decode_ns: f64) -> Vec<TileWork> {
+        let d = self.descriptor(task);
+        match d.kind {
+            TaskKind::Gemm { .. } => gemm_tiles(
+                index,
+                d.rows,
+                d.cols,
+                d.inner,
+                d.tile_rows,
+                d.tile_cols,
+                self.dtype(),
+                decode_ns,
+            ),
+            _ => {
+                let nt = d.num_tiles();
+                if nt == 0 {
+                    return Vec::new();
+                }
+                let flops = d.flops() as f64 / nt as f64;
+                let bytes = d.elems_moved() as f64 * self.dtype().bytes() as f64 / nt as f64;
+                let tiles_n = d.tiles_n() as u32;
+                (0..nt as u32)
+                    .map(|t| TileWork {
+                        task: index,
+                        m_tile: t / tiles_n,
+                        n_tile: t % tiles_n,
+                        useful_flops: flops,
+                        occupied_flops: flops,
+                        weight_bytes: bytes,
+                        token_bytes: 0.0,
+                        out_bytes: 0.0,
+                        decode_ns,
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Total operand bytes of a plan's tasks — the L2-pressure proxy the
+    /// per-block-array mapping modes charge decode costs against.
+    fn operand_bytes(&self, tasks: &[Self::Task]) -> f64 {
+        let ds = self.dtype().bytes() as f64;
+        tasks
+            .iter()
+            .map(|t| {
+                let d = self.descriptor(t);
+                if d.num_tiles() == 0 {
+                    0.0
+                } else {
+                    d.elems_moved() as f64 * ds
+                }
+            })
+            .sum()
+    }
+}

@@ -1,0 +1,210 @@
+//! The workload-generic planner: a load → a static batch [`Plan`].
+//!
+//! This is the host-side step the paper performs each iteration for *any*
+//! irregular workload: ask the [`Workload`] for its tasks, find the
+//! non-empty ones (σ), order them (Section 4.2), and build the compressed
+//! TilePrefix (Algorithm 1) over the resulting grid.  The MoE instance
+//! ([`crate::moe::planner::MoeWorkload`]) and the ragged-attention
+//! instance ([`crate::workload::ragged::RaggedAttentionWorkload`]) flow
+//! through this exact code — there is no per-workload planner.
+
+use crate::batching::task::TaskDescriptor;
+use crate::batching::two_stage::TwoStageMap;
+use crate::moe::ordering::OrderingStrategy;
+use crate::moe::tiling::StrategyId;
+use crate::workload::{PlanKey, Workload};
+
+/// The static batch plan for one step of workload `W`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Plan<W: Workload> {
+    /// The workload this plan batches.
+    pub workload: W,
+    /// Tasks in grid order: ordered non-empty tasks first, then empty
+    /// tasks (which receive no tiles).
+    pub tasks: Vec<W::Task>,
+    /// σ + compressed TilePrefix over the non-empty prefix of `tasks`.
+    pub two_stage: TwoStageMap,
+}
+
+impl<W: Workload> Plan<W> {
+    /// The workload this plan was built for.
+    pub fn workload(&self) -> &W {
+        &self.workload
+    }
+
+    /// Task descriptors in grid order (including empty tasks).
+    pub fn descriptors(&self) -> Vec<TaskDescriptor> {
+        self.tasks.iter().map(|t| self.workload.descriptor(t)).collect()
+    }
+
+    /// Total thread blocks the fused kernel launches.
+    pub fn total_tiles(&self) -> u32 {
+        self.two_stage.total_tiles
+    }
+
+    /// Number of non-empty tasks (the σ domain).
+    pub fn num_nonempty(&self) -> usize {
+        self.two_stage.num_nonempty
+    }
+}
+
+/// Plan builder; configurable ordering and tiling policy.
+///
+/// The configuration fields are private on purpose: a
+/// [`crate::workload::cache::PlanCache`] is valid for exactly one planner
+/// configuration, so every mutation must go through [`Planner::set_ordering`]
+/// / [`Planner::set_force_strategy`] — which the owning
+/// [`crate::exec::ExecutionSession`] pairs with a cache clear.  Direct field
+/// writes (the pre-0.3 stale-cache hole) are no longer possible.
+#[derive(Clone, Debug)]
+pub struct Planner<W: Workload> {
+    workload: W,
+    ordering: OrderingStrategy,
+    /// Force one strategy for every task (used by the grouped-GEMM
+    /// baseline); `None` = per-task selection.
+    force_strategy: Option<StrategyId>,
+}
+
+impl<W: Workload> Planner<W> {
+    /// A planner for `workload` with the defaults the paper found best:
+    /// half-interval ordering, per-task tiling.
+    pub fn for_workload(workload: W) -> Self {
+        Planner { workload, ordering: OrderingStrategy::HalfInterval, force_strategy: None }
+    }
+
+    /// The workload this planner plans for.
+    pub fn workload(&self) -> &W {
+        &self.workload
+    }
+
+    /// The configured ordering strategy.
+    pub fn ordering(&self) -> OrderingStrategy {
+        self.ordering
+    }
+
+    /// The forced tiling strategy, when one is set.
+    pub fn force_strategy(&self) -> Option<StrategyId> {
+        self.force_strategy
+    }
+
+    /// Builder form of [`Planner::set_ordering`].
+    pub fn with_ordering(mut self, ordering: OrderingStrategy) -> Self {
+        self.ordering = ordering;
+        self
+    }
+
+    /// Builder form of [`Planner::set_force_strategy`] (forces `s`).
+    pub fn with_single_strategy(mut self, s: StrategyId) -> Self {
+        self.force_strategy = Some(s);
+        self
+    }
+
+    /// Change the ordering strategy.  Callers holding a plan cache for
+    /// this planner must clear it (the session does).
+    pub fn set_ordering(&mut self, ordering: OrderingStrategy) {
+        self.ordering = ordering;
+    }
+
+    /// Change the tiling policy (`Some(s)` = force `s` everywhere, `None`
+    /// = per-task selection).  Same cache-invalidation contract as
+    /// [`Planner::set_ordering`].
+    pub fn set_force_strategy(&mut self, s: Option<StrategyId>) {
+        self.force_strategy = s;
+    }
+
+    /// The plan-cache key of a load under this planner's workload.
+    pub fn signature(&self, load: &W::Load) -> PlanKey {
+        self.workload.signature(load)
+    }
+
+    /// Build the plan for one load: σ over non-empty tasks, ordering,
+    /// per-task tiling, compressed TilePrefix.
+    pub fn plan(&self, load: &W::Load) -> Plan<W> {
+        let canonical = self.workload.tasks(load, self.force_strategy);
+        // non-empty tasks with their ordering weights (canonical index as id)
+        let nonempty: Vec<(u32, usize)> = canonical
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| self.workload.weight(t) > 0)
+            .map(|(i, t)| (i as u32, self.workload.weight(t)))
+            .collect();
+        let ordered = self.ordering.order(&nonempty);
+
+        let mut tasks: Vec<W::Task> =
+            ordered.iter().map(|&i| canonical[i as usize].clone()).collect();
+        // append empty tasks (zero tiles; the σ stage elides them)
+        for t in &canonical {
+            if self.workload.weight(t) == 0 {
+                tasks.push(t.clone());
+            }
+        }
+
+        let descriptors: Vec<TaskDescriptor> =
+            tasks.iter().map(|t| self.workload.descriptor(t)).collect();
+        let two_stage = TwoStageMap::from_tasks(&descriptors);
+        Plan { workload: self.workload.clone(), tasks, two_stage }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::ragged::{RaggedAttentionWorkload, RaggedLoad};
+
+    fn workload() -> RaggedAttentionWorkload {
+        RaggedAttentionWorkload { heads: 2, head_dim: 8, dtype_bytes: 4 }
+    }
+
+    #[test]
+    fn nonempty_tasks_lead_the_grid_and_empty_trail() {
+        let load = RaggedLoad { lens: vec![0, 40, 0, 3, 900] };
+        let plan = Planner::for_workload(workload()).plan(&load);
+        assert_eq!(plan.tasks.len(), 5);
+        assert_eq!(plan.num_nonempty(), 3);
+        let w = plan.workload().clone();
+        assert!(plan.tasks[..3].iter().all(|t| w.weight(t) > 0));
+        assert!(plan.tasks[3..].iter().all(|t| w.weight(t) == 0));
+    }
+
+    #[test]
+    fn ordering_permutes_but_preserves_task_content() {
+        let load = RaggedLoad { lens: vec![5, 100, 7, 64, 1, 300] };
+        let a = Planner::for_workload(workload())
+            .with_ordering(OrderingStrategy::Natural)
+            .plan(&load);
+        let b = Planner::for_workload(workload())
+            .with_ordering(OrderingStrategy::HalfInterval)
+            .plan(&load);
+        assert_eq!(a.total_tiles(), b.total_tiles());
+        let mut la: Vec<usize> = a.tasks.iter().map(|t| t.kv_len).collect();
+        let mut lb: Vec<usize> = b.tasks.iter().map(|t| t.kv_len).collect();
+        la.sort_unstable();
+        lb.sort_unstable();
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn setters_change_the_next_plan() {
+        let load = RaggedLoad { lens: vec![5, 100, 7, 64] };
+        let mut p = Planner::for_workload(workload());
+        let before = p.plan(&load);
+        p.set_ordering(OrderingStrategy::SortedDesc);
+        p.set_force_strategy(Some(3));
+        assert_eq!(p.ordering(), OrderingStrategy::SortedDesc);
+        assert_eq!(p.force_strategy(), Some(3));
+        let after = p.plan(&load);
+        // forcing the smallest KV chunk everywhere multiplies tile counts
+        assert!(after.total_tiles() > before.total_tiles());
+        // sorted-desc puts the longest sequence first
+        assert_eq!(after.tasks[0].kv_len, 100);
+    }
+
+    #[test]
+    fn all_empty_load_plans_zero_tiles() {
+        let load = RaggedLoad { lens: vec![0, 0, 0] };
+        let plan = Planner::for_workload(workload()).plan(&load);
+        assert_eq!(plan.total_tiles(), 0);
+        assert_eq!(plan.num_nonempty(), 0);
+        assert_eq!(plan.tasks.len(), 3);
+    }
+}

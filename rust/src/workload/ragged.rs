@@ -1,0 +1,587 @@
+//! Ragged batched attention decode: the second irregular workload.
+//!
+//! One decode step serves a batch of sequences whose KV caches have wildly
+//! different lengths — the per-sequence work `ν(T_i) ∝ len_i` is exactly
+//! the irregularity of paper Section 3, with σ handling sequences whose
+//! cache is empty (fresh requests, evicted pages).  Each sequence is one
+//! task; its tiles are (KV-chunk × head) pairs, with the chunk size chosen
+//! per task from [`KV_CATALOG`] the way MoE picks GEMM tiles per expert —
+//! long caches take big chunks, short ones small, and both kinds coexist
+//! in one fused grid.
+//!
+//! The whole planning stack is shared with MoE: [`RaggedAttentionWorkload`]
+//! implements [`Workload`], so the generic
+//! [`Planner`](crate::workload::plan::Planner) runs the identical σ /
+//! ordering / TilePrefix machinery, the generic
+//! [`PlanCache`](crate::workload::cache::PlanCache) keys on the
+//! per-sequence KV lengths, and the same
+//! [`SimBackend`](crate::exec::SimBackend) /
+//! [`CpuBackend`](crate::exec::CpuBackend) execute the plans — the CPU
+//! path running real flash-decode-style numerics (online softmax per
+//! chunk) *through the framework dispatch*, checked against a dense
+//! softmax reference.
+//!
+//! The baseline a dense scheme is stuck with is [`PaddedDenseAttention`]:
+//! every sequence padded to the batch max so the rectangular grid stays
+//! trivially invertible — the padding reads and occupancy the σ machinery
+//! deletes.  `staticbatch ragged` tabulates the comparison.
+
+use crate::batching::dispatch::{DispatchError, DispatchRecord, DispatchTableBuilder};
+use crate::batching::framework::StaticBatch;
+use crate::batching::task::{TaskDescriptor, TaskKind};
+use crate::exec::backend::{Backend, ExecContext, Outcome};
+use crate::exec::backends::CpuBackend;
+use crate::exec::error::ExecError;
+use crate::moe::tiling::StrategyId;
+use crate::sim::cost::{Dtype, TileWork};
+use crate::sim::wave;
+use crate::util::rng::{zipf_weights, Rng};
+use crate::util::tensor::Tensor;
+use crate::workload::plan::Plan;
+use crate::workload::{PlanKey, Workload};
+
+/// KV-chunk sizes (rows of K/V one tile covers), largest to smallest —
+/// the attention analog of the GEMM tiling catalog.
+pub const KV_CATALOG: &[usize] = &[512, 128, 32, 8];
+
+/// Pick the KV chunk for a cache of `len` rows: the largest chunk that is
+/// at least half-filled, falling back to the smallest (same rule as
+/// [`crate::moe::tiling::select`]).
+pub fn select_chunk(len: usize) -> StrategyId {
+    for (i, &c) in KV_CATALOG.iter().enumerate() {
+        if len >= c || len * 2 >= c {
+            return i;
+        }
+    }
+    KV_CATALOG.len() - 1
+}
+
+/// One decode step's load: the KV-cache length of every sequence in the
+/// batch (0 = empty cache, an empty task).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RaggedLoad {
+    pub lens: Vec<usize>,
+}
+
+impl RaggedLoad {
+    /// Total KV rows across the batch.
+    pub fn total(&self) -> usize {
+        self.lens.iter().sum()
+    }
+
+    /// Longest cache in the batch (what padded-dense pads everyone to).
+    pub fn max_len(&self) -> usize {
+        self.lens.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Fraction of a padded `[seqs, max_len]` layout that is padding.
+    pub fn padding_frac(&self) -> f64 {
+        let dense = self.lens.len() * self.max_len();
+        if dense == 0 {
+            return 0.0;
+        }
+        1.0 - self.total() as f64 / dense as f64
+    }
+}
+
+/// KV-length distributions for the sweep experiments.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RaggedScenario {
+    /// Lengths uniform in `[1, max]`.
+    Uniform(usize),
+    /// Zipf-bucketed lengths with exponent `alpha`: most sequences short,
+    /// a heavy tail up to `max` — steady-state decode traffic.
+    Zipf(f64, usize),
+}
+
+impl RaggedScenario {
+    /// Generate per-sequence KV lengths. Deterministic in `seed`.
+    pub fn lens(&self, seqs: usize, seed: u64) -> RaggedLoad {
+        let mut rng = Rng::new(seed);
+        let lens = match *self {
+            RaggedScenario::Uniform(max) => {
+                (0..seqs).map(|_| 1 + rng.usize_below(max.max(1))).collect()
+            }
+            RaggedScenario::Zipf(alpha, max) => {
+                let buckets = 64.min(max.max(1));
+                let w = zipf_weights(buckets, alpha);
+                (0..seqs)
+                    .map(|_| ((rng.zipf(&w) + 1) * max.max(1)) / buckets)
+                    .collect()
+            }
+        };
+        RaggedLoad { lens }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            RaggedScenario::Uniform(m) => format!("uniform(max {m})"),
+            RaggedScenario::Zipf(a, m) => format!("zipf({a}, max {m})"),
+        }
+    }
+}
+
+/// One sequence's decode-attention task in the plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SeqTask {
+    /// Sequence index in the batch.
+    pub seq: u32,
+    /// KV-cache rows this sequence attends over. 0 = empty.
+    pub kv_len: usize,
+    /// Index into [`KV_CATALOG`].
+    pub strategy: StrategyId,
+}
+
+/// Ragged batched attention decode as a [`Workload`].  One query vector
+/// per sequence per head attends over that sequence's KV cache.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RaggedAttentionWorkload {
+    /// Attention heads (each head of each sequence gets its own tiles).
+    pub heads: usize,
+    /// Per-head feature width.
+    pub head_dim: usize,
+    /// Element width of Q/K/V (cost accounting).
+    pub dtype_bytes: usize,
+}
+
+impl Workload for RaggedAttentionWorkload {
+    type Load = RaggedLoad;
+    type Task = SeqTask;
+    type Inputs = RaggedInputs;
+
+    fn name(&self) -> &'static str {
+        "ragged-attn"
+    }
+
+    fn tasks(&self, load: &RaggedLoad, force_strategy: Option<StrategyId>) -> Vec<SeqTask> {
+        load.lens
+            .iter()
+            .enumerate()
+            .map(|(s, &len)| SeqTask {
+                seq: s as u32,
+                kv_len: len,
+                strategy: force_strategy
+                    .map(|f| f.min(KV_CATALOG.len() - 1))
+                    .unwrap_or_else(|| select_chunk(len)),
+            })
+            .collect()
+    }
+
+    fn descriptor(&self, task: &SeqTask) -> TaskDescriptor {
+        TaskDescriptor {
+            kind: TaskKind::AttentionDecode { strategy: task.strategy },
+            rows: task.kv_len,
+            cols: self.heads,
+            inner: self.head_dim,
+            tile_rows: KV_CATALOG[task.strategy],
+            tile_cols: 1,
+        }
+    }
+
+    fn weight(&self, task: &SeqTask) -> usize {
+        task.kv_len
+    }
+
+    fn signature(&self, load: &RaggedLoad) -> PlanKey {
+        PlanKey(load.lens.iter().map(|&l| l as u64).collect())
+    }
+
+    fn dtype(&self) -> Dtype {
+        if self.dtype_bytes == 2 {
+            Dtype::Bf16
+        } else {
+            Dtype::F32
+        }
+    }
+
+    /// Flash-decode cost shape: one tile reads a `chunk × head_dim` K
+    /// slice and V slice, dots them against the resident query vector, and
+    /// writes one partial accumulator.  Heavily memory-bound — the KV
+    /// traffic is the roofline, which is why padding it is so expensive.
+    fn tiles(&self, task: &SeqTask, index: u32, decode_ns: f64) -> Vec<TileWork> {
+        let d = self.head_dim;
+        let ds = self.dtype().bytes() as f64;
+        let chunk = KV_CATALOG[task.strategy];
+        let chunks = task.kv_len.div_ceil(chunk);
+        let mut out = Vec::with_capacity(chunks * self.heads);
+        for mi in 0..chunks {
+            let rows = (task.kv_len - mi * chunk).min(chunk);
+            for h in 0..self.heads {
+                out.push(TileWork {
+                    task: index,
+                    // L2 keys: the query vector (task, 1, m_tile=head) is
+                    // reused across a head's chunks; each (chunk, head) KV
+                    // slice (task, 0, n_tile) is read exactly once.
+                    m_tile: h as u32,
+                    n_tile: (mi * self.heads + h) as u32,
+                    useful_flops: 4.0 * rows as f64 * d as f64,
+                    occupied_flops: 4.0 * rows as f64 * d as f64,
+                    weight_bytes: 2.0 * rows as f64 * d as f64 * ds,
+                    token_bytes: d as f64 * ds,
+                    out_bytes: d as f64 * ds,
+                    decode_ns,
+                });
+            }
+        }
+        out
+    }
+
+    fn operand_bytes(&self, tasks: &[SeqTask]) -> f64 {
+        let ds = self.dtype().bytes() as f64;
+        let per_vec = (self.heads * self.head_dim) as f64 * ds;
+        tasks
+            .iter()
+            // σ-elided empty caches touch no operands, not even their q/out
+            // vectors (same zero-tile rule as the trait default)
+            .filter(|t| t.kv_len > 0)
+            .map(|t| 2.0 * t.kv_len as f64 * per_vec + 2.0 * per_vec)
+            .sum()
+    }
+}
+
+/// Real tensors of one ragged decode step, for the CPU numeric path.
+pub struct RaggedInputs {
+    /// `[seqs, heads * head_dim]` query vectors (one decode token each).
+    pub q: Tensor,
+    /// Per-sequence `[kv_len, heads * head_dim]` key cache.
+    pub keys: Vec<Tensor>,
+    /// Per-sequence `[kv_len, heads * head_dim]` value cache.
+    pub values: Vec<Tensor>,
+}
+
+impl RaggedInputs {
+    /// Deterministic synthetic Q/K/V consistent with a load.
+    pub fn synthetic(w: &RaggedAttentionWorkload, load: &RaggedLoad, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let width = w.heads * w.head_dim;
+        let q = Tensor::randn(&[load.lens.len(), width], 1.0, &mut rng);
+        let keys = load
+            .lens
+            .iter()
+            .map(|&l| Tensor::randn(&[l, width], 0.5, &mut rng))
+            .collect();
+        let values = load
+            .lens
+            .iter()
+            .map(|&l| Tensor::randn(&[l, width], 1.0, &mut rng))
+            .collect();
+        RaggedInputs { q, keys, values }
+    }
+}
+
+/// Online-softmax accumulator of one (task, head) pair.
+#[derive(Clone)]
+struct HeadState {
+    m: f32,
+    l: f32,
+    acc: Vec<f32>,
+}
+
+struct RaggedCtx<'a> {
+    plan: &'a Plan<RaggedAttentionWorkload>,
+    inputs: &'a RaggedInputs,
+    /// `state[grid_task][head]` — merged across that pair's KV chunks.
+    state: Vec<Vec<HeadState>>,
+    trace: Option<Vec<DispatchRecord>>,
+}
+
+/// Execute a ragged plan numerically *through the framework dispatch*:
+/// every (KV-chunk, head) tile goes `block index → Algorithm 4 mapping →
+/// strategy-specific device function`, each tile folds its chunk into the
+/// (sequence, head) accumulator with the online-softmax merge, and the
+/// final normalize produces `[seqs, heads * head_dim]` outputs.  Returns
+/// the dispatch trace too when requested (cross-backend agreement tests).
+pub fn execute_traced(
+    plan: &Plan<RaggedAttentionWorkload>,
+    inputs: &RaggedInputs,
+    record_dispatch: bool,
+) -> Result<(Tensor, Option<Vec<DispatchRecord>>), DispatchError> {
+    let w = plan.workload;
+    let d = w.head_dim;
+    let scale = 1.0 / (d as f32).sqrt();
+
+    let mut builder: DispatchTableBuilder<RaggedCtx> = DispatchTableBuilder::new();
+    for sid in 0..KV_CATALOG.len() {
+        let kind = TaskKind::AttentionDecode { strategy: sid };
+        builder = builder.on(kind, move |ctx: &mut RaggedCtx, desc, task_idx, tile_idx| {
+            if let Some(trace) = ctx.trace.as_mut() {
+                trace.push(DispatchRecord { task: task_idx, tile: tile_idx, kind: desc.kind });
+            }
+            let task = ctx.plan.tasks[task_idx as usize];
+            let heads = desc.tiles_n() as u32;
+            let (mi, h) = (tile_idx / heads, (tile_idx % heads) as usize);
+            let chunk = desc.tile_rows;
+            let row0 = mi as usize * chunk;
+            let rows = (task.kv_len - row0).min(chunk);
+            let seq = task.seq as usize;
+            let q = &ctx.inputs.q.row(seq)[h * desc.inner..(h + 1) * desc.inner];
+            let kt = &ctx.inputs.keys[seq];
+            let vt = &ctx.inputs.values[seq];
+
+            // chunk-local scores and max
+            let mut scores = vec![0f32; rows];
+            let mut local_max = f32::NEG_INFINITY;
+            for (r, s) in scores.iter_mut().enumerate() {
+                let krow = &kt.row(row0 + r)[h * desc.inner..(h + 1) * desc.inner];
+                let dot: f32 = q.iter().zip(krow).map(|(a, b)| a * b).sum();
+                *s = dot * scale;
+                local_max = local_max.max(*s);
+            }
+
+            // online-softmax merge into the (task, head) accumulator
+            let st = &mut ctx.state[task_idx as usize][h];
+            let new_max = st.m.max(local_max);
+            let corr = (st.m - new_max).exp(); // 0.0 on the first chunk (m = -inf)
+            st.l *= corr;
+            for a in st.acc.iter_mut() {
+                *a *= corr;
+            }
+            for (r, &s) in scores.iter().enumerate() {
+                let p = (s - new_max).exp();
+                st.l += p;
+                let vrow = &vt.row(row0 + r)[h * desc.inner..(h + 1) * desc.inner];
+                for (a, &v) in st.acc.iter_mut().zip(vrow) {
+                    *a += p * v;
+                }
+            }
+            st.m = new_max;
+        });
+    }
+    let batch = StaticBatch::try_new(plan.descriptors(), builder)?;
+
+    let fresh = HeadState { m: f32::NEG_INFINITY, l: 0.0, acc: vec![0.0; d] };
+    let mut ctx = RaggedCtx {
+        plan,
+        inputs,
+        state: vec![vec![fresh; w.heads]; plan.tasks.len()],
+        trace: record_dispatch.then(Vec::new),
+    };
+    let blocks = batch.run(&mut ctx);
+    debug_assert_eq!(blocks, plan.total_tiles());
+
+    // normalize into [seqs, heads * head_dim]; empty caches stay zero
+    let seqs = plan.tasks.len();
+    let mut out = Tensor::zeros(&[seqs, w.heads * d]);
+    for (ti, task) in plan.tasks.iter().enumerate() {
+        if task.kv_len == 0 {
+            continue;
+        }
+        let row = out.row_mut(task.seq as usize);
+        for (h, st) in ctx.state[ti].iter().enumerate() {
+            for (j, &a) in st.acc.iter().enumerate() {
+                row[h * d + j] = a / st.l;
+            }
+        }
+    }
+    Ok((out, ctx.trace))
+}
+
+/// Dense reference: full softmax attention per (sequence, head) with no
+/// chunking, tiling, or mapping — the unambiguous oracle.
+pub fn reference(w: &RaggedAttentionWorkload, load: &RaggedLoad, inputs: &RaggedInputs) -> Tensor {
+    let d = w.head_dim;
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = Tensor::zeros(&[load.lens.len(), w.heads * d]);
+    for (s, &len) in load.lens.iter().enumerate() {
+        if len == 0 {
+            continue;
+        }
+        for h in 0..w.heads {
+            let q = &inputs.q.row(s)[h * d..(h + 1) * d];
+            let scores: Vec<f32> = (0..len)
+                .map(|r| {
+                    let krow = &inputs.keys[s].row(r)[h * d..(h + 1) * d];
+                    q.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale
+                })
+                .collect();
+            let max = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f32> = scores.iter().map(|&x| (x - max).exp()).collect();
+            let denom: f32 = exps.iter().sum();
+            let row = out.row_mut(s);
+            for (r, &e) in exps.iter().enumerate() {
+                let vrow = &inputs.values[s].row(r)[h * d..(h + 1) * d];
+                for (j, &v) in vrow.iter().enumerate() {
+                    row[h * d + j] += e * v / denom;
+                }
+            }
+        }
+    }
+    out
+}
+
+impl Backend<RaggedAttentionWorkload> for CpuBackend {
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+
+    fn execute(
+        &mut self,
+        plan: &Plan<RaggedAttentionWorkload>,
+        ctx: &mut ExecContext<'_, RaggedAttentionWorkload>,
+    ) -> Result<Outcome, ExecError> {
+        let inputs = ctx.numeric.ok_or(ExecError::MissingInputs {
+            backend: "cpu",
+            what: "ragged numeric inputs (q / keys / values)",
+        })?;
+        let (output, trace) = execute_traced(plan, inputs, ctx.record_dispatch)?;
+        Ok(Outcome {
+            backend: "cpu",
+            blocks: plan.total_tiles(),
+            sim: None,
+            output: Some(output),
+            trace,
+        })
+    }
+}
+
+/// The dense baseline: every sequence padded to the batch's longest KV
+/// cache, so the rectangular `(seq, chunk, head)` grid needs no mapping
+/// metadata at all — and stages every padded KV row from HBM while its
+/// lanes idle.  This is what a static scheme without σ/TilePrefix must do;
+/// the `staticbatch ragged` table quantifies the gap.
+pub struct PaddedDenseAttention;
+
+impl Backend<RaggedAttentionWorkload> for PaddedDenseAttention {
+    fn name(&self) -> &'static str {
+        "ragged/padded-dense"
+    }
+
+    fn execute(
+        &mut self,
+        plan: &Plan<RaggedAttentionWorkload>,
+        ctx: &mut ExecContext<'_, RaggedAttentionWorkload>,
+    ) -> Result<Outcome, ExecError> {
+        let w = plan.workload;
+        let d = w.head_dim as f64;
+        let ds = w.dtype().bytes() as f64;
+        let max_len = plan.tasks.iter().map(|t| t.kv_len).max().unwrap_or(0);
+        let host = ctx.spec.launch_us * 1e-6; // dense grid: launch only
+        if max_len == 0 {
+            let sim = wave::run_waves(&[], &ctx.spec, host);
+            return Ok(Outcome { backend: self.name(), blocks: 0, sim: Some(sim), output: None, trace: None });
+        }
+        let chunk = KV_CATALOG[select_chunk(max_len)];
+        let chunks = max_len.div_ceil(chunk);
+        let mut tiles = Vec::with_capacity(plan.tasks.len() * chunks * w.heads);
+        for (ti, task) in plan.tasks.iter().enumerate() {
+            for mi in 0..chunks {
+                // real rows of this padded chunk (0 for fully-padded ones)
+                let real = task.kv_len.saturating_sub(mi * chunk).min(chunk);
+                for h in 0..w.heads {
+                    tiles.push(TileWork {
+                        task: ti as u32,
+                        m_tile: h as u32,
+                        n_tile: (mi * w.heads + h) as u32,
+                        useful_flops: 4.0 * real as f64 * d,
+                        // the lanes sweep the whole padded chunk
+                        occupied_flops: 4.0 * chunk as f64 * d,
+                        // the padded KV layout is materialized densely, so
+                        // padding rows are staged from HBM like real ones
+                        weight_bytes: 2.0 * chunk as f64 * d * ds,
+                        token_bytes: d * ds,
+                        out_bytes: d * ds,
+                        decode_ns: 0.0,
+                    });
+                }
+            }
+        }
+        let blocks = tiles.len() as u32;
+        let sim = wave::run_waves(&tiles, &ctx.spec, host);
+        Ok(Outcome { backend: self.name(), blocks, sim: Some(sim), output: None, trace: None })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::backends::SimBackend;
+    use crate::exec::session::ExecutionSession;
+    use crate::sim::specs::GpuSpec;
+
+    fn workload() -> RaggedAttentionWorkload {
+        RaggedAttentionWorkload { heads: 2, head_dim: 8, dtype_bytes: 4 }
+    }
+
+    #[test]
+    fn chunk_selection_mirrors_the_tiling_rule() {
+        assert_eq!(KV_CATALOG[select_chunk(4096)], 512);
+        assert_eq!(KV_CATALOG[select_chunk(512)], 512);
+        // half-full rule: 256 rows half-fill a 512 chunk
+        assert_eq!(KV_CATALOG[select_chunk(256)], 512);
+        assert_eq!(KV_CATALOG[select_chunk(255)], 128);
+        assert_eq!(KV_CATALOG[select_chunk(9)], 8);
+        assert_eq!(KV_CATALOG[select_chunk(1)], 8);
+    }
+
+    #[test]
+    fn descriptor_tile_count_is_chunks_times_heads() {
+        let w = workload();
+        let tasks = w.tasks(&RaggedLoad { lens: vec![700, 9, 0] }, None);
+        let d0 = w.descriptor(&tasks[0]);
+        assert_eq!(d0.num_tiles(), 700usize.div_ceil(512) * 2);
+        assert_eq!(w.descriptor(&tasks[1]).num_tiles(), 2 * 2);
+        assert_eq!(w.descriptor(&tasks[2]).num_tiles(), 0);
+        // the simulator tile stream covers exactly the descriptor count
+        assert_eq!(w.tiles(&tasks[0], 0, 0.0).len(), d0.num_tiles());
+    }
+
+    #[test]
+    fn cpu_numerics_match_dense_reference() {
+        let w = workload();
+        let load = RaggedLoad { lens: vec![70, 1, 0, 513, 33] };
+        let inputs = RaggedInputs::synthetic(&w, &load, 7);
+        let plan = crate::workload::plan::Planner::for_workload(w).plan(&load);
+        let (got, _) = execute_traced(&plan, &inputs, false).expect("dispatch covered");
+        let want = reference(&w, &load, &inputs);
+        let err = got.max_abs_diff(&want);
+        assert!(err < 1e-4, "max abs err {err}");
+    }
+
+    #[test]
+    fn empty_caches_produce_zero_rows() {
+        let w = workload();
+        let load = RaggedLoad { lens: vec![0, 12, 0] };
+        let inputs = RaggedInputs::synthetic(&w, &load, 3);
+        let plan = crate::workload::plan::Planner::for_workload(w).plan(&load);
+        let (out, _) = execute_traced(&plan, &inputs, false).expect("runs");
+        assert!(out.row(0).iter().all(|&x| x == 0.0));
+        assert!(out.row(2).iter().all(|&x| x == 0.0));
+        assert!(out.row(1).iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn padded_dense_never_faster_and_much_worse_under_skew() {
+        let w = RaggedAttentionWorkload { heads: 32, head_dim: 128, dtype_bytes: 2 };
+        let load = RaggedScenario::Zipf(1.4, 8192).lens(256, 1);
+        assert!(load.padding_frac() > 0.5, "skewed lengths pad heavily");
+        let ours = ExecutionSession::for_workload(w)
+            .gpu(GpuSpec::h800())
+            .backend(SimBackend::ours())
+            .run(&load)
+            .unwrap();
+        let mut padded_session = ExecutionSession::for_workload(w)
+            .gpu(GpuSpec::h800())
+            .backend(PaddedDenseAttention);
+        let padded = padded_session.run(&load).unwrap();
+        assert!(padded.time_s() >= ours.time_s());
+        assert!(
+            padded.time_s() > ours.time_s() * 1.5,
+            "padding waste must dominate under skew: {} vs {}",
+            padded.time_s(),
+            ours.time_s()
+        );
+        assert!(padded.sim().padding_waste() > ours.sim().padding_waste());
+    }
+
+    #[test]
+    fn ragged_session_caches_plans_by_length_signature() {
+        let w = workload();
+        let load = RaggedScenario::Uniform(256).lens(16, 5);
+        let mut s = ExecutionSession::for_workload(w).plan_cache(4);
+        let a = s.run(&load).unwrap();
+        let b = s.run(&load).unwrap();
+        assert_eq!(a.blocks, b.blocks);
+        let stats = s.cache_stats().expect("cache enabled");
+        assert_eq!((stats.hits, stats.misses), (1, 1));
+    }
+}

@@ -126,7 +126,7 @@ fn run_case(ctxx: &mut Ctx, counts: &[usize], ordering: OrderingStrategy, seed: 
     // the deployment path: session plans, PjrtBackend executes the plan on
     // the AOT kernel
     let mut backend = PjrtBackend::new(&mut ctxx.pool, ordering).expect("compile moe_gemm");
-    let session = ExecutionSession::new(shape_of(&dims)).ordering(ordering).inputs(numeric);
+    let mut session = ExecutionSession::new(shape_of(&dims)).ordering(ordering).inputs(numeric);
     let out = session.run_on(&mut backend, &load).expect("execute moe_gemm");
 
     let sp = dims.padded_rows();
