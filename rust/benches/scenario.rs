@@ -1,0 +1,76 @@
+//! Scenario bench (default features): the pinned two-tenant burst + fault
+//! scenario from the DESIGN.md experiment index entry "SCENARIO", on the
+//! virtual clock — no GPU, artifacts, XLA, or wall-clock sleeps anywhere.
+//!
+//! With `--json <path>` (how `scripts/bench_distill` invokes it) the run
+//! also writes a machine-readable summary — tokens/s, steps/s, latency
+//! percentiles, and per-tenant SLO attainment — to `<path>`.  Every number
+//! is derived from the virtual clock, so the file is deterministic: two
+//! runs on any two machines produce identical bytes.
+
+use staticbatch::serve::{
+    run_scenario, PlacementKind, ScenarioConfig, ShardedServeConfig, ShardedStepExecutor,
+    SimServeConfig,
+};
+use staticbatch::util::json::Json;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    // scan for `--json <path>`, ignoring whatever else cargo bench passes
+    let json_path = args.windows(2).find(|w| w[0] == "--json").map(|w| w[1].clone());
+
+    let cfg = ScenarioConfig::default();
+    let mut ex = ShardedStepExecutor::new(ShardedServeConfig {
+        base: SimServeConfig { numeric: false, seed: cfg.seed, ..SimServeConfig::default() },
+        ep: 4,
+        placement: PlacementKind::Balanced,
+        ..ShardedServeConfig::default()
+    });
+    println!("== SCENARIO: pinned two-tenant burst + shard fault, virtual clock ==");
+    let r = run_scenario(&mut ex, &cfg);
+    println!("{}", r.render());
+    println!();
+    print!("{}", staticbatch::reports::scenario_table(cfg.seed));
+
+    if let Some(path) = json_path {
+        let v = r.virtual_s.max(1e-12);
+        let tenants = Json::arr(r.tenants.iter().map(|t| {
+            Json::obj(vec![
+                ("name", Json::str(t.name.as_str())),
+                ("priority", Json::num(f64::from(t.priority))),
+                ("sent", Json::num(t.sent as f64)),
+                ("ok", Json::num(t.ok as f64)),
+                ("failed", Json::num(t.failed as f64)),
+                ("shed", Json::num(t.shed as f64)),
+                ("p50_ms", Json::num(t.p50_ms)),
+                ("p99_ms", Json::num(t.p99_ms)),
+                ("slo_attainment", Json::num(t.slo_attainment)),
+                ("goodput_rps", Json::num(t.goodput_rps)),
+            ])
+        }));
+        let doc = Json::obj(vec![
+            ("bench", Json::str("scenario")),
+            ("virtual_s", Json::num(r.virtual_s)),
+            ("sent", Json::num(r.sent as f64)),
+            ("ok", Json::num(r.ok as f64)),
+            ("failed", Json::num(r.failed as f64)),
+            ("shed", Json::num(r.shed as f64)),
+            ("steps", Json::num(r.steps as f64)),
+            ("steps_per_s", Json::num(r.steps as f64 / v)),
+            ("tokens_per_s", Json::num(r.snapshot.tokens as f64 / v)),
+            ("p50_ms", Json::num(r.snapshot.latency_p50_ms)),
+            ("p99_ms", Json::num(r.snapshot.latency_p99_ms)),
+            ("reshards", Json::num(r.reshards as f64)),
+            (
+                "recovery_ms",
+                match r.recovery_s {
+                    Some(s) => Json::num(s * 1e3),
+                    None => Json::Null,
+                },
+            ),
+            ("tenants", tenants),
+        ]);
+        std::fs::write(&path, format!("{doc}\n")).expect("write bench json");
+        println!("\nwrote {path}");
+    }
+}

@@ -93,7 +93,7 @@ mod tests {
     fn req(id: u64, len: usize) -> (Request, Receiver<Response>) {
         let (tx, rx) = channel();
         (
-            Request { id, tokens: vec![1; len], enqueued: Instant::now(), respond: tx },
+            Request { id, tenant: 0, tokens: vec![1; len], enqueued: Instant::now(), respond: tx },
             rx,
         )
     }

@@ -318,6 +318,6 @@ impl StepExecutor for Engine {
                 }
             }
         }
-        Ok(StepOutput { argmax, expert_rows: Vec::new(), failed })
+        Ok(StepOutput { argmax, expert_rows: Vec::new(), failed, sim_time_s: None })
     }
 }

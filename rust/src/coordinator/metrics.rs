@@ -1,5 +1,7 @@
-//! Serving metrics: latency percentiles, throughput, expert-load tracking.
+//! Serving metrics: latency percentiles, throughput, expert-load tracking,
+//! and per-tenant latency/goodput/SLO-attainment breakdowns.
 
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -64,6 +66,65 @@ impl ShardingStats {
     }
 }
 
+/// Per-tenant serving accounting: completed/errored/shed counts, latency
+/// percentiles, and SLO attainment for one tenant class.  Tenant `0` is
+/// the untenanted default and is never broken out.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TenantStats {
+    /// Tenant class id (from [`crate::coordinator::request::Request::tenant`]).
+    pub tenant: u32,
+    /// Requests completed without error.
+    pub requests: u64,
+    /// Requests answered with an error.
+    pub errors: u64,
+    /// Requests dropped by admission control before execution.
+    pub shed: u64,
+    /// Completed requests that were measured against a latency SLO.
+    pub slo_checked: u64,
+    /// Measured requests that met their SLO.
+    pub slo_ok: u64,
+    /// Median end-to-end latency of completed requests, milliseconds.
+    pub latency_p50_ms: f64,
+    /// 99th-percentile end-to-end latency, milliseconds.
+    pub latency_p99_ms: f64,
+}
+
+impl TenantStats {
+    /// Fraction of this tenant's finished-or-dropped requests that met
+    /// their latency SLO.  Sheds and errors count as misses (a dropped
+    /// request certainly did not meet its deadline); 1.0 when nothing was
+    /// measured against an SLO, so an idle tenant reads as unharmed.
+    pub fn slo_attainment(&self) -> f64 {
+        let denom = self.slo_checked + self.errors + self.shed;
+        if denom == 0 {
+            1.0
+        } else {
+            self.slo_ok as f64 / denom as f64
+        }
+    }
+
+    /// Goodput: SLO-meeting completions per second over `elapsed_s`
+    /// (0.0 when no time has elapsed).
+    pub fn goodput(&self, elapsed_s: f64) -> f64 {
+        if elapsed_s > 0.0 {
+            self.slo_ok as f64 / elapsed_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Per-tenant running state behind the [`Metrics`] mutex.
+#[derive(Default)]
+struct TenantInner {
+    requests: u64,
+    errors: u64,
+    shed: u64,
+    slo_checked: u64,
+    slo_ok: u64,
+    latency: Samples,
+}
+
 /// Thread-safe metrics sink shared by engine workers.
 #[derive(Default)]
 pub struct Metrics {
@@ -87,6 +148,8 @@ struct Inner {
     plan_misses: u64,
     /// multi-shard accounting, mirrored from a sharded step executor
     sharding: Option<ShardingStats>,
+    /// per-tenant breakdowns, keyed by tenant class id (never holds 0)
+    tenants: BTreeMap<u32, TenantInner>,
 }
 
 /// A snapshot for reporting.
@@ -112,6 +175,9 @@ pub struct Snapshot {
     pub plan_cache_misses: u64,
     /// Multi-shard accounting, when a sharded executor is serving.
     pub sharding: Option<ShardingStats>,
+    /// Per-tenant breakdowns, ascending by tenant id (empty for
+    /// untenanted traffic).
+    pub tenants: Vec<TenantStats>,
 }
 
 impl Metrics {
@@ -153,6 +219,45 @@ impl Metrics {
         self.inner.lock().unwrap().sharding = Some(stats);
     }
 
+    /// Record one completed request for a tenant class.  `slo_ok` is
+    /// `Some(met)` when the caller knows the tenant's latency SLO (the
+    /// scenario runner does), `None` when it does not (the plain serving
+    /// loop).  Tenant `0` — the untenanted default — is not broken out.
+    pub fn record_tenant_request(&self, tenant: u32, latency_s: f64, slo_ok: Option<bool>) {
+        if tenant == 0 {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        let t = g.tenants.entry(tenant).or_default();
+        t.requests += 1;
+        t.latency.push(latency_s * 1e3);
+        if let Some(met) = slo_ok {
+            t.slo_checked += 1;
+            if met {
+                t.slo_ok += 1;
+            }
+        }
+    }
+
+    /// Record one errored request for a tenant class (`0` ignored).
+    pub fn record_tenant_error(&self, tenant: u32) {
+        if tenant == 0 {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.tenants.entry(tenant).or_default().errors += 1;
+    }
+
+    /// Record one request shed by admission control for a tenant class
+    /// (`0` ignored).
+    pub fn record_tenant_shed(&self, tenant: u32) {
+        if tenant == 0 {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.tenants.entry(tenant).or_default().shed += 1;
+    }
+
     pub fn record_expert_rows(&self, counts: &[i32]) {
         let mut g = self.inner.lock().unwrap();
         if g.expert_rows.len() < counts.len() {
@@ -176,6 +281,27 @@ impl Metrics {
             )
         };
         let exec_p50 = if g.exec.is_empty() { 0.0 } else { g.exec.percentile(50.0) };
+        let tenants: Vec<TenantStats> = g
+            .tenants
+            .iter_mut()
+            .map(|(&tenant, t)| {
+                let (p50, p99) = if t.latency.is_empty() {
+                    (0.0, 0.0)
+                } else {
+                    (t.latency.percentile(50.0), t.latency.percentile(99.0))
+                };
+                TenantStats {
+                    tenant,
+                    requests: t.requests,
+                    errors: t.errors,
+                    shed: t.shed,
+                    slo_checked: t.slo_checked,
+                    slo_ok: t.slo_ok,
+                    latency_p50_ms: p50,
+                    latency_p99_ms: p99,
+                }
+            })
+            .collect();
         Snapshot {
             requests: g.requests,
             tokens: g.tokens,
@@ -193,6 +319,7 @@ impl Metrics {
             plan_cache_hits: g.plan_hits,
             plan_cache_misses: g.plan_misses,
             sharding: g.sharding.clone(),
+            tenants,
         }
     }
 }
@@ -259,6 +386,20 @@ impl Snapshot {
                 ));
             }
         }
+        for t in &self.tenants {
+            s.push_str(&format!(
+                "\ntenant {}: ok={} err={} shed={}  p50={:.2}ms p99={:.2}ms  \
+                 slo {:.1}%  goodput {:.1} req/s",
+                t.tenant,
+                t.requests,
+                t.errors,
+                t.shed,
+                t.latency_p50_ms,
+                t.latency_p99_ms,
+                t.slo_attainment() * 100.0,
+                t.goodput(self.elapsed_s),
+            ));
+        }
         s
     }
 }
@@ -318,6 +459,41 @@ mod tests {
         m.record_exec(0.001, 4);
         m.record_exec(0.002, 2);
         assert_eq!(m.snapshot().batches, 2);
+    }
+
+    #[test]
+    fn tenant_accounting_breaks_out_per_class() {
+        let m = Metrics::new();
+        // tenant 0 is the untenanted default: never broken out
+        m.record_tenant_request(0, 0.001, None);
+        m.record_tenant_error(0);
+        m.record_tenant_shed(0);
+        assert!(m.snapshot().tenants.is_empty());
+
+        m.record_tenant_request(1, 0.010, Some(true));
+        m.record_tenant_request(1, 0.020, Some(true));
+        m.record_tenant_request(2, 0.050, Some(false));
+        m.record_tenant_shed(2);
+        m.record_tenant_error(2);
+        let s = m.snapshot();
+        assert_eq!(s.tenants.len(), 2);
+        let t1 = &s.tenants[0];
+        let t2 = &s.tenants[1];
+        assert_eq!((t1.tenant, t1.requests, t1.slo_ok), (1, 2, 2));
+        assert!((t1.slo_attainment() - 1.0).abs() < 1e-12);
+        assert!(t1.latency_p99_ms >= t1.latency_p50_ms);
+        // tenant 2: one measured miss, one shed, one error -> 0/3 attained
+        assert_eq!((t2.tenant, t2.requests, t2.errors, t2.shed), (2, 1, 1, 1));
+        assert_eq!(t2.slo_attainment(), 0.0);
+        let r = s.render();
+        assert!(r.contains("tenant 1:"), "render:\n{r}");
+        assert!(r.contains("tenant 2:"), "render:\n{r}");
+    }
+
+    #[test]
+    fn idle_tenant_attainment_is_vacuously_full() {
+        assert_eq!(TenantStats::default().slo_attainment(), 1.0);
+        assert_eq!(TenantStats::default().goodput(0.0), 0.0);
     }
 
     #[test]

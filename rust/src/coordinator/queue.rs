@@ -1,4 +1,7 @@
-//! Bounded admission queue with backpressure.
+//! Bounded admission queues: the MPMC [`AdmissionQueue`] the serving loop
+//! drains, and the priority-aware [`PriorityAdmission`] layer the scenario
+//! runner puts in front of it — bounded per-class lanes with
+//! lowest-priority-first load shedding under overload.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -122,6 +125,166 @@ impl AdmissionQueue {
     }
 }
 
+/// Outcome of offering one item to a [`PriorityAdmission`] layer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Admit {
+    /// Queued within bounds.
+    Admitted,
+    /// Queued by evicting the newest item of the named strictly
+    /// lower-priority class (the system was at its global bound).
+    Evicted {
+        /// Class index the evicted item belonged to.
+        victim: usize,
+    },
+    /// Dropped: the item's own class lane was full, or the system was full
+    /// of equal-or-higher-priority work.
+    Shed,
+}
+
+/// One tenant class lane inside [`PriorityAdmission`].
+struct ClassLane<T> {
+    priority: u32,
+    capacity: usize,
+    q: VecDeque<T>,
+    shed: u64,
+}
+
+/// Priority-aware admission with bounded per-class lanes, a global bound,
+/// and lowest-priority-first load shedding.
+///
+/// Under overload the layer degrades *in priority order*: an arriving item
+/// whose class still has lane headroom is admitted while the system has
+/// global headroom; once the global bound is hit, admitting a
+/// higher-priority item evicts the newest queued item of the strictly
+/// lowest-priority non-empty class — so low-priority work is shed first and
+/// high-priority SLO attainment degrades last.  Draining is also
+/// priority-ordered ([`PriorityAdmission::pop_front`]), FIFO within a
+/// class.
+///
+/// Single-threaded by design: the scenario runner
+/// ([`crate::serve::scenario::run_scenario`]) owns it on a virtual clock.
+/// For the wall-clock serving loop, feed admitted items onward into an
+/// [`AdmissionQueue`].
+pub struct PriorityAdmission<T> {
+    classes: Vec<ClassLane<T>>,
+    capacity: usize,
+    len: usize,
+}
+
+impl<T> PriorityAdmission<T> {
+    /// Build the layer: `classes[i] = (priority, lane_capacity)` for class
+    /// index `i` (higher priority = more important), `capacity` bounds the
+    /// total queued across all lanes.
+    pub fn new(capacity: usize, classes: &[(u32, usize)]) -> Self {
+        let classes = classes
+            .iter()
+            .map(|&(priority, cap)| ClassLane {
+                priority,
+                capacity: cap,
+                q: VecDeque::new(),
+                shed: 0,
+            })
+            .collect();
+        PriorityAdmission { classes, capacity, len: 0 }
+    }
+
+    /// Offer one item for class `class`.  Returns the admission outcome
+    /// plus the item that fell out of the system, if any: the incoming item
+    /// itself on [`Admit::Shed`], the displaced victim on
+    /// [`Admit::Evicted`], `None` on [`Admit::Admitted`].
+    pub fn offer(&mut self, class: usize, item: T) -> (Admit, Option<T>) {
+        let lane = &self.classes[class];
+        if lane.q.len() >= lane.capacity {
+            self.classes[class].shed += 1;
+            return (Admit::Shed, Some(item));
+        }
+        if self.len < self.capacity {
+            self.classes[class].q.push_back(item);
+            self.len += 1;
+            return (Admit::Admitted, None);
+        }
+        // global bound hit: evict from the strictly lowest-priority
+        // non-empty lane, newest first (its oldest work keeps its place)
+        let incoming = self.classes[class].priority;
+        let victim = self
+            .classes
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| !l.q.is_empty() && l.priority < incoming)
+            .min_by_key(|(i, l)| (l.priority, usize::MAX - i))
+            .map(|(i, _)| i);
+        match victim {
+            Some(v) => {
+                let evicted = self.classes[v].q.pop_back();
+                self.classes[v].shed += 1;
+                self.classes[class].q.push_back(item);
+                (Admit::Evicted { victim: v }, evicted)
+            }
+            None => {
+                self.classes[class].shed += 1;
+                (Admit::Shed, Some(item))
+            }
+        }
+    }
+
+    /// Pop the oldest item of the highest-priority non-empty class
+    /// (priority ties broken by class index, lower first).
+    pub fn pop_front(&mut self) -> Option<(usize, T)> {
+        let best = self
+            .classes
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| !l.q.is_empty())
+            .max_by_key(|(i, l)| (l.priority, usize::MAX - i))
+            .map(|(i, _)| i)?;
+        let item = self.classes[best].q.pop_front()?;
+        self.len -= 1;
+        Some((best, item))
+    }
+
+    /// Pop the first item satisfying `pred`, scanning classes in priority
+    /// order and FIFO within each class — batch riders that fit the chosen
+    /// bucket, without disturbing queued items that do not.
+    pub fn pop_front_if(&mut self, pred: impl Fn(&T) -> bool) -> Option<(usize, T)> {
+        let mut order: Vec<usize> = (0..self.classes.len()).collect();
+        order.sort_by_key(|&i| (u32::MAX - self.classes[i].priority, i));
+        for c in order {
+            if let Some(pos) = self.classes[c].q.iter().position(&pred) {
+                let item = self.classes[c].q.remove(pos)?;
+                self.len -= 1;
+                return Some((c, item));
+            }
+        }
+        None
+    }
+
+    /// Total items currently queued across all lanes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Items currently queued in one class lane.
+    pub fn class_len(&self, class: usize) -> usize {
+        self.classes[class].q.len()
+    }
+
+    /// Cumulative items dropped (lane-full rejections + evictions) for one
+    /// class.
+    pub fn shed(&self, class: usize) -> u64 {
+        self.classes[class].shed
+    }
+
+    /// Cumulative drops across all classes.
+    pub fn shed_total(&self) -> u64 {
+        self.classes.iter().map(|l| l.shed).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -132,7 +295,7 @@ mod tests {
 
     fn req(id: u64) -> (Request, std::sync::mpsc::Receiver<Response>) {
         let (tx, rx) = channel();
-        (Request { id, tokens: vec![1], enqueued: Instant::now(), respond: tx }, rx)
+        (Request { id, tenant: 0, tokens: vec![1], enqueued: Instant::now(), respond: tx }, rx)
     }
 
     #[test]
@@ -184,5 +347,74 @@ mod tests {
         std::thread::sleep(Duration::from_millis(20));
         assert!(q.pop(Duration::from_millis(10)).is_some());
         assert_eq!(h.join().unwrap(), PushResult::Ok);
+    }
+
+    /// Two classes: 0 = low (priority 1), 1 = high (priority 2).
+    fn two_class(capacity: usize, lane: usize) -> PriorityAdmission<u64> {
+        PriorityAdmission::new(capacity, &[(1, lane), (2, lane)])
+    }
+
+    #[test]
+    fn priority_pop_drains_high_class_first_fifo_within() {
+        let mut pa = two_class(8, 8);
+        assert_eq!(pa.offer(0, 10).0, Admit::Admitted);
+        assert_eq!(pa.offer(1, 20).0, Admit::Admitted);
+        assert_eq!(pa.offer(0, 11).0, Admit::Admitted);
+        assert_eq!(pa.offer(1, 21).0, Admit::Admitted);
+        let order: Vec<(usize, u64)> = std::iter::from_fn(|| pa.pop_front()).collect();
+        assert_eq!(order, vec![(1, 20), (1, 21), (0, 10), (0, 11)]);
+        assert!(pa.is_empty());
+    }
+
+    #[test]
+    fn overload_evicts_lowest_priority_newest_first() {
+        let mut pa = two_class(2, 2);
+        assert_eq!(pa.offer(0, 10).0, Admit::Admitted);
+        assert_eq!(pa.offer(0, 11).0, Admit::Admitted);
+        // global bound hit: a high-priority arrival displaces the NEWEST
+        // low-priority item; the oldest low item keeps its place
+        let (admit, out) = pa.offer(1, 20);
+        assert_eq!(admit, Admit::Evicted { victim: 0 });
+        assert_eq!(out, Some(11));
+        assert_eq!(pa.shed(0), 1);
+        assert_eq!(pa.pop_front(), Some((1, 20)));
+        assert_eq!(pa.pop_front(), Some((0, 10)));
+    }
+
+    #[test]
+    fn low_priority_never_evicts_equal_or_higher() {
+        let mut pa = two_class(2, 2);
+        pa.offer(1, 20);
+        pa.offer(1, 21);
+        // system full of high-priority work: low arrivals are shed ...
+        let (admit, out) = pa.offer(0, 10);
+        assert_eq!((admit, out), (Admit::Shed, Some(10)));
+        // ... and so are further high arrivals (equal priority never evicts)
+        assert_eq!(pa.offer(1, 22).0, Admit::Shed);
+        assert_eq!((pa.shed(0), pa.shed(1)), (1, 1));
+        assert_eq!(pa.shed_total(), 2);
+    }
+
+    #[test]
+    fn lane_bound_binds_before_global_bound() {
+        let mut pa = two_class(8, 1);
+        assert_eq!(pa.offer(1, 20).0, Admit::Admitted);
+        // global headroom remains, but the class lane is full
+        assert_eq!(pa.offer(1, 21).0, Admit::Shed);
+        assert_eq!(pa.class_len(1), 1);
+        assert_eq!(pa.len(), 1);
+    }
+
+    #[test]
+    fn pop_front_if_skips_non_matching_items_in_priority_order() {
+        let mut pa = two_class(8, 8);
+        pa.offer(0, 4);
+        pa.offer(1, 9);
+        pa.offer(1, 6);
+        // first even value, scanning high class first
+        assert_eq!(pa.pop_front_if(|&v| v % 2 == 0), Some((1, 6)));
+        assert_eq!(pa.pop_front_if(|&v| v % 2 == 0), Some((0, 4)));
+        assert_eq!(pa.pop_front_if(|&v| v % 2 == 0), None);
+        assert_eq!(pa.len(), 1, "odd item 9 stays queued");
     }
 }

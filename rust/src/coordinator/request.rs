@@ -8,6 +8,11 @@ use std::time::Instant;
 #[derive(Debug)]
 pub struct Request {
     pub id: u64,
+    /// Tenant class id; `0` is the untenanted single-class default, so
+    /// pre-scenario traffic keeps working unchanged.  Scenario traffic
+    /// (`serve::scenario`) assigns class ids and the metrics layer breaks
+    /// latency/SLO accounting out per tenant.
+    pub tenant: u32,
     pub tokens: Vec<i32>,
     pub enqueued: Instant,
     pub respond: Sender<Response>,
@@ -17,6 +22,8 @@ pub struct Request {
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
+    /// Tenant class id, echoed from the request (`0` = untenanted).
+    pub tenant: u32,
     /// Next-token argmax per input position (length = original request len).
     pub argmax: Vec<i32>,
     /// Wall time spent queued + executing.
@@ -29,7 +36,14 @@ pub struct Response {
 
 impl Response {
     pub fn failed(id: u64, err: impl Into<String>) -> Self {
-        Response { id, argmax: Vec::new(), latency_s: 0.0, bucket: 0, error: Some(err.into()) }
+        Response {
+            id,
+            tenant: 0,
+            argmax: Vec::new(),
+            latency_s: 0.0,
+            bucket: 0,
+            error: Some(err.into()),
+        }
     }
 }
 
@@ -41,9 +55,22 @@ mod tests {
     #[test]
     fn request_roundtrip_through_channel() {
         let (tx, rx) = channel();
-        let req = Request { id: 7, tokens: vec![1, 2, 3], enqueued: Instant::now(), respond: tx };
+        let req = Request {
+            id: 7,
+            tenant: 0,
+            tokens: vec![1, 2, 3],
+            enqueued: Instant::now(),
+            respond: tx,
+        };
         req.respond
-            .send(Response { id: req.id, argmax: vec![2, 3, 4], latency_s: 0.001, bucket: 16, error: None })
+            .send(Response {
+                id: req.id,
+                tenant: req.tenant,
+                argmax: vec![2, 3, 4],
+                latency_s: 0.001,
+                bucket: 16,
+                error: None,
+            })
             .unwrap();
         let resp = rx.recv().unwrap();
         assert_eq!(resp.id, 7);

@@ -92,7 +92,7 @@ pub fn handle_conn(
         match parse_request(line) {
             Ok((id, tokens)) => {
                 let (tx, rx) = channel();
-                let req = Request { id, tokens, enqueued: Instant::now(), respond: tx };
+                let req = Request { id, tenant: 0, tokens, enqueued: Instant::now(), respond: tx };
                 match queue.try_push(req) {
                     PushResult::Ok => {
                         // block this connection until its answer arrives
@@ -160,7 +160,14 @@ mod tests {
 
     #[test]
     fn renders_success_and_error() {
-        let ok = Response { id: 1, argmax: vec![4, 2], latency_s: 0.0015, bucket: 16, error: None };
+        let ok = Response {
+            id: 1,
+            tenant: 0,
+            argmax: vec![4, 2],
+            latency_s: 0.0015,
+            bucket: 16,
+            error: None,
+        };
         let s = render_response(&ok);
         assert!(s.contains("\"argmax\":[4,2]"));
         assert!(s.contains("\"bucket\":16"));

@@ -15,6 +15,9 @@
 //!   serve-sim     drive synthetic open-loop traffic through the sim-backed
 //!                 serving core (no GPU, no artifacts); --ep/--tp/--placement
 //!                 run it expert-parallel sharded
+//!   scenario      trace-driven multi-tenant scenario on the virtual clock:
+//!                 burst + Poisson arrivals, tenant priorities and SLOs,
+//!                 overload shedding, and a mid-run shard kill/recover
 //!   client        send synthetic requests to a running server
 //!   selftest      quick numeric self-check (CPU executor vs reference)
 
@@ -80,13 +83,15 @@ fn main() {
         "plan" => cmd_plan(rest),
         "serve" => cmd_serve(rest),
         "serve-sim" => cmd_serve_sim(rest),
+        "scenario" => cmd_scenario(rest),
         "client" => cmd_client(rest),
         "selftest" => cmd_selftest(),
         _ => {
             eprintln!(
                 "staticbatch {} — static batching of irregular workloads\n\n\
                  usage: staticbatch <table1|baselines|mapping|ordering|empty-tasks|swizzle|\n\
-                        token-copy|ragged|sweep|simulate|plan|serve|serve-sim|client|selftest> [flags]\n\
+                        token-copy|ragged|sweep|simulate|plan|serve|serve-sim|scenario|client|\n\
+                        selftest> [flags]\n\
                  run a subcommand with --help for its flags",
                 staticbatch::VERSION
             );
@@ -366,6 +371,89 @@ fn cmd_serve_sim(args: &[String]) -> i32 {
         drive(ShardedStepExecutor::new(cfg), server_cfg, traffic)
     } else {
         drive(SimStepExecutor::new(sim_cfg), server_cfg, traffic)
+    }
+}
+
+/// Trace-driven multi-tenant scenario on the virtual clock: a burst +
+/// Poisson arrival trace split across a premium and a batch tenant,
+/// priority admission shedding the batch tenant first under overload, and
+/// a scheduled shard kill/recover forcing the expert-parallel executor to
+/// re-shard mid-run.  Fully deterministic for a seed — nothing sleeps.
+fn cmd_scenario(args: &[String]) -> i32 {
+    use staticbatch::serve::{
+        run_scenario, ArrivalTrace, FaultEvent, FaultKind, FaultPlan, PlacementKind,
+        ScenarioConfig, ShardedServeConfig, ShardedStepExecutor, SimServeConfig, SimStepExecutor,
+    };
+
+    let cmd = Command::new("scenario", "trace-driven multi-tenant scenario on the virtual clock")
+        .flag("burst", Some("300"), "opening-burst request count")
+        .flag("rate", Some("400"), "steady Poisson rate after the burst (req/s)")
+        .flag("duration", Some("1"), "Poisson segment length (virtual seconds)")
+        .flag("requests", Some("0"), "cap on total arrivals; 0 = the full trace")
+        .flag("queue", Some("64"), "global admission bound across tenant lanes")
+        .flag("ep", Some("4"), "expert-parallel shards (1 = unsharded executor)")
+        .flag("placement", Some("balanced"), "expert placement: static|balanced")
+        .flag("kill-at", Some("0.3"), "virtual time the shard dies; negative = never")
+        .flag("recover-at", Some("0.6"), "virtual time it returns; negative = never")
+        .flag("shard", Some("1"), "shard the fault plan targets")
+        .flag("seed", Some("1"), "arrival / tenant-assignment / prompt seed");
+    let p = match cmd.parse(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let seed = p.u64("seed").unwrap_or(1);
+    let mut faults = Vec::new();
+    let shard = p.usize("shard").unwrap_or(1);
+    let kill_at = p.f64("kill-at").unwrap_or(0.3);
+    let recover_at = p.f64("recover-at").unwrap_or(0.6);
+    if kill_at >= 0.0 {
+        faults.push(FaultEvent { at_s: kill_at, shard, kind: FaultKind::Kill });
+        if recover_at >= 0.0 {
+            faults.push(FaultEvent { at_s: recover_at, shard, kind: FaultKind::Recover });
+        }
+    }
+    let cfg = ScenarioConfig {
+        trace: ArrivalTrace::new()
+            .burst(p.usize("burst").unwrap_or(300), 0.0)
+            .poisson(p.f64("rate").unwrap_or(400.0), p.f64("duration").unwrap_or(1.0)),
+        faults: FaultPlan::new(faults),
+        queue_capacity: p.usize("queue").unwrap_or(64).max(1),
+        max_requests: p.usize("requests").unwrap_or(0),
+        seed,
+        ..ScenarioConfig::default()
+    };
+    let ep = p.usize("ep").unwrap_or(4).max(1);
+    let report = if ep > 1 {
+        let placement = match PlacementKind::from_name(&p.str("placement")) {
+            Some(k) => k,
+            None => {
+                eprintln!("unknown placement '{}' (static|balanced)", p.str("placement"));
+                return 2;
+            }
+        };
+        let mut ex = ShardedStepExecutor::new(ShardedServeConfig {
+            base: SimServeConfig { numeric: false, seed, ..SimServeConfig::default() },
+            ep,
+            placement,
+            ..ShardedServeConfig::default()
+        });
+        run_scenario(&mut ex, &cfg)
+    } else {
+        let mut ex = SimStepExecutor::new(SimServeConfig {
+            numeric: false,
+            seed,
+            ..SimServeConfig::default()
+        });
+        run_scenario(&mut ex, &cfg)
+    };
+    println!("{}", report.render());
+    if report.failed > 0 {
+        1
+    } else {
+        0
     }
 }
 

@@ -283,8 +283,8 @@ pub fn swizzle_table() -> String {
 /// **SERVE**: the sim-serving load test — burst traffic from prompt pools
 /// of varying popularity skew through the backend-generic serving core
 /// (queue → batcher → PlanCache → executor → metrics), reporting
-/// throughput shape and plan-cache behavior.  Accounting backend, so the
-/// table regenerates in milliseconds.
+/// throughput shape, admission drops and errors, and plan-cache behavior.
+/// Accounting backend, so the table regenerates in milliseconds.
 pub fn serving_sim_table(requests: usize, seed: u64) -> String {
     use crate::coordinator::batcher::BatchPolicy;
     use crate::serve::{
@@ -292,7 +292,8 @@ pub fn serving_sim_table(requests: usize, seed: u64) -> String {
     };
 
     let mut t = Table::new(&[
-        "traffic", "requests", "batches", "mean batch", "cache hits", "cache misses", "hit rate",
+        "traffic", "requests", "rejected", "errors", "batches", "mean batch", "cache hits",
+        "cache misses", "hit rate",
     ]);
     for (name, distinct, alpha) in
         [("hot pool", 4usize, 1.6), ("mixed pool", 8, 1.2), ("wide pool", 32, 0.8)]
@@ -326,6 +327,8 @@ pub fn serving_sim_table(requests: usize, seed: u64) -> String {
         t.row(&[
             name.into(),
             format!("{}", report.ok),
+            format!("{}", report.rejected),
+            format!("{}", report.failed),
             format!("{}", report.snapshot.batches),
             format!("{:.2}", report.snapshot.mean_batch),
             format!("{}", c.hits),
@@ -402,6 +405,49 @@ pub fn sharded_serving_table(requests: usize, seed: u64) -> String {
                 sh.reshards.to_string(),
             ]);
         }
+    }
+    t.render()
+}
+
+/// **SCENARIO**: the pinned multi-tenant fault scenario — a 300-request
+/// opening burst plus a second of 400 Hz Poisson traffic, split between a
+/// premium tenant (priority 2, 30% share) and a batch tenant (priority 1,
+/// 70%), with shard 1 of the EP=4 balanced executor killed at t=0.3s and
+/// recovered at t=0.6s.  One row per tenant: what was sent, what finished,
+/// what admission shed, and the latency/SLO/goodput outcome — all on the
+/// virtual clock, so the table is deterministic and regenerates in
+/// milliseconds.
+pub fn scenario_table(seed: u64) -> String {
+    use crate::serve::{
+        run_scenario, PlacementKind, ScenarioConfig, ShardedServeConfig, ShardedStepExecutor,
+        SimServeConfig,
+    };
+
+    let cfg = ScenarioConfig { seed, ..ScenarioConfig::default() };
+    let mut ex = ShardedStepExecutor::new(ShardedServeConfig {
+        base: SimServeConfig { numeric: false, seed, ..SimServeConfig::default() },
+        ep: 4,
+        placement: PlacementKind::Balanced,
+        ..ShardedServeConfig::default()
+    });
+    let r = run_scenario(&mut ex, &cfg);
+    let mut t = Table::new(&[
+        "tenant", "prio", "sent", "ok", "failed", "shed", "p50(ms)", "p99(ms)", "slo%",
+        "goodput(req/s)",
+    ]);
+    for tr in &r.tenants {
+        t.row(&[
+            tr.name.clone(),
+            tr.priority.to_string(),
+            tr.sent.to_string(),
+            tr.ok.to_string(),
+            tr.failed.to_string(),
+            tr.shed.to_string(),
+            format!("{:.3}", tr.p50_ms),
+            format!("{:.3}", tr.p99_ms),
+            format!("{:.1}", tr.slo_attainment * 100.0),
+            format!("{:.1}", tr.goodput_rps),
+        ]);
     }
     t.render()
 }
@@ -520,9 +566,22 @@ mod tests {
     fn serving_sim_table_reports_cache_behavior() {
         let s = super::serving_sim_table(48, 7);
         assert_eq!(s.lines().count(), 2 + 3, "header + 3 traffic rows:\n{s}");
-        for name in ["hot pool", "mixed pool", "wide pool", "hit rate"] {
+        for name in ["hot pool", "mixed pool", "wide pool", "rejected", "errors", "hit rate"] {
             assert!(s.contains(name), "missing {name} in:\n{s}");
         }
+    }
+
+    #[test]
+    fn scenario_table_orders_slo_attainment_by_priority() {
+        let s = super::scenario_table(7);
+        assert_eq!(s.lines().count(), 2 + 2, "header + 2 tenant rows:\n{s}");
+        assert!(s.contains("premium") && s.contains("batch"), "{s}");
+        let slo: Vec<f64> = s
+            .lines()
+            .skip(2)
+            .map(|l| l.split('|').nth(9).unwrap().trim().parse().unwrap())
+            .collect();
+        assert!(slo[0] >= slo[1], "premium {} < batch {}:\n{s}", slo[0], slo[1]);
     }
 
     #[test]

@@ -37,6 +37,11 @@ pub struct TrafficConfig {
     pub lengths: Vec<usize>,
     /// Seed for prompt contents and popularity draws.
     pub seed: u64,
+    /// Simulated-clock mode: the producer never sleeps (arrival times are
+    /// virtual), and the reported `wall_s` becomes the virtual arrival
+    /// horizon `requests / rate_hz` instead of elapsed wall time.  Makes
+    /// rate-shaped runs deterministic and instant — benches and CI use it.
+    pub sim_clock: bool,
 }
 
 impl Default for TrafficConfig {
@@ -49,6 +54,7 @@ impl Default for TrafficConfig {
             distinct: 8,
             lengths: vec![12, 48, 200],
             seed: 1,
+            sim_clock: false,
         }
     }
 }
@@ -64,7 +70,8 @@ pub struct TrafficReport {
     pub failed: usize,
     /// Requests the bounded queue refused (backpressure).
     pub rejected: usize,
-    /// Wall-clock seconds of the serving loop.
+    /// Wall-clock seconds of the serving loop (in sim-clock mode: the
+    /// virtual arrival horizon, `requests / rate_hz`).
     pub wall_s: f64,
     /// Median end-to-end request latency, milliseconds.
     pub p50_ms: f64,
@@ -130,7 +137,7 @@ pub fn run_traffic<E: StepExecutor>(server: &mut Server<E>, cfg: TrafficConfig) 
         let mut rejected = 0usize;
         let t0 = Instant::now();
         for i in 0..cfg2.requests {
-            if cfg2.rate_hz > 0.0 {
+            if cfg2.rate_hz > 0.0 && !cfg2.sim_clock {
                 let due = t0 + Duration::from_secs_f64(i as f64 / cfg2.rate_hz);
                 let now = Instant::now();
                 if due > now {
@@ -141,6 +148,7 @@ pub fn run_traffic<E: StepExecutor>(server: &mut Server<E>, cfg: TrafficConfig) 
             let (tx, rx) = channel();
             let req = Request {
                 id: i as u64,
+                tenant: 0,
                 tokens: prompt.clone(),
                 enqueued: Instant::now(),
                 respond: tx,
@@ -157,7 +165,11 @@ pub fn run_traffic<E: StepExecutor>(server: &mut Server<E>, cfg: TrafficConfig) 
 
     let t0 = Instant::now();
     server.serve();
-    let wall_s = t0.elapsed().as_secs_f64();
+    let wall_s = if cfg.sim_clock && cfg.rate_hz > 0.0 {
+        cfg.requests as f64 / cfg.rate_hz
+    } else {
+        t0.elapsed().as_secs_f64()
+    };
 
     let (receivers, rejected) = producer.join().expect("producer thread");
     let sent = receivers.len() + rejected;
@@ -220,5 +232,33 @@ mod tests {
         let cache = report.cache.expect("sim executor has a plan cache");
         assert!(cache.hits + cache.misses > 0);
         assert!(report.render().contains("plan cache"));
+    }
+
+    #[test]
+    fn sim_clock_skips_sleeps_and_reports_the_virtual_horizon() {
+        let ex = SimStepExecutor::new(SimServeConfig {
+            buckets: vec![16, 64, 256],
+            max_tokens: 2048,
+            numeric: false,
+            ..SimServeConfig::default()
+        });
+        let mut server = Server::new(
+            ServerConfig { queue_capacity: 512, ..ServerConfig::default() },
+            ex,
+        );
+        // 48 requests at 2 req/s would sleep ~24 s of wall time without
+        // sim_clock; the test finishing at all proves the sleeps are gone.
+        let report = run_traffic(
+            &mut server,
+            TrafficConfig {
+                requests: 48,
+                rate_hz: 2.0,
+                sim_clock: true,
+                ..TrafficConfig::default()
+            },
+        );
+        assert_eq!(report.sent, 48);
+        assert_eq!(report.failed, 0);
+        assert!((report.wall_s - 24.0).abs() < 1e-12, "virtual horizon, got {}", report.wall_s);
     }
 }

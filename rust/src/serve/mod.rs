@@ -57,6 +57,7 @@
 //!             argmax: step.tokens.iter().map(|&t| t + 1).collect(),
 //!             expert_rows: Vec::new(),
 //!             failed: Vec::new(),
+//!             sim_time_s: None,
 //!         })
 //!     }
 //! }
@@ -64,7 +65,13 @@
 //! let mut server = Server::new(ServerConfig::default(), Echo);
 //! let queue = server.queue();
 //! let (tx, rx) = channel();
-//! queue.try_push(Request { id: 0, tokens: vec![1, 2, 3], enqueued: Instant::now(), respond: tx });
+//! queue.try_push(Request {
+//!     id: 0,
+//!     tenant: 0,
+//!     tokens: vec![1, 2, 3],
+//!     enqueued: Instant::now(),
+//!     respond: tx,
+//! });
 //! queue.close();
 //! server.serve(); // drains the closed queue, then returns
 //! let response: Response = rx.try_recv().unwrap();
@@ -72,6 +79,7 @@
 //! ```
 
 pub mod driver;
+pub mod scenario;
 pub mod server;
 pub mod sharded;
 pub mod sim_exec;
@@ -79,6 +87,10 @@ pub mod sim_exec;
 pub use crate::coordinator::metrics::ShardingStats;
 pub use crate::moe::plan_cache::{CacheStats, PlanCache};
 pub use driver::{run_traffic, TrafficConfig, TrafficReport};
+pub use scenario::{
+    run_scenario, ArrivalTrace, FaultEvent, FaultKind, FaultPlan, ScenarioConfig, ScenarioReport,
+    TenantClass, TraceSegment,
+};
 pub use server::{Server, ServerConfig};
 pub use sharded::{PlacementKind, ShardedServeConfig, ShardedStepExecutor};
 pub use sim_exec::{SimServeConfig, SimStepExecutor};
@@ -109,6 +121,11 @@ pub struct StepOutput {
     /// placeholder argmax entries and the server fails only their
     /// requests, preserving per-request error isolation inside a batch.
     pub failed: Vec<(usize, String)>,
+    /// Simulated seconds this step took on the modeled hardware, when the
+    /// executor runs an accounting backend (`None` for pure-numeric or
+    /// echo executors).  The scenario runner ([`scenario::run_scenario`])
+    /// advances its virtual clock by this amount per step.
+    pub sim_time_s: Option<f64>,
 }
 
 /// The execution step of the serving loop: everything between a formed
@@ -146,5 +163,13 @@ pub trait StepExecutor {
     /// every step, like the plan-cache counters.
     fn sharding(&self) -> Option<ShardingStats> {
         None
+    }
+
+    /// Apply a scheduled shard fault (slowdown, death, recovery) from a
+    /// [`scenario::FaultPlan`].  Executors without shard structure ignore
+    /// faults; [`ShardedStepExecutor`] adjusts per-shard speed/liveness and
+    /// evacuates experts off dead shards.
+    fn apply_fault(&mut self, event: &FaultEvent) {
+        let _ = event;
     }
 }

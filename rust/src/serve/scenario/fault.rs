@@ -1,0 +1,85 @@
+//! Fault plans: scheduled shard-level failures on the virtual clock.
+//!
+//! A [`FaultPlan`] is a time-sorted list of [`FaultEvent`]s.  The scenario
+//! runner applies every event whose time has passed to the executor via
+//! [`crate::serve::StepExecutor::apply_fault`]; the sharded executor
+//! translates them into per-shard speed and liveness changes (and a forced
+//! expert evacuation on [`FaultKind::Kill`]).  Executors without shard
+//! structure ignore them.
+
+/// What happens to the shard.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// The shard keeps serving but `factor`x slower (stragglers, thermal
+    /// throttling, a noisy neighbor).
+    Slow {
+        /// Kernel-time multiplier; 2.0 means twice as slow.
+        factor: f64,
+    },
+    /// The shard dies: it serves nothing until a [`FaultKind::Recover`],
+    /// and its experts are evacuated to the surviving shards.
+    Kill,
+    /// The shard returns at nominal speed.
+    Recover,
+}
+
+/// One scheduled fault.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    /// Virtual time the fault strikes, seconds from scenario start.
+    pub at_s: f64,
+    /// Which shard (ignored by executors without that many shards).
+    pub shard: usize,
+    /// What happens.
+    pub kind: FaultKind,
+}
+
+/// A time-sorted schedule of shard faults.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Build a plan; events are sorted by time (stably, so same-time events
+    /// keep their given order).
+    pub fn new(mut events: Vec<FaultEvent>) -> Self {
+        events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+        FaultPlan { events }
+    }
+
+    /// The scheduled events, ascending by time.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Virtual time of the earliest fault, if any.
+    pub fn first_at(&self) -> Option<f64> {
+        self.events.first().map(|e| e.at_s)
+    }
+
+    /// True when nothing is scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_sorts_events_by_time() {
+        let plan = FaultPlan::new(vec![
+            FaultEvent { at_s: 0.6, shard: 1, kind: FaultKind::Recover },
+            FaultEvent { at_s: 0.3, shard: 1, kind: FaultKind::Kill },
+            FaultEvent { at_s: 0.4, shard: 0, kind: FaultKind::Slow { factor: 4.0 } },
+        ]);
+        let times: Vec<f64> = plan.events().iter().map(|e| e.at_s).collect();
+        assert_eq!(times, vec![0.3, 0.4, 0.6]);
+        assert_eq!(plan.first_at(), Some(0.3));
+        assert!(!plan.is_empty());
+        assert!(FaultPlan::default().is_empty());
+        assert_eq!(FaultPlan::default().first_at(), None);
+    }
+}

@@ -1,0 +1,31 @@
+//! Scenario layer: trace-driven multi-tenant serving with SLOs, overload
+//! shedding, and shard fault injection — all on a virtual clock.
+//!
+//! The serving core answers "does the pipeline work"; this layer answers
+//! the production questions on top of it, deterministically and without a
+//! wall clock:
+//!
+//! * **Who sends what, when** — an [`ArrivalTrace`] composes Poisson,
+//!   burst, diurnal, and recorded segments into one arrival process
+//!   ([`trace`]).
+//! * **Who matters more** — [`TenantClass`]es carry priority, traffic
+//!   share, prompt mix, and a latency SLO ([`tenant`]); the
+//!   priority-admission layer
+//!   ([`crate::coordinator::queue::PriorityAdmission`]) sheds the lowest
+//!   priority first under overload.
+//! * **What breaks** — a [`FaultPlan`] schedules shard slowdowns, deaths,
+//!   and recoveries ([`fault`]), applied through
+//!   [`crate::serve::StepExecutor::apply_fault`].
+//! * **What happened** — [`run_scenario`] drives it all and returns a
+//!   [`ScenarioReport`] with conservation-checked totals, per-tenant SLO
+//!   attainment and goodput, and re-shard/recovery accounting ([`runner`]).
+
+pub mod fault;
+pub mod runner;
+pub mod tenant;
+pub mod trace;
+
+pub use fault::{FaultEvent, FaultKind, FaultPlan};
+pub use runner::{run_scenario, ScenarioConfig, ScenarioReport, TenantReport};
+pub use tenant::TenantClass;
+pub use trace::{ArrivalTrace, TraceSegment};

@@ -1,0 +1,510 @@
+//! The scenario runner: an event-driven serving loop on a virtual clock.
+//!
+//! [`run_scenario`] drives any [`StepExecutor`] through a full multi-tenant
+//! scenario without touching the wall clock: arrivals come from an
+//! [`ArrivalTrace`], each is assigned to a [`TenantClass`] by share weight
+//! and offered to a [`PriorityAdmission`] layer (bounded lanes, lowest
+//! priority shed first), batches form off the priority queue, and the
+//! clock advances by each step's simulated time
+//! ([`crate::serve::StepOutput::sim_time_s`]).  Scheduled shard faults from
+//! a [`FaultPlan`] are applied as their virtual time passes.  Because
+//! nothing sleeps and nothing races, a scenario is exactly reproducible
+//! from its seed — overload, shedding, fault, and recovery included.
+
+use std::collections::HashSet;
+
+use crate::coordinator::metrics::{Metrics, Snapshot, TenantStats};
+use crate::coordinator::queue::{Admit, PriorityAdmission};
+use crate::serve::{StepExecutor, StepInput};
+use crate::util::rng::{zipf_weights, Rng};
+
+use super::{ArrivalTrace, FaultEvent, FaultKind, FaultPlan, TenantClass};
+
+/// Everything that defines one scenario run.
+#[derive(Clone, Debug)]
+pub struct ScenarioConfig {
+    /// The arrival process.
+    pub trace: ArrivalTrace,
+    /// Tenant classes; arrivals are split across them by share weight.
+    /// Class `i` is threaded through metrics as tenant id `i + 1`.
+    pub tenants: Vec<TenantClass>,
+    /// Scheduled shard faults.
+    pub faults: FaultPlan,
+    /// Global bound on queued requests across all tenant lanes.
+    pub queue_capacity: usize,
+    /// Most requests packed into one batch.
+    pub max_batch_requests: usize,
+    /// Cap on arrivals taken from the trace; 0 means no cap.
+    pub max_requests: usize,
+    /// Virtual seconds charged per step when the executor reports no
+    /// simulated time (e.g. numeric CPU executors).
+    pub fallback_step_s: f64,
+    /// Token id range for generated prompts.
+    pub vocab: usize,
+    /// Zipf exponent for prompt token values.
+    pub zipf_alpha: f64,
+    /// Seed for arrivals, tenant assignment, and prompt contents.
+    pub seed: u64,
+}
+
+impl Default for ScenarioConfig {
+    /// The pinned two-tenant acceptance scenario: a 300-request opening
+    /// burst plus one second of 400 Hz Poisson traffic, a premium tenant
+    /// (priority 2, 30% share) over a batch tenant (priority 1, 70%), and
+    /// shard 1 dying at t=0.3s and recovering at t=0.6s.
+    fn default() -> Self {
+        ScenarioConfig {
+            trace: ArrivalTrace::new().burst(300, 0.0).poisson(400.0, 1.0),
+            tenants: vec![
+                TenantClass::new("premium", 2, 0.3),
+                TenantClass::new("batch", 1, 0.7),
+            ],
+            faults: FaultPlan::new(vec![
+                FaultEvent { at_s: 0.3, shard: 1, kind: FaultKind::Kill },
+                FaultEvent { at_s: 0.6, shard: 1, kind: FaultKind::Recover },
+            ]),
+            queue_capacity: 64,
+            max_batch_requests: 8,
+            max_requests: 0,
+            fallback_step_s: 0.002,
+            vocab: 1000,
+            zipf_alpha: 1.2,
+            seed: 1,
+        }
+    }
+}
+
+/// Per-tenant outcome of one scenario run.
+#[derive(Clone, Debug)]
+pub struct TenantReport {
+    /// Tenant class name.
+    pub name: String,
+    /// Tenant priority.
+    pub priority: u32,
+    /// Arrivals assigned to this class (ok + failed + shed).
+    pub sent: u64,
+    /// Requests completed without error.
+    pub ok: u64,
+    /// Requests that errored.
+    pub failed: u64,
+    /// Requests dropped by admission control.
+    pub shed: u64,
+    /// Median end-to-end virtual latency, milliseconds.
+    pub p50_ms: f64,
+    /// 99th-percentile end-to-end virtual latency, milliseconds.
+    pub p99_ms: f64,
+    /// Fraction of finished-or-dropped requests that met the SLO
+    /// (sheds and errors count as misses).
+    pub slo_attainment: f64,
+    /// SLO-meeting completions per virtual second.
+    pub goodput_rps: f64,
+}
+
+/// What one scenario run produced.
+#[derive(Clone, Debug)]
+pub struct ScenarioReport {
+    /// Virtual seconds the scenario spanned.
+    pub virtual_s: f64,
+    /// Arrivals generated (= ok + failed + shed; conservation holds by
+    /// construction).
+    pub sent: u64,
+    /// Requests completed without error.
+    pub ok: u64,
+    /// Requests that errored.
+    pub failed: u64,
+    /// Requests dropped by admission control (lane-full + evictions).
+    pub shed: u64,
+    /// Batches executed.
+    pub steps: u64,
+    /// Expert re-shards over the whole run (sharded executors only).
+    pub reshards: u64,
+    /// Re-shards at or after the first fault struck.
+    pub reshards_after_fault: u64,
+    /// Virtual seconds from the first fault to the first re-shard after it,
+    /// when both happened.
+    pub recovery_s: Option<f64>,
+    /// Per-tenant breakdowns, in [`ScenarioConfig::tenants`] order.
+    pub tenants: Vec<TenantReport>,
+    /// Full metrics snapshot (latency percentiles are virtual-clock; the
+    /// wall-clock `elapsed_s` field is not meaningful for scenarios).
+    pub snapshot: Snapshot,
+}
+
+impl ScenarioReport {
+    /// Multi-line human summary (the `staticbatch scenario` output).
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "scenario: virtual={:.3}s  sent={} ok={} failed={} shed={}  steps={}\n\
+             placement: reshards={} (after first fault: {})  recovery={}",
+            self.virtual_s,
+            self.sent,
+            self.ok,
+            self.failed,
+            self.shed,
+            self.steps,
+            self.reshards,
+            self.reshards_after_fault,
+            match self.recovery_s {
+                Some(r) => format!("{:.1}ms", r * 1e3),
+                None => "-".to_string(),
+            },
+        );
+        for t in &self.tenants {
+            s.push_str(&format!(
+                "\ntenant {} (prio {}): sent={} ok={} failed={} shed={}  \
+                 p50={:.3}ms p99={:.3}ms  slo {:.1}%  goodput {:.1} req/s",
+                t.name,
+                t.priority,
+                t.sent,
+                t.ok,
+                t.failed,
+                t.shed,
+                t.p50_ms,
+                t.p99_ms,
+                t.slo_attainment * 100.0,
+                t.goodput_rps,
+            ));
+        }
+        s
+    }
+}
+
+/// One queued request inside the scenario runner.
+struct Item {
+    arrival_s: f64,
+    tenant: u32,
+    tokens: Vec<i32>,
+}
+
+fn current_reshards<E: StepExecutor>(executor: &E) -> u64 {
+    executor.sharding().map_or(0, |s| s.reshards)
+}
+
+/// Run one scenario against `executor`.  Single-threaded and fully
+/// deterministic: the clock is virtual, advanced only by simulated step
+/// times (or [`ScenarioConfig::fallback_step_s`]), and jumps forward to
+/// the next arrival whenever the system drains idle.
+pub fn run_scenario<E: StepExecutor>(executor: &mut E, cfg: &ScenarioConfig) -> ScenarioReport {
+    assert!(!cfg.tenants.is_empty(), "at least one tenant class");
+    let mut rng = Rng::new(cfg.seed);
+    let mut times = cfg.trace.arrivals(cfg.seed ^ 0x5CEA_0001);
+    if cfg.max_requests > 0 {
+        times.truncate(cfg.max_requests);
+    }
+    // One distinct prompt per (tenant, length): popular prompts repeat, so
+    // load signatures recur and the plan cache sees realistic hits.
+    let token_w = zipf_weights(cfg.vocab.max(2), cfg.zipf_alpha);
+    let pools: Vec<Vec<Vec<i32>>> = cfg
+        .tenants
+        .iter()
+        .map(|t| {
+            t.prompt_lengths
+                .iter()
+                .map(|&len| (0..len.max(1)).map(|_| rng.zipf(&token_w) as i32 + 1).collect())
+                .collect()
+        })
+        .collect();
+    let shares: Vec<f64> = cfg.tenants.iter().map(|t| t.share.max(0.0)).collect();
+    let arrivals: Vec<(f64, usize, Vec<i32>)> = times
+        .iter()
+        .map(|&t| {
+            let class = rng.zipf(&shares);
+            let pool = &pools[class];
+            (t, class, pool[rng.usize_below(pool.len())].clone())
+        })
+        .collect();
+
+    let lanes: Vec<(u32, usize)> =
+        cfg.tenants.iter().map(|t| (t.priority, t.queue_capacity.max(1))).collect();
+    let mut pa: PriorityAdmission<Item> =
+        PriorityAdmission::new(cfg.queue_capacity.max(1), &lanes);
+    let metrics = Metrics::new();
+    let buckets = executor.buckets();
+    let step_cap = executor.max_step_tokens().unwrap_or(usize::MAX);
+    let events = cfg.faults.events();
+
+    let mut now = 0.0f64;
+    let mut next = 0usize;
+    let mut fi = 0usize;
+    let (mut steps, mut ok, mut failed, mut shed) = (0u64, 0u64, 0u64, 0u64);
+    let base_reshards = current_reshards(executor);
+    let mut first_fault: Option<f64> = None;
+    let mut reshards_at_fault = 0u64;
+    let mut recovery_s: Option<f64> = None;
+
+    loop {
+        // idle: jump the virtual clock to the next arrival
+        if pa.is_empty() && next < arrivals.len() {
+            now = now.max(arrivals[next].0);
+        }
+        // admit everything that has arrived by now
+        while next < arrivals.len() && arrivals[next].0 <= now {
+            let (t, class, ref tokens) = arrivals[next];
+            next += 1;
+            let tenant = class as u32 + 1;
+            let item = Item { arrival_s: t, tenant, tokens: tokens.clone() };
+            match pa.offer(class, item) {
+                (Admit::Admitted, _) => {}
+                (Admit::Evicted { victim }, _) => {
+                    shed += 1;
+                    metrics.record_tenant_shed(victim as u32 + 1);
+                }
+                (Admit::Shed, _) => {
+                    shed += 1;
+                    metrics.record_tenant_shed(tenant);
+                }
+            }
+        }
+        // apply faults whose virtual time has passed
+        while fi < events.len() && events[fi].at_s <= now {
+            if first_fault.is_none() {
+                first_fault = Some(events[fi].at_s);
+                reshards_at_fault = current_reshards(executor);
+            }
+            executor.apply_fault(&events[fi]);
+            fi += 1;
+        }
+        if pa.is_empty() {
+            if next >= arrivals.len() {
+                break;
+            }
+            continue;
+        }
+        // form one batch: the highest-priority head picks the bucket,
+        // riders that fit the bucket fill the remaining rows
+        let (head_class, head) = pa.pop_front().expect("queue is non-empty");
+        let bucket = match buckets.iter().find(|&&b| b >= head.tokens.len()) {
+            Some(&b) => b,
+            None => {
+                failed += 1;
+                metrics.record_tenant_error(head.tenant);
+                metrics.record_error();
+                continue;
+            }
+        };
+        let rows_cap = cfg.max_batch_requests.max(1).min((step_cap / bucket).max(1));
+        let mut batch = vec![(head_class, head)];
+        while batch.len() < rows_cap {
+            match pa.pop_front_if(|it| it.tokens.len() <= bucket) {
+                Some(rider) => batch.push(rider),
+                None => break,
+            }
+        }
+        let mut flat = Vec::with_capacity(batch.len() * bucket);
+        for (_, it) in &batch {
+            flat.extend_from_slice(&it.tokens);
+            flat.resize(flat.len() + bucket - it.tokens.len(), 0);
+        }
+        let step = StepInput { bucket, rows: batch.len(), tokens: &flat };
+        match executor.execute_step(&step) {
+            Ok(out) => {
+                let dt = out.sim_time_s.unwrap_or(cfg.fallback_step_s).max(0.0);
+                now += dt;
+                steps += 1;
+                metrics.record_exec(dt, batch.len());
+                if !out.expert_rows.is_empty() {
+                    metrics.record_expert_rows(&out.expert_rows);
+                }
+                if let Some(c) = executor.cache_stats() {
+                    metrics.set_plan_cache(c.hits, c.misses);
+                }
+                if let Some(sh) = executor.sharding() {
+                    metrics.set_sharding(sh);
+                }
+                let failed_rows: HashSet<usize> = out.failed.iter().map(|(r, _)| *r).collect();
+                for (row, (class, it)) in batch.iter().enumerate() {
+                    if failed_rows.contains(&row) {
+                        failed += 1;
+                        metrics.record_tenant_error(it.tenant);
+                        metrics.record_error();
+                    } else {
+                        let latency = now - it.arrival_s;
+                        let met = latency * 1e3 <= cfg.tenants[*class].slo_ms;
+                        ok += 1;
+                        metrics.record_request(latency, it.tokens.len());
+                        metrics.record_tenant_request(it.tenant, latency, Some(met));
+                    }
+                }
+            }
+            Err(_) => {
+                for (_, it) in &batch {
+                    failed += 1;
+                    metrics.record_tenant_error(it.tenant);
+                    metrics.record_error();
+                }
+                now += cfg.fallback_step_s;
+            }
+        }
+        if let (Some(f0), None) = (first_fault, recovery_s) {
+            if current_reshards(executor) > reshards_at_fault {
+                recovery_s = Some(now - f0);
+            }
+        }
+    }
+
+    debug_assert_eq!(arrivals.len() as u64, ok + failed + shed, "conservation");
+    let snapshot = metrics.snapshot();
+    let virtual_s = now;
+    let tenants = cfg
+        .tenants
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            let id = i as u32 + 1;
+            let st = snapshot
+                .tenants
+                .iter()
+                .find(|s| s.tenant == id)
+                .cloned()
+                .unwrap_or_else(|| TenantStats { tenant: id, ..TenantStats::default() });
+            TenantReport {
+                name: t.name.clone(),
+                priority: t.priority,
+                sent: st.requests + st.errors + st.shed,
+                ok: st.requests,
+                failed: st.errors,
+                shed: st.shed,
+                p50_ms: st.latency_p50_ms,
+                p99_ms: st.latency_p99_ms,
+                slo_attainment: st.slo_attainment(),
+                goodput_rps: st.goodput(virtual_s),
+            }
+        })
+        .collect();
+    let final_reshards = current_reshards(executor);
+    ScenarioReport {
+        virtual_s,
+        sent: arrivals.len() as u64,
+        ok,
+        failed,
+        shed,
+        steps,
+        reshards: final_reshards - base_reshards,
+        reshards_after_fault: if first_fault.is_some() {
+            final_reshards - reshards_at_fault
+        } else {
+            0
+        },
+        recovery_s,
+        tenants,
+        snapshot,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{
+        PlacementKind, ShardedServeConfig, ShardedStepExecutor, SimServeConfig, SimStepExecutor,
+    };
+
+    fn two_tenant_burst(count: usize, queue: usize) -> ScenarioConfig {
+        ScenarioConfig {
+            trace: ArrivalTrace::new().burst(count, 0.0),
+            tenants: vec![TenantClass::new("hi", 2, 0.3), TenantClass::new("lo", 1, 0.7)],
+            faults: FaultPlan::default(),
+            queue_capacity: queue,
+            ..ScenarioConfig::default()
+        }
+    }
+
+    fn sim_exec() -> SimStepExecutor {
+        SimStepExecutor::new(SimServeConfig {
+            buckets: vec![16, 64],
+            max_tokens: 2048,
+            numeric: false,
+            ..SimServeConfig::default()
+        })
+    }
+
+    #[test]
+    fn burst_overload_conserves_and_orders_attainment_by_priority() {
+        let mut ex = sim_exec();
+        let r = run_scenario(&mut ex, &two_tenant_burst(200, 32));
+        assert_eq!(r.sent, 200);
+        assert_eq!(r.ok + r.failed + r.shed, r.sent, "conservation");
+        assert_eq!(r.failed, 0);
+        assert!(r.shed > 0, "a 200-burst must overflow a 32-slot queue");
+        assert!(r.steps > 0);
+        assert!(r.virtual_s > 0.0);
+        let hi = &r.tenants[0];
+        let lo = &r.tenants[1];
+        assert_eq!(hi.sent + lo.sent, r.sent);
+        assert!(
+            hi.slo_attainment >= lo.slo_attainment,
+            "hi {} < lo {}",
+            hi.slo_attainment,
+            lo.slo_attainment
+        );
+        assert!(hi.shed <= lo.shed, "low priority is shed first");
+    }
+
+    #[test]
+    fn scenario_is_deterministic_for_a_seed() {
+        let a = run_scenario(&mut sim_exec(), &two_tenant_burst(100, 32));
+        let b = run_scenario(&mut sim_exec(), &two_tenant_burst(100, 32));
+        assert_eq!(a.virtual_s, b.virtual_s);
+        assert_eq!((a.ok, a.failed, a.shed, a.steps), (b.ok, b.failed, b.shed, b.steps));
+        assert_eq!(a.tenants[0].p99_ms, b.tenants[0].p99_ms);
+    }
+
+    #[test]
+    fn kill_fault_forces_a_reshard_and_recovery_is_reported() {
+        let mut ex = ShardedStepExecutor::new(ShardedServeConfig {
+            base: SimServeConfig {
+                buckets: vec![16, 64],
+                max_tokens: 2048,
+                numeric: false,
+                ..SimServeConfig::default()
+            },
+            ep: 2,
+            placement: PlacementKind::Static,
+            ..ShardedServeConfig::default()
+        });
+        let cfg = ScenarioConfig {
+            trace: ArrivalTrace::new().burst(64, 0.0),
+            faults: FaultPlan::new(vec![FaultEvent {
+                at_s: 0.0,
+                shard: 1,
+                kind: FaultKind::Kill,
+            }]),
+            queue_capacity: 64,
+            ..ScenarioConfig::default()
+        };
+        let r = run_scenario(&mut ex, &cfg);
+        assert_eq!(r.ok + r.failed + r.shed, r.sent);
+        assert!(r.reshards >= 1, "kill evacuation counts as a reshard");
+        assert!(r.reshards_after_fault >= 1);
+        assert!(r.recovery_s.is_some());
+        assert!(!ex.live()[1], "no recover event was scheduled");
+        assert!(ex.assignment().iter().all(|&s| s == 0));
+    }
+
+    #[test]
+    fn report_renders_tenant_lines() {
+        let r = run_scenario(&mut sim_exec(), &two_tenant_burst(40, 64));
+        let s = r.render();
+        assert!(s.contains("scenario: virtual="), "{s}");
+        assert!(s.contains("tenant hi (prio 2):"), "{s}");
+        assert!(s.contains("tenant lo (prio 1):"), "{s}");
+        assert!(s.contains("slo "), "{s}");
+    }
+
+    #[test]
+    fn oversized_prompts_fail_instead_of_wedging() {
+        let mut ex = sim_exec();
+        let cfg = ScenarioConfig {
+            trace: ArrivalTrace::new().burst(5, 0.0),
+            tenants: vec![TenantClass {
+                prompt_lengths: vec![500], // larger than every bucket
+                ..TenantClass::default()
+            }],
+            faults: FaultPlan::default(),
+            queue_capacity: 8,
+            ..ScenarioConfig::default()
+        };
+        let r = run_scenario(&mut ex, &cfg);
+        assert_eq!((r.ok, r.failed), (0, 5));
+        assert_eq!(r.ok + r.failed + r.shed, r.sent);
+    }
+}

@@ -1,0 +1,65 @@
+//! Tenant classes: who is sending the traffic, and what they were promised.
+//!
+//! A [`TenantClass`] bundles a priority (admission order and shed order), a
+//! traffic share (how much of the arrival trace this class generates), a
+//! prompt-length mix, a bounded queue lane, and a latency SLO.  The
+//! scenario runner assigns each arrival to a class by share weight, threads
+//! the class id through [`crate::coordinator::request::Request::tenant`],
+//! and reports per-class latency, goodput, and SLO attainment.
+
+/// One tenant class in a scenario.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantClass {
+    /// Display name for reports.
+    pub name: String,
+    /// Admission priority: higher is more important.  Under overload the
+    /// admission layer sheds strictly-lower-priority work first.
+    pub priority: u32,
+    /// Relative share of the arrival trace this class generates (weights
+    /// are normalized across classes; they need not sum to 1).
+    pub share: f64,
+    /// Prompt lengths this class draws from, uniformly.
+    pub prompt_lengths: Vec<usize>,
+    /// Bound on this class's own admission lane (requests queued at once).
+    pub queue_capacity: usize,
+    /// End-to-end latency SLO, virtual milliseconds (TTFT-style: arrival
+    /// to completed step).  A completed request meets its SLO when its
+    /// virtual latency is at or under this.
+    pub slo_ms: f64,
+}
+
+impl TenantClass {
+    /// A class with the given identity and the default traffic shape
+    /// (prompt lengths 12/48, lane bound 64, 50 ms SLO).
+    pub fn new(name: &str, priority: u32, share: f64) -> Self {
+        TenantClass {
+            name: name.to_string(),
+            priority,
+            share,
+            prompt_lengths: vec![12, 48],
+            queue_capacity: 64,
+            slo_ms: 50.0,
+        }
+    }
+}
+
+impl Default for TenantClass {
+    fn default() -> Self {
+        TenantClass::new("tenant", 1, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructor_sets_identity_and_defaults() {
+        let t = TenantClass::new("premium", 2, 0.3);
+        assert_eq!((t.name.as_str(), t.priority), ("premium", 2));
+        assert!((t.share - 0.3).abs() < 1e-12);
+        assert!(t.queue_capacity > 0);
+        assert!(t.slo_ms > 0.0);
+        assert!(!t.prompt_lengths.is_empty());
+    }
+}

@@ -1,0 +1,221 @@
+//! Arrival traces: composable request-arrival processes on a virtual clock.
+//!
+//! The traffic driver's single `rate_hz` knob models one steady Poisson
+//! stream.  Real serving traffic is a composition: steady background load,
+//! bursts (a retry storm, a cache stampede), diurnal swings, and recorded
+//! production traces to replay.  An [`ArrivalTrace`] is a sequence of
+//! [`TraceSegment`]s laid end to end; [`ArrivalTrace::arrivals`] expands it
+//! into a sorted list of virtual arrival timestamps, deterministically from
+//! a seed — the scenario runner consumes those timestamps without ever
+//! touching the wall clock.
+
+use crate::util::rng::Rng;
+
+/// One piece of an arrival trace.  Segments are laid end to end: each
+/// segment's arrivals are offset by the total duration of the segments
+/// before it.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceSegment {
+    /// Memoryless arrivals at a constant rate for `duration_s` seconds.
+    Poisson {
+        /// Mean arrival rate, requests per virtual second.
+        rate_hz: f64,
+        /// Segment length, virtual seconds.
+        duration_s: f64,
+    },
+    /// Exactly `count` arrivals spread evenly over `duration_s` seconds
+    /// (all at the segment start when `duration_s` is zero) — a retry
+    /// storm or thundering herd.
+    Burst {
+        /// Number of arrivals.
+        count: usize,
+        /// Window the arrivals are spread over, virtual seconds.
+        duration_s: f64,
+    },
+    /// A sinusoidal rate swing between `base_hz` and `peak_hz` with period
+    /// `period_s`, sampled by thinning a Poisson process at the peak rate —
+    /// the classic compressed-diurnal load shape.
+    Diurnal {
+        /// Trough arrival rate, requests per virtual second.
+        base_hz: f64,
+        /// Crest arrival rate, requests per virtual second.
+        peak_hz: f64,
+        /// Full swing period, virtual seconds.
+        period_s: f64,
+        /// Segment length, virtual seconds.
+        duration_s: f64,
+    },
+    /// Replay of recorded arrival offsets (seconds from the segment start,
+    /// need not be sorted).  The segment's duration is the largest offset.
+    Recorded(Vec<f64>),
+}
+
+impl TraceSegment {
+    /// Virtual seconds this segment occupies on the trace timeline.
+    pub fn duration_s(&self) -> f64 {
+        match self {
+            TraceSegment::Poisson { duration_s, .. } => *duration_s,
+            TraceSegment::Burst { duration_s, .. } => *duration_s,
+            TraceSegment::Diurnal { duration_s, .. } => *duration_s,
+            TraceSegment::Recorded(offsets) => offsets.iter().cloned().fold(0.0, f64::max),
+        }
+    }
+}
+
+/// A composable arrival trace: segments laid end to end on the virtual
+/// timeline.  Build with the chained constructors:
+///
+/// ```
+/// use staticbatch::serve::ArrivalTrace;
+///
+/// let trace = ArrivalTrace::new().burst(100, 0.0).poisson(200.0, 1.0);
+/// let arrivals = trace.arrivals(7);
+/// assert!(arrivals.len() >= 100);
+/// assert!(arrivals.windows(2).all(|w| w[0] <= w[1]), "sorted");
+/// assert_eq!(arrivals, trace.arrivals(7), "deterministic");
+/// ```
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ArrivalTrace {
+    /// The segments, in timeline order.
+    pub segments: Vec<TraceSegment>,
+}
+
+impl ArrivalTrace {
+    /// An empty trace (no arrivals).
+    pub fn new() -> Self {
+        ArrivalTrace { segments: Vec::new() }
+    }
+
+    /// Append a [`TraceSegment::Poisson`] segment.
+    pub fn poisson(mut self, rate_hz: f64, duration_s: f64) -> Self {
+        self.segments.push(TraceSegment::Poisson { rate_hz, duration_s });
+        self
+    }
+
+    /// Append a [`TraceSegment::Burst`] segment.
+    pub fn burst(mut self, count: usize, duration_s: f64) -> Self {
+        self.segments.push(TraceSegment::Burst { count, duration_s });
+        self
+    }
+
+    /// Append a [`TraceSegment::Diurnal`] segment.
+    pub fn diurnal(mut self, base_hz: f64, peak_hz: f64, period_s: f64, duration_s: f64) -> Self {
+        self.segments.push(TraceSegment::Diurnal { base_hz, peak_hz, period_s, duration_s });
+        self
+    }
+
+    /// Append a [`TraceSegment::Recorded`] segment.
+    pub fn recorded(mut self, offsets: Vec<f64>) -> Self {
+        self.segments.push(TraceSegment::Recorded(offsets));
+        self
+    }
+
+    /// Total virtual seconds the trace spans.
+    pub fn duration_s(&self) -> f64 {
+        self.segments.iter().map(|s| s.duration_s()).sum()
+    }
+
+    /// Expand the trace into sorted virtual arrival timestamps,
+    /// deterministically from `seed`.
+    pub fn arrivals(&self, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::new();
+        let mut base = 0.0f64;
+        for seg in &self.segments {
+            match seg {
+                TraceSegment::Poisson { rate_hz, duration_s } => {
+                    if *rate_hz > 0.0 {
+                        let mut t = base;
+                        loop {
+                            t += rng.exponential() / rate_hz;
+                            if t >= base + duration_s {
+                                break;
+                            }
+                            out.push(t);
+                        }
+                    }
+                }
+                TraceSegment::Burst { count, duration_s } => {
+                    for i in 0..*count {
+                        if *duration_s > 0.0 {
+                            out.push(base + i as f64 * duration_s / *count as f64);
+                        } else {
+                            out.push(base);
+                        }
+                    }
+                }
+                TraceSegment::Diurnal { base_hz, peak_hz, period_s, duration_s } => {
+                    let lam_max = base_hz.max(*peak_hz);
+                    if lam_max > 0.0 {
+                        let period = period_s.max(1e-9);
+                        let mut t = base;
+                        loop {
+                            t += rng.exponential() / lam_max;
+                            if t >= base + duration_s {
+                                break;
+                            }
+                            let phase = 2.0 * std::f64::consts::PI * (t - base) / period;
+                            let rate = base_hz + (peak_hz - base_hz) * 0.5 * (1.0 - phase.cos());
+                            if rng.f64() * lam_max < rate {
+                                out.push(t);
+                            }
+                        }
+                    }
+                }
+                TraceSegment::Recorded(offsets) => {
+                    out.extend(offsets.iter().filter(|&&o| o >= 0.0).map(|&o| base + o));
+                }
+            }
+            base += seg.duration_s();
+        }
+        out.sort_by(f64::total_cmp);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_count_tracks_rate_and_is_deterministic() {
+        let trace = ArrivalTrace::new().poisson(200.0, 1.0);
+        let a = trace.arrivals(1);
+        // Poisson(200): +-6 sigma is roughly [115, 285]; keep it loose
+        assert!((100..320).contains(&a.len()), "{} arrivals", a.len());
+        assert!(a.iter().all(|&t| (0.0..1.0).contains(&t)));
+        assert_eq!(a, trace.arrivals(1));
+        assert_ne!(a, trace.arrivals(2));
+    }
+
+    #[test]
+    fn burst_spreads_evenly_and_zero_duration_is_instantaneous() {
+        let spread = ArrivalTrace::new().burst(4, 2.0).arrivals(0);
+        assert_eq!(spread, vec![0.0, 0.5, 1.0, 1.5]);
+        let instant = ArrivalTrace::new().burst(3, 0.0).arrivals(0);
+        assert_eq!(instant, vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn diurnal_stays_in_window_and_between_base_and_peak_rates() {
+        let trace = ArrivalTrace::new().diurnal(50.0, 400.0, 1.0, 2.0);
+        let a = trace.arrivals(3);
+        assert!(a.iter().all(|&t| (0.0..2.0).contains(&t)));
+        // mean rate is (base + peak) / 2 = 225 Hz over 2 s -> ~450 arrivals
+        assert!((250..700).contains(&a.len()), "{} arrivals", a.len());
+    }
+
+    #[test]
+    fn segments_compose_end_to_end_and_sort() {
+        let trace = ArrivalTrace::new().burst(2, 1.0).recorded(vec![0.75, 0.25]);
+        assert_eq!(trace.duration_s(), 1.75);
+        // burst at 0.0 / 0.5, recorded offsets rebased to segment start 1.0
+        assert_eq!(trace.arrivals(0), vec![0.0, 0.5, 1.25, 1.75]);
+    }
+
+    #[test]
+    fn empty_trace_has_no_arrivals() {
+        assert!(ArrivalTrace::new().arrivals(0).is_empty());
+        assert_eq!(ArrivalTrace::new().duration_s(), 0.0);
+    }
+}

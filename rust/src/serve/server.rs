@@ -130,10 +130,11 @@ impl<E: StepExecutor> Server<E> {
             let (batches, rejected) = self.policy.form(pending);
             for r in rejected {
                 self.metrics.record_error();
-                let _ = r.respond.send(Response::failed(
-                    r.id,
-                    format!("request of {} tokens exceeds largest bucket", r.tokens.len()),
-                ));
+                self.metrics.record_tenant_error(r.tenant);
+                let msg = format!("request of {} tokens exceeds largest bucket", r.tokens.len());
+                let mut resp = Response::failed(r.id, msg);
+                resp.tenant = r.tenant;
+                let _ = r.respond.send(resp);
             }
             for batch in batches {
                 self.step(batch);
@@ -181,14 +182,19 @@ impl<E: StepExecutor> Server<E> {
                     // rest of the batch still succeeds
                     if let Some((_, msg)) = out.failed.iter().find(|(row, _)| *row == i) {
                         self.metrics.record_error();
-                        let _ = r.respond.send(Response::failed(r.id, msg.clone()));
+                        self.metrics.record_tenant_error(r.tenant);
+                        let mut resp = Response::failed(r.id, msg.clone());
+                        resp.tenant = r.tenant;
+                        let _ = r.respond.send(resp);
                         continue;
                     }
                     let latency = r.enqueued.elapsed().as_secs_f64();
                     self.metrics.record_request(latency, r.tokens.len());
+                    self.metrics.record_tenant_request(r.tenant, latency, None);
                     let row = &out.argmax[i * bucket..(i + 1) * bucket];
                     let _ = r.respond.send(Response {
                         id: r.id,
+                        tenant: r.tenant,
                         argmax: row[..r.tokens.len()].to_vec(),
                         latency_s: latency,
                         bucket,
@@ -200,7 +206,10 @@ impl<E: StepExecutor> Server<E> {
                 let msg = e.to_string();
                 for r in batch.requests {
                     self.metrics.record_error();
-                    let _ = r.respond.send(Response::failed(r.id, msg.clone()));
+                    self.metrics.record_tenant_error(r.tenant);
+                    let mut resp = Response::failed(r.id, msg.clone());
+                    resp.tenant = r.tenant;
+                    let _ = r.respond.send(resp);
                 }
             }
         }
@@ -260,13 +269,14 @@ mod tests {
                 argmax: step.tokens.iter().map(|&t| t + 1).collect(),
                 expert_rows: Vec::new(),
                 failed,
+                sim_time_s: None,
             })
         }
     }
 
     fn req(id: u64, tokens: Vec<i32>) -> (Request, Receiver<Response>) {
         let (tx, rx) = channel();
-        (Request { id, tokens, enqueued: Instant::now(), respond: tx }, rx)
+        (Request { id, tenant: 0, tokens, enqueued: Instant::now(), respond: tx }, rx)
     }
 
     fn server(fail: bool) -> Server<Echo> {

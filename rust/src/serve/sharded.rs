@@ -40,6 +40,15 @@
 //! outputs by float-addition reordering noise.  With `tp > 1` each lane
 //! computes the leading `d_ff / tp` output columns (one TP rank's slice) and
 //! the all-reduce is charged in time only.
+//!
+//! Fault injection: [`StepExecutor::apply_fault`] is implemented here.  A
+//! [`FaultKind::Slow`] scales one shard's simulated kernel time (and repels
+//! the balanced LPT, which weighs per-shard *finishing time*); a
+//! [`FaultKind::Kill`] marks the shard dead and forcibly evacuates its
+//! experts (a re-shard, under either placement policy — correctness, not
+//! policy); [`FaultKind::Recover`] restores nominal speed and liveness.
+//! Because every lane holds the full expert weight tensor, evacuation only
+//! re-masks token indices — numerics are unaffected.
 
 use crate::coordinator::metrics::ShardingStats;
 use crate::exec::{
@@ -50,6 +59,7 @@ use crate::moe::parallel::ParallelConfig;
 use crate::moe::plan_cache::CacheStats;
 use crate::moe::routing::ExpertLoad;
 use crate::moe::token_index::TokenIndex;
+use crate::serve::scenario::{FaultEvent, FaultKind};
 use crate::serve::sim_exec::{
     argmax_row, embed_tokens, expert_weights, route_topk, synthetic_argmax, SimServeConfig,
 };
@@ -129,10 +139,20 @@ impl Default for ShardedServeConfig {
     }
 }
 
-/// Longest-processing-time greedy: heaviest expert first onto the currently
-/// least-loaded shard.  Ties break toward the lower expert / shard index,
-/// so the assignment is deterministic.
-fn lpt_assignment(hist: &[f64], ep: usize) -> Vec<usize> {
+/// Longest-processing-time greedy over heterogeneous shards: heaviest
+/// expert first onto the shard where it *finishes* earliest, i.e. the one
+/// minimizing `(shard load + expert load) / rate`.  A shard with rate `<= 0`
+/// (dead) is excluded; with all rates equal this reduces to the classic
+/// least-loaded rule.  Ties break toward the lower expert / shard index, so
+/// the assignment is deterministic.  An all-zero histogram (no load observed
+/// yet) falls back to round-robin over the live shards — the greedy would
+/// otherwise pile every expert onto the first live shard.
+fn lpt_assignment(hist: &[f64], rates: &[f64]) -> Vec<usize> {
+    let live: Vec<usize> = (0..rates.len()).filter(|&s| rates[s] > 0.0).collect();
+    assert!(!live.is_empty(), "at least one live shard");
+    if hist.iter().sum::<f64>() <= 0.0 {
+        return (0..hist.len()).map(|e| live[e % live.len()]).collect();
+    }
     let mut order: Vec<usize> = (0..hist.len()).collect();
     order.sort_by(|&a, &b| {
         hist[b]
@@ -140,12 +160,12 @@ fn lpt_assignment(hist: &[f64], ep: usize) -> Vec<usize> {
             .unwrap_or(std::cmp::Ordering::Equal)
             .then(a.cmp(&b))
     });
-    let mut load = vec![0.0f64; ep];
+    let mut load = vec![0.0f64; rates.len()];
     let mut assign = vec![0usize; hist.len()];
     for e in order {
-        let mut best = 0usize;
-        for s in 1..ep {
-            if load[s] < load[best] {
+        let mut best = live[0];
+        for &s in &live[1..] {
+            if (load[s] + hist[e]) / rates[s] < (load[best] + hist[e]) / rates[best] {
                 best = s;
             }
         }
@@ -156,7 +176,9 @@ fn lpt_assignment(hist: &[f64], ep: usize) -> Vec<usize> {
 }
 
 /// The expert→shard placement state: current assignment plus the decayed
-/// load histogram the balanced policy re-shards from.
+/// load histogram the balanced policy re-shards from, plus the fault state
+/// (per-shard relative speed and liveness) injected via
+/// [`StepExecutor::apply_fault`].
 struct Placement {
     kind: PlacementKind,
     ep: usize,
@@ -165,6 +187,10 @@ struct Placement {
     decay: f64,
     threshold: f64,
     reshards: u64,
+    /// Relative throughput per shard: 1.0 nominal, `1/factor` while slowed.
+    speed: Vec<f64>,
+    /// Liveness per shard: a dead shard owns no experts and costs no time.
+    live: Vec<bool>,
 }
 
 impl Placement {
@@ -177,23 +203,36 @@ impl Placement {
             decay,
             threshold,
             reshards: 0,
+            speed: vec![1.0; ep],
+            live: vec![true; ep],
         }
     }
 
+    /// Effective placement rate per shard: speed while live, zero when dead
+    /// (which excludes the shard from the LPT entirely).
+    fn rates(&self) -> Vec<f64> {
+        (0..self.ep).map(|s| if self.live[s] { self.speed[s] } else { 0.0 }).collect()
+    }
+
     /// Device-load imbalance of the decayed histogram under the current
-    /// assignment: max over shards / mean over shards (idle shards count —
-    /// that is the whole point).
+    /// assignment: max over live shards / mean over live shards, with each
+    /// shard's load scaled by its speed (a slowed shard looks proportionally
+    /// hotter).  Idle live shards count — that is the whole point.
     fn imbalance(&self) -> f64 {
-        let mut shard = vec![0.0f64; self.ep];
+        let mut time = vec![0.0f64; self.ep];
         for (e, &s) in self.assign.iter().enumerate() {
-            shard[s] += self.hist[e];
+            time[s] += self.hist[e];
         }
-        let total: f64 = shard.iter().sum();
-        if total <= 0.0 {
+        for (t, sp) in time.iter_mut().zip(&self.speed) {
+            *t /= sp.max(1e-6);
+        }
+        let live: Vec<f64> = (0..self.ep).filter(|&s| self.live[s]).map(|s| time[s]).collect();
+        let total: f64 = live.iter().sum();
+        if total <= 0.0 || live.is_empty() {
             return 1.0;
         }
-        let max = shard.iter().cloned().fold(0.0, f64::max);
-        max * self.ep as f64 / total
+        let max = live.iter().cloned().fold(0.0, f64::max);
+        max * live.len() as f64 / total
     }
 
     /// Fold this step's routed counts into the histogram; the balanced
@@ -203,12 +242,45 @@ impl Placement {
             *h = *h * self.decay + c as f64;
         }
         if self.kind == PlacementKind::Balanced && self.imbalance() > self.threshold {
-            let next = lpt_assignment(&self.hist, self.ep);
+            let next = lpt_assignment(&self.hist, &self.rates());
             if next != self.assign {
                 self.assign = next;
                 self.reshards += 1;
             }
         }
+    }
+
+    /// Set one shard's relative speed (clamped away from zero).
+    fn set_speed(&mut self, shard: usize, speed: f64) {
+        self.speed[shard] = speed.max(1e-6);
+    }
+
+    /// Mark a shard dead and forcibly evacuate its experts via LPT over the
+    /// remaining live shards.  This is a correctness move, not a policy one,
+    /// so it runs under *either* placement kind and counts as a re-shard.
+    /// Killing the last live shard is refused (the event is ignored).
+    fn kill(&mut self, shard: usize) {
+        if !self.live[shard] {
+            return;
+        }
+        if self.live.iter().filter(|&&l| l).count() <= 1 {
+            return;
+        }
+        self.live[shard] = false;
+        let next = lpt_assignment(&self.hist, &self.rates());
+        if next != self.assign {
+            self.assign = next;
+            self.reshards += 1;
+        }
+    }
+
+    /// Restore a shard to live at nominal speed.  Experts are not moved
+    /// back eagerly: the balanced policy re-LPTs as soon as the recovered
+    /// (idle) shard pushes imbalance past the threshold; a static placement
+    /// keeps the evacuated assignment.
+    fn revive(&mut self, shard: usize) {
+        self.live[shard] = true;
+        self.speed[shard] = 1.0;
     }
 }
 
@@ -319,6 +391,21 @@ impl ShardedStepExecutor {
     pub fn placement_kind(&self) -> PlacementKind {
         self.cfg.placement
     }
+
+    /// Per-shard liveness: `false` while a shard is killed.
+    pub fn live(&self) -> &[bool] {
+        &self.placement.live
+    }
+
+    /// Per-shard relative speed: 1.0 nominal, `1/factor` while slowed.
+    pub fn speeds(&self) -> &[f64] {
+        &self.placement.speed
+    }
+
+    /// Cumulative re-shard count (includes forced kill evacuations).
+    pub fn reshards(&self) -> u64 {
+        self.placement.reshards
+    }
 }
 
 /// Keep the leading `keep` of `d_ff` columns of every `[d_model, d_ff]`
@@ -394,6 +481,11 @@ impl StepExecutor for ShardedStepExecutor {
         let mut combined: Option<Tensor> = None;
         let mut sim = SimBackend::ours();
         for shard in 0..self.cfg.ep {
+            if !self.placement.live[shard] {
+                // a killed shard was evacuated when the fault applied, so
+                // it owns no experts; skip it outright for belt and braces
+                continue;
+            }
             // The shard's sub-problem: the full expert space masked to the
             // experts it owns.  Unowned experts are empty tasks — the
             // σ/TilePrefix machinery elides them per shard.
@@ -418,7 +510,8 @@ impl StepExecutor for ShardedStepExecutor {
             // is excluded — it is paid per GPU, not a device-load signal
             let timing = sim.execute(plan.as_ref(), &mut ExecContext::new(self.cfg.gpu.clone()))?;
             let r = timing.sim();
-            kernel_s[shard] = (r.time_s - r.host_time_s).max(0.0);
+            // a slowed shard stretches its kernel by the injected factor
+            kernel_s[shard] = (r.time_s - r.host_time_s).max(0.0) / self.placement.speed[shard];
             if let Some(embedded) = &embedded {
                 let gates: Vec<Vec<f32>> =
                     local.index.iter().map(|rows| vec![gate; rows.len()]).collect();
@@ -480,7 +573,21 @@ impl StepExecutor for ShardedStepExecutor {
             argmax,
             expert_rows: load.counts.iter().map(|&c| c as i32).collect(),
             failed: Vec::new(),
+            sim_time_s: Some(critical + a2a + ar),
         })
+    }
+
+    fn apply_fault(&mut self, event: &FaultEvent) {
+        if event.shard >= self.cfg.ep {
+            return;
+        }
+        match event.kind {
+            FaultKind::Slow { factor } => {
+                self.placement.set_speed(event.shard, 1.0 / factor.max(1e-6));
+            }
+            FaultKind::Kill => self.placement.kill(event.shard),
+            FaultKind::Recover => self.placement.revive(event.shard),
+        }
     }
 
     fn cache_stats(&self) -> Option<CacheStats> {
@@ -527,7 +634,7 @@ mod tests {
     #[test]
     fn lpt_balances_a_skewed_histogram() {
         let hist = vec![8.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0];
-        let assign = lpt_assignment(&hist, 2);
+        let assign = lpt_assignment(&hist, &[1.0, 1.0]);
         let s0: f64 = hist.iter().zip(&assign).filter(|(_, &s)| s == 0).map(|(h, _)| h).sum();
         let s1: f64 = hist.iter().zip(&assign).filter(|(_, &s)| s == 1).map(|(h, _)| h).sum();
         // the hot expert sits alone; everything else lands opposite it
@@ -555,6 +662,61 @@ mod tests {
         // the hot expert must sit alone on its shard
         let hot = p.assign[0];
         assert!(p.assign[1..].iter().all(|&s| s != hot), "{:?}", p.assign);
+    }
+
+    #[test]
+    fn kill_evacuates_the_dead_shard_and_counts_a_reshard() {
+        let mut p = Placement::new(PlacementKind::Static, 8, 4, 0.5, 10.0);
+        p.observe(&[1; 8]);
+        assert_eq!(p.reshards, 0, "static placement never reshards on load");
+        p.kill(1);
+        assert_eq!(p.reshards, 1, "evacuation is a forced reshard");
+        assert!(!p.live[1]);
+        assert!(p.assign.iter().all(|&s| s != 1), "{:?}", p.assign);
+        p.revive(1);
+        assert!(p.live[1]);
+        // revival alone does not move experts back under static placement
+        assert!(p.assign.iter().all(|&s| s != 1), "{:?}", p.assign);
+    }
+
+    #[test]
+    fn killing_the_last_live_shard_is_refused() {
+        let mut p = Placement::new(PlacementKind::Static, 4, 2, 0.5, 10.0);
+        p.kill(0);
+        p.kill(1);
+        assert!(p.live[1], "the last live shard must survive");
+        assert!(p.assign.iter().all(|&s| s == 1), "{:?}", p.assign);
+    }
+
+    #[test]
+    fn slowed_shard_repels_the_balanced_lpt() {
+        let mut p = Placement::new(PlacementKind::Balanced, 8, 4, 0.5, 1.5);
+        p.set_speed(0, 0.02); // 50x slower
+        p.observe(&[1; 8]);
+        assert_eq!(p.reshards, 1, "speed-scaled imbalance crosses the threshold");
+        assert!(p.assign.iter().all(|&s| s != 0), "{:?}", p.assign);
+    }
+
+    #[test]
+    fn executor_fault_kill_moves_experts_and_keeps_serving() {
+        let mut ex = ShardedStepExecutor::new(ShardedServeConfig {
+            base: base(false, 1),
+            ep: 4,
+            ..ShardedServeConfig::default()
+        });
+        let tokens = step_tokens(16, 4, 2);
+        let s = StepInput { bucket: 16, rows: 4, tokens: &tokens };
+        let before = ex.execute_step(&s).expect("pre-fault step");
+        assert!(before.sim_time_s.expect("sharded steps report sim time") > 0.0);
+        ex.apply_fault(&FaultEvent { at_s: 0.0, shard: 1, kind: FaultKind::Kill });
+        assert!(!ex.live()[1]);
+        assert_eq!(ex.reshards(), 1);
+        assert!(ex.assignment().iter().all(|&sh| sh != 1));
+        let after = ex.execute_step(&s).expect("post-fault step");
+        assert_eq!(after.argmax, before.argmax, "accounting argmax ignores placement");
+        ex.apply_fault(&FaultEvent { at_s: 0.0, shard: 1, kind: FaultKind::Recover });
+        assert!(ex.live()[1]);
+        assert!((ex.speeds()[1] - 1.0).abs() < 1e-12);
     }
 
     #[test]

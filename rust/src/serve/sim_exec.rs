@@ -242,6 +242,7 @@ impl StepExecutor for SimStepExecutor {
             argmax,
             expert_rows: load.counts.iter().map(|&c| c as i32).collect(),
             failed: Vec::new(),
+            sim_time_s: out.sim.as_ref().map(|s| s.time_s),
         })
     }
 

@@ -19,12 +19,22 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+/// Parse failure with the byte offset where scanning stopped.
+#[derive(Debug)]
 pub struct ParseError {
+    /// Byte offset into the input where the error was detected.
     pub pos: usize,
+    /// Human-readable description of what went wrong.
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 impl Json {
     pub fn parse(s: &str) -> Result<Json, ParseError> {

@@ -1,0 +1,220 @@
+//! Scenario-layer integration under DEFAULT features: no PJRT, no
+//! artifacts, no GPU, and no wall clock — every run here is virtual-time
+//! and exactly reproducible from its seed.
+//!
+//! Pins the three promises the scenario layer makes:
+//!
+//! 1. **Acceptance** — the pinned default scenario (300-request burst +
+//!    400 Hz Poisson second, premium over batch tenant, shard 1 killed at
+//!    t=0.3s and recovered at t=0.6s) conserves requests
+//!    (sent = ok + failed + shed), sheds under overload, re-shards after
+//!    the kill, and keeps the premium tenant's SLO attainment at or above
+//!    the batch tenant's.
+//! 2. **Priority dominance (property)** — under *any* overloaded
+//!    instantaneous burst with identical SLOs and prompt mixes, the
+//!    higher-priority tenant's SLO attainment is at least the lower's.
+//! 3. **Fault recovery** — killing a shard mid-run keeps `top_k = 1`
+//!    numeric outputs bitwise-identical to a single-shard executor (the
+//!    evacuation only re-masks token indices; every lane holds the full
+//!    weights), increments the reshard counter, and — in the accounting
+//!    model — brings the per-step simulated time back down after a
+//!    slowed shard is evacuated.
+
+use staticbatch::serve::{
+    run_scenario, ArrivalTrace, FaultEvent, FaultKind, FaultPlan, PlacementKind, ScenarioConfig,
+    ShardedServeConfig, ShardedStepExecutor, SimServeConfig, SimStepExecutor, StepExecutor,
+    StepInput, TenantClass,
+};
+use staticbatch::util::prop::check;
+use staticbatch::util::rng::{zipf_weights, Rng};
+
+/// Zipf-valued token batches (`alpha` near 0 = near-uniform expert load).
+fn zipf_steps(steps: usize, rows: usize, bucket: usize, alpha: f64, seed: u64) -> Vec<Vec<i32>> {
+    let mut rng = Rng::new(seed);
+    let w = zipf_weights(50, alpha);
+    (0..steps)
+        .map(|_| (0..rows * bucket).map(|_| rng.zipf(&w) as i32 + 1).collect())
+        .collect()
+}
+
+#[test]
+fn default_scenario_sheds_reshards_and_orders_attainment() {
+    let cfg = ScenarioConfig::default();
+    let mut ex = ShardedStepExecutor::new(ShardedServeConfig {
+        base: SimServeConfig { numeric: false, seed: cfg.seed, ..SimServeConfig::default() },
+        ep: 4,
+        placement: PlacementKind::Balanced,
+        ..ShardedServeConfig::default()
+    });
+    let r = run_scenario(&mut ex, &cfg);
+
+    assert_eq!(r.ok + r.failed + r.shed, r.sent, "conservation");
+    assert!(r.sent >= 300, "the opening burst alone is 300 requests");
+    assert_eq!(r.failed, 0, "every admitted prompt fits a bucket");
+    assert!(r.shed > 0, "a 300-burst must overflow the 64-slot queue");
+    assert!(r.steps > 0);
+    assert!(r.virtual_s > 0.0);
+
+    // the kill at t=0.3s forces an evacuation, visible as a reshard
+    assert!(r.reshards_after_fault >= 1, "kill must evacuate shard 1");
+    assert!(r.recovery_s.is_some(), "re-shard after the fault = recovery");
+
+    let hi = &r.tenants[0];
+    let lo = &r.tenants[1];
+    assert!(hi.priority > lo.priority);
+    assert_eq!(hi.sent + lo.sent, r.sent);
+    assert!(
+        hi.slo_attainment >= lo.slo_attainment,
+        "premium {} must dominate batch {}",
+        hi.slo_attainment,
+        lo.slo_attainment
+    );
+    // shed *fraction* ordering, cross-multiplied to avoid divide-by-zero
+    assert!(
+        hi.shed * lo.sent <= lo.shed * hi.sent,
+        "premium shed share {}/{} above batch {}/{}",
+        hi.shed,
+        hi.sent,
+        lo.shed,
+        lo.sent
+    );
+    let rendered = r.render();
+    assert!(rendered.contains("tenant premium (prio 2):"), "{rendered}");
+    assert!(rendered.contains("reshards="), "{rendered}");
+}
+
+#[test]
+fn property_higher_priority_attainment_dominates_any_overloaded_burst() {
+    check(
+        "priority-slo-dominance",
+        25,
+        |g| {
+            let count = 80 + g.rng.usize_below(40 * g.size.min(4));
+            let queue = 8 + g.rng.usize_below(24);
+            let hi_share = 0.2 + 0.6 * g.rng.f64();
+            let seed = g.rng.next_u64();
+            (count, queue, hi_share, seed)
+        },
+        |&(count, queue, hi_share, seed)| {
+            let cfg = ScenarioConfig {
+                trace: ArrivalTrace::new().burst(count, 0.0),
+                tenants: vec![
+                    TenantClass::new("hi", 2, hi_share),
+                    TenantClass::new("lo", 1, 1.0 - hi_share),
+                ],
+                faults: FaultPlan::default(),
+                queue_capacity: queue,
+                seed,
+                ..ScenarioConfig::default()
+            };
+            let mut ex = SimStepExecutor::new(SimServeConfig {
+                numeric: false,
+                ..SimServeConfig::default()
+            });
+            let r = run_scenario(&mut ex, &cfg);
+            if r.ok + r.failed + r.shed != r.sent {
+                return Err(format!(
+                    "conservation broke: sent={} ok={} failed={} shed={}",
+                    r.sent, r.ok, r.failed, r.shed
+                ));
+            }
+            let (hi, lo) = (&r.tenants[0], &r.tenants[1]);
+            if hi.slo_attainment + 1e-12 < lo.slo_attainment {
+                return Err(format!(
+                    "hi attainment {} below lo {}",
+                    hi.slo_attainment, lo.slo_attainment
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn mid_run_kill_keeps_argmax_bitwise_identical_at_top_k_1() {
+    let base = SimServeConfig {
+        buckets: vec![8, 16],
+        max_tokens: 256,
+        experts: 16,
+        top_k: 1,
+        d_model: 16,
+        d_ff: 24,
+        cache_capacity: 32,
+        numeric: true,
+        seed: 11,
+    };
+    let mut single = SimStepExecutor::new(base.clone());
+    let mut sharded = ShardedStepExecutor::new(ShardedServeConfig {
+        base,
+        ep: 4,
+        placement: PlacementKind::Static,
+        ..ShardedServeConfig::default()
+    });
+    for (i, tokens) in zipf_steps(8, 4, 16, 1.3, 21).iter().enumerate() {
+        if i == 4 {
+            assert_eq!(sharded.reshards(), 0, "static placement before the fault");
+            sharded.apply_fault(&FaultEvent { at_s: 0.0, shard: 1, kind: FaultKind::Kill });
+            assert_eq!(sharded.reshards(), 1, "kill evacuation counts as a reshard");
+            assert!(!sharded.live()[1]);
+            assert!(
+                sharded.assignment().iter().all(|&s| s != 1),
+                "no expert may stay on the dead shard: {:?}",
+                sharded.assignment()
+            );
+        }
+        let step = StepInput { bucket: 16, rows: 4, tokens };
+        let a = single.execute_step(&step).expect("single-shard step");
+        let b = sharded.execute_step(&step).expect("sharded step");
+        assert_eq!(a.argmax, b.argmax, "step {i} diverged (kill at step 4)");
+        assert_eq!(a.expert_rows, b.expert_rows, "step {i} routed differently");
+    }
+}
+
+#[test]
+fn slow_fault_inflates_step_time_and_kill_evacuation_recovers_it() {
+    // Serving-scale accounting shape, near-uniform routing: a shard's
+    // simulated kernel time tracks its routed rows, so slowing one shard
+    // stretches the critical path and evacuating it restores the floor.
+    let base = SimServeConfig {
+        buckets: vec![64],
+        max_tokens: 2048,
+        experts: 16,
+        top_k: 2,
+        d_model: 1024,
+        d_ff: 2048,
+        cache_capacity: 32,
+        numeric: false,
+        seed: 11,
+    };
+    let mut ex = ShardedStepExecutor::new(ShardedServeConfig {
+        base,
+        ep: 4,
+        placement: PlacementKind::Static,
+        ..ShardedServeConfig::default()
+    });
+    let steps = zipf_steps(8, 8, 64, 0.2, 9);
+    fn step_time(ex: &mut ShardedStepExecutor, tokens: &[i32]) -> f64 {
+        let out = ex.execute_step(&StepInput { bucket: 64, rows: 8, tokens }).expect("step");
+        out.sim_time_s.expect("accounting mode reports simulated step time")
+    }
+    let mut t_pre = 0.0;
+    for tokens in &steps[0..4] {
+        t_pre = step_time(&mut ex, tokens);
+    }
+    ex.apply_fault(&FaultEvent { at_s: 0.0, shard: 0, kind: FaultKind::Slow { factor: 100.0 } });
+    assert_eq!(ex.reshards(), 0, "a slowdown alone never moves experts");
+    assert!((ex.speeds()[0] - 0.01).abs() < 1e-12);
+    let t_slow = step_time(&mut ex, &steps[4]);
+    assert!(
+        t_slow > 3.0 * t_pre,
+        "a 100x slower shard must stretch the step: pre={t_pre:.6}s slow={t_slow:.6}s"
+    );
+    ex.apply_fault(&FaultEvent { at_s: 0.0, shard: 0, kind: FaultKind::Kill });
+    assert_eq!(ex.reshards(), 1, "evacuating the slow shard is a reshard");
+    assert!(!ex.live()[0]);
+    let t_post = step_time(&mut ex, &steps[5]);
+    assert!(
+        t_post < t_slow / 2.0,
+        "evacuation must recover the step time: slow={t_slow:.6}s post={t_post:.6}s"
+    );
+}
