@@ -83,10 +83,13 @@ impl<C> StaticBatch<C> {
 
     /// "Launch" the fused kernel: every block decodes its mapping and runs
     /// its task's device function (Algorithm 3 body). Returns the number of
-    /// blocks executed.
+    /// blocks executed.  Blocks ascend, so the decode runs through a
+    /// [`crate::batching::mapping::MapCursor`]: O(total + M) for the whole
+    /// grid instead of O(total × M) rescans, bit-identical mappings.
     pub fn run(&self, ctx: &mut C) -> u32 {
+        let mut cursor = crate::batching::mapping::MapCursor::new();
         for block in 0..self.map.total_tiles {
-            self.dispatch_block(ctx, self.map.map(block));
+            self.dispatch_block(ctx, self.map.map_with_cursor(&mut cursor, block));
         }
         self.map.total_tiles
     }

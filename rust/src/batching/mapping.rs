@@ -108,11 +108,65 @@ pub fn map_two_level(tl: &TwoLevelPrefix, block: u32) -> (TileMapping, usize) {
     (TileMapping { task: h, tile: block - base }, passes)
 }
 
+/// Sequential-decode cursor: amortized-O(1) mapping for ascending blocks.
+///
+/// [`map_scalar`] rescans the prefix from index 0 for every block, making a
+/// full-grid decode O(total × N).  But the grid is walked in ascending
+/// block order and the inclusive prefix is non-decreasing, so the task
+/// index `h` never moves backwards — the cursor resumes the scan where the
+/// previous block stopped, and a whole-grid decode touches each prefix
+/// entry once: O(total + N).
+///
+/// Contract: blocks must be presented in non-decreasing order (a fresh
+/// cursor per grid walk).  [`MapCursor::map`] is bitwise-equal to
+/// [`map_scalar`] under that contract.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MapCursor {
+    h: u32,
+}
+
+impl MapCursor {
+    pub fn new() -> Self {
+        MapCursor { h: 0 }
+    }
+
+    /// Decode `block` (≥ every block previously decoded through this
+    /// cursor) against `prefix`.
+    pub fn map(&mut self, prefix: &[u32], block: u32) -> TileMapping {
+        let mut h = self.h as usize;
+        while h < prefix.len() {
+            let p = prefix[h];
+            if p != PAD_MAX && block >= p {
+                h += 1;
+            } else {
+                break;
+            }
+        }
+        self.h = h as u32;
+        let base = if h > 0 { prefix[h - 1] } else { 0 };
+        TileMapping { task: h as u32, tile: block - base }
+    }
+}
+
 /// Decompress the whole grid: mapping for every block `0..total`.
 /// This is what the CPU executor iterates; the simulator charges per-block
 /// decode costs from the pass counts instead.
 pub fn map_all(prefix: &[u32], total: u32) -> Vec<TileMapping> {
-    (0..total).map(|b| map_scalar(prefix, b)).collect()
+    let mut out = Vec::new();
+    map_all_into(prefix, total, &mut out);
+    out
+}
+
+/// [`map_all`] into a caller-provided buffer (cleared first) via a
+/// [`MapCursor`] — no per-step allocation once the buffer has grown to the
+/// steady-state grid size, and O(total + N) instead of O(total × N).
+pub fn map_all_into(prefix: &[u32], total: u32, out: &mut Vec<TileMapping>) {
+    out.clear();
+    out.reserve(total as usize);
+    let mut cursor = MapCursor::new();
+    for b in 0..total {
+        out.push(cursor.map(prefix, b));
+    }
 }
 
 #[cfg(test)]
@@ -170,6 +224,38 @@ mod tests {
         // block 5 stops after the first pass
         let (_, p2) = map_warp(&prefix, 5);
         assert_eq!(p2, 1);
+    }
+
+    #[test]
+    fn cursor_matches_scalar_over_every_grid() {
+        let mut rng = Rng::new(11);
+        for _ in 0..50 {
+            let n = 1 + rng.usize_below(300);
+            let tiles: Vec<u32> = (0..n).map(|_| rng.below(5) as u32).collect();
+            let prefix = build_from_counts(&tiles);
+            let total: u32 = tiles.iter().sum();
+            let mut cursor = MapCursor::new();
+            for b in 0..total {
+                assert_eq!(cursor.map(&prefix, b), map_scalar(&prefix, b), "b={b}");
+            }
+            let all = map_all(&prefix, total);
+            assert_eq!(all.len(), total as usize);
+            let mut reused = vec![TileMapping { task: 9, tile: 9 }; 7];
+            map_all_into(&prefix, total, &mut reused);
+            assert_eq!(all, reused);
+        }
+    }
+
+    #[test]
+    fn cursor_handles_padded_prefixes() {
+        let prefix = pad_to(&build_from_counts(&[2, 0, 3]), WARP_SIZE);
+        let sentinel = pad_to_max(&build_from_counts(&[2, 0, 3]), WARP_SIZE);
+        let mut c1 = MapCursor::new();
+        let mut c2 = MapCursor::new();
+        for b in 0..5 {
+            assert_eq!(c1.map(&prefix, b), map_scalar(&prefix, b));
+            assert_eq!(c2.map(&sentinel, b), map_scalar(&sentinel, b));
+        }
     }
 
     #[test]

@@ -44,8 +44,9 @@ pub fn build_parallel(tiles: &[u32], pool: &crate::util::threadpool::ThreadPool)
     }
     let chunks = pool.workers().max(1);
     let chunk = n.div_ceil(chunks);
-    // phase 1: per-chunk local inclusive scans
-    let parts: Vec<Vec<u32>> = pool.map(
+    // phase 1: per-chunk local inclusive scans (fall back to the serial
+    // scan if the pool is unusable — the sum is pure, so this is safe)
+    let parts: Vec<Vec<u32>> = match pool.map(
         tiles
             .chunks(chunk)
             .map(|c| c.to_vec())
@@ -59,7 +60,10 @@ pub fn build_parallel(tiles: &[u32], pool: &crate::util::threadpool::ThreadPool)
                 })
                 .collect::<Vec<u32>>()
         },
-    );
+    ) {
+        Ok(p) => p,
+        Err(_) => return build_from_counts(tiles),
+    };
     // phase 2: carry chunk totals across
     let mut out = Vec::with_capacity(n);
     let mut carry = 0u32;

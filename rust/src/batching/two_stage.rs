@@ -6,7 +6,7 @@
 //! tasks only, so empty tasks cost nothing at decode time — the paper's fix
 //! for MoE steps where some experts receive no tokens.
 
-use crate::batching::mapping::{map_scalar, map_warp, TileMapping};
+use crate::batching::mapping::{map_scalar, map_warp, MapCursor, TileMapping};
 use crate::batching::task::TaskDescriptor;
 use crate::batching::tile_prefix;
 use crate::batching::warp::WARP_SIZE;
@@ -56,6 +56,27 @@ impl TwoStageMap {
         debug_assert!(block < self.total_tiles);
         let m = map_scalar(&self.tile_prefix, block);
         TileMapping { task: self.sigma[m.task as usize], tile: m.tile }
+    }
+
+    /// Algorithm 4 through a [`MapCursor`]: bitwise-equal to
+    /// [`TwoStageMap::map`] when blocks arrive in non-decreasing order, but
+    /// amortized O(1) per block — the grid-walk hot path.
+    pub fn map_with_cursor(&self, cursor: &mut MapCursor, block: u32) -> TileMapping {
+        debug_assert!(block < self.total_tiles);
+        let m = cursor.map(&self.tile_prefix, block);
+        TileMapping { task: self.sigma[m.task as usize], tile: m.tile }
+    }
+
+    /// Decode the whole grid (σ applied) into a caller-provided buffer,
+    /// cleared first — zero allocations once the buffer reaches the
+    /// steady-state grid size, O(total + M) total work.
+    pub fn map_all_into(&self, out: &mut Vec<TileMapping>) {
+        out.clear();
+        out.reserve(self.total_tiles as usize);
+        let mut cursor = MapCursor::new();
+        for b in 0..self.total_tiles {
+            out.push(self.map_with_cursor(&mut cursor, b));
+        }
     }
 
     /// Same through the warp-emulated Algorithm 2 (returns warp passes too).
@@ -114,6 +135,19 @@ mod tests {
         for b in 0..m.total_tiles {
             let (simt, _) = m.map_simt(b);
             assert_eq!(simt, m.map(b), "block {b}");
+        }
+    }
+
+    #[test]
+    fn cursor_walk_matches_per_block_map() {
+        let m = TwoStageMap::from_tile_counts(&[0, 2, 0, 7, 1, 0, 3]);
+        let mut cursor = MapCursor::new();
+        let mut buf = Vec::new();
+        m.map_all_into(&mut buf);
+        assert_eq!(buf.len(), m.total_tiles as usize);
+        for b in 0..m.total_tiles {
+            assert_eq!(m.map_with_cursor(&mut cursor, b), m.map(b), "block {b}");
+            assert_eq!(buf[b as usize], m.map(b), "block {b}");
         }
     }
 

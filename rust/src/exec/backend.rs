@@ -79,12 +79,17 @@ pub struct ExecContext<'a, W: Workload = MoeWorkload> {
     /// (grouped GEMM, naive loop, padded-dense) have no plan-shaped
     /// sequence to record and return `None`.
     pub record_dispatch: bool,
+    /// Worker pool for numeric backends that can partition a plan's tasks
+    /// across threads ([`crate::exec::CpuBackend`]).  `None` (or a 1-worker
+    /// pool) means serial execution; parallel output is bitwise-equal to
+    /// serial, so this is purely a speed knob.
+    pub pool: Option<std::sync::Arc<crate::util::threadpool::ThreadPool>>,
 }
 
 impl<'a, W: Workload> ExecContext<'a, W> {
     /// A context with only a hardware model (accounting backends).
     pub fn new(spec: GpuSpec) -> Self {
-        ExecContext { spec, numeric: None, record_dispatch: false }
+        ExecContext { spec, numeric: None, record_dispatch: false, pool: None }
     }
 
     /// Attach real tensors (numeric backends).
@@ -96,6 +101,12 @@ impl<'a, W: Workload> ExecContext<'a, W> {
     /// Ask the backend to record its per-block dispatch sequence.
     pub fn recording(mut self) -> Self {
         self.record_dispatch = true;
+        self
+    }
+
+    /// Attach a worker pool for parallel numeric execution.
+    pub fn with_pool(mut self, pool: std::sync::Arc<crate::util::threadpool::ThreadPool>) -> Self {
+        self.pool = Some(pool);
         self
     }
 }
@@ -167,11 +178,11 @@ pub trait Backend<W: Workload = MoeWorkload> {
 /// any workload.
 pub fn mapping_trace<W: Workload>(plan: &Plan<W>) -> Vec<DispatchRecord> {
     let descs = plan.descriptors();
-    (0..plan.total_tiles())
-        .map(|block| {
-            let m = plan.two_stage.map(block);
-            DispatchRecord { task: m.task, tile: m.tile, kind: descs[m.task as usize].kind }
-        })
+    let mut mappings = Vec::new();
+    plan.two_stage.map_all_into(&mut mappings);
+    mappings
+        .into_iter()
+        .map(|m| DispatchRecord { task: m.task, tile: m.tile, kind: descs[m.task as usize].kind })
         .collect()
 }
 

@@ -123,7 +123,15 @@ impl Backend<MoeWorkload> for CpuBackend {
             token_index: &n.token_index,
             gates: &n.gates,
         };
-        let (output, trace) = cpu_exec::execute_traced(plan, &inputs, ctx.record_dispatch)?;
+        // Parallel when a multi-worker pool is attached and no dispatch
+        // trace was requested (the trace is inherently a serial grid walk).
+        // Output is bitwise-equal either way.
+        let (output, trace) = match &ctx.pool {
+            Some(pool) if pool.workers() > 1 && !ctx.record_dispatch => {
+                (cpu_exec::execute_parallel(plan, &inputs, pool)?, None)
+            }
+            _ => cpu_exec::execute_traced(plan, &inputs, ctx.record_dispatch)?,
+        };
         Ok(Outcome {
             backend: "cpu",
             blocks: plan.total_tiles(),

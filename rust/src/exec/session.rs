@@ -30,6 +30,7 @@ use crate::moe::ordering::OrderingStrategy;
 use crate::moe::planner::MoeWorkload;
 use crate::moe::tiling::StrategyId;
 use crate::sim::specs::GpuSpec;
+use crate::util::threadpool::ThreadPool;
 use crate::workload::cache::{CacheStats, PlanCache};
 use crate::workload::plan::{Plan, Planner};
 use crate::workload::Workload;
@@ -40,8 +41,9 @@ fn make_ctx<'a, W: Workload>(
     spec: &GpuSpec,
     numeric: Option<&'a W::Inputs>,
     record_dispatch: bool,
+    pool: Option<&Arc<ThreadPool>>,
 ) -> ExecContext<'a, W> {
-    ExecContext { spec: spec.clone(), numeric, record_dispatch }
+    ExecContext { spec: spec.clone(), numeric, record_dispatch, pool: pool.cloned() }
 }
 
 /// Builder + runner for plan execution. See module docs.
@@ -55,6 +57,9 @@ pub struct ExecutionSession<W: Workload = MoeWorkload> {
     /// valid for exactly this session's planner configuration, so any
     /// ordering/tiling change clears it.
     cache: Option<PlanCache<W>>,
+    /// Optional worker pool threaded into every [`ExecContext`] so numeric
+    /// backends partition tasks across threads (bitwise-equal to serial).
+    pool: Option<Arc<ThreadPool>>,
 }
 
 impl ExecutionSession<MoeWorkload> {
@@ -82,6 +87,7 @@ impl<W: Workload> ExecutionSession<W> {
             record_dispatch: false,
             backend: Box::new(SimBackend::ours()),
             cache: None,
+            pool: None,
         }
     }
 
@@ -169,6 +175,26 @@ impl<W: Workload> ExecutionSession<W> {
         self
     }
 
+    /// Execute numeric backends on `n` worker threads.  `n <= 1` keeps the
+    /// serial path (no pool is spawned); parallel output is bitwise-equal
+    /// to serial, so this only changes speed.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.pool = if n > 1 { Some(Arc::new(ThreadPool::new(n))) } else { None };
+        self
+    }
+
+    /// Share an existing worker pool (e.g. one pool across the per-shard
+    /// sessions of a sharded executor) instead of spawning a fresh one.
+    pub fn thread_pool(mut self, pool: Arc<ThreadPool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// The worker pool this session threads into execution, when set.
+    pub fn pool(&self) -> Option<&Arc<ThreadPool>> {
+        self.pool.as_ref()
+    }
+
     /// Display name of the session's backend.
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
@@ -199,7 +225,8 @@ impl<W: Workload> ExecutionSession<W> {
     /// Execute an already-built plan on the session's backend.
     pub fn run_plan(&mut self, plan: &Plan<W>) -> Result<Outcome, ExecError> {
         // field-level borrows: ctx borrows `numeric`, execute borrows `backend`
-        let mut ctx = make_ctx(&self.spec, self.numeric.as_ref(), self.record_dispatch);
+        let mut ctx =
+            make_ctx(&self.spec, self.numeric.as_ref(), self.record_dispatch, self.pool.as_ref());
         self.backend.execute(plan, &mut ctx)
     }
 
@@ -214,7 +241,8 @@ impl<W: Workload> ExecutionSession<W> {
         load: &W::Load,
     ) -> Result<Outcome, ExecError> {
         let plan = self.plan_shared(load);
-        let mut ctx = make_ctx(&self.spec, self.numeric.as_ref(), self.record_dispatch);
+        let mut ctx =
+            make_ctx(&self.spec, self.numeric.as_ref(), self.record_dispatch, self.pool.as_ref());
         backend.execute(plan.as_ref(), &mut ctx)
     }
 }

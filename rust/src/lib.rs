@@ -91,6 +91,7 @@
 //!     d_ff: 12,
 //!     cache_capacity: 8,
 //!     numeric: true,
+//!     threads: 1,
 //!     seed: 1,
 //! });
 //! let tokens: Vec<i32> = (0..16).collect(); // two requests padded to bucket 8

@@ -288,6 +288,7 @@ fn cmd_serve_sim(args: &[String]) -> i32 {
         .flag("tp", Some("1"), "tensor-parallel ways (must divide d_ff)")
         .flag("placement", Some("static"), "expert placement: static|balanced")
         .flag("rebalance", Some("1.25"), "re-shard imbalance threshold (balanced)")
+        .flag("threads", Some("1"), "worker threads for CPU numerics (1 = serial)")
         .switch("accounting", "skip CPU numerics (roofline accounting only)");
     let p = match cmd.parse(args) {
         Ok(p) => p,
@@ -301,6 +302,7 @@ fn cmd_serve_sim(args: &[String]) -> i32 {
         top_k: p.usize("topk").unwrap_or(2).max(1),
         cache_capacity: p.usize("cache").unwrap_or(128),
         numeric: !p.bool("accounting"),
+        threads: p.usize("threads").unwrap_or(1).max(1),
         seed: p.u64("seed").unwrap_or(1),
         ..SimServeConfig::default()
     };

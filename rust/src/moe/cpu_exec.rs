@@ -11,11 +11,13 @@
 
 use crate::batching::dispatch::{DispatchError, DispatchRecord, DispatchTableBuilder};
 use crate::batching::framework::StaticBatch;
-use crate::batching::task::TaskKind;
-use crate::moe::planner::ExecutionPlan;
+use crate::batching::task::{TaskDescriptor, TaskKind};
+use crate::exec::error::ExecError;
+use crate::moe::planner::{ExecutionPlan, ExpertTask};
 use crate::moe::tiling::CATALOG;
 use crate::moe::token_index::TokenIndex;
 use crate::util::tensor::{gathered_matmul_into, Tensor};
+use crate::util::threadpool::ThreadPool;
 
 /// Inputs of one MoE step on CPU.
 pub struct MoeInputs<'a> {
@@ -40,6 +42,85 @@ struct ExecCtx<'a> {
     dispatch_counts: Vec<usize>,
     /// per-block dispatch sequence, recorded when requested
     trace: Option<Vec<DispatchRecord>>,
+    /// tile-local scratch, reused across blocks
+    scratch: GemmScratch,
+}
+
+/// Scratch buffers for one GEMM tile, reused across tiles via
+/// `clear` + `resize` — bitwise-identical to fresh zeroed allocations, so
+/// reuse never changes numerics.
+#[derive(Default)]
+struct GemmScratch {
+    /// tile-local `[rows, cols]` output
+    local: Vec<f32>,
+    /// column-sliced `[k, cols]` weight view
+    wslice: Vec<f32>,
+}
+
+/// Run one GEMM tile of `task` into its task-relative packed `region`
+/// (`[task.rows, d_ff]`, row-major).  The single numeric tile body shared
+/// by the serial framework dispatch and [`execute_parallel`]: both visit a
+/// task's tiles in ascending order and call this, so their packed regions
+/// are bit-identical.
+fn run_gemm_tile(
+    inputs: &MoeInputs,
+    task: &ExpertTask,
+    desc: &TaskDescriptor,
+    tile_idx: u32,
+    region: &mut [f32],
+    scratch: &mut GemmScratch,
+) {
+    let d_ff = desc.cols;
+    let k = desc.inner;
+    let tiles_n = desc.tiles_n() as u32;
+    let (mi, ni) = (tile_idx / tiles_n, tile_idx % tiles_n);
+    let row0 = mi as usize * desc.tile_rows;
+    let col0 = ni as usize * desc.tile_cols;
+    let rows = (task.rows - row0).min(desc.tile_rows);
+    let cols = (d_ff - col0).min(desc.tile_cols);
+    // gather indices for this tile's rows (token index array)
+    let ids = &inputs.token_index.index[task.expert as usize][row0..row0 + rows];
+    // weight plane slice [d_model, col0..col0+cols]
+    let w = inputs.weights.plane(task.expert as usize);
+    // tile-local output, then scatter into the packed region
+    scratch.local.clear();
+    scratch.local.resize(rows * cols, 0.0);
+    // build a column-sliced weight view: w is [k, d_ff]; we need [k, cols]
+    // starting at col0 — copy the slice once per tile (models the VMEM
+    // block the Pallas kernel stages).
+    scratch.wslice.clear();
+    scratch.wslice.resize(k * cols, 0.0);
+    for kk in 0..k {
+        scratch.wslice[kk * cols..(kk + 1) * cols]
+            .copy_from_slice(&w[kk * d_ff + col0..kk * d_ff + col0 + cols]);
+    }
+    gathered_matmul_into(inputs.tokens, ids, &scratch.wslice, cols, &mut scratch.local);
+    for r in 0..rows {
+        let dst = (row0 + r) * d_ff + col0;
+        region[dst..dst + cols].copy_from_slice(&scratch.local[r * cols..(r + 1) * cols]);
+    }
+}
+
+/// Grid-order gated combine: `out[token] += gate · packed_row`, reading
+/// each task's packed rows from `regions[ti]` (`[task.rows, d_ff]`).
+/// Shared by the serial and parallel executors — same traversal order,
+/// same float additions, so the two paths agree bitwise.
+fn combine_regions(plan: &ExecutionPlan, inputs: &MoeInputs, regions: &[&[f32]]) -> Tensor {
+    let shape = plan.shape();
+    let d_ff = shape.d_ff;
+    let mut out = Tensor::zeros(&[shape.seq, d_ff]);
+    for (ti, task) in plan.tasks.iter().enumerate() {
+        let e = task.expert as usize;
+        for (pos, &tok) in inputs.token_index.index[e].iter().enumerate() {
+            let g = inputs.gates[e][pos];
+            let src = &regions[ti][pos * d_ff..(pos + 1) * d_ff];
+            let dst = out.row_mut(tok as usize);
+            for (d, s) in dst.iter_mut().zip(src) {
+                *d += g * s;
+            }
+        }
+    }
+    out
 }
 
 /// Execute the plan; returns `[seq, d_ff]` combined outputs.
@@ -84,39 +165,11 @@ pub fn execute_traced(
             if let Some(trace) = ctx.trace.as_mut() {
                 trace.push(DispatchRecord { task: task_idx, tile: tile_idx, kind: desc.kind });
             }
-            let task = &ctx.plan.tasks[task_idx as usize];
-            let tiles_n = desc.tiles_n() as u32;
-            let (mi, ni) = (tile_idx / tiles_n, tile_idx % tiles_n);
-            let tm = desc.tile_rows;
-            let tn = desc.tile_cols;
-            let row0 = mi as usize * tm;
-            let col0 = ni as usize * tn;
-            let rows = (task.rows - row0).min(tm);
-            let cols = (ctx.plan.shape().d_ff - col0).min(tn);
-            // gather indices for this tile's rows (token index array)
-            let ids = &ctx.inputs.token_index.index[task.expert as usize]
-                [row0..row0 + rows];
-            // weight plane slice [d_model, col0..col0+cols]
-            let w = ctx.inputs.weights.plane(task.expert as usize);
-            let d_ff_full = ctx.plan.shape().d_ff;
-            let k = ctx.plan.shape().d_model;
-            // tile-local output, then scatter into packed buffer
-            let mut local = vec![0.0f32; rows * cols];
-            // build a column-sliced weight view: w is [k, d_ff]; we
-            // need [k, cols] starting at col0 — copy the slice once per
-            // tile (models the VMEM block the Pallas kernel stages).
-            let mut wslice = vec![0.0f32; k * cols];
-            for kk in 0..k {
-                wslice[kk * cols..(kk + 1) * cols].copy_from_slice(
-                    &w[kk * d_ff_full + col0..kk * d_ff_full + col0 + cols],
-                );
-            }
-            gathered_matmul_into(ctx.inputs.tokens, ids, &wslice, cols, &mut local);
+            let task = ctx.plan.tasks[task_idx as usize];
+            let d_ff = ctx.plan.shape().d_ff;
             let base = ctx.offsets[task_idx as usize];
-            for r in 0..rows {
-                let dst = (base + row0 + r) * d_ff_full + col0;
-                ctx.packed[dst..dst + cols].copy_from_slice(&local[r * cols..(r + 1) * cols]);
-            }
+            let region = &mut ctx.packed[base * d_ff..(base + task.rows) * d_ff];
+            run_gemm_tile(ctx.inputs, &task, desc, tile_idx, region, &mut ctx.scratch);
         });
     }
     let batch = StaticBatch::try_new(plan.descriptors(), builder)?;
@@ -129,25 +182,59 @@ pub fn execute_traced(
         offsets,
         dispatch_counts: vec![0; CATALOG.len()],
         trace: record_dispatch.then(Vec::new),
+        scratch: GemmScratch::default(),
     };
     let blocks = batch.run(&mut ctx);
     debug_assert_eq!(blocks, plan.total_tiles());
 
-    // combine: out[token] += gate * packed_row
-    let mut out = Tensor::zeros(&[shape.seq, d_ff]);
-    for (ti, task) in plan.tasks.iter().enumerate() {
-        let e = task.expert as usize;
-        let base = ctx.offsets[ti];
-        for (pos, &tok) in inputs.token_index.index[e].iter().enumerate() {
-            let g = inputs.gates[e][pos];
-            let src = &ctx.packed[(base + pos) * d_ff..(base + pos + 1) * d_ff];
-            let dst = out.row_mut(tok as usize);
-            for (d, s) in dst.iter_mut().zip(src) {
-                *d += g * s;
-            }
-        }
-    }
+    let regions: Vec<&[f32]> = plan
+        .tasks
+        .iter()
+        .enumerate()
+        .map(|(ti, t)| &ctx.packed[ctx.offsets[ti] * d_ff..(ctx.offsets[ti] + t.rows) * d_ff])
+        .collect();
+    let out = combine_regions(plan, inputs, &regions);
     Ok((out, ctx.trace))
+}
+
+/// Execute the plan with per-task fan-out across `pool`'s workers.
+///
+/// Each worker job runs one chunk of tasks, visiting every task's tiles in
+/// ascending order — exactly the order the serial grid walk visits them —
+/// into an owned per-task region.  The combine then walks tasks in grid
+/// order on the calling thread.  Identical tile bodies
+/// ([`run_gemm_tile`]), identical per-task tile order, identical combine
+/// order: the output is **bitwise-equal** to [`execute`], so parallelism
+/// is purely a wall-clock knob.
+///
+/// A worker panic or pool shutdown surfaces as [`ExecError::Backend`]
+/// instead of poisoning the calling thread.
+pub fn execute_parallel(
+    plan: &ExecutionPlan,
+    inputs: &MoeInputs,
+    pool: &ThreadPool,
+) -> Result<Tensor, ExecError> {
+    let d_ff = plan.shape().d_ff;
+    let descs = plan.descriptors();
+    let tasks = &plan.tasks;
+    let descs_ref = &descs;
+    let job = move |ti: usize| -> Vec<f32> {
+        let task = tasks[ti];
+        let desc = &descs_ref[ti];
+        let mut region = vec![0.0f32; task.rows * d_ff];
+        let mut scratch = GemmScratch::default();
+        for tile in 0..desc.num_tiles() as u32 {
+            run_gemm_tile(inputs, &task, desc, tile, &mut region, &mut scratch);
+        }
+        region
+    };
+    let indices: Vec<usize> = (0..plan.tasks.len()).collect();
+    let chunk = pool.default_chunk(indices.len());
+    let regions = pool
+        .scoped_map_chunks(indices, chunk, job)
+        .map_err(|e| ExecError::Backend { backend: "cpu", detail: format!("worker pool: {e}") })?;
+    let views: Vec<&[f32]> = regions.iter().map(|r| r.as_slice()).collect();
+    Ok(combine_regions(plan, inputs, &views))
 }
 
 /// Dense reference: `out[t] = Σ_e gate(e,t) · tokens[t] @ W[e]` without any
@@ -278,6 +365,24 @@ mod tests {
         let got = execute(&plan, &inputs);
         let want = reference(&inputs, shape.seq, shape.d_model, shape.d_ff);
         assert!(got.max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        let shape =
+            MoeShape { seq: 96, d_model: 24, d_ff: 40, experts: 16, top_k: 4, dtype_bytes: 4 };
+        let load = LoadScenario::Worst.counts(&shape, 0);
+        let (tokens, weights, ti, gates) = setup(shape, &load, 8);
+        let inputs =
+            MoeInputs { tokens: &tokens, weights: &weights, token_index: &ti, gates: &gates };
+        let plan = Planner::new(shape).plan(&load);
+        let serial = execute(&plan, &inputs);
+        for threads in [1, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            let par = execute_parallel(&plan, &inputs, &pool).unwrap();
+            assert_eq!(serial.shape, par.shape);
+            assert_eq!(serial.data, par.data, "threads={threads}");
+        }
     }
 
     #[test]

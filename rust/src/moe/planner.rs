@@ -22,7 +22,7 @@ use crate::moe::config::MoeShape;
 use crate::moe::routing::ExpertLoad;
 use crate::moe::tiling::{self, StrategyId, CATALOG};
 use crate::sim::cost::Dtype;
-use crate::workload::{PlanKey, Workload};
+use crate::workload::Workload;
 
 pub use crate::workload::plan::{Plan, Planner};
 
@@ -103,8 +103,9 @@ impl Workload for MoeWorkload {
         task.rows
     }
 
-    fn signature(&self, load: &ExpertLoad) -> PlanKey {
-        PlanKey(load.counts.iter().map(|&c| c as u64).collect())
+    fn signature_into(&self, load: &ExpertLoad, out: &mut Vec<u64>) {
+        out.clear();
+        out.extend(load.counts.iter().map(|&c| c as u64));
     }
 
     fn dtype(&self) -> Dtype {

@@ -327,11 +327,19 @@ impl ShardedStepExecutor {
         } else {
             slice_columns(&full, b.experts, b.d_model, b.d_ff, shard_shape.d_ff)
         };
+        // one worker pool shared by every lane (lanes execute one at a
+        // time, so per-lane pools would just multiply idle threads)
+        let pool = (cfg.base.threads > 1).then(|| {
+            std::sync::Arc::new(crate::util::threadpool::ThreadPool::new(cfg.base.threads))
+        });
         let lanes = (0..cfg.ep)
             .map(|_| {
                 let mut session = ExecutionSession::new(shard_shape)
                     .gpu(cfg.gpu.clone())
                     .plan_cache(cfg.base.cache_capacity);
+                if let Some(pool) = &pool {
+                    session = session.thread_pool(std::sync::Arc::clone(pool));
+                }
                 if cfg.base.numeric {
                     // each lane holds its weight slice from construction
                     // (the serving analog of device-resident parameters);
@@ -622,6 +630,7 @@ mod tests {
             d_ff: 12,
             cache_capacity: 8,
             numeric,
+            threads: 1,
             seed: 3,
         }
     }

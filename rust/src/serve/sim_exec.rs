@@ -102,6 +102,10 @@ pub struct SimServeConfig {
     /// Real CPU numerics through the framework dispatch (true) or
     /// accounting-only simulation (false, faster).
     pub numeric: bool,
+    /// Worker threads for the numeric backend.  1 = serial; more attach a
+    /// shared [`crate::util::threadpool::ThreadPool`] to the session, with
+    /// bitwise-identical outputs (parallelism is a wall-clock knob only).
+    pub threads: usize,
     /// Seed for the synthetic expert weights and embeddings.
     pub seed: u64,
 }
@@ -117,6 +121,7 @@ impl Default for SimServeConfig {
             d_ff: 64,
             cache_capacity: 128,
             numeric: true,
+            threads: 1,
             seed: 0x5EED,
         }
     }
@@ -149,7 +154,8 @@ impl SimStepExecutor {
             top_k: cfg.top_k,
             dtype_bytes: 4,
         };
-        let mut session = ExecutionSession::new(shape).plan_cache(cfg.cache_capacity);
+        let mut session =
+            ExecutionSession::new(shape).plan_cache(cfg.cache_capacity).threads(cfg.threads);
         if cfg.numeric {
             session = session.backend(CpuBackend).inputs(NumericInputs {
                 tokens: Tensor::zeros(&[shape.seq, shape.d_model]),
@@ -265,6 +271,7 @@ mod tests {
             d_ff: 12,
             cache_capacity: 8,
             numeric,
+            threads: 1,
             seed: 3,
         }
     }

@@ -1,10 +1,19 @@
 //! Fixed-size worker pool over std::thread + channels.
 //!
-//! Used by the coordinator's engine (one worker per PJRT executable slot)
-//! and by the parallel sweep drivers in the benches.  No async runtime is
-//! available offline, and a simple pool is all the serving loop needs.
+//! Used by the parallel [`crate::exec::CpuBackend`] numerics (expert GEMMs,
+//! ragged flash-decode), [`crate::batching::tile_prefix::build_parallel`],
+//! and the parallel sweep drivers in the benches.  No async runtime is
+//! available offline, and a simple pool is all the execution paths need.
+//!
+//! Failure model: a panicking job can never kill a worker (the worker
+//! catches the unwind and keeps draining the queue) and never deadlock a
+//! mapper — [`ThreadPool::map`] / [`ThreadPool::map_chunks`] return
+//! [`PoolError::WorkerPanicked`] instead, which the execution layer
+//! surfaces as a typed [`crate::exec::ExecError`] rather than poisoning
+//! the serving loop.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
@@ -14,6 +23,27 @@ enum Msg {
     Run(Job),
     Shutdown,
 }
+
+/// Why the pool could not run (or finish) a set of jobs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolError {
+    /// The pool's queue is gone (all workers exited) — submission failed.
+    Shutdown,
+    /// At least one job panicked; the surviving results were discarded so
+    /// the caller never observes a partially-computed map.
+    WorkerPanicked,
+}
+
+impl std::fmt::Display for PoolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PoolError::Shutdown => write!(f, "thread pool is shut down"),
+            PoolError::WorkerPanicked => write!(f, "a pool worker job panicked"),
+        }
+    }
+}
+
+impl std::error::Error for PoolError {}
 
 /// A fixed pool of worker threads executing boxed jobs FIFO.
 pub struct ThreadPool {
@@ -34,7 +64,11 @@ impl ThreadPool {
                     .spawn(move || loop {
                         let msg = { rx.lock().unwrap().recv() };
                         match msg {
-                            Ok(Msg::Run(job)) => job(),
+                            // a panicking job must not take the worker down
+                            // with it: catch the unwind and keep draining
+                            Ok(Msg::Run(job)) => {
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                            }
                             Ok(Msg::Shutdown) | Err(_) => break,
                         }
                     })
@@ -44,36 +78,190 @@ impl ThreadPool {
         ThreadPool { tx, handles }
     }
 
-    /// Submit a job; never blocks.
-    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.tx.send(Msg::Run(Box::new(f))).expect("pool alive");
+    /// Submit a job; never blocks.  Errs only if the pool's workers are
+    /// gone (shutdown raced with the submission) — the old
+    /// `expect("pool alive")` panic path made that case take the *caller*
+    /// down instead of reporting it.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) -> Result<(), PoolError> {
+        self.send_job(Box::new(f))
     }
 
-    /// Map `f` over `items` in parallel, preserving order.
-    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    fn send_job(&self, job: Job) -> Result<(), PoolError> {
+        self.tx.send(Msg::Run(job)).map_err(|_| PoolError::Shutdown)
+    }
+
+    /// Map `f` over `items` in parallel, preserving order.  One job (and
+    /// one result message) per item — fine for coarse items; for many small
+    /// ones use [`ThreadPool::map_chunks`] so per-task overhead doesn't eat
+    /// the win.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Result<Vec<R>, PoolError>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        self.map_chunks(items, 1, f)
+    }
+
+    /// Chunked parallel map, preserving order: items are split into runs of
+    /// up to `chunk` and each run is one boxed job + one channel message,
+    /// so per-item dispatch overhead amortizes across the run.
+    pub fn map_chunks<T, R, F>(
+        &self,
+        items: Vec<T>,
+        chunk: usize,
+        f: F,
+    ) -> Result<Vec<R>, PoolError>
     where
         T: Send + 'static,
         R: Send + 'static,
         F: Fn(T) -> R + Send + Sync + 'static,
     {
         let f = Arc::new(f);
-        let (tx, rx): (Sender<(usize, R)>, Receiver<(usize, R)>) = channel();
+        let chunk = chunk.max(1);
         let n = items.len();
-        for (i, item) in items.into_iter().enumerate() {
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let n_chunks = n.div_ceil(chunk);
+        let (tx, rx) = channel::<(usize, std::thread::Result<Vec<R>>)>();
+        let mut items = items;
+        let mut submitted = 0usize;
+        let mut submit_err = None;
+        // split off chunks back-to-front so each job owns its items
+        let mut runs: Vec<(usize, Vec<T>)> = Vec::with_capacity(n_chunks);
+        for ci in (0..n_chunks).rev() {
+            let run = items.split_off(ci * chunk);
+            runs.push((ci, run));
+        }
+        for (ci, run) in runs.into_iter().rev() {
             let f = Arc::clone(&f);
             let tx = tx.clone();
-            self.execute(move || {
-                let r = f(item);
-                let _ = tx.send((i, r));
-            });
+            let job = move || {
+                let r = catch_unwind(AssertUnwindSafe(|| {
+                    run.into_iter().map(|t| f(t)).collect::<Vec<R>>()
+                }));
+                let _ = tx.send((ci, r));
+            };
+            match self.execute(job) {
+                Ok(()) => submitted += 1,
+                Err(e) => {
+                    submit_err = Some(e);
+                    break;
+                }
+            }
         }
         drop(tx);
-        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-        for _ in 0..n {
-            let (i, r) = rx.recv().expect("worker result");
-            out[i] = Some(r);
+        // drain until every submitted job reported (disconnect == all done),
+        // so no job can still be running when we return
+        let mut out: Vec<Option<Vec<R>>> = (0..n_chunks).map(|_| None).collect();
+        let mut got = 0usize;
+        let mut panicked = false;
+        while let Ok((ci, res)) = rx.recv() {
+            match res {
+                Ok(v) => {
+                    out[ci] = Some(v);
+                    got += 1;
+                }
+                Err(_) => panicked = true,
+            }
         }
-        out.into_iter().map(|o| o.unwrap()).collect()
+        if let Some(e) = submit_err {
+            return Err(e);
+        }
+        if panicked || got != submitted || submitted != n_chunks {
+            return Err(PoolError::WorkerPanicked);
+        }
+        Ok(out.into_iter().flat_map(|o| o.expect("all chunks received")).collect())
+    }
+
+    /// [`ThreadPool::map_chunks`] for closures that *borrow* their
+    /// environment (the backend hot path: jobs read the plan and input
+    /// tensors by reference instead of `Arc`-wrapping or copying them).
+    ///
+    /// The `F: Copy` bound is what keeps this safe without `'static`: a
+    /// closure is `Copy` exactly when it captures only `Copy` state —
+    /// shared references and scalars — so neither the closure nor its
+    /// captures have drop glue that could touch borrowed data after this
+    /// call returns.  The call blocks until every submitted job has sent
+    /// its result (channel disconnect), so no job is still executing
+    /// borrowed state when the borrow ends.
+    pub fn scoped_map_chunks<'env, T, R, F>(
+        &self,
+        items: Vec<T>,
+        chunk: usize,
+        f: F,
+    ) -> Result<Vec<R>, PoolError>
+    where
+        T: Send + 'env,
+        R: Send + 'env,
+        F: Fn(T) -> R + Copy + Send + Sync + 'env,
+    {
+        let chunk = chunk.max(1);
+        let n = items.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let n_chunks = n.div_ceil(chunk).max(1);
+        let (tx, rx) = channel::<(usize, std::thread::Result<Vec<R>>)>();
+        let mut items = items;
+        let mut runs: Vec<(usize, Vec<T>)> = Vec::with_capacity(n_chunks);
+        for ci in (0..n_chunks).rev() {
+            let run = items.split_off(ci * chunk);
+            runs.push((ci, run));
+        }
+        let mut submitted = 0usize;
+        let mut submit_err = None;
+        for (ci, run) in runs.into_iter().rev() {
+            let tx = tx.clone();
+            let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                let r = catch_unwind(AssertUnwindSafe(|| {
+                    run.into_iter().map(f).collect::<Vec<R>>()
+                }));
+                let _ = tx.send((ci, r));
+            });
+            // SAFETY: the job is queued and run by this pool only; below we
+            // block until the result channel disconnects, which happens only
+            // after every submitted job has finished running and dropped its
+            // Sender.  `F: Copy` (and `&T`/scalar captures generally) have
+            // no drop glue, so nothing borrowed is touched after that point.
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(job)
+            };
+            match self.send_job(job) {
+                Ok(()) => submitted += 1,
+                Err(e) => {
+                    submit_err = Some(e);
+                    break;
+                }
+            }
+        }
+        drop(tx);
+        let mut out: Vec<Option<Vec<R>>> = (0..n_chunks).map(|_| None).collect();
+        let mut got = 0usize;
+        let mut panicked = false;
+        while let Ok((ci, res)) = rx.recv() {
+            match res {
+                Ok(v) => {
+                    out[ci] = Some(v);
+                    got += 1;
+                }
+                Err(_) => panicked = true,
+            }
+        }
+        if let Some(e) = submit_err {
+            return Err(e);
+        }
+        if panicked || got != submitted || submitted != n_chunks {
+            return Err(PoolError::WorkerPanicked);
+        }
+        Ok(out.into_iter().flat_map(|o| o.expect("all chunks received")).collect())
+    }
+
+    /// The chunk size the parallel backends use: enough runs to keep every
+    /// worker busy with a little slack for imbalance, never below one.
+    pub fn default_chunk(&self, items: usize) -> usize {
+        items.div_ceil(self.workers() * 2).max(1)
     }
 
     pub fn workers(&self) -> usize {
@@ -108,7 +296,8 @@ mod tests {
             pool.execute(move || {
                 c.fetch_add(1, Ordering::SeqCst);
                 let _ = tx.send(());
-            });
+            })
+            .expect("pool alive");
         }
         for _ in 0..100 {
             rx.recv().unwrap();
@@ -119,14 +308,55 @@ mod tests {
     #[test]
     fn map_preserves_order() {
         let pool = ThreadPool::new(8);
-        let out = pool.map((0..64).collect::<Vec<i32>>(), |x| x * x);
+        let out = pool.map((0..64).collect::<Vec<i32>>(), |x| x * x).unwrap();
         assert_eq!(out, (0..64).map(|x| x * x).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn map_chunks_preserves_order_at_every_chunk_size() {
+        let pool = ThreadPool::new(4);
+        let want: Vec<i32> = (0..103).map(|x| x * 3 + 1).collect();
+        for chunk in [1usize, 2, 7, 50, 103, 1000] {
+            let out = pool
+                .map_chunks((0..103).collect::<Vec<i32>>(), chunk, |x| x * 3 + 1)
+                .unwrap();
+            assert_eq!(out, want, "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn scoped_map_chunks_borrows_the_environment() {
+        let pool = ThreadPool::new(4);
+        let data: Vec<u64> = (0..1000).collect();
+        let slice = &data[..];
+        let out = pool
+            .scoped_map_chunks((0..1000usize).collect(), 64, |i| slice[i] * 2)
+            .unwrap();
+        assert_eq!(out, (0..1000u64).map(|x| x * 2).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn panicking_job_surfaces_as_error_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let err = pool
+            .map((0..16).collect::<Vec<i32>>(), |x| {
+                if x == 7 {
+                    panic!("boom");
+                }
+                x
+            })
+            .unwrap_err();
+        assert_eq!(err, PoolError::WorkerPanicked);
+        // workers caught the unwind: the pool keeps working afterwards
+        let ok = pool.map(vec![1, 2, 3], |x| x + 1).unwrap();
+        assert_eq!(ok, vec![2, 3, 4]);
     }
 
     #[test]
     fn drop_joins_cleanly() {
         let pool = ThreadPool::new(2);
-        pool.execute(|| std::thread::sleep(std::time::Duration::from_millis(10)));
+        pool.execute(|| std::thread::sleep(std::time::Duration::from_millis(10)))
+            .expect("pool alive");
         drop(pool); // must not hang or panic
     }
 }

@@ -51,6 +51,10 @@ struct Entry<W: Workload> {
 pub struct PlanCache<W: Workload> {
     capacity: usize,
     map: HashMap<PlanKey, Entry<W>>,
+    /// Reused key buffer: lookups write the signature here and probe the
+    /// map by `&[u64]` (via `PlanKey: Borrow<[u64]>`), so a hit performs
+    /// no allocation at all.
+    key_scratch: Vec<u64>,
     tick: u64,
     hits: u64,
     misses: u64,
@@ -62,6 +66,7 @@ impl<W: Workload> PlanCache<W> {
         PlanCache {
             capacity: capacity.max(1),
             map: HashMap::new(),
+            key_scratch: Vec::new(),
             tick: 0,
             hits: 0,
             misses: 0,
@@ -92,11 +97,12 @@ impl<W: Workload> PlanCache<W> {
     pub fn get_or_plan(&mut self, planner: &Planner<W>, load: &W::Load) -> Arc<Plan<W>> {
         self.tick += 1;
         let tick = self.tick;
-        // one O(num_tasks) key build per lookup (hits included) — the price
-        // of workload-generic keys; dwarfed by the σ/TilePrefix rebuild a
-        // hit skips
-        let key = planner.signature(load);
-        if let Some(entry) = self.map.get_mut(&key) {
+        // key build goes into the reused scratch buffer and the map is
+        // probed by slice (`PlanKey: Borrow<[u64]>`): a hit allocates
+        // nothing — no key Vec, no plan clone (the entry is an Arc)
+        let (map, scratch) = (&mut self.map, &mut self.key_scratch);
+        planner.signature_into(load, scratch);
+        if let Some(entry) = map.get_mut(scratch.as_slice()) {
             entry.last_used = tick;
             self.hits += 1;
             return Arc::clone(&entry.plan);
@@ -113,6 +119,7 @@ impl<W: Workload> PlanCache<W> {
                 self.map.remove(&k);
             }
         }
+        let key = PlanKey(self.key_scratch.clone());
         self.map.insert(key, Entry { plan: Arc::clone(&plan), last_used: tick });
         plan
     }

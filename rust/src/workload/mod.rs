@@ -56,6 +56,15 @@ use crate::sim::cost::{gemm_tiles, Dtype, TileWork};
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct PlanKey(pub Vec<u64>);
 
+/// Lets [`cache::PlanCache`] probe its map with a borrowed `&[u64]` scratch
+/// buffer — the zero-allocation hit path.  Hash-consistent with the derived
+/// `PlanKey` hash because `Vec<u64>`'s `Hash` defers to the slice impl.
+impl std::borrow::Borrow<[u64]> for PlanKey {
+    fn borrow(&self) -> &[u64] {
+        &self.0
+    }
+}
+
 /// One irregular workload the framework can statically batch.
 ///
 /// A workload knows how to decompose its `Load` (a routing outcome, a
@@ -91,8 +100,17 @@ pub trait Workload: Clone + PartialEq + std::fmt::Debug + 'static {
     /// by σ.
     fn weight(&self, task: &Self::Task) -> usize;
 
-    /// The plan-cache key of a load (see [`PlanKey`]).
-    fn signature(&self, load: &Self::Load) -> PlanKey;
+    /// Write the plan-cache key of a load into `out` (cleared first).
+    /// This is the form the cache calls on every lookup — with a reused
+    /// scratch buffer, a cache *hit* allocates nothing.
+    fn signature_into(&self, load: &Self::Load, out: &mut Vec<u64>);
+
+    /// The plan-cache key of a load (see [`PlanKey`]), as an owned key.
+    fn signature(&self, load: &Self::Load) -> PlanKey {
+        let mut out = Vec::new();
+        self.signature_into(load, &mut out);
+        PlanKey(out)
+    }
 
     /// Element type of the workload's operands (cost accounting).
     fn dtype(&self) -> Dtype;

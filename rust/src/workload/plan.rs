@@ -117,25 +117,39 @@ impl<W: Workload> Planner<W> {
         self.workload.signature(load)
     }
 
+    /// Write the plan-cache key into a reusable scratch buffer — the
+    /// allocation-free form [`crate::workload::cache::PlanCache`] uses on
+    /// every lookup.
+    pub fn signature_into(&self, load: &W::Load, out: &mut Vec<u64>) {
+        self.workload.signature_into(load, out);
+    }
+
     /// Build the plan for one load: σ over non-empty tasks, ordering,
     /// per-task tiling, compressed TilePrefix.
     pub fn plan(&self, load: &W::Load) -> Plan<W> {
         let canonical = self.workload.tasks(load, self.force_strategy);
+        let weights: Vec<usize> = canonical.iter().map(|t| self.workload.weight(t)).collect();
         // non-empty tasks with their ordering weights (canonical index as id)
-        let nonempty: Vec<(u32, usize)> = canonical
+        let nonempty: Vec<(u32, usize)> = weights
             .iter()
             .enumerate()
-            .filter(|(_, t)| self.workload.weight(t) > 0)
-            .map(|(i, t)| (i as u32, self.workload.weight(t)))
+            .filter(|&(_, &w)| w > 0)
+            .map(|(i, &w)| (i as u32, w))
             .collect();
         let ordered = self.ordering.order(&nonempty);
 
-        let mut tasks: Vec<W::Task> =
-            ordered.iter().map(|&i| canonical[i as usize].clone()).collect();
-        // append empty tasks (zero tiles; the σ stage elides them)
-        for t in &canonical {
-            if self.workload.weight(t) == 0 {
-                tasks.push(t.clone());
+        // materialize the grid without cloning tasks: move each one out of
+        // its canonical slot exactly once — ordered non-empty prefix, then
+        // the empty tasks (zero tiles; the σ stage elides them)
+        let mut slots: Vec<Option<W::Task>> = canonical.into_iter().map(Some).collect();
+        let mut tasks: Vec<W::Task> = Vec::with_capacity(slots.len());
+        for &i in &ordered {
+            let t = slots[i as usize].take().expect("ordering emits each nonempty index once");
+            tasks.push(t);
+        }
+        for (i, &w) in weights.iter().enumerate() {
+            if w == 0 {
+                tasks.push(slots[i].take().expect("empty task appended once"));
             }
         }
 

@@ -37,8 +37,9 @@ use crate::sim::cost::{Dtype, TileWork};
 use crate::sim::wave;
 use crate::util::rng::{zipf_weights, Rng};
 use crate::util::tensor::Tensor;
+use crate::util::threadpool::ThreadPool;
 use crate::workload::plan::Plan;
-use crate::workload::{PlanKey, Workload};
+use crate::workload::Workload;
 
 /// KV-chunk sizes (rows of K/V one tile covers), largest to smallest —
 /// the attention analog of the GEMM tiling catalog.
@@ -182,8 +183,9 @@ impl Workload for RaggedAttentionWorkload {
         task.kv_len
     }
 
-    fn signature(&self, load: &RaggedLoad) -> PlanKey {
-        PlanKey(load.lens.iter().map(|&l| l as u64).collect())
+    fn signature_into(&self, load: &RaggedLoad, out: &mut Vec<u64>) {
+        out.clear();
+        out.extend(load.lens.iter().map(|&l| l as u64));
     }
 
     fn dtype(&self) -> Dtype {
@@ -283,6 +285,84 @@ struct RaggedCtx<'a> {
     /// `state[grid_task][head]` — merged across that pair's KV chunks.
     state: Vec<Vec<HeadState>>,
     trace: Option<Vec<DispatchRecord>>,
+    /// chunk-local score scratch, reused across tiles
+    scores: Vec<f32>,
+}
+
+/// Run one (KV-chunk, head) tile of `task`, folding the chunk into that
+/// head's online-softmax accumulator in `state`.  The single numeric tile
+/// body shared by the serial framework dispatch and [`execute_parallel`]:
+/// both visit a task's tiles in ascending order, so the merge sequence —
+/// and therefore every float — is identical on either path.  `scores` is
+/// caller scratch, cleared and fully overwritten here.
+fn run_decode_tile(
+    inputs: &RaggedInputs,
+    task: &SeqTask,
+    desc: &TaskDescriptor,
+    scale: f32,
+    tile_idx: u32,
+    state: &mut [HeadState],
+    scores: &mut Vec<f32>,
+) {
+    let heads = desc.tiles_n() as u32;
+    let (mi, h) = (tile_idx / heads, (tile_idx % heads) as usize);
+    let chunk = desc.tile_rows;
+    let row0 = mi as usize * chunk;
+    let rows = (task.kv_len - row0).min(chunk);
+    let seq = task.seq as usize;
+    let q = &inputs.q.row(seq)[h * desc.inner..(h + 1) * desc.inner];
+    let kt = &inputs.keys[seq];
+    let vt = &inputs.values[seq];
+
+    // chunk-local scores and max
+    scores.clear();
+    scores.resize(rows, 0.0);
+    let mut local_max = f32::NEG_INFINITY;
+    for (r, s) in scores.iter_mut().enumerate() {
+        let krow = &kt.row(row0 + r)[h * desc.inner..(h + 1) * desc.inner];
+        let dot: f32 = q.iter().zip(krow).map(|(a, b)| a * b).sum();
+        *s = dot * scale;
+        local_max = local_max.max(*s);
+    }
+
+    // online-softmax merge into the (task, head) accumulator
+    let st = &mut state[h];
+    let new_max = st.m.max(local_max);
+    let corr = (st.m - new_max).exp(); // 0.0 on the first chunk (m = -inf)
+    st.l *= corr;
+    for a in st.acc.iter_mut() {
+        *a *= corr;
+    }
+    for (r, &s) in scores.iter().enumerate() {
+        let p = (s - new_max).exp();
+        st.l += p;
+        let vrow = &vt.row(row0 + r)[h * desc.inner..(h + 1) * desc.inner];
+        for (a, &v) in st.acc.iter_mut().zip(vrow) {
+            *a += p * v;
+        }
+    }
+    st.m = new_max;
+}
+
+/// Final flash-decode normalize: `out[seq, h·d + j] = acc / l`, tasks in
+/// grid order, empty caches left zero.  Shared by both executors.
+fn normalize(plan: &Plan<RaggedAttentionWorkload>, states: &[Vec<HeadState>]) -> Tensor {
+    let w = plan.workload;
+    let d = w.head_dim;
+    let seqs = plan.tasks.len();
+    let mut out = Tensor::zeros(&[seqs, w.heads * d]);
+    for (ti, task) in plan.tasks.iter().enumerate() {
+        if task.kv_len == 0 {
+            continue;
+        }
+        let row = out.row_mut(task.seq as usize);
+        for (h, st) in states[ti].iter().enumerate() {
+            for (j, &a) in st.acc.iter().enumerate() {
+                row[h * d + j] = a / st.l;
+            }
+        }
+    }
+    out
 }
 
 /// Execute a ragged plan numerically *through the framework dispatch*:
@@ -308,43 +388,15 @@ pub fn execute_traced(
                 trace.push(DispatchRecord { task: task_idx, tile: tile_idx, kind: desc.kind });
             }
             let task = ctx.plan.tasks[task_idx as usize];
-            let heads = desc.tiles_n() as u32;
-            let (mi, h) = (tile_idx / heads, (tile_idx % heads) as usize);
-            let chunk = desc.tile_rows;
-            let row0 = mi as usize * chunk;
-            let rows = (task.kv_len - row0).min(chunk);
-            let seq = task.seq as usize;
-            let q = &ctx.inputs.q.row(seq)[h * desc.inner..(h + 1) * desc.inner];
-            let kt = &ctx.inputs.keys[seq];
-            let vt = &ctx.inputs.values[seq];
-
-            // chunk-local scores and max
-            let mut scores = vec![0f32; rows];
-            let mut local_max = f32::NEG_INFINITY;
-            for (r, s) in scores.iter_mut().enumerate() {
-                let krow = &kt.row(row0 + r)[h * desc.inner..(h + 1) * desc.inner];
-                let dot: f32 = q.iter().zip(krow).map(|(a, b)| a * b).sum();
-                *s = dot * scale;
-                local_max = local_max.max(*s);
-            }
-
-            // online-softmax merge into the (task, head) accumulator
-            let st = &mut ctx.state[task_idx as usize][h];
-            let new_max = st.m.max(local_max);
-            let corr = (st.m - new_max).exp(); // 0.0 on the first chunk (m = -inf)
-            st.l *= corr;
-            for a in st.acc.iter_mut() {
-                *a *= corr;
-            }
-            for (r, &s) in scores.iter().enumerate() {
-                let p = (s - new_max).exp();
-                st.l += p;
-                let vrow = &vt.row(row0 + r)[h * desc.inner..(h + 1) * desc.inner];
-                for (a, &v) in st.acc.iter_mut().zip(vrow) {
-                    *a += p * v;
-                }
-            }
-            st.m = new_max;
+            run_decode_tile(
+                ctx.inputs,
+                &task,
+                desc,
+                scale,
+                tile_idx,
+                &mut ctx.state[task_idx as usize],
+                &mut ctx.scores,
+            );
         });
     }
     let batch = StaticBatch::try_new(plan.descriptors(), builder)?;
@@ -355,25 +407,54 @@ pub fn execute_traced(
         inputs,
         state: vec![vec![fresh; w.heads]; plan.tasks.len()],
         trace: record_dispatch.then(Vec::new),
+        scores: Vec::new(),
     };
     let blocks = batch.run(&mut ctx);
     debug_assert_eq!(blocks, plan.total_tiles());
 
-    // normalize into [seqs, heads * head_dim]; empty caches stay zero
-    let seqs = plan.tasks.len();
-    let mut out = Tensor::zeros(&[seqs, w.heads * d]);
-    for (ti, task) in plan.tasks.iter().enumerate() {
-        if task.kv_len == 0 {
-            continue;
-        }
-        let row = out.row_mut(task.seq as usize);
-        for (h, st) in ctx.state[ti].iter().enumerate() {
-            for (j, &a) in st.acc.iter().enumerate() {
-                row[h * d + j] = a / st.l;
-            }
-        }
-    }
+    let out = normalize(plan, &ctx.state);
     Ok((out, ctx.trace))
+}
+
+/// Execute a ragged plan with per-task fan-out across `pool`'s workers.
+///
+/// Each worker job runs one chunk of sequences, folding every sequence's
+/// (KV-chunk, head) tiles in ascending tile order — the order the serial
+/// grid walk visits them — into owned per-task accumulators; the normalize
+/// then walks tasks in grid order on the calling thread.  Same tile body
+/// ([`run_decode_tile`]), same merge order, same normalize: the output is
+/// **bitwise-equal** to the serial path.
+///
+/// A worker panic or pool shutdown surfaces as [`ExecError::Backend`].
+pub fn execute_parallel(
+    plan: &Plan<RaggedAttentionWorkload>,
+    inputs: &RaggedInputs,
+    pool: &ThreadPool,
+) -> Result<Tensor, ExecError> {
+    let w = plan.workload;
+    let d = w.head_dim;
+    let heads = w.heads;
+    let scale = 1.0 / (d as f32).sqrt();
+    let descs = plan.descriptors();
+    let tasks = &plan.tasks;
+    let descs_ref = &descs;
+    let job = move |ti: usize| -> Vec<HeadState> {
+        let task = tasks[ti];
+        let desc = &descs_ref[ti];
+        let fresh = HeadState { m: f32::NEG_INFINITY, l: 0.0, acc: vec![0.0; d] };
+        let mut state = vec![fresh; heads];
+        let mut scores = Vec::new();
+        for tile in 0..desc.num_tiles() as u32 {
+            run_decode_tile(inputs, &task, desc, scale, tile, &mut state, &mut scores);
+        }
+        state
+    };
+    let indices: Vec<usize> = (0..plan.tasks.len()).collect();
+    let chunk = pool.default_chunk(indices.len());
+    let states = pool
+        .scoped_map_chunks(indices, chunk, job)
+        .map_err(|e| ExecError::Backend { backend: "cpu", detail: format!("worker pool: {e}") })?;
+    Ok(normalize(plan, &states))
 }
 
 /// Dense reference: full softmax attention per (sequence, head) with no
@@ -423,7 +504,14 @@ impl Backend<RaggedAttentionWorkload> for CpuBackend {
             backend: "cpu",
             what: "ragged numeric inputs (q / keys / values)",
         })?;
-        let (output, trace) = execute_traced(plan, inputs, ctx.record_dispatch)?;
+        // Parallel when a multi-worker pool is attached and no dispatch
+        // trace was requested; bitwise-equal output either way.
+        let (output, trace) = match &ctx.pool {
+            Some(pool) if pool.workers() > 1 && !ctx.record_dispatch => {
+                (execute_parallel(plan, inputs, pool)?, None)
+            }
+            _ => execute_traced(plan, inputs, ctx.record_dispatch)?,
+        };
         Ok(Outcome {
             backend: "cpu",
             blocks: plan.total_tiles(),
@@ -535,6 +623,21 @@ mod tests {
         let want = reference(&w, &load, &inputs);
         let err = got.max_abs_diff(&want);
         assert!(err < 1e-4, "max abs err {err}");
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        let w = workload();
+        let load = RaggedLoad { lens: vec![700, 1, 0, 513, 33, 8, 0, 129] };
+        let inputs = RaggedInputs::synthetic(&w, &load, 11);
+        let plan = crate::workload::plan::Planner::for_workload(w).plan(&load);
+        let (serial, _) = execute_traced(&plan, &inputs, false).expect("dispatch covered");
+        for threads in [1, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            let par = execute_parallel(&plan, &inputs, &pool).unwrap();
+            assert_eq!(serial.shape, par.shape);
+            assert_eq!(serial.data, par.data, "threads={threads}");
+        }
     }
 
     #[test]

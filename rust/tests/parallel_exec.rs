@@ -1,0 +1,252 @@
+//! Parallel execution + zero-alloc planning, under DEFAULT features.
+//!
+//! Pins the three promises the parallel CPU path makes:
+//!
+//! 1. **Bitwise determinism (property)** — for *any* MoE load scenario and
+//!    *any* ragged length mix, executing through a worker pool produces
+//!    output bitwise-identical to the serial path, at every thread count.
+//!    Parallelism is purely a speed knob, never a numerics knob.
+//! 2. **Zero-alloc cache hits (regression)** — a plan-cache *hit* performs
+//!    no heap allocation: signature built into a reused scratch, probe by
+//!    `Borrow<[u64]>`, `Arc` handout.  Measured with a counting global
+//!    allocator using a thread-local counter, so concurrently running
+//!    tests cannot pollute the measurement.
+//! 3. **Panic containment** — a job panicking inside a pool worker
+//!    surfaces as a typed [`ExecError::Backend`] instead of tearing down
+//!    the caller, and the shared pool keeps serving later sessions.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::Arc;
+
+use staticbatch::exec::{CpuBackend, ExecError, ExecutionSession, NumericInputs};
+use staticbatch::moe::config::MoeShape;
+use staticbatch::moe::routing::{ExpertLoad, LoadScenario};
+use staticbatch::serve::{SimServeConfig, SimStepExecutor, StepExecutor, StepInput};
+use staticbatch::util::prop::check;
+use staticbatch::util::tensor::Tensor;
+use staticbatch::util::threadpool::ThreadPool;
+use staticbatch::workload::ragged::{RaggedAttentionWorkload, RaggedInputs, RaggedLoad};
+
+// ---- counting allocator (thread-local, so parallel tests don't bleed) ----
+
+struct CountingAlloc;
+
+thread_local! {
+    static LOCAL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn bump() {
+    // try_with: survive TLS teardown at thread exit
+    let _ = LOCAL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Allocations made by *this thread* so far.
+fn thread_allocs() -> u64 {
+    LOCAL_ALLOCS.try_with(Cell::get).unwrap_or(0)
+}
+
+// ---- 1. parallel == serial, bitwise ----
+
+fn run_moe(shape: MoeShape, load: &ExpertLoad, seed: u64, threads: usize) -> Tensor {
+    let mut s = ExecutionSession::new(shape)
+        .backend(CpuBackend)
+        .inputs(NumericInputs::synthetic(shape, load, seed))
+        .threads(threads);
+    s.run(load).expect("cpu step").output.expect("numeric output")
+}
+
+#[test]
+fn property_moe_parallel_is_bitwise_equal_to_serial() {
+    check(
+        "moe-parallel-bitwise",
+        12,
+        |g| {
+            let seq = 16 + g.rng.usize_below(48 * g.size.min(4));
+            let experts = 4 + g.rng.usize_below(9);
+            let top_k = 1 + g.rng.usize_below(2);
+            let scenario = g.rng.usize_below(4);
+            let threads = 2 + g.rng.usize_below(3);
+            let seed = g.rng.next_u64();
+            (seq, experts, top_k, scenario, threads, seed)
+        },
+        |&(seq, experts, top_k, scenario, threads, seed)| {
+            let shape =
+                MoeShape { seq, d_model: 16, d_ff: 24, experts, top_k, dtype_bytes: 4 };
+            let load = match scenario {
+                0 => LoadScenario::Balanced,
+                1 => LoadScenario::Best,
+                2 => LoadScenario::Worst,
+                _ => LoadScenario::Zipf(1.2),
+            }
+            .counts(&shape, seed);
+            let serial = run_moe(shape, &load, seed, 1);
+            let par = run_moe(shape, &load, seed, threads);
+            if serial.data != par.data || serial.shape != par.shape {
+                return Err(format!("{threads}-thread MoE output diverged from serial"));
+            }
+            Ok(())
+        },
+    );
+}
+
+fn run_ragged(w: RaggedAttentionWorkload, load: &RaggedLoad, seed: u64, threads: usize) -> Tensor {
+    let mut s = ExecutionSession::for_workload(w)
+        .backend(CpuBackend)
+        .inputs(RaggedInputs::synthetic(&w, load, seed))
+        .threads(threads);
+    s.run(load).expect("ragged step").output.expect("numeric output")
+}
+
+#[test]
+fn property_ragged_parallel_is_bitwise_equal_to_serial() {
+    check(
+        "ragged-parallel-bitwise",
+        12,
+        |g| {
+            let n = 1 + g.rng.usize_below(12 * g.size.min(6));
+            let lens: Vec<usize> = (0..n)
+                .map(|_| match g.rng.usize_below(4) {
+                    0 => 0, // empty sequences must stay inert in both paths
+                    1 => 1 + g.rng.usize_below(8),
+                    _ => 1 + g.rng.usize_below(600),
+                })
+                .collect();
+            let heads = 1 + g.rng.usize_below(4);
+            let head_dim = 4 + 4 * g.rng.usize_below(3);
+            let threads = 2 + g.rng.usize_below(3);
+            let seed = g.rng.next_u64();
+            (lens, heads, head_dim, threads, seed)
+        },
+        |(lens, heads, head_dim, threads, seed)| {
+            let w = RaggedAttentionWorkload {
+                heads: *heads,
+                head_dim: *head_dim,
+                dtype_bytes: 4,
+            };
+            let load = RaggedLoad { lens: lens.clone() };
+            let serial = run_ragged(w, &load, *seed, 1);
+            let par = run_ragged(w, &load, *seed, *threads);
+            if serial.data != par.data || serial.shape != par.shape {
+                return Err(format!("{threads}-thread ragged output diverged from serial"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---- 2. zero-alloc plan-cache hits ----
+
+#[test]
+fn moe_plan_cache_hit_allocates_nothing() {
+    let shape = MoeShape { seq: 64, d_model: 16, d_ff: 24, experts: 8, top_k: 2, dtype_bytes: 4 };
+    let load = LoadScenario::Zipf(1.2).counts(&shape, 7);
+    let mut s = ExecutionSession::new(shape).plan_cache(8);
+    let _ = s.plan_shared(&load); // miss: builds and caches
+    let _ = s.plan_shared(&load); // first hit settles scratch capacity
+    let before = thread_allocs();
+    for _ in 0..100 {
+        let p = s.plan_shared(&load);
+        std::hint::black_box(&p);
+    }
+    let after = thread_allocs();
+    assert_eq!(after - before, 0, "plan-cache hit must not touch the heap");
+}
+
+#[test]
+fn ragged_plan_cache_hit_allocates_nothing() {
+    let w = RaggedAttentionWorkload { heads: 4, head_dim: 16, dtype_bytes: 4 };
+    let load = RaggedLoad { lens: vec![300, 0, 17, 64, 1, 512] };
+    let mut s = ExecutionSession::for_workload(w).plan_cache(8);
+    let _ = s.plan_shared(&load);
+    let _ = s.plan_shared(&load);
+    let before = thread_allocs();
+    for _ in 0..100 {
+        let p = s.plan_shared(&load);
+        std::hint::black_box(&p);
+    }
+    let after = thread_allocs();
+    assert_eq!(after - before, 0, "plan-cache hit must not touch the heap");
+}
+
+// ---- 3. worker panic -> typed error; pool survives ----
+
+#[test]
+fn worker_panic_surfaces_as_exec_error_and_pool_survives() {
+    let shape = MoeShape { seq: 32, d_model: 16, d_ff: 24, experts: 8, top_k: 2, dtype_bytes: 4 };
+    let load = LoadScenario::Worst.counts(&shape, 3);
+    let pool = Arc::new(ThreadPool::new(2));
+
+    // empty token storage: every gather in every worker indexes out of
+    // bounds, so each pool job panics
+    let mut bad = NumericInputs::synthetic(shape, &load, 3);
+    bad.tokens.data.clear();
+    let mut broken = ExecutionSession::new(shape)
+        .backend(CpuBackend)
+        .inputs(bad)
+        .thread_pool(Arc::clone(&pool));
+    match broken.run(&load) {
+        Err(ExecError::Backend { backend, detail }) => {
+            assert_eq!(backend, "cpu");
+            assert!(detail.contains("worker pool"), "unexpected detail: {detail}");
+        }
+        Err(e) => panic!("expected a backend error, got: {e}"),
+        Ok(_) => panic!("corrupt inputs must not execute"),
+    }
+
+    // the same pool keeps working afterwards, and still matches serial
+    let mut good = ExecutionSession::new(shape)
+        .backend(CpuBackend)
+        .inputs(NumericInputs::synthetic(shape, &load, 3))
+        .thread_pool(pool);
+    let par = good.run(&load).expect("pool survived").output.expect("numeric output");
+    let serial = run_moe(shape, &load, 3, 1);
+    assert_eq!(par.data, serial.data, "recovered pool must still match serial");
+}
+
+// ---- serving inherits the pool ----
+
+#[test]
+fn sim_executor_outputs_are_thread_count_invariant() {
+    let base = SimServeConfig {
+        buckets: vec![16],
+        max_tokens: 256,
+        experts: 8,
+        top_k: 2,
+        d_model: 16,
+        d_ff: 24,
+        cache_capacity: 8,
+        numeric: true,
+        threads: 1,
+        seed: 5,
+    };
+    let mut serial = SimStepExecutor::new(base.clone());
+    let mut parallel = SimStepExecutor::new(SimServeConfig { threads: 4, ..base });
+    for step in 0..6 {
+        let tokens: Vec<i32> = (0..64).map(|i| (i * 7 + step * 13) % 50 + 1).collect();
+        let input = StepInput { bucket: 16, rows: 4, tokens: &tokens };
+        let a = serial.execute_step(&input).expect("serial step");
+        let b = parallel.execute_step(&input).expect("parallel step");
+        assert_eq!(a.argmax, b.argmax, "step {step}: 4-thread argmax diverged");
+        assert_eq!(a.expert_rows, b.expert_rows, "step {step}: routing diverged");
+    }
+}

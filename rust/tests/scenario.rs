@@ -141,6 +141,7 @@ fn mid_run_kill_keeps_argmax_bitwise_identical_at_top_k_1() {
         d_ff: 24,
         cache_capacity: 32,
         numeric: true,
+        threads: 1,
         seed: 11,
     };
     let mut single = SimStepExecutor::new(base.clone());
@@ -184,6 +185,7 @@ fn slow_fault_inflates_step_time_and_kill_evacuation_recovers_it() {
         d_ff: 2048,
         cache_capacity: 32,
         numeric: false,
+        threads: 1,
         seed: 11,
     };
     let mut ex = ShardedStepExecutor::new(ShardedServeConfig {

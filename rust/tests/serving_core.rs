@@ -28,6 +28,7 @@ fn sim_server_serves_64_requests_end_to_end_with_cache_hits() {
         d_ff: 32,
         cache_capacity: 64,
         numeric: true,
+        threads: 1,
         seed: 9,
     });
     let mut server = Server::new(
@@ -123,6 +124,7 @@ fn plan_cache_under_capacity_pressure_evicts_and_keeps_counting() {
         d_ff: 32,
         cache_capacity: 2, // deliberately below the 3 distinct signatures
         numeric: false,
+        threads: 1,
         seed: 9,
     });
     let mut server = Server::new(

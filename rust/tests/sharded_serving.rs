@@ -30,6 +30,7 @@ fn base_cfg(numeric: bool, top_k: usize) -> SimServeConfig {
         d_ff: 24,
         cache_capacity: 32,
         numeric,
+        threads: 1,
         seed: 11,
     }
 }
@@ -85,6 +86,7 @@ fn balanced_placement_lowers_step_time_imbalance_on_zipf_traffic() {
         d_ff: 2048,
         cache_capacity: 32,
         numeric: false,
+        threads: 1,
         seed: 11,
     };
     let steps = zipf_steps(24, 8, 64, 1.5, 33);
