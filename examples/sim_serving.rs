@@ -31,7 +31,7 @@ fn main() {
         ServerConfig {
             policy: BatchPolicy { buckets: Vec::new(), max_requests: 16, max_tokens },
             queue_capacity: 512,
-            poll: std::time::Duration::from_millis(5),
+            ..ServerConfig::default()
         },
         executor,
     );

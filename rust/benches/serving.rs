@@ -1,31 +1,96 @@
-//! Serving-core bench (default features): burst traffic through the
-//! sim/CPU-backed server, then the SERVE report table (accounting mode)
-//! across prompt-pool skews.  No GPU, artifacts, or XLA — this is the
-//! load-test half of the DESIGN.md experiment index entry "SERVE".
+//! Serving-core bench (default features): the same 512-request Zipf burst
+//! through the synchronous reference loop and the three-stage pipelined
+//! front end (batcher → executor → responder), then the SERVE report table
+//! (accounting mode) across prompt-pool skews.  No GPU, artifacts, or XLA —
+//! this is the load-test half of the DESIGN.md experiment index entry
+//! "SERVE".
+//!
+//! With `--json <path>` (how `scripts/bench_distill` invokes it) the run
+//! merges a `pipelined_vs_sync` row into the summary the scenario bench
+//! wrote at `<path>`.  Request/token counts are deterministic for the seed;
+//! tokens/s and the latency percentiles are measured wall clock, so that
+//! one row is machine-dependent by design — it is the headline overlap
+//! number.
 
 use staticbatch::coordinator::batcher::BatchPolicy;
 use staticbatch::serve::{
     run_traffic, Server, ServerConfig, SimServeConfig, SimStepExecutor, TrafficConfig,
+    TrafficReport,
 };
+use staticbatch::util::json::Json;
 
-fn main() {
-    println!("== serving core: 512-request burst, CPU numerics ==");
+/// One burst run; returns the report and its end-to-end tokens/s.
+fn run(pipeline: bool, requests: usize) -> (TrafficReport, f64) {
     let sim_cfg = SimServeConfig { seed: 1, ..SimServeConfig::default() };
     let max_tokens = sim_cfg.max_tokens;
     let mut server = Server::new(
         ServerConfig {
             policy: BatchPolicy { buckets: Vec::new(), max_requests: 16, max_tokens },
-            queue_capacity: 1024,
-            poll: std::time::Duration::from_millis(1),
+            queue_capacity: requests.max(16),
+            pipeline,
+            ..ServerConfig::default()
         },
         SimStepExecutor::new(sim_cfg),
     );
     let report = run_traffic(
         &mut server,
-        TrafficConfig { requests: 512, rate_hz: 0.0, ..TrafficConfig::default() },
+        TrafficConfig { requests, rate_hz: 0.0, ..TrafficConfig::default() },
     );
-    print!("{}", report.render());
+    let tokens_per_s = report.snapshot.tokens as f64 / report.wall_s.max(1e-12);
+    (report, tokens_per_s)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    // scan for `--json <path>`, ignoring whatever else cargo bench passes
+    let json_path = args.windows(2).find(|w| w[0] == "--json").map(|w| w[1].clone());
+
+    println!("== serving core: 512-request burst, CPU numerics, sync vs pipelined ==");
+    println!("-- sync reference loop --");
+    let (sync_report, sync_tps) = run(false, 512);
+    print!("{}", sync_report.render());
+    println!("\n-- pipelined front end (batcher → executor → responder) --");
+    let (pipe_report, pipe_tps) = run(true, 512);
+    print!("{}", pipe_report.render());
+    println!(
+        "\npipelined vs sync: {:.0} vs {:.0} tokens/s ({:+.1}%), p99 {:.3} vs {:.3} ms",
+        pipe_tps,
+        sync_tps,
+        (pipe_tps / sync_tps.max(1e-12) - 1.0) * 100.0,
+        pipe_report.p99_ms,
+        sync_report.p99_ms,
+    );
 
     println!("\n== SERVE: plan-cache behavior across prompt-pool skews ==");
     print!("{}", staticbatch::reports::serving_sim_table(256, 1));
+
+    if let Some(path) = json_path {
+        let leg = |r: &TrafficReport, tps: f64| {
+            Json::obj(vec![
+                ("sent", Json::num(r.sent as f64)),
+                ("ok", Json::num(r.ok as f64)),
+                ("failed", Json::num(r.failed as f64)),
+                ("rejected", Json::num(r.rejected as f64)),
+                ("tokens_per_s", Json::num(tps)),
+                ("p50_ms", Json::num(r.p50_ms)),
+                ("p99_ms", Json::num(r.p99_ms)),
+                ("max_in_flight", Json::num(r.snapshot.max_in_flight as f64)),
+            ])
+        };
+        let row = Json::obj(vec![
+            ("sync", leg(&sync_report, sync_tps)),
+            ("pipelined", leg(&pipe_report, pipe_tps)),
+            ("speedup", Json::num(pipe_tps / sync_tps.max(1e-12))),
+        ]);
+        // merge into the scenario bench's summary rather than clobbering it
+        let mut doc = std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|s| Json::parse(&s).ok())
+            .unwrap_or_else(|| Json::obj(Vec::new()));
+        if let Json::Obj(map) = &mut doc {
+            map.insert("pipelined_vs_sync".to_string(), row);
+        }
+        std::fs::write(&path, format!("{doc}\n")).expect("write bench json");
+        println!("\nwrote {path}");
+    }
 }

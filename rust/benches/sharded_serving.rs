@@ -35,7 +35,7 @@ fn main() {
             ServerConfig {
                 policy: BatchPolicy { buckets: Vec::new(), max_requests: 16, max_tokens },
                 queue_capacity: 1024,
-                poll: std::time::Duration::from_millis(1),
+                ..ServerConfig::default()
             },
             ShardedStepExecutor::new(cfg),
         );

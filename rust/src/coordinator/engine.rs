@@ -10,7 +10,6 @@
 //! default-features sim path runs under `cargo test`, instantiated here
 //! with this executor.
 
-use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
@@ -22,7 +21,7 @@ use crate::exec::ExecError;
 use crate::runtime::artifact::Manifest;
 use crate::runtime::client::Runtime;
 use crate::runtime::executor::{ExecutorPool, Value};
-use crate::serve::{Server, ServerConfig, StepExecutor, StepInput, StepOutput};
+use crate::serve::{Server, ServerConfig, StepExecutor, StepInput, StepOutput, Stopper};
 use crate::util::rng::Rng;
 
 /// Engine configuration.
@@ -72,7 +71,7 @@ pub struct EngineHandle {
     pub queue: Arc<AdmissionQueue>,
     pub metrics: Arc<Metrics>,
     pub lm: LmConfig,
-    pub stop: Arc<AtomicBool>,
+    pub stop: Stopper,
     join: std::thread::JoinHandle<()>,
 }
 

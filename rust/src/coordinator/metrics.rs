@@ -139,6 +139,17 @@ struct Inner {
     requests: u64,
     tokens: u64,
     errors: u64,
+    /// requests refused at admission (bounded-queue backpressure or a
+    /// closed queue), counted by [`crate::serve::ServeHandle`]
+    rejected: u64,
+    /// per-request admission-to-formation wait, milliseconds
+    queue_wait: Samples,
+    /// per-batch accumulation time (first pop to seal), milliseconds
+    form_wait: Samples,
+    /// steps currently between batch formation and response fan-out
+    in_flight: u64,
+    /// high-water mark of `in_flight` (>1 proves formation/execution overlap)
+    max_in_flight: u64,
     started: Option<Instant>,
     /// cumulative per-expert routed-row counts (from the moe_ffn artifact's
     /// counts output) — drives load-aware ordering decisions
@@ -168,6 +179,18 @@ pub struct Snapshot {
     pub mean_batch: f64,
     /// Executor dispatches (formed batches executed).
     pub batches: u64,
+    /// Requests refused at admission (backpressure or closed queue).
+    pub rejected: u64,
+    /// Median admission-to-formation wait, milliseconds (0.0 when the
+    /// serving loop does not record it).
+    pub queue_wait_p50_ms: f64,
+    /// Median per-batch accumulation time, milliseconds.
+    pub form_wait_p50_ms: f64,
+    /// Steps currently in flight between formation and response fan-out.
+    pub in_flight: u64,
+    /// High-water mark of `in_flight`; >1 proves the pipelined front end
+    /// overlapped formation with execution.
+    pub max_in_flight: u64,
     pub expert_rows: Vec<u64>,
     /// Plan-cache lookups that skipped re-planning.
     pub plan_cache_hits: u64,
@@ -203,6 +226,35 @@ impl Metrics {
 
     pub fn record_error(&self) {
         self.inner.lock().unwrap().errors += 1;
+    }
+
+    /// Count one request refused at admission (backpressure shed or closed
+    /// queue) — the counter driver-side shed accounting reconciles against.
+    pub fn record_rejected(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    /// Record one request's admission-to-formation wait.
+    pub fn record_queue_wait(&self, wait_s: f64) {
+        self.inner.lock().unwrap().queue_wait.push(wait_s * 1e3);
+    }
+
+    /// Record one batch's accumulation time (first pop to seal).
+    pub fn record_form_wait(&self, wait_s: f64) {
+        self.inner.lock().unwrap().form_wait.push(wait_s * 1e3);
+    }
+
+    /// A formed batch entered the pipeline (batcher sealed it).
+    pub fn pipeline_enter(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.in_flight += 1;
+        g.max_in_flight = g.max_in_flight.max(g.in_flight);
+    }
+
+    /// A step left the pipeline (responses fanned out).
+    pub fn pipeline_exit(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.in_flight = g.in_flight.saturating_sub(1);
     }
 
     /// Mirror the executor's plan-cache counters (absolute values; the
@@ -281,6 +333,10 @@ impl Metrics {
             )
         };
         let exec_p50 = if g.exec.is_empty() { 0.0 } else { g.exec.percentile(50.0) };
+        let queue_wait_p50 =
+            if g.queue_wait.is_empty() { 0.0 } else { g.queue_wait.percentile(50.0) };
+        let form_wait_p50 =
+            if g.form_wait.is_empty() { 0.0 } else { g.form_wait.percentile(50.0) };
         let tenants: Vec<TenantStats> = g
             .tenants
             .iter_mut()
@@ -315,6 +371,11 @@ impl Metrics {
             exec_p50_ms: exec_p50,
             mean_batch: g.batch_size.mean(),
             batches: g.batch_size.count(),
+            rejected: g.rejected,
+            queue_wait_p50_ms: queue_wait_p50,
+            form_wait_p50_ms: form_wait_p50,
+            in_flight: g.in_flight,
+            max_in_flight: g.max_in_flight,
             expert_rows: g.expert_rows.clone(),
             plan_cache_hits: g.plan_hits,
             plan_cache_misses: g.plan_misses,
@@ -351,6 +412,16 @@ impl Snapshot {
             self.exec_p50_ms,
             self.mean_batch,
         );
+        if self.rejected > 0 {
+            s.push_str(&format!("  rejected={}", self.rejected));
+        }
+        if self.max_in_flight > 0 {
+            s.push_str(&format!(
+                "\npipeline: in-flight {}/{} (now/max)  queue wait p50={:.2}ms  \
+                 form wait p50={:.2}ms",
+                self.in_flight, self.max_in_flight, self.queue_wait_p50_ms, self.form_wait_p50_ms,
+            ));
+        }
         if self.plan_cache_hits + self.plan_cache_misses > 0 {
             s.push_str(&format!(
                 "\nplan cache: {} hits / {} misses ({:.1}% hit rate)",
@@ -459,6 +530,40 @@ mod tests {
         m.record_exec(0.001, 4);
         m.record_exec(0.002, 2);
         assert_eq!(m.snapshot().batches, 2);
+    }
+
+    #[test]
+    fn pipeline_gauge_tracks_in_flight_and_high_water() {
+        let m = Metrics::new();
+        let before = m.snapshot();
+        assert_eq!((before.in_flight, before.max_in_flight), (0, 0));
+        assert!(!before.render().contains("pipeline:"), "idle render stays quiet");
+        m.pipeline_enter();
+        m.pipeline_enter();
+        m.pipeline_exit();
+        m.record_queue_wait(0.004);
+        m.record_form_wait(0.002);
+        let s = m.snapshot();
+        assert_eq!((s.in_flight, s.max_in_flight), (1, 2));
+        assert!((s.queue_wait_p50_ms - 4.0).abs() < 1e-9);
+        assert!((s.form_wait_p50_ms - 2.0).abs() < 1e-9);
+        assert!(s.render().contains("pipeline: in-flight 1/2"), "{}", s.render());
+        // exit below zero saturates rather than wrapping
+        m.pipeline_exit();
+        m.pipeline_exit();
+        assert_eq!(m.snapshot().in_flight, 0);
+    }
+
+    #[test]
+    fn rejected_counter_surfaces_in_snapshot_and_render() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().rejected, 0);
+        m.record_request(0.01, 5);
+        m.record_rejected();
+        m.record_rejected();
+        let s = m.snapshot();
+        assert_eq!(s.rejected, 2);
+        assert!(s.render().contains("rejected=2"), "{}", s.render());
     }
 
     #[test]

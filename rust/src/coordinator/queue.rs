@@ -4,10 +4,16 @@
 //! lowest-priority-first load shedding under overload.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::request::Request;
+
+/// Backstop for the wakeup-driven waits: a lost notification (which the
+/// locking discipline should make impossible — see [`AdmissionQueue::wake_all`])
+/// degrades to a bounded re-check instead of a hang.
+const WAIT_BACKSTOP: Duration = Duration::from_millis(50);
 
 /// MPMC bounded queue: producers block-or-reject when full (backpressure),
 /// workers block on pop with a timeout so they can observe shutdown.
@@ -91,6 +97,71 @@ impl AdmissionQueue {
                 return g.q.pop_front();
             }
         }
+    }
+
+    /// Block until a request is available, returning `None` only when the
+    /// queue is closed-and-drained or `stop` is set — the wakeup-driven
+    /// replacement for polling [`AdmissionQueue::pop`] with a timeout.
+    ///
+    /// The wait is notification-driven: producers and [`AdmissionQueue::close`]
+    /// / [`AdmissionQueue::wake_all`] wake it.  `stop` is re-checked on every
+    /// wakeup (and on a coarse backstop tick), so a [`crate::serve::Stopper`]-style
+    /// flag ends the wait promptly.
+    pub fn pop_wait(&self, stop: &AtomicBool) -> Option<Request> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                return None;
+            }
+            if let Some(r) = g.q.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(r);
+            }
+            if g.closed {
+                return None;
+            }
+            let (g2, _) = self.not_empty.wait_timeout(g, WAIT_BACKSTOP).unwrap();
+            g = g2;
+        }
+    }
+
+    /// Block until a request is available or `deadline` passes; `None` on
+    /// deadline expiry, closed-and-drained, or `stop`.  The batch-formation
+    /// wait: "accumulate more riders until the batch deadline".
+    pub fn pop_until(&self, deadline: Instant, stop: &AtomicBool) -> Option<Request> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                return None;
+            }
+            if let Some(r) = g.q.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(r);
+            }
+            if g.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let wait = (deadline - now).min(WAIT_BACKSTOP);
+            let (g2, _) = self.not_empty.wait_timeout(g, wait).unwrap();
+            g = g2;
+        }
+    }
+
+    /// Wake every blocked producer and consumer so they re-check their stop
+    /// conditions.  Taking the mutex before notifying closes the lost-wakeup
+    /// window: a waiter is either still holding the lock (it will observe
+    /// the caller's stop flag before waiting) or already parked (the
+    /// notification reaches it).
+    pub fn wake_all(&self) {
+        drop(self.inner.lock().unwrap());
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
     }
 
     /// Drain up to `max` requests without blocking (batch formation).
@@ -336,6 +407,69 @@ mod tests {
         let batch = q.drain_up_to(3);
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
         assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn pop_wait_blocks_until_a_push_arrives() {
+        let q = Arc::new(AdmissionQueue::new(4));
+        let stop = Arc::new(AtomicBool::new(false));
+        let q2 = Arc::clone(&q);
+        let s2 = Arc::clone(&stop);
+        let h = std::thread::spawn(move || q2.pop_wait(&s2).map(|r| r.id));
+        std::thread::sleep(Duration::from_millis(20));
+        q.try_push(req(7).0);
+        assert_eq!(h.join().unwrap(), Some(7));
+    }
+
+    #[test]
+    fn pop_wait_returns_none_on_close_and_on_stop() {
+        let q = Arc::new(AdmissionQueue::new(4));
+        let stop = AtomicBool::new(false);
+        // closed-and-drained ends the wait
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            q2.close();
+        });
+        assert!(q.pop_wait(&stop).is_none());
+        h.join().unwrap();
+        // a pre-set stop flag wins even over queued work
+        let q = AdmissionQueue::new(4);
+        q.try_push(req(0).0);
+        stop.store(true, Ordering::Relaxed);
+        assert!(q.pop_wait(&stop).is_none());
+    }
+
+    #[test]
+    fn pop_until_expires_at_the_deadline_but_takes_earlier_arrivals() {
+        let q = Arc::new(AdmissionQueue::new(4));
+        let stop = AtomicBool::new(false);
+        // nothing arrives: deadline expiry returns None
+        let t0 = Instant::now();
+        assert!(q.pop_until(t0 + Duration::from_millis(10), &stop).is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+        // an arrival before the deadline is returned without waiting it out
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            q2.try_push(req(3).0);
+        });
+        let got = q.pop_until(Instant::now() + Duration::from_secs(5), &stop);
+        assert_eq!(got.map(|r| r.id), Some(3));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn wake_all_lets_a_waiter_observe_a_stop_flag() {
+        let q = Arc::new(AdmissionQueue::new(4));
+        let stop = Arc::new(AtomicBool::new(false));
+        let q2 = Arc::clone(&q);
+        let s2 = Arc::clone(&stop);
+        let h = std::thread::spawn(move || q2.pop_wait(&s2));
+        std::thread::sleep(Duration::from_millis(20));
+        stop.store(true, Ordering::Relaxed);
+        q.wake_all();
+        assert!(h.join().unwrap().is_none());
     }
 
     #[test]

@@ -289,6 +289,9 @@ fn cmd_serve_sim(args: &[String]) -> i32 {
         .flag("placement", Some("static"), "expert placement: static|balanced")
         .flag("rebalance", Some("1.25"), "re-shard imbalance threshold (balanced)")
         .flag("threads", Some("1"), "worker threads for CPU numerics (1 = serial)")
+        .flag("deadline-ms", Some("2"), "batch deadline in ms (max-batch OR deadline)")
+        .flag("depth", Some("2"), "pipeline depth between batcher/executor/responder")
+        .switch("sync", "single-threaded reference loop (no pipelining)")
         .switch("accounting", "skip CPU numerics (roofline accounting only)");
     let p = match cmd.parse(args) {
         Ok(p) => p,
@@ -314,7 +317,11 @@ fn cmd_serve_sim(args: &[String]) -> i32 {
             max_tokens,
         },
         queue_capacity: 512,
-        poll: std::time::Duration::from_millis(5),
+        deadline: std::time::Duration::from_secs_f64(
+            p.f64("deadline-ms").unwrap_or(2.0).max(0.0) / 1e3,
+        ),
+        depth: p.usize("depth").unwrap_or(2).max(1),
+        pipeline: !p.bool("sync"),
     };
     let traffic = TrafficConfig {
         requests: p.usize("requests").unwrap_or(256),

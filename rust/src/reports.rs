@@ -308,7 +308,7 @@ pub fn serving_sim_table(requests: usize, seed: u64) -> String {
                     max_tokens,
                 },
                 queue_capacity: requests.max(16),
-                poll: std::time::Duration::from_millis(1),
+                ..ServerConfig::default()
             },
             SimStepExecutor::new(sim_cfg),
         );
@@ -378,7 +378,7 @@ pub fn sharded_serving_table(requests: usize, seed: u64) -> String {
                 ServerConfig {
                     policy: BatchPolicy { buckets: Vec::new(), max_requests: 16, max_tokens },
                     queue_capacity: requests.max(16),
-                    poll: std::time::Duration::from_millis(1),
+                    ..ServerConfig::default()
                 },
                 ShardedStepExecutor::new(cfg),
             );

@@ -2,20 +2,18 @@
 //!
 //! Generates an open- or closed-loop request stream from a pool of
 //! Zipf-valued prompts (popular queries repeat, like real serving traffic,
-//! which is exactly what the plan cache exploits), pushes it into a
-//! [`Server`]'s queue from a producer thread, runs the serving loop on the
-//! calling thread, and reports latency percentiles, throughput, and
+//! which is exactly what the plan cache exploits), submits it through a
+//! cloned [`ServeHandle`](crate::serve::ServeHandle) from a producer
+//! thread, runs the serving loop on
+//! the calling thread, and reports latency percentiles, throughput, and
 //! plan-cache behavior.  Shared by the `staticbatch serve-sim` subcommand,
 //! the `serving` bench, and the load tests.
 
-use std::sync::mpsc::{channel, Receiver};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::Snapshot;
-use crate::coordinator::queue::PushResult;
-use crate::coordinator::request::{Request, Response};
 use crate::moe::plan_cache::CacheStats;
-use crate::serve::{Server, StepExecutor};
+use crate::serve::{Server, StepExecutor, Ticket};
 use crate::util::rng::{zipf_weights, Rng};
 use crate::util::stats::Samples;
 
@@ -123,17 +121,17 @@ fn prompt_pool(cfg: &TrafficConfig, rng: &mut Rng) -> Vec<Vec<i32>> {
         .collect()
 }
 
-/// Drive `cfg` traffic through `server`: producer thread pushes, the
-/// serving loop runs on the calling thread until the stream ends, then all
-/// responses are collected.
+/// Drive `cfg` traffic through `server`: a producer thread submits through
+/// a cloned handle, the serving loop runs on the calling thread until the
+/// stream ends, then every ticket is collected.
 pub fn run_traffic<E: StepExecutor>(server: &mut Server<E>, cfg: TrafficConfig) -> TrafficReport {
-    let queue = server.queue();
+    let handle = server.handle();
     let cfg2 = cfg.clone();
     let producer = std::thread::spawn(move || {
         let mut rng = Rng::new(cfg2.seed);
         let pool = prompt_pool(&cfg2, &mut rng);
         let pop_w = zipf_weights(pool.len(), cfg2.zipf_alpha);
-        let mut receivers: Vec<(usize, Receiver<Response>)> = Vec::new();
+        let mut tickets: Vec<(usize, Ticket)> = Vec::new();
         let mut rejected = 0usize;
         let t0 = Instant::now();
         for i in 0..cfg2.requests {
@@ -145,22 +143,14 @@ pub fn run_traffic<E: StepExecutor>(server: &mut Server<E>, cfg: TrafficConfig) 
                 }
             }
             let prompt = &pool[rng.zipf(&pop_w)];
-            let (tx, rx) = channel();
-            let req = Request {
-                id: i as u64,
-                tenant: 0,
-                tokens: prompt.clone(),
-                enqueued: Instant::now(),
-                respond: tx,
-            };
-            // open-loop: never block the arrival process; count drops
-            match queue.try_push(req) {
-                PushResult::Ok => receivers.push((prompt.len(), rx)),
-                PushResult::Full | PushResult::Closed => rejected += 1,
+            // open-loop: never block the arrival process; count sheds
+            match handle.try_submit(prompt) {
+                Ok(t) => tickets.push((prompt.len(), t)),
+                Err(_) => rejected += 1,
             }
         }
-        queue.close();
-        (receivers, rejected)
+        handle.close();
+        (tickets, rejected)
     });
 
     let t0 = Instant::now();
@@ -171,19 +161,21 @@ pub fn run_traffic<E: StepExecutor>(server: &mut Server<E>, cfg: TrafficConfig) 
         t0.elapsed().as_secs_f64()
     };
 
-    let (receivers, rejected) = producer.join().expect("producer thread");
-    let sent = receivers.len() + rejected;
+    let (tickets, rejected) = producer.join().expect("producer thread");
+    let sent = tickets.len() + rejected;
     let mut ok = 0usize;
     let mut failed = 0usize;
     let mut lat = Samples::new();
-    for (len, rx) in receivers {
-        match rx.try_recv() {
-            Ok(resp) if resp.error.is_none() => {
-                debug_assert_eq!(resp.argmax.len(), len);
-                lat.push(resp.latency_s * 1e3);
-                ok += 1;
-            }
-            _ => failed += 1,
+    for (len, ticket) in tickets {
+        // serve() has returned, so every admitted ticket is resolved:
+        // wait() never blocks here
+        let resp = ticket.wait();
+        if resp.error.is_none() {
+            debug_assert_eq!(resp.argmax.len(), len);
+            lat.push(resp.latency_s * 1e3);
+            ok += 1;
+        } else {
+            failed += 1;
         }
     }
     let (p50, p99) = if lat.is_empty() {

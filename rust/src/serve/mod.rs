@@ -6,22 +6,23 @@
 //! *any* execution surface:
 //!
 //! ```text
-//!           requests (TCP / in-process)
-//!                      │
-//!          ┌───────────▼───────────┐
-//!          │    AdmissionQueue     │  bounded, backpressure
-//!          └───────────┬───────────┘
-//!          ┌───────────▼───────────┐
-//!          │      BatchPolicy      │  bucket + pack, FIFO per bucket
-//!          └───────────┬───────────┘
-//!          ┌───────────▼───────────┐
-//!          │     StepExecutor      │  one call per formed batch:
-//!          │ (sim / sharded / PJRT)│  route → PlanCache → plan → execute
-//!          └───────────┬───────────┘
-//!          ┌───────────▼───────────┐
-//!          │       Metrics         │  latency, exec, batch, plan cache,
-//!          └───────────┬───────────┘  shard utilization/imbalance
-//!                  responses
+//!     ServeHandle clones (TCP / in-process producers)
+//!        │ try_submit → Backpressure   submit → blocks
+//!        ▼
+//!   ┌────────────────┐   ┌─────────────────┐   ┌─────────────────┐
+//!   │ AdmissionQueue │──▶│ batcher thread  │──▶│ executor stage  │──┐
+//!   │ bounded,       │   │ wakeup-driven   │ s │ StepExecutor    │  │
+//!   │ condvar wakeups│   │ accumulate until│ y │ (sim / sharded  │ sync
+//!   └────────────────┘   │ max-batch OR    │ n │ / PJRT), pinned │ chan
+//!                        │ deadline, then  │ c │ to the caller's │  │
+//!                        │ BatchPolicy form│   │ thread          │  │
+//!                        │ + pack          │   └─────────────────┘  │
+//!                        └─────────────────┘                        ▼
+//!                  step N+1 forms while step N executes   ┌─────────────────┐
+//!                                                         │ responder thread│
+//!     tickets ◀───────────────────────────────────────────│ fan out per     │
+//!     (one Response each; Metrics: latency, exec, batch,  │ caller ticket   │
+//!      queue/form waits, in-flight steps, plan cache)     └─────────────────┘
 //! ```
 //!
 //! [`Server`] is generic over a small [`StepExecutor`] trait with three
@@ -33,14 +34,12 @@
 //! runs, and is load-tested, without XLA, artifacts, or a GPU.
 //!
 //! Implementing [`StepExecutor`] is all it takes to put a new execution
-//! surface behind the serving loop:
+//! surface behind the serving loop; producers talk to it through cloneable
+//! [`ServeHandle`]s and per-request [`Ticket`]s:
 //!
 //! ```
-//! use staticbatch::coordinator::request::{Request, Response};
 //! use staticbatch::exec::ExecError;
 //! use staticbatch::serve::{Server, ServerConfig, StepExecutor, StepInput, StepOutput};
-//! use std::sync::mpsc::channel;
-//! use std::time::Instant;
 //!
 //! /// Echoes every token incremented — the smallest possible executor.
 //! struct Echo;
@@ -63,19 +62,11 @@
 //! }
 //!
 //! let mut server = Server::new(ServerConfig::default(), Echo);
-//! let queue = server.queue();
-//! let (tx, rx) = channel();
-//! queue.try_push(Request {
-//!     id: 0,
-//!     tenant: 0,
-//!     tokens: vec![1, 2, 3],
-//!     enqueued: Instant::now(),
-//!     respond: tx,
-//! });
-//! queue.close();
-//! server.serve(); // drains the closed queue, then returns
-//! let response: Response = rx.try_recv().unwrap();
-//! assert_eq!(response.argmax, vec![2, 3, 4]);
+//! let handle = server.handle();
+//! let ticket = handle.submit(&[1, 2, 3]).expect("queue open");
+//! handle.close(); // end of stream: serve() drains, then returns
+//! server.serve();
+//! assert_eq!(ticket.wait().argmax, vec![2, 3, 4]);
 //! ```
 
 pub mod driver;
@@ -91,7 +82,7 @@ pub use scenario::{
     run_scenario, ArrivalTrace, FaultEvent, FaultKind, FaultPlan, ScenarioConfig, ScenarioReport,
     TenantClass, TraceSegment,
 };
-pub use server::{Server, ServerConfig};
+pub use server::{ServeHandle, Server, ServerConfig, Stopper, SubmitError, Ticket};
 pub use sharded::{PlacementKind, ShardedServeConfig, ShardedStepExecutor};
 pub use sim_exec::{SimServeConfig, SimStepExecutor};
 

@@ -1,4 +1,4 @@
-//! [`Server`]: the backend-generic serving loop.
+//! [`Server`]: the backend-generic pipelined serving front end.
 //!
 //! Owns the admission queue, batch policy, metrics, and stop flag; drives
 //! any [`StepExecutor`] with one `execute_step` call per formed batch —
@@ -6,21 +6,49 @@
 //! executor amortizes its per-dispatch overhead across the whole batch
 //! (the serving-level mirror of the paper's kernel-level batching).
 //!
-//! The loop runs on the caller's thread ([`Server::serve`]); executors are
-//! deliberately not required to be `Send` (the PJRT client is pinned to
-//! its thread, and `ExecutionSession` holds an unsendable boxed backend).
-//! Producers push into [`Server::queue`] from any thread; closing the
-//! queue drains and stops the loop.
+//! Producers submit through a cloneable [`ServeHandle`]: non-blocking
+//! [`ServeHandle::try_submit`] surfaces backpressure as an explicit
+//! [`SubmitError::Backpressure`], blocking [`ServeHandle::submit`] waits
+//! for queue headroom.  Each submission returns a [`Ticket`] the caller
+//! waits on for its own [`Response`].
+//!
+//! [`Server::serve`] runs three channel-staged stages so batch *formation*
+//! for step N+1 overlaps batch *execution* of step N:
+//!
+//! ```text
+//!   batcher thread          executor (caller's thread)   responder thread
+//!   ┌──────────────┐  sync  ┌──────────────────┐  sync  ┌──────────────┐
+//!   │ wakeup-driven│ channel│ execute_step per  │ channel│ fan results  │
+//!   │ accumulation │ ─────▶ │ PackedBatch       │ ─────▶ │ back per     │
+//!   │ + form + pack│ (depth)│ (not Send: PJRT   │ (depth)│ caller ticket│
+//!   └──────────────┘        │ pinned here)      │        └──────────────┘
+//!                           └──────────────────┘
+//! ```
+//!
+//! Accumulation is wakeup-driven under a batch deadline: the batcher
+//! blocks for a first request, then takes riders until the batch is full
+//! (`BatchPolicy::max_requests`) or [`ServerConfig::deadline`] passes —
+//! whichever first.  There is no poll interval; closing the queue (or a
+//! [`Stopper`]) wakes every stage and the pipeline drains cleanly.
+//!
+//! Executors are deliberately not required to be `Send` (the PJRT client
+//! is pinned to its thread, and `ExecutionSession` holds an unsendable
+//! boxed backend), so the executor stage runs on the thread that calls
+//! [`Server::serve`]; the batcher and responder are scoped threads joined
+//! before `serve` returns.  [`ServerConfig::pipeline`]` = false` selects
+//! the single-threaded reference loop instead — same accumulation, same
+//! numerics, no overlap — which the determinism suite diffs against.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::batcher::{BatchPolicy, FormedBatch};
+use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::queue::AdmissionQueue;
-use crate::coordinator::request::Response;
-use crate::serve::{StepExecutor, StepInput};
+use crate::coordinator::queue::{AdmissionQueue, PushResult};
+use crate::coordinator::request::{Request, Response};
+use crate::serve::{StepExecutor, StepInput, StepOutput};
 
 /// Serving-core configuration (executor-independent knobs).
 #[derive(Clone, Debug)]
@@ -30,8 +58,18 @@ pub struct ServerConfig {
     pub policy: BatchPolicy,
     /// Admission queue capacity (backpressure bound).
     pub queue_capacity: usize,
-    /// Queue poll interval of the worker loop (shutdown latency bound).
-    pub poll: Duration,
+    /// Batch deadline: once a first request is in hand, the batcher waits
+    /// at most this long for riders before sealing the step (max-batch OR
+    /// deadline, whichever first).
+    pub deadline: Duration,
+    /// Pipeline depth: formed batches buffered between the batcher and
+    /// executor stages (and executed steps between executor and
+    /// responder).  Bounds memory and keeps backpressure honest.
+    pub depth: usize,
+    /// `true` (default) runs the three-stage pipeline; `false` runs the
+    /// synchronous single-threaded reference loop (same accumulation and
+    /// numerics, no formation/execution overlap).
+    pub pipeline: bool,
 }
 
 impl Default for ServerConfig {
@@ -39,9 +77,190 @@ impl Default for ServerConfig {
         ServerConfig {
             policy: BatchPolicy::default(),
             queue_capacity: 256,
-            poll: Duration::from_millis(50),
+            deadline: Duration::from_millis(2),
+            depth: 2,
+            pipeline: true,
         }
     }
+}
+
+/// Why a submission was refused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded admission queue is full — shed or retry (open-loop
+    /// overload made visible instead of buffered without bound).
+    Backpressure,
+    /// The queue is closed: the server is draining or stopped.
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Backpressure => write!(f, "admission queue full (backpressure)"),
+            SubmitError::Closed => write!(f, "admission queue closed"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// One submitted request's claim on its response.
+pub struct Ticket {
+    id: u64,
+    rx: Receiver<Response>,
+}
+
+impl Ticket {
+    /// The request id the server will answer with.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the response arrives.  If the server dropped the
+    /// request without answering (abortive stop, panic), a synthesized
+    /// failure response is returned — a ticket never hangs once the
+    /// serving loop has exited, and never silently vanishes.
+    pub fn wait(self) -> Response {
+        self.rx
+            .recv()
+            .unwrap_or_else(|_| Response::failed(self.id, "request dropped by the server".into()))
+    }
+
+    /// Non-blocking probe: `None` while the request is still in flight.
+    pub fn try_wait(&self) -> Option<Response> {
+        match self.rx.try_recv() {
+            Ok(resp) => Some(resp),
+            Err(std::sync::mpsc::TryRecvError::Empty) => None,
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                Some(Response::failed(self.id, "request dropped by the server".into()))
+            }
+        }
+    }
+}
+
+/// Cloneable submission handle: the request-side face of a [`Server`].
+/// Clones share the queue, metrics, and id sequence, so any number of
+/// producer threads can submit concurrently.
+#[derive(Clone)]
+pub struct ServeHandle {
+    queue: Arc<AdmissionQueue>,
+    metrics: Arc<Metrics>,
+    seq: Arc<AtomicU64>,
+}
+
+impl ServeHandle {
+    /// Non-blocking submission for the untenanted default class.
+    pub fn try_submit(&self, tokens: &[i32]) -> Result<Ticket, SubmitError> {
+        self.try_submit_for(0, tokens)
+    }
+
+    /// Non-blocking submission: returns [`SubmitError::Backpressure`]
+    /// exactly when the bounded queue is full.  Refusals are counted in
+    /// [`Metrics`] (`rejected`), so driver-side shed accounting reconciles
+    /// with the server's own counters.
+    pub fn try_submit_for(&self, tenant: u32, tokens: &[i32]) -> Result<Ticket, SubmitError> {
+        let (req, ticket) = self.request(tenant, tokens);
+        match self.queue.try_push(req) {
+            PushResult::Ok => Ok(ticket),
+            PushResult::Full => {
+                self.metrics.record_rejected();
+                Err(SubmitError::Backpressure)
+            }
+            PushResult::Closed => {
+                self.metrics.record_rejected();
+                Err(SubmitError::Closed)
+            }
+        }
+    }
+
+    /// Blocking submission for the untenanted default class.
+    pub fn submit(&self, tokens: &[i32]) -> Result<Ticket, SubmitError> {
+        self.submit_for(0, tokens)
+    }
+
+    /// Blocking submission: waits for queue headroom (a completing step
+    /// frees it) instead of shedding; fails only once the queue closes.
+    pub fn submit_for(&self, tenant: u32, tokens: &[i32]) -> Result<Ticket, SubmitError> {
+        let (req, ticket) = self.request(tenant, tokens);
+        match self.queue.push(req) {
+            PushResult::Ok => Ok(ticket),
+            PushResult::Full => Err(SubmitError::Backpressure), // unreachable: push blocks
+            PushResult::Closed => {
+                self.metrics.record_rejected();
+                Err(SubmitError::Closed)
+            }
+        }
+    }
+
+    /// Close the stream: in-flight work drains, further submissions fail
+    /// with [`SubmitError::Closed`], and [`Server::serve`] returns once
+    /// the queue is empty.
+    pub fn close(&self) {
+        self.queue.close();
+        self.queue.wake_all();
+    }
+
+    /// Requests currently waiting in the admission queue.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn request(&self, tenant: u32, tokens: &[i32]) -> (Request, Ticket) {
+        let id = self.seq.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        let req = Request {
+            id,
+            tenant,
+            tokens: tokens.to_vec(),
+            enqueued: Instant::now(),
+            respond: tx,
+        };
+        (req, Ticket { id, rx })
+    }
+}
+
+/// Cooperative shutdown: sets the stop flag, closes the queue (so blocked
+/// producers fail fast instead of waiting on a queue nobody will drain),
+/// and wakes every parked stage.  Cloneable; share with signal handlers.
+///
+/// `stop()` is abortive — requests still queued when the loop exits are
+/// failed, not executed.  For a graceful drain, use [`ServeHandle::close`]
+/// instead.
+#[derive(Clone)]
+pub struct Stopper {
+    flag: Arc<AtomicBool>,
+    queue: Arc<AdmissionQueue>,
+}
+
+impl Stopper {
+    /// Request shutdown.  Idempotent.
+    pub fn stop(&self) {
+        self.flag.store(true, Ordering::Relaxed);
+        self.queue.close();
+        self.queue.wake_all();
+    }
+
+    /// True once [`Stopper::stop`] has been called.
+    pub fn is_stopped(&self) -> bool {
+        self.flag.load(Ordering::Relaxed)
+    }
+}
+
+/// A sealed batch in flight between the batcher and executor stages:
+/// `requests` padded row-major into `tokens` (`requests.len() * bucket`
+/// ids), packed on the batcher thread so the executor only executes.
+struct PackedBatch {
+    bucket: usize,
+    requests: Vec<Request>,
+    tokens: Vec<i32>,
+}
+
+/// One executed step in flight between the executor and responder stages.
+struct StepResult {
+    bucket: usize,
+    requests: Vec<Request>,
+    outcome: Result<StepOutput, String>,
 }
 
 /// The backend-generic serving core.  See module docs.
@@ -49,8 +268,11 @@ pub struct Server<E: StepExecutor> {
     queue: Arc<AdmissionQueue>,
     metrics: Arc<Metrics>,
     policy: BatchPolicy,
-    poll: Duration,
+    deadline: Duration,
+    depth: usize,
+    pipeline: bool,
     stop: Arc<AtomicBool>,
+    seq: Arc<AtomicU64>,
     executor: E,
 }
 
@@ -70,13 +292,26 @@ impl<E: StepExecutor> Server<E> {
             queue: Arc::new(AdmissionQueue::new(cfg.queue_capacity)),
             metrics: Arc::new(Metrics::new()),
             policy,
-            poll: cfg.poll,
+            deadline: cfg.deadline,
+            depth: cfg.depth.max(1),
+            pipeline: cfg.pipeline,
             stop: Arc::new(AtomicBool::new(false)),
+            seq: Arc::new(AtomicU64::new(0)),
             executor,
         }
     }
 
-    /// The admission queue (share with producer threads).
+    /// A cloneable submission handle (share with producer threads).
+    pub fn handle(&self) -> ServeHandle {
+        ServeHandle {
+            queue: Arc::clone(&self.queue),
+            metrics: Arc::clone(&self.metrics),
+            seq: Arc::clone(&self.seq),
+        }
+    }
+
+    /// The admission queue (the layer below [`ServeHandle`]; the TCP
+    /// front end and tests that manage their own ids push here directly).
     pub fn queue(&self) -> Arc<AdmissionQueue> {
         Arc::clone(&self.queue)
     }
@@ -86,10 +321,9 @@ impl<E: StepExecutor> Server<E> {
         Arc::clone(&self.metrics)
     }
 
-    /// Cooperative stop flag: set it (or close the queue) to end
-    /// [`Server::serve`].
-    pub fn stopper(&self) -> Arc<AtomicBool> {
-        Arc::clone(&self.stop)
+    /// Cooperative abortive shutdown; see [`Stopper`].
+    pub fn stopper(&self) -> Stopper {
+        Stopper { flag: Arc::clone(&self.stop), queue: Arc::clone(&self.queue) }
     }
 
     /// The effective batch policy (buckets and budgets after adoption).
@@ -107,64 +341,114 @@ impl<E: StepExecutor> Server<E> {
         &mut self.executor
     }
 
-    /// Serve until the queue is closed and drained, or the stop flag is
-    /// set.  Runs on the calling thread; producers push into the queue
-    /// from anywhere.
+    /// Serve until the queue is closed and drained, or a [`Stopper`]
+    /// fires.  Runs the executor stage on the calling thread; the batcher
+    /// and responder stages are scoped threads joined before returning.
+    /// Every request admitted before shutdown is answered (executed on a
+    /// graceful close, failed on an abortive stop) by the time this
+    /// returns.
     pub fn serve(&mut self) {
         log::info!(
-            "{} serving: buckets {:?}",
+            "{} serving ({}): buckets {:?}",
             self.executor.name(),
+            if self.pipeline { "pipelined" } else { "sync" },
             self.policy.buckets
         );
-        while !self.stop.load(Ordering::Relaxed) {
-            let Some(first) = self.queue.pop(self.poll) else {
-                if self.queue.is_closed() && self.queue.is_empty() {
-                    break;
-                }
-                continue;
-            };
-            // form a batch: the popped request plus whatever is waiting
-            let mut pending = vec![first];
-            pending
-                .extend(self.queue.drain_up_to(self.policy.max_requests.saturating_sub(1)));
-            let (batches, rejected) = self.policy.form(pending);
-            for r in rejected {
-                self.metrics.record_error();
-                self.metrics.record_tenant_error(r.tenant);
-                let msg = format!("request of {} tokens exceeds largest bucket", r.tokens.len());
-                let mut resp = Response::failed(r.id, msg);
-                resp.tenant = r.tenant;
-                let _ = r.respond.send(resp);
-            }
-            for batch in batches {
-                self.step(batch);
-            }
-            self.sync_executor_metrics();
+        if self.pipeline {
+            self.serve_pipelined();
+        } else {
+            self.serve_sync();
+        }
+        // abortive stop can strand admitted requests: fail them so every
+        // ticket resolves once serve has returned
+        for r in self.queue.drain_up_to(usize::MAX) {
+            reject(r, "server stopped before execution".into(), &self.metrics);
         }
         log::info!("{} stopped", self.executor.name());
     }
 
-    /// Execute one formed batch: pack, dispatch once, fan responses out.
-    fn step(&mut self, batch: FormedBatch) {
-        let bucket = batch.bucket;
-        let rows = batch.requests.len();
-        let mut tokens = Vec::with_capacity(rows * bucket);
-        for r in &batch.requests {
-            tokens.extend(self.policy.pad(&r.tokens, bucket));
+    /// The three-stage pipeline: batcher thread → executor (this thread)
+    /// → responder thread, bounded `depth` deep on both channels.
+    fn serve_pipelined(&mut self) {
+        let (batch_tx, batch_rx) = sync_channel::<PackedBatch>(self.depth);
+        let (done_tx, done_rx) = sync_channel::<StepResult>(self.depth);
+        let queue = Arc::clone(&self.queue);
+        let b_metrics = Arc::clone(&self.metrics);
+        let r_metrics = Arc::clone(&self.metrics);
+        let policy = self.policy.clone();
+        let stop = Arc::clone(&self.stop);
+        let deadline = self.deadline;
+        std::thread::scope(|s| {
+            // batcher: forms and packs step N+1 while step N executes
+            s.spawn(move || {
+                while let Some(pending) = accumulate(&queue, &policy, deadline, &stop) {
+                    for packed in form_and_pack(pending, &policy, &b_metrics) {
+                        b_metrics.pipeline_enter();
+                        if batch_tx.send(packed).is_err() {
+                            return; // executor stage gone
+                        }
+                    }
+                }
+                // batch_tx drops here: end-of-stream for the executor
+            });
+            // responder: fans results back to each caller's ticket
+            s.spawn(move || {
+                for done in done_rx {
+                    respond(done, &r_metrics);
+                }
+            });
+            // executor stage on the calling thread (StepExecutor is not
+            // required to be Send — the PJRT client stays pinned here)
+            for batch in batch_rx {
+                let outcome = self.run_step(&batch);
+                self.sync_executor_metrics();
+                let PackedBatch { bucket, requests, .. } = batch;
+                if done_tx.send(StepResult { bucket, requests, outcome }).is_err() {
+                    // responder died: stop the batcher too, or the scope
+                    // join below would wait on its blocked accumulate
+                    self.stopper().stop();
+                    break;
+                }
+            }
+            drop(done_tx);
+        });
+    }
+
+    /// The synchronous reference loop: identical accumulation, execution,
+    /// and fan-out on one thread, with no overlap.  The determinism suite
+    /// asserts the pipeline produces bitwise-identical responses to this.
+    fn serve_sync(&mut self) {
+        while let Some(pending) =
+            accumulate(&self.queue, &self.policy, self.deadline, &self.stop)
+        {
+            for batch in form_and_pack(pending, &self.policy, &self.metrics) {
+                self.metrics.pipeline_enter();
+                let outcome = self.run_step(&batch);
+                let PackedBatch { bucket, requests, .. } = batch;
+                respond(StepResult { bucket, requests, outcome }, &self.metrics);
+            }
+            self.sync_executor_metrics();
         }
+    }
+
+    /// Execute one packed batch: dispatch once, validate the output shape,
+    /// record the per-batch exec metric.
+    fn run_step(&mut self, batch: &PackedBatch) -> Result<StepOutput, String> {
+        let rows = batch.requests.len();
         let t0 = Instant::now();
         let result = self
             .executor
-            .execute_step(&StepInput { bucket, rows, tokens: &tokens })
+            .execute_step(&StepInput { bucket: batch.bucket, rows, tokens: &batch.tokens })
             .and_then(|out| {
-                if out.argmax.len() == rows * bucket {
+                if out.argmax.len() == rows * batch.bucket {
                     Ok(out)
                 } else {
                     Err(crate::exec::ExecError::Backend {
                         backend: self.executor.name(),
                         detail: format!(
-                            "step returned {} argmax entries for a {rows}x{bucket} batch",
-                            out.argmax.len()
+                            "step returned {} argmax entries for a {rows}x{} batch",
+                            out.argmax.len(),
+                            batch.bucket
                         ),
                     })
                 }
@@ -173,50 +457,14 @@ impl<E: StepExecutor> Server<E> {
             Ok(out) => {
                 // per-batch exec metric: one executor dispatch per batch
                 self.metrics.record_exec(t0.elapsed().as_secs_f64(), rows);
-                if !out.expert_rows.is_empty() {
-                    self.metrics.record_expert_rows(&out.expert_rows);
-                }
-                for (i, r) in batch.requests.into_iter().enumerate() {
-                    // per-request error isolation: a row the executor
-                    // reported failed gets its own error response, the
-                    // rest of the batch still succeeds
-                    if let Some((_, msg)) = out.failed.iter().find(|(row, _)| *row == i) {
-                        self.metrics.record_error();
-                        self.metrics.record_tenant_error(r.tenant);
-                        let mut resp = Response::failed(r.id, msg.clone());
-                        resp.tenant = r.tenant;
-                        let _ = r.respond.send(resp);
-                        continue;
-                    }
-                    let latency = r.enqueued.elapsed().as_secs_f64();
-                    self.metrics.record_request(latency, r.tokens.len());
-                    self.metrics.record_tenant_request(r.tenant, latency, None);
-                    let row = &out.argmax[i * bucket..(i + 1) * bucket];
-                    let _ = r.respond.send(Response {
-                        id: r.id,
-                        tenant: r.tenant,
-                        argmax: row[..r.tokens.len()].to_vec(),
-                        latency_s: latency,
-                        bucket,
-                        error: None,
-                    });
-                }
+                Ok(out)
             }
-            Err(e) => {
-                let msg = e.to_string();
-                for r in batch.requests {
-                    self.metrics.record_error();
-                    self.metrics.record_tenant_error(r.tenant);
-                    let mut resp = Response::failed(r.id, msg.clone());
-                    resp.tenant = r.tenant;
-                    let _ = r.respond.send(resp);
-                }
-            }
+            Err(e) => Err(e.to_string()),
         }
     }
 
     /// Mirror the executor's cumulative counters (plan cache, sharding)
-    /// into the metrics sink after each loop iteration.
+    /// into the metrics sink after each step.
     fn sync_executor_metrics(&self) {
         if let Some(s) = self.executor.cache_stats() {
             self.metrics.set_plan_cache(s.hits, s.misses);
@@ -227,13 +475,119 @@ impl<E: StepExecutor> Server<E> {
     }
 }
 
+/// Accumulate one raw batch, wakeup-driven: block for a first request,
+/// then take riders until the batch is full or the deadline passes —
+/// whichever first.  `None` ends the stage (closed-and-drained or
+/// stopped).
+fn accumulate(
+    queue: &AdmissionQueue,
+    policy: &BatchPolicy,
+    deadline: Duration,
+    stop: &AtomicBool,
+) -> Option<Vec<Request>> {
+    let first = queue.pop_wait(stop)?;
+    let seal = Instant::now() + deadline;
+    let mut pending = vec![first];
+    while pending.len() < policy.max_requests {
+        let drained = queue.drain_up_to(policy.max_requests - pending.len());
+        if !drained.is_empty() {
+            pending.extend(drained);
+            continue; // more may already be waiting
+        }
+        match queue.pop_until(seal, stop) {
+            Some(r) => pending.push(r),
+            None => break, // deadline, closed-and-drained, or stop
+        }
+    }
+    Some(pending)
+}
+
+/// Form policy batches from accumulated requests, reject what fits no
+/// bucket, pack the rest row-major, and record queue/form waits.
+fn form_and_pack(
+    pending: Vec<Request>,
+    policy: &BatchPolicy,
+    metrics: &Metrics,
+) -> Vec<PackedBatch> {
+    let formed_at = Instant::now();
+    let (batches, rejected) = policy.form(pending);
+    for r in rejected {
+        let msg = format!("request of {} tokens exceeds largest bucket", r.tokens.len());
+        reject(r, msg, metrics);
+    }
+    batches
+        .into_iter()
+        .map(|b| {
+            let bucket = b.bucket;
+            let mut tokens = Vec::with_capacity(b.requests.len() * bucket);
+            let mut oldest = formed_at;
+            for r in &b.requests {
+                tokens.extend(policy.pad(&r.tokens, bucket));
+                metrics
+                    .record_queue_wait(formed_at.duration_since(r.enqueued).as_secs_f64());
+                oldest = oldest.min(r.enqueued);
+            }
+            // form wait: how long the batch's oldest member waited on
+            // accumulation itself (seal time minus its arrival), the
+            // latency cost of riding for a fuller batch
+            metrics.record_form_wait(formed_at.duration_since(oldest).as_secs_f64());
+            PackedBatch { bucket, requests: b.requests, tokens }
+        })
+        .collect()
+}
+
+/// Fail one request with `msg` (rejection, row failure, or abort).
+fn reject(r: Request, msg: String, metrics: &Metrics) {
+    metrics.record_error();
+    metrics.record_tenant_error(r.tenant);
+    let mut resp = Response::failed(r.id, msg);
+    resp.tenant = r.tenant;
+    let _ = r.respond.send(resp);
+}
+
+/// Fan one executed step's results back per caller and close out its
+/// pipeline slot.  A whole-step failure fails every request in the batch;
+/// a per-row failure ([`StepOutput::failed`]) fails only that request.
+fn respond(done: StepResult, metrics: &Metrics) {
+    let StepResult { bucket, requests, outcome } = done;
+    match outcome {
+        Ok(out) => {
+            if !out.expert_rows.is_empty() {
+                metrics.record_expert_rows(&out.expert_rows);
+            }
+            for (i, r) in requests.into_iter().enumerate() {
+                if let Some((_, msg)) = out.failed.iter().find(|(row, _)| *row == i) {
+                    reject(r, msg.clone(), metrics);
+                    continue;
+                }
+                let latency = r.enqueued.elapsed().as_secs_f64();
+                metrics.record_request(latency, r.tokens.len());
+                metrics.record_tenant_request(r.tenant, latency, None);
+                let row = &out.argmax[i * bucket..(i + 1) * bucket];
+                let _ = r.respond.send(Response {
+                    id: r.id,
+                    tenant: r.tenant,
+                    argmax: row[..r.tokens.len()].to_vec(),
+                    latency_s: latency,
+                    bucket,
+                    error: None,
+                });
+            }
+        }
+        Err(msg) => {
+            for r in requests {
+                reject(r, msg.clone(), metrics);
+            }
+        }
+    }
+    metrics.pipeline_exit();
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::Request;
     use crate::exec::ExecError;
-    use crate::serve::{StepExecutor, StepOutput};
-    use std::sync::mpsc::{channel, Receiver};
+    use std::sync::mpsc::Receiver;
 
     /// Echo executor: argmax[i] = token[i] + 1; fails whole steps or
     /// single rows when asked to.
@@ -279,13 +633,16 @@ mod tests {
         (Request { id, tenant: 0, tokens, enqueued: Instant::now(), respond: tx }, rx)
     }
 
-    fn server(fail: bool) -> Server<Echo> {
-        let cfg = ServerConfig {
+    fn config(queue_capacity: usize) -> ServerConfig {
+        ServerConfig {
             policy: BatchPolicy { buckets: Vec::new(), max_requests: 4, max_tokens: 64 },
-            queue_capacity: 32,
-            poll: Duration::from_millis(1),
-        };
-        Server::new(cfg, Echo { steps: Vec::new(), fail, fail_row: None })
+            queue_capacity,
+            ..ServerConfig::default()
+        }
+    }
+
+    fn server(fail: bool) -> Server<Echo> {
+        Server::new(config(32), Echo { steps: Vec::new(), fail, fail_row: None })
     }
 
     #[test]
@@ -322,16 +679,50 @@ mod tests {
         assert_eq!(snap.requests, 3);
         assert_eq!(snap.tokens, 6);
         assert!((snap.mean_batch - 3.0).abs() < 1e-9);
+        // the step passed through the pipeline gauge and drained back out
+        assert_eq!(snap.in_flight, 0);
+        assert!(snap.max_in_flight >= 1);
+    }
+
+    #[test]
+    fn handle_submits_roundtrip_with_sequential_ids() {
+        let mut s = server(false);
+        let h = s.handle();
+        let h2 = h.clone(); // clones share the id sequence
+        let t0 = h.try_submit(&[10, 20]).expect("admitted");
+        let t1 = h2.try_submit(&[30]).expect("admitted");
+        assert_eq!((t0.id(), t1.id()), (0, 1));
+        assert!(t0.try_wait().is_none(), "still queued: no response yet");
+        h.close();
+        s.serve();
+        let r0 = t0.wait();
+        let r1 = t1.wait();
+        assert_eq!((r0.id, r1.id), (0, 1));
+        assert_eq!(r0.argmax, vec![11, 21]);
+        assert_eq!(r1.argmax, vec![31]);
+        assert!(r0.error.is_none() && r1.error.is_none());
+    }
+
+    #[test]
+    fn try_submit_backpressure_exactly_at_capacity() {
+        let s = Server::new(config(2), Echo { steps: Vec::new(), fail: false, fail_row: None });
+        let h = s.handle();
+        assert!(h.try_submit(&[1]).is_ok());
+        assert!(h.try_submit(&[1]).is_ok());
+        assert_eq!(h.pending(), 2);
+        // the queue is exactly full: the next submission is backpressure
+        assert_eq!(h.try_submit(&[1]).unwrap_err(), SubmitError::Backpressure);
+        assert_eq!(s.metrics().snapshot().rejected, 1);
+        // once closed, refusals are Closed, not Backpressure
+        h.close();
+        assert_eq!(h.try_submit(&[1]).unwrap_err(), SubmitError::Closed);
+        assert_eq!(s.metrics().snapshot().rejected, 2);
     }
 
     #[test]
     fn per_row_failure_only_fails_that_request() {
-        let cfg = ServerConfig {
-            policy: BatchPolicy { buckets: Vec::new(), max_requests: 4, max_tokens: 64 },
-            queue_capacity: 32,
-            poll: Duration::from_millis(1),
-        };
-        let mut s = Server::new(cfg, Echo { steps: Vec::new(), fail: false, fail_row: Some(1) });
+        let mut s =
+            Server::new(config(32), Echo { steps: Vec::new(), fail: false, fail_row: Some(1) });
         let q = s.queue();
         let mut rxs = Vec::new();
         for id in 0..3u64 {
@@ -387,9 +778,38 @@ mod tests {
     }
 
     #[test]
-    fn stop_flag_ends_the_loop() {
+    fn stopper_ends_the_loop_and_fails_stranded_requests() {
         let mut s = server(false);
-        s.stopper().store(true, Ordering::Relaxed);
-        s.serve(); // returns immediately despite the open queue
+        let h = s.handle();
+        let ticket = h.try_submit(&[1]).expect("admitted");
+        let stopper = s.stopper();
+        assert!(!stopper.is_stopped());
+        stopper.stop();
+        assert!(stopper.is_stopped());
+        s.serve(); // returns promptly: stop is abortive, nothing executes
+        assert!(s.executor().steps.is_empty());
+        // the stranded request is failed, not leaked — the ticket resolves
+        let resp = ticket.wait();
+        assert!(resp.error.as_deref().unwrap_or("").contains("stopped"));
+        // and new submissions fail closed
+        assert_eq!(h.try_submit(&[2]).unwrap_err(), SubmitError::Closed);
+    }
+
+    #[test]
+    fn sync_mode_serves_identically_without_overlap() {
+        let cfg = ServerConfig { pipeline: false, ..config(32) };
+        let mut s = Server::new(cfg, Echo { steps: Vec::new(), fail: false, fail_row: None });
+        let h = s.handle();
+        let tickets: Vec<Ticket> =
+            (0..3).map(|i| h.try_submit(&[i, i + 1]).expect("admitted")).collect();
+        h.close();
+        s.serve();
+        assert_eq!(s.executor().steps, vec![(4, 3)]);
+        for (i, t) in tickets.into_iter().enumerate() {
+            let i = i as i32;
+            assert_eq!(t.wait().argmax, vec![i + 1, i + 2]);
+        }
+        // one step at a time: the gauge's high-water mark stays at 1
+        assert_eq!(s.metrics().snapshot().max_in_flight, 1);
     }
 }

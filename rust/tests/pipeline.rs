@@ -1,0 +1,358 @@
+//! Concurrency suite for the pipelined serving front end (default
+//! features: no PJRT, artifacts, or GPU).
+//!
+//! The pipeline is exactly the kind of change that is wrong until proven
+//! right, so this suite attacks it from every side: a multi-producer
+//! overload soak that must conserve every request (`sent == ok + failed +
+//! shed`) and drain cleanly on shutdown, a property test that the
+//! pipelined loop produces bitwise-identical responses to the synchronous
+//! reference loop over recorded arrival traces, backpressure semantics at
+//! exact queue capacity, a gated-executor proof that formation really
+//! overlaps execution, and driver-vs-metrics shed reconciliation.  Every
+//! test runs under a watchdog that aborts the process on deadlock instead
+//! of hanging CI.
+//!
+//! CI runs the soak repeatedly (`PIPELINE_SOAK_REPEAT=10`) so interleaving
+//! bugs cannot hide behind a single lucky run.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use staticbatch::coordinator::batcher::BatchPolicy;
+use staticbatch::exec::ExecError;
+use staticbatch::serve::{
+    run_traffic, Server, ServerConfig, SimServeConfig, SimStepExecutor, StepExecutor, StepInput,
+    StepOutput, SubmitError, Ticket, TrafficConfig,
+};
+use staticbatch::util::prop::check;
+
+/// Aborts the whole process if the test runs past `limit` — a deadlocked
+/// pipeline must fail CI loudly, not hang it.  Disarmed on drop (including
+/// ordinary test panics).
+struct Watchdog {
+    done: Arc<AtomicBool>,
+}
+
+impl Watchdog {
+    fn arm(limit: Duration) -> Watchdog {
+        let done = Arc::new(AtomicBool::new(false));
+        let seen = Arc::clone(&done);
+        std::thread::spawn(move || {
+            let t0 = Instant::now();
+            while t0.elapsed() < limit {
+                if seen.load(Ordering::Relaxed) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            eprintln!("watchdog: test exceeded {limit:?} — aborting (likely pipeline deadlock)");
+            std::process::abort();
+        });
+        Watchdog { done }
+    }
+}
+
+impl Drop for Watchdog {
+    fn drop(&mut self) {
+        self.done.store(true, Ordering::Relaxed);
+    }
+}
+
+fn accounting_server(
+    queue_capacity: usize,
+    max_requests: usize,
+    seed: u64,
+) -> Server<SimStepExecutor> {
+    let ex = SimStepExecutor::new(SimServeConfig {
+        numeric: false,
+        seed,
+        ..SimServeConfig::default()
+    });
+    Server::new(
+        ServerConfig {
+            policy: BatchPolicy { buckets: Vec::new(), max_requests, max_tokens: 2048 },
+            queue_capacity,
+            ..ServerConfig::default()
+        },
+        ex,
+    )
+}
+
+/// One soak round: 8 open-loop producers hammer a deliberately small queue
+/// while the pipeline serves, the stream closes only after every producer
+/// has finished, and every request must be accounted for exactly once.
+fn soak_once(seed: u64) {
+    const PRODUCERS: usize = 8;
+    const PER_PRODUCER: usize = 200;
+    let mut server = accounting_server(32, 8, seed);
+    let handle = server.handle();
+
+    let producers: Vec<_> = (0..PRODUCERS)
+        .map(|p| {
+            let h = handle.clone();
+            std::thread::spawn(move || {
+                let mut tickets: Vec<Ticket> = Vec::new();
+                let mut shed = 0usize;
+                for i in 0..PER_PRODUCER {
+                    // mixed lengths across all three buckets, deterministic
+                    // per (producer, index) so rounds are reproducible
+                    let len = 1 + (p * 37 + i * 13 + seed as usize) % 200;
+                    match h.try_submit(&vec![1i32; len]) {
+                        Ok(t) => tickets.push(t),
+                        Err(SubmitError::Backpressure) => shed += 1,
+                        Err(SubmitError::Closed) => {
+                            panic!("queue closed while producers still running")
+                        }
+                    }
+                }
+                (tickets, shed)
+            })
+        })
+        .collect();
+
+    // close only after the last producer finishes, from its own thread, so
+    // the serving loop below sees a live stream the whole time
+    let closer = std::thread::spawn(move || {
+        let mut tickets = Vec::new();
+        let mut shed = 0usize;
+        for p in producers {
+            let (t, s) = p.join().expect("producer thread");
+            tickets.extend(t);
+            shed += s;
+        }
+        handle.close();
+        (tickets, shed)
+    });
+
+    server.serve(); // returns once closed and drained
+
+    let (tickets, shed) = closer.join().expect("closer thread");
+    let sent = PRODUCERS * PER_PRODUCER;
+    assert_eq!(tickets.len() + shed, sent);
+
+    let mut ok = 0usize;
+    let mut failed = 0usize;
+    for t in tickets {
+        // serve() has returned: every admitted ticket must already be
+        // resolved (clean drain), so wait() cannot block
+        if t.wait().error.is_none() {
+            ok += 1;
+        } else {
+            failed += 1;
+        }
+    }
+    assert_eq!(ok + failed + shed, sent, "conservation: sent == ok + failed + shed");
+
+    // the server's own counters reconcile with driver-side accounting
+    let snap = server.metrics().snapshot();
+    assert_eq!(snap.requests as usize, ok);
+    assert_eq!(snap.errors as usize, failed);
+    assert_eq!(snap.rejected as usize, shed);
+    assert_eq!(failed, 0, "no request may fail under clean overload");
+    assert!(shed > 0, "a 32-slot queue under a 1600-request hammer must shed");
+}
+
+#[test]
+fn multi_producer_soak_conserves_every_request() {
+    let _wd = Watchdog::arm(Duration::from_secs(120));
+    // CI stress mode repeats the soak to shake out rare interleavings
+    let repeat: usize = std::env::var("PIPELINE_SOAK_REPEAT")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+    for round in 0..repeat.max(1) {
+        soak_once(0x50AC + round as u64);
+    }
+}
+
+/// Replay one recorded arrival trace and collect `(id, bucket, argmax,
+/// error)` per ticket in submission order — everything a caller can
+/// observe except timing.
+fn run_trace(
+    prompts: &[Vec<i32>],
+    pipeline: bool,
+) -> Vec<(u64, usize, Vec<i32>, Option<String>)> {
+    let ex = SimStepExecutor::new(SimServeConfig {
+        d_model: 16,
+        d_ff: 32,
+        seed: 11,
+        ..SimServeConfig::default()
+    });
+    let mut server = Server::new(
+        ServerConfig {
+            policy: BatchPolicy { buckets: Vec::new(), max_requests: 4, max_tokens: 2048 },
+            queue_capacity: prompts.len().max(1),
+            pipeline,
+            ..ServerConfig::default()
+        },
+        ex,
+    );
+    let handle = server.handle();
+    let tickets: Vec<Ticket> = prompts
+        .iter()
+        .map(|p| handle.submit(p).expect("queue sized to the trace"))
+        .collect();
+    handle.close();
+    server.serve();
+    tickets
+        .into_iter()
+        .map(|t| {
+            let r = t.wait();
+            (r.id, r.bucket, r.argmax, r.error)
+        })
+        .collect()
+}
+
+#[test]
+fn pipelined_responses_match_the_synchronous_loop_bitwise() {
+    let _wd = Watchdog::arm(Duration::from_secs(300));
+    // Property: over recorded arrival traces (mixed lengths, including
+    // oversized rejects), the pipelined server with CPU numerics produces
+    // exactly the per-request argmax rows (and errors) of the synchronous
+    // reference loop.  Pipelining changes timing, never results.
+    check(
+        "pipelined-matches-sync",
+        16,
+        |g| {
+            let n = 1 + g.rng.below(8 * g.size as u64) as usize;
+            (0..n)
+                .map(|_| {
+                    // up to 300 tokens: lengths past the largest bucket
+                    // (256) must be rejected identically in both modes
+                    let len = 1 + g.rng.below(300) as usize;
+                    (0..len).map(|_| g.rng.below(1000) as i32 + 1).collect::<Vec<i32>>()
+                })
+                .collect::<Vec<_>>()
+        },
+        |prompts| {
+            let sync = run_trace(prompts, false);
+            let pipelined = run_trace(prompts, true);
+            if sync == pipelined {
+                Ok(())
+            } else {
+                Err(format!(
+                    "responses diverged: sync {:?} vs pipelined {:?}",
+                    sync, pipelined
+                ))
+            }
+        },
+    );
+}
+
+#[test]
+fn blocking_submit_unblocks_once_a_step_completes() {
+    let _wd = Watchdog::arm(Duration::from_secs(60));
+    let mut server = accounting_server(1, 1, 7);
+    let handle = server.handle();
+    // fill the 1-slot queue before the server runs
+    let t0 = handle.try_submit(&[1, 2, 3]).expect("first submission fits");
+    assert_eq!(handle.try_submit(&[4]).unwrap_err(), SubmitError::Backpressure);
+
+    let h2 = handle.clone();
+    let blocked = std::thread::spawn(move || {
+        // blocks on the full queue; only a completing step frees the slot
+        let t = h2.submit(&[4, 5]).expect("unblocked by a completing step");
+        h2.close();
+        t.wait()
+    });
+    // nothing pops before serve(): the producer must still be blocked
+    std::thread::sleep(Duration::from_millis(50));
+    assert!(!blocked.is_finished(), "submit returned while the queue was still full");
+
+    server.serve();
+    let second = blocked.join().expect("blocked producer");
+    assert!(second.error.is_none());
+    assert!(t0.wait().error.is_none());
+    assert_eq!(server.metrics().snapshot().requests, 2);
+}
+
+#[test]
+fn formation_overlaps_execution_in_the_pipelined_loop() {
+    let _wd = Watchdog::arm(Duration::from_secs(60));
+
+    /// Holds its first step inside `execute_step` until released, so the
+    /// test can observe the batcher forming the next step *during*
+    /// execution — deterministic proof of overlap, no timing luck.
+    struct Gated {
+        release: Receiver<()>,
+        first: bool,
+    }
+
+    impl StepExecutor for Gated {
+        fn name(&self) -> &'static str {
+            "gated"
+        }
+
+        fn buckets(&self) -> Vec<usize> {
+            vec![4]
+        }
+
+        fn execute_step(&mut self, step: &StepInput<'_>) -> Result<StepOutput, ExecError> {
+            if self.first {
+                self.first = false;
+                let _ = self.release.recv();
+            }
+            Ok(StepOutput {
+                argmax: vec![0; step.rows * step.bucket],
+                expert_rows: Vec::new(),
+                failed: Vec::new(),
+                sim_time_s: None,
+            })
+        }
+    }
+
+    let (release_tx, release_rx) = channel();
+    let mut server = Server::new(
+        ServerConfig {
+            policy: BatchPolicy { buckets: Vec::new(), max_requests: 1, max_tokens: 64 },
+            queue_capacity: 8,
+            ..ServerConfig::default()
+        },
+        Gated { release: release_rx, first: true },
+    );
+    let handle = server.handle();
+    let tickets: Vec<Ticket> =
+        (0..3).map(|_| handle.try_submit(&[1]).expect("capacity 8")).collect();
+    handle.close();
+
+    let metrics = server.metrics();
+    let monitor = std::thread::spawn(move || {
+        // step 1 is held inside execute_step, yet the in-flight gauge must
+        // climb past 1: the batcher sealed step 2 while step 1 executed
+        while metrics.snapshot().in_flight < 2 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let _ = release_tx.send(());
+    });
+
+    server.serve();
+    monitor.join().expect("monitor thread");
+    for t in tickets {
+        assert!(t.wait().error.is_none());
+    }
+    let snap = server.metrics().snapshot();
+    assert!(
+        snap.max_in_flight >= 2,
+        "no overlap observed: max_in_flight = {}",
+        snap.max_in_flight
+    );
+    assert_eq!(snap.in_flight, 0, "pipeline drained back to empty");
+}
+
+#[test]
+fn driver_shed_counts_reconcile_with_server_metrics() {
+    let _wd = Watchdog::arm(Duration::from_secs(120));
+    // burst 512 requests into a 16-slot queue: the driver counts its own
+    // sheds; the server's rejected counter must agree exactly
+    let mut server = accounting_server(16, 8, 3);
+    let report = run_traffic(
+        &mut server,
+        TrafficConfig { requests: 512, rate_hz: 0.0, ..TrafficConfig::default() },
+    );
+    assert_eq!(report.ok + report.failed + report.rejected, report.sent);
+    assert_eq!(report.snapshot.rejected as usize, report.rejected);
+    assert_eq!(report.snapshot.requests as usize, report.ok);
+    assert_eq!(report.snapshot.errors as usize, report.failed);
+}

@@ -1,133 +1,185 @@
-//! Full-stack serving test: engine + TCP server + real socket clients.
+//! Full-stack serving tests.
 //!
-//! Exercises the deployment path the `serve` subcommand runs: requests go
-//! over a real TCP connection as JSON lines, through the admission queue
-//! and batcher, execute the AOT LM artifact on PJRT, and come back with
-//! argmax tokens.  Requires `make artifacts`; skips if absent.
+//! Two halves: a default-features shutdown-latency bound on the pipelined
+//! serving core (closing the queue must end the loop promptly — the old
+//! poll-loop design bounded this only by the poll interval), and — under
+//! `--features pjrt` — the deployment path the `serve` subcommand runs:
+//! requests over a real TCP connection as JSON lines, through the
+//! admission queue and batcher, executing the AOT LM artifact on PJRT.
+//! The PJRT half requires `make artifacts`; it skips if absent.
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::TcpStream;
-use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use staticbatch::coordinator::engine::{Engine, EngineConfig};
-use staticbatch::coordinator::server;
-use staticbatch::util::json::Json;
+use staticbatch::coordinator::batcher::BatchPolicy;
+use staticbatch::serve::{Server, ServerConfig, SimServeConfig, SimStepExecutor};
 
-fn artifacts_dir() -> std::path::PathBuf {
-    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+/// Close queue → loop exit must be wakeup-driven, not polled: bound it
+/// well under the old 50 ms poll interval.  The server (its executor is
+/// not `Send`) lives on a spawned thread; the handle comes back over a
+/// channel so the test can drive shutdown from outside.
+#[test]
+fn shutdown_latency_is_bounded_after_close() {
+    let (handle_tx, handle_rx) = std::sync::mpsc::channel();
+    let serving = std::thread::spawn(move || {
+        let ex = SimStepExecutor::new(SimServeConfig {
+            numeric: false,
+            ..SimServeConfig::default()
+        });
+        let mut server = Server::new(
+            ServerConfig {
+                policy: BatchPolicy { buckets: Vec::new(), max_requests: 8, max_tokens: 2048 },
+                queue_capacity: 64,
+                ..ServerConfig::default()
+            },
+            ex,
+        );
+        handle_tx.send(server.handle()).expect("test thread alive");
+        server.serve();
+    });
+    let handle = handle_rx.recv().expect("serving thread started");
+    // a little in-flight work so shutdown actually drains something
+    let tickets: Vec<_> = (0..8).map(|_| handle.submit(&[1, 2, 3]).expect("open")).collect();
+
+    let t0 = Instant::now();
+    handle.close();
+    serving.join().expect("serving thread");
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < Duration::from_millis(500),
+        "close → loop exit took {elapsed:?}; wakeup-driven shutdown must not wait out a poll"
+    );
+    for t in tickets {
+        assert!(t.wait().error.is_none(), "drained, not dropped, on close");
+    }
 }
 
-#[test]
-fn tcp_serving_roundtrip() {
-    if !artifacts_dir().join("manifest.json").exists() {
-        eprintln!("SKIP: artifacts not built");
-        return;
+#[cfg(feature = "pjrt")]
+mod pjrt_e2e {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::sync::Arc;
+
+    use staticbatch::coordinator::engine::{Engine, EngineConfig};
+    use staticbatch::coordinator::server;
+    use staticbatch::util::json::Json;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
-    let handle = Engine::spawn(EngineConfig {
-        artifacts_dir: artifacts_dir(),
-        ..Default::default()
-    })
-    .expect("engine");
-    let vocab = {
-        // discover vocab from the engine's manifest-derived config
-        handle.lm.vocab
-    };
 
-    // bind an ephemeral port by racing ports (std has no port-0 inspection
-    // through our listen() helper, so bind port 0 directly here)
-    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
-    let addr = listener.local_addr().unwrap();
-    let queue = Arc::clone(&handle.queue);
-    let metrics = Arc::clone(&handle.metrics);
-    std::thread::spawn(move || {
-        for stream in listener.incoming() {
-            let stream = stream.unwrap();
-            let q = Arc::clone(&queue);
-            let m = Arc::clone(&metrics);
-            std::thread::spawn(move || {
-                let _ = server::handle_conn(stream, q, m);
-            });
+    #[test]
+    fn tcp_serving_roundtrip() {
+        if !artifacts_dir().join("manifest.json").exists() {
+            eprintln!("SKIP: artifacts not built");
+            return;
         }
-    });
+        let handle = Engine::spawn(EngineConfig {
+            artifacts_dir: artifacts_dir(),
+            ..Default::default()
+        })
+        .expect("engine");
+        let vocab = {
+            // discover vocab from the engine's manifest-derived config
+            handle.lm.vocab
+        };
 
-    // two concurrent clients, a few requests each
-    let mut clients = Vec::new();
-    for c in 0..2u64 {
-        clients.push(std::thread::spawn(move || {
+        // bind an ephemeral port by racing ports (std has no port-0
+        // inspection through our listen() helper, so bind port 0 directly)
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let queue = Arc::clone(&handle.queue);
+        let metrics = Arc::clone(&handle.metrics);
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                let stream = stream.unwrap();
+                let q = Arc::clone(&queue);
+                let m = Arc::clone(&metrics);
+                std::thread::spawn(move || {
+                    let _ = server::handle_conn(stream, q, m);
+                });
+            }
+        });
+
+        // two concurrent clients, a few requests each
+        let mut clients = Vec::new();
+        for c in 0..2u64 {
+            clients.push(std::thread::spawn(move || {
+                let stream = TcpStream::connect(addr).unwrap();
+                let mut w = stream.try_clone().unwrap();
+                let mut r = BufReader::new(stream);
+                for i in 0..3u64 {
+                    let id = c * 100 + i;
+                    let toks: Vec<String> = (0..5 + i as usize)
+                        .map(|t| ((t * 7 + c as usize) % 100).to_string())
+                        .collect();
+                    writeln!(w, "{{\"id\":{id},\"tokens\":[{}]}}", toks.join(",")).unwrap();
+                    let mut line = String::new();
+                    r.read_line(&mut line).unwrap();
+                    let j = Json::parse(line.trim()).unwrap();
+                    assert_eq!(j.get("id").unwrap().as_i64().unwrap() as u64, id);
+                    assert!(j.get("error").is_none(), "error: {line}");
+                    let argmax = j.get("argmax").unwrap().as_arr().unwrap();
+                    assert_eq!(argmax.len(), 5 + i as usize);
+                    for t in argmax {
+                        let v = t.as_i64().unwrap();
+                        assert!((0..100_000).contains(&v));
+                    }
+                    assert_eq!(j.get("bucket").unwrap().as_usize().unwrap(), 16);
+                }
+                // stats line works
+                writeln!(w, "stats").unwrap();
+                let mut line = String::new();
+                r.read_line(&mut line).unwrap();
+                assert!(line.contains("requests="), "{line}");
+                writeln!(w, "quit").unwrap();
+            }));
+        }
+        for c in clients {
+            c.join().unwrap();
+        }
+
+        // failure injection over the same socket path: oversized request
+        // (no compiled bucket fits) and malformed JSON both return error
+        // lines without killing the connection or the engine
+        {
             let stream = TcpStream::connect(addr).unwrap();
             let mut w = stream.try_clone().unwrap();
             let mut r = BufReader::new(stream);
-            for i in 0..3u64 {
-                let id = c * 100 + i;
-                let toks: Vec<String> =
-                    (0..5 + i as usize).map(|t| ((t * 7 + c as usize) % 100).to_string()).collect();
-                writeln!(w, "{{\"id\":{id},\"tokens\":[{}]}}", toks.join(",")).unwrap();
-                let mut line = String::new();
-                r.read_line(&mut line).unwrap();
-                let j = Json::parse(line.trim()).unwrap();
-                assert_eq!(j.get("id").unwrap().as_i64().unwrap() as u64, id);
-                assert!(j.get("error").is_none(), "error: {line}");
-                let argmax = j.get("argmax").unwrap().as_arr().unwrap();
-                assert_eq!(argmax.len(), 5 + i as usize);
-                for t in argmax {
-                    let v = t.as_i64().unwrap();
-                    assert!((0..100_000).contains(&v));
-                }
-                assert_eq!(j.get("bucket").unwrap().as_usize().unwrap(), 16);
-            }
-            // stats line works
-            writeln!(w, "stats").unwrap();
+            let toks: Vec<String> = (0..5000).map(|t| (t % 50).to_string()).collect();
+            writeln!(w, "{{\"id\":999,\"tokens\":[{}]}}", toks.join(",")).unwrap();
             let mut line = String::new();
             r.read_line(&mut line).unwrap();
-            assert!(line.contains("requests="), "{line}");
+            let j = Json::parse(line.trim()).unwrap();
+            assert!(j.get("error").is_some(), "oversized must fail: {line}");
+
+            writeln!(w, "this is not json").unwrap();
+            line.clear();
+            r.read_line(&mut line).unwrap();
+            assert!(line.contains("error"));
+
+            // the connection still works afterwards
+            writeln!(w, "{{\"id\":1000,\"tokens\":[1,2,3]}}").unwrap();
+            line.clear();
+            r.read_line(&mut line).unwrap();
+            let j = Json::parse(line.trim()).unwrap();
+            assert!(j.get("error").is_none(), "{line}");
             writeln!(w, "quit").unwrap();
-        }));
-    }
-    for c in clients {
-        c.join().unwrap();
-    }
+        }
 
-    // failure injection over the same socket path: oversized request (no
-    // compiled bucket fits) and malformed JSON both return error lines
-    // without killing the connection or the engine
-    {
-        let stream = TcpStream::connect(addr).unwrap();
-        let mut w = stream.try_clone().unwrap();
-        let mut r = BufReader::new(stream);
-        let toks: Vec<String> = (0..5000).map(|t| (t % 50).to_string()).collect();
-        writeln!(w, "{{\"id\":999,\"tokens\":[{}]}}", toks.join(",")).unwrap();
-        let mut line = String::new();
-        r.read_line(&mut line).unwrap();
-        let j = Json::parse(line.trim()).unwrap();
-        assert!(j.get("error").is_some(), "oversized must fail: {line}");
-
-        writeln!(w, "this is not json").unwrap();
-        line.clear();
-        r.read_line(&mut line).unwrap();
-        assert!(line.contains("error"));
-
-        // the connection still works afterwards
-        writeln!(w, "{{\"id\":1000,\"tokens\":[1,2,3]}}").unwrap();
-        line.clear();
-        r.read_line(&mut line).unwrap();
-        let j = Json::parse(line.trim()).unwrap();
-        assert!(j.get("error").is_none(), "{line}");
-        writeln!(w, "quit").unwrap();
+        let snap = handle.metrics.snapshot();
+        assert_eq!(snap.requests, 7);
+        assert_eq!(snap.errors, 1); // the oversized rejection
+        assert!(snap.latency_p50_ms > 0.0);
+        let _ = vocab;
+        handle.shutdown();
     }
 
-    let snap = handle.metrics.snapshot();
-    assert_eq!(snap.requests, 7);
-    assert_eq!(snap.errors, 1); // the oversized rejection
-    assert!(snap.latency_p50_ms > 0.0);
-    let _ = vocab;
-    handle.shutdown();
-}
-
-#[test]
-fn engine_spawn_fails_cleanly_without_artifacts() {
-    let bogus = std::path::PathBuf::from("/nonexistent/artifacts");
-    let err = Engine::spawn(EngineConfig { artifacts_dir: bogus, ..Default::default() });
-    assert!(err.is_err());
-    let msg = format!("{}", err.err().unwrap());
-    assert!(msg.contains("engine init"), "{msg}");
+    #[test]
+    fn engine_spawn_fails_cleanly_without_artifacts() {
+        let bogus = std::path::PathBuf::from("/nonexistent/artifacts");
+        let err = Engine::spawn(EngineConfig { artifacts_dir: bogus, ..Default::default() });
+        assert!(err.is_err());
+        let msg = format!("{}", err.err().unwrap());
+        assert!(msg.contains("engine init"), "{msg}");
+    }
 }

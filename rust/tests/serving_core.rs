@@ -6,7 +6,7 @@
 //! load signatures hit the plan cache.
 
 use std::sync::mpsc::{channel, Receiver};
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 use staticbatch::coordinator::batcher::BatchPolicy;
 use staticbatch::coordinator::request::{Request, Response};
@@ -35,7 +35,7 @@ fn sim_server_serves_64_requests_end_to_end_with_cache_hits() {
         ServerConfig {
             policy: BatchPolicy { buckets: Vec::new(), max_requests: 8, max_tokens: 2048 },
             queue_capacity: 128,
-            poll: Duration::from_millis(1),
+            ..ServerConfig::default()
         },
         executor,
     );
@@ -131,7 +131,7 @@ fn plan_cache_under_capacity_pressure_evicts_and_keeps_counting() {
         ServerConfig {
             policy: BatchPolicy { buckets: Vec::new(), max_requests: 8, max_tokens: 2048 },
             queue_capacity: 128,
-            poll: Duration::from_millis(1),
+            ..ServerConfig::default()
         },
         executor,
     );
@@ -179,7 +179,7 @@ fn mixed_valid_and_oversized_traffic_accounts_cleanly() {
         ServerConfig {
             policy: BatchPolicy { buckets: Vec::new(), max_requests: 4, max_tokens: 256 },
             queue_capacity: 32,
-            poll: Duration::from_millis(1),
+            ..ServerConfig::default()
         },
         executor,
     );

@@ -138,7 +138,7 @@ fn sharded_server_serves_traffic_and_reports_shard_metrics() {
         ServerConfig {
             policy: BatchPolicy { buckets: Vec::new(), max_requests: 8, max_tokens },
             queue_capacity: 128,
-            poll: std::time::Duration::from_millis(1),
+            ..ServerConfig::default()
         },
         ShardedStepExecutor::new(cfg),
     );
