@@ -4,15 +4,32 @@
 //!
 //! With `--json <path>` (how `scripts/bench_distill` invokes it) the run
 //! also writes a machine-readable summary — tokens/s, steps/s, latency
-//! percentiles, and per-tenant SLO attainment — to `<path>`.  Every number
-//! is derived from the virtual clock, so the file is deterministic: two
-//! runs on any two machines produce identical bytes.
+//! percentiles, and per-tenant SLO attainment — to `<path>`, including a
+//! `chaos_goodput` row: the same scenario re-run under a seeded
+//! [`ChaosStepExecutor`] injecting 10% transient step faults (absorbed by
+//! a 4-attempt retry policy), with the goodput ratio against the clean
+//! run — the FAULT experiment's headline number.  Every number is derived
+//! from the virtual clock, so the file is deterministic: two runs on any
+//! two machines produce identical bytes.
 
 use staticbatch::serve::{
-    run_scenario, PlacementKind, ScenarioConfig, ShardedServeConfig, ShardedStepExecutor,
-    SimServeConfig,
+    run_scenario, ChaosConfig, ChaosStepExecutor, PlacementKind, RetryPolicy, ScenarioConfig,
+    ScenarioReport, ShardedServeConfig, ShardedStepExecutor, SimServeConfig,
 };
 use staticbatch::util::json::Json;
+
+fn sharded(seed: u64) -> ShardedStepExecutor {
+    ShardedStepExecutor::new(ShardedServeConfig {
+        base: SimServeConfig { numeric: false, seed, ..SimServeConfig::default() },
+        ep: 4,
+        placement: PlacementKind::Balanced,
+        ..ShardedServeConfig::default()
+    })
+}
+
+fn goodput(r: &ScenarioReport) -> f64 {
+    r.ok as f64 / r.virtual_s.max(1e-12)
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -20,17 +37,35 @@ fn main() {
     let json_path = args.windows(2).find(|w| w[0] == "--json").map(|w| w[1].clone());
 
     let cfg = ScenarioConfig::default();
-    let mut ex = ShardedStepExecutor::new(ShardedServeConfig {
-        base: SimServeConfig { numeric: false, seed: cfg.seed, ..SimServeConfig::default() },
-        ep: 4,
-        placement: PlacementKind::Balanced,
-        ..ShardedServeConfig::default()
-    });
+    let mut ex = sharded(cfg.seed);
     println!("== SCENARIO: pinned two-tenant burst + shard fault, virtual clock ==");
     let r = run_scenario(&mut ex, &cfg);
     println!("{}", r.render());
     println!();
     print!("{}", staticbatch::reports::scenario_table(cfg.seed));
+
+    // the same scenario under 10% transient chaos, absorbed by retries —
+    // virtual backoff time is charged, so goodput dips but requests hold
+    let chaos_cfg = ScenarioConfig {
+        retry: RetryPolicy {
+            max_attempts: 4,
+            backoff: std::time::Duration::from_millis(1),
+        },
+        ..ScenarioConfig::default()
+    };
+    let mut cex = ChaosStepExecutor::new(
+        sharded(chaos_cfg.seed),
+        ChaosConfig { transient_rate: 0.1, ..ChaosConfig::default() },
+    );
+    println!("\n== FAULT: the same scenario under 10% transient chaos + retry ==");
+    let rc = run_scenario(&mut cex, &chaos_cfg);
+    println!("{}", rc.render());
+    println!(
+        "\ngoodput: clean {:.1} req/s vs chaos {:.1} req/s (ratio {:.3})",
+        goodput(&r),
+        goodput(&rc),
+        goodput(&rc) / goodput(&r).max(1e-12),
+    );
 
     if let Some(path) = json_path {
         let v = r.virtual_s.max(1e-12);
@@ -42,12 +77,33 @@ fn main() {
                 ("ok", Json::num(t.ok as f64)),
                 ("failed", Json::num(t.failed as f64)),
                 ("shed", Json::num(t.shed as f64)),
+                ("expired", Json::num(t.expired as f64)),
                 ("p50_ms", Json::num(t.p50_ms)),
                 ("p99_ms", Json::num(t.p99_ms)),
                 ("slo_attainment", Json::num(t.slo_attainment)),
                 ("goodput_rps", Json::num(t.goodput_rps)),
             ])
         }));
+        let chaos_row = Json::obj(vec![
+            (
+                "clean",
+                Json::obj(vec![
+                    ("ok", Json::num(r.ok as f64)),
+                    ("goodput_rps", Json::num(goodput(&r))),
+                ]),
+            ),
+            (
+                "chaos",
+                Json::obj(vec![
+                    ("ok", Json::num(rc.ok as f64)),
+                    ("failed", Json::num(rc.failed as f64)),
+                    ("expired", Json::num(rc.expired as f64)),
+                    ("retries", Json::num(rc.retries as f64)),
+                    ("goodput_rps", Json::num(goodput(&rc))),
+                ]),
+            ),
+            ("ratio", Json::num(goodput(&rc) / goodput(&r).max(1e-12))),
+        ]);
         let doc = Json::obj(vec![
             ("bench", Json::str("scenario")),
             ("virtual_s", Json::num(r.virtual_s)),
@@ -55,6 +111,8 @@ fn main() {
             ("ok", Json::num(r.ok as f64)),
             ("failed", Json::num(r.failed as f64)),
             ("shed", Json::num(r.shed as f64)),
+            ("expired", Json::num(r.expired as f64)),
+            ("retries", Json::num(r.retries as f64)),
             ("steps", Json::num(r.steps as f64)),
             ("steps_per_s", Json::num(r.steps as f64 / v)),
             ("tokens_per_s", Json::num(r.snapshot.tokens as f64 / v)),
@@ -68,6 +126,7 @@ fn main() {
                     None => Json::Null,
                 },
             ),
+            ("chaos_goodput", chaos_row),
             ("tenants", tenants),
         ]);
         std::fs::write(&path, format!("{doc}\n")).expect("write bench json");

@@ -93,7 +93,14 @@ mod tests {
     fn req(id: u64, len: usize) -> (Request, Receiver<Response>) {
         let (tx, rx) = channel();
         (
-            Request { id, tenant: 0, tokens: vec![1; len], enqueued: Instant::now(), respond: tx },
+            Request {
+                id,
+                tenant: 0,
+                tokens: vec![1; len],
+                enqueued: Instant::now(),
+                deadline: None,
+                respond: tx,
+            },
             rx,
         )
     }

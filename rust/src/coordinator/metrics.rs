@@ -32,6 +32,14 @@ pub struct ShardingStats {
     pub imbalance_sum: f64,
     /// Times the placement policy moved experts between shards.
     pub reshards: u64,
+    /// Circuit-breaker trips: a shard quarantined after consecutive
+    /// transient failures.
+    pub breaker_trips: u64,
+    /// Half-open probes issued to quarantined shards (successful or not).
+    pub breaker_probes: u64,
+    /// Steps executed while at least one shard was quarantined or probing
+    /// (the executor ran degraded).
+    pub degraded_steps: u64,
     /// Plan-cache counters of each shard lane.
     pub shard_cache: Vec<CacheStats>,
 }
@@ -79,6 +87,9 @@ pub struct TenantStats {
     pub errors: u64,
     /// Requests dropped by admission control before execution.
     pub shed: u64,
+    /// Requests whose deadline passed before execution (deadline sheds,
+    /// distinct from backpressure `shed`).
+    pub expired: u64,
     /// Completed requests that were measured against a latency SLO.
     pub slo_checked: u64,
     /// Measured requests that met their SLO.
@@ -91,11 +102,12 @@ pub struct TenantStats {
 
 impl TenantStats {
     /// Fraction of this tenant's finished-or-dropped requests that met
-    /// their latency SLO.  Sheds and errors count as misses (a dropped
-    /// request certainly did not meet its deadline); 1.0 when nothing was
-    /// measured against an SLO, so an idle tenant reads as unharmed.
+    /// their latency SLO.  Sheds, expiries, and errors count as misses (a
+    /// dropped request certainly did not meet its deadline); 1.0 when
+    /// nothing was measured against an SLO, so an idle tenant reads as
+    /// unharmed.
     pub fn slo_attainment(&self) -> f64 {
-        let denom = self.slo_checked + self.errors + self.shed;
+        let denom = self.slo_checked + self.errors + self.shed + self.expired;
         if denom == 0 {
             1.0
         } else {
@@ -120,6 +132,7 @@ struct TenantInner {
     requests: u64,
     errors: u64,
     shed: u64,
+    expired: u64,
     slo_checked: u64,
     slo_ok: u64,
     latency: Samples,
@@ -142,6 +155,10 @@ struct Inner {
     /// requests refused at admission (bounded-queue backpressure or a
     /// closed queue), counted by [`crate::serve::ServeHandle`]
     rejected: u64,
+    /// requests shed because their deadline passed before execution
+    expired: u64,
+    /// step retries attempted after transient execution failures
+    retries: u64,
     /// per-request admission-to-formation wait, milliseconds
     queue_wait: Samples,
     /// per-batch accumulation time (first pop to seal), milliseconds
@@ -181,6 +198,11 @@ pub struct Snapshot {
     pub batches: u64,
     /// Requests refused at admission (backpressure or closed queue).
     pub rejected: u64,
+    /// Requests shed because their deadline passed before execution
+    /// (distinct from `rejected`: these were admitted, then timed out).
+    pub expired: u64,
+    /// Step retries attempted after transient execution failures.
+    pub retries: u64,
     /// Median admission-to-formation wait, milliseconds (0.0 when the
     /// serving loop does not record it).
     pub queue_wait_p50_ms: f64,
@@ -232,6 +254,17 @@ impl Metrics {
     /// queue) — the counter driver-side shed accounting reconciles against.
     pub fn record_rejected(&self) {
         self.inner.lock().unwrap().rejected += 1;
+    }
+
+    /// Count one admitted request shed because its deadline passed before
+    /// execution (never planned).
+    pub fn record_expired(&self) {
+        self.inner.lock().unwrap().expired += 1;
+    }
+
+    /// Count one step retry after a transient execution failure.
+    pub fn record_retry(&self) {
+        self.inner.lock().unwrap().retries += 1;
     }
 
     /// Record one request's admission-to-formation wait.
@@ -310,6 +343,15 @@ impl Metrics {
         g.tenants.entry(tenant).or_default().shed += 1;
     }
 
+    /// Record one deadline-expired request for a tenant class (`0` ignored).
+    pub fn record_tenant_expired(&self, tenant: u32) {
+        if tenant == 0 {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.tenants.entry(tenant).or_default().expired += 1;
+    }
+
     pub fn record_expert_rows(&self, counts: &[i32]) {
         let mut g = self.inner.lock().unwrap();
         if g.expert_rows.len() < counts.len() {
@@ -351,6 +393,7 @@ impl Metrics {
                     requests: t.requests,
                     errors: t.errors,
                     shed: t.shed,
+                    expired: t.expired,
                     slo_checked: t.slo_checked,
                     slo_ok: t.slo_ok,
                     latency_p50_ms: p50,
@@ -372,6 +415,8 @@ impl Metrics {
             mean_batch: g.batch_size.mean(),
             batches: g.batch_size.count(),
             rejected: g.rejected,
+            expired: g.expired,
+            retries: g.retries,
             queue_wait_p50_ms: queue_wait_p50,
             form_wait_p50_ms: form_wait_p50,
             in_flight: g.in_flight,
@@ -415,6 +460,12 @@ impl Snapshot {
         if self.rejected > 0 {
             s.push_str(&format!("  rejected={}", self.rejected));
         }
+        if self.expired > 0 {
+            s.push_str(&format!("  expired={}", self.expired));
+        }
+        if self.retries > 0 {
+            s.push_str(&format!("  retries={}", self.retries));
+        }
         if self.max_in_flight > 0 {
             s.push_str(&format!(
                 "\npipeline: in-flight {}/{} (now/max)  queue wait p50={:.2}ms  \
@@ -455,6 +506,12 @@ impl Snapshot {
                     util.join(" "),
                     cache.join(" "),
                 ));
+                if sh.breaker_trips + sh.breaker_probes + sh.degraded_steps > 0 {
+                    s.push_str(&format!(
+                        "\nbreakers: {} trips  {} probes  {} degraded steps",
+                        sh.breaker_trips, sh.breaker_probes, sh.degraded_steps,
+                    ));
+                }
             }
         }
         for t in &self.tenants {
@@ -614,6 +671,7 @@ mod tests {
             imbalance_sum: 5.0,
             reshards: 1,
             shard_cache: vec![CacheStats::default(); 2],
+            ..ShardingStats::default()
         };
         assert!((s.imbalance_ratio() - 1.25).abs() < 1e-12);
         assert!((s.collective_share() - 0.25).abs() < 1e-12);
@@ -641,6 +699,9 @@ mod tests {
             step_s: 0.12,
             imbalance_sum: 3.9,
             reshards: 2,
+            breaker_trips: 1,
+            breaker_probes: 2,
+            degraded_steps: 3,
             shard_cache: vec![CacheStats { hits: 2, misses: 1, entries: 1 }; 4],
         });
         let snap = m.snapshot();
@@ -651,5 +712,40 @@ mod tests {
         assert!(r.contains("imbalance 1.30"));
         assert!(r.contains("reshards 2"));
         assert!(r.contains("2/1"));
+        assert!(r.contains("breakers: 1 trips  2 probes  3 degraded steps"), "{r}");
+    }
+
+    #[test]
+    fn expired_and_retry_counters_surface_in_snapshot_and_render() {
+        let m = Metrics::new();
+        let before = m.snapshot();
+        assert_eq!((before.expired, before.retries), (0, 0));
+        let quiet = before.render();
+        assert!(!quiet.contains("expired="), "idle render stays quiet");
+        assert!(!quiet.contains("retries="), "idle render stays quiet");
+        m.record_request(0.01, 5);
+        m.record_expired();
+        m.record_expired();
+        m.record_expired();
+        m.record_retry();
+        let s = m.snapshot();
+        assert_eq!((s.expired, s.retries), (3, 1));
+        let r = s.render();
+        assert!(r.contains("expired=3"), "{r}");
+        assert!(r.contains("retries=1"), "{r}");
+    }
+
+    #[test]
+    fn tenant_expiry_counts_as_an_slo_miss() {
+        let m = Metrics::new();
+        m.record_tenant_expired(0); // untenanted: ignored
+        assert!(m.snapshot().tenants.is_empty());
+        m.record_tenant_request(3, 0.010, Some(true));
+        m.record_tenant_expired(3);
+        let s = m.snapshot();
+        let t = &s.tenants[0];
+        assert_eq!((t.tenant, t.requests, t.expired), (3, 1, 1));
+        // one measured hit + one expiry -> 50% attainment
+        assert!((t.slo_attainment() - 0.5).abs() < 1e-12);
     }
 }

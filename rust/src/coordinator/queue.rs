@@ -366,7 +366,17 @@ mod tests {
 
     fn req(id: u64) -> (Request, std::sync::mpsc::Receiver<Response>) {
         let (tx, rx) = channel();
-        (Request { id, tenant: 0, tokens: vec![1], enqueued: Instant::now(), respond: tx }, rx)
+        (
+            Request {
+                id,
+                tenant: 0,
+                tokens: vec![1],
+                enqueued: Instant::now(),
+                deadline: None,
+                respond: tx,
+            },
+            rx,
+        )
     }
 
     #[test]

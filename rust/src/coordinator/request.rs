@@ -15,7 +15,18 @@ pub struct Request {
     pub tenant: u32,
     pub tokens: Vec<i32>,
     pub enqueued: Instant,
+    /// Absolute deadline.  A request past its deadline is shed *before*
+    /// execution (never planned) and answered with an expired response —
+    /// `None` means the request waits indefinitely.
+    pub deadline: Option<Instant>,
     pub respond: Sender<Response>,
+}
+
+impl Request {
+    /// Whether the deadline has passed as of `now`.
+    pub fn is_expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
 }
 
 /// The engine's answer.
@@ -32,6 +43,9 @@ pub struct Response {
     pub bucket: usize,
     /// Error message if the request failed.
     pub error: Option<String>,
+    /// The request's deadline passed before it executed (a deadline shed,
+    /// distinct from backpressure sheds and execution failures).
+    pub expired: bool,
 }
 
 impl Response {
@@ -43,6 +57,7 @@ impl Response {
             latency_s: 0.0,
             bucket: 0,
             error: Some(err.into()),
+            expired: false,
         }
     }
 }
@@ -51,6 +66,7 @@ impl Response {
 mod tests {
     use super::*;
     use std::sync::mpsc::channel;
+    use std::time::Duration;
 
     #[test]
     fn request_roundtrip_through_channel() {
@@ -60,6 +76,7 @@ mod tests {
             tenant: 0,
             tokens: vec![1, 2, 3],
             enqueued: Instant::now(),
+            deadline: None,
             respond: tx,
         };
         req.respond
@@ -70,6 +87,7 @@ mod tests {
                 latency_s: 0.001,
                 bucket: 16,
                 error: None,
+                expired: false,
             })
             .unwrap();
         let resp = rx.recv().unwrap();
@@ -82,5 +100,25 @@ mod tests {
     fn failed_response() {
         let r = Response::failed(1, "too long");
         assert!(r.error.is_some());
+        assert!(!r.expired);
+    }
+
+    #[test]
+    fn deadline_expiry_is_exact() {
+        let (tx, _rx) = channel();
+        let now = Instant::now();
+        let mut req = Request {
+            id: 1,
+            tenant: 0,
+            tokens: vec![1],
+            enqueued: now,
+            deadline: None,
+            respond: tx,
+        };
+        assert!(!req.is_expired(now + Duration::from_secs(3600)), "no deadline never expires");
+        req.deadline = Some(now + Duration::from_millis(5));
+        assert!(!req.is_expired(now));
+        assert!(req.is_expired(now + Duration::from_millis(5)), "deadline instant itself expires");
+        assert!(req.is_expired(now + Duration::from_millis(6)));
     }
 }

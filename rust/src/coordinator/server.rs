@@ -92,7 +92,14 @@ pub fn handle_conn(
         match parse_request(line) {
             Ok((id, tokens)) => {
                 let (tx, rx) = channel();
-                let req = Request { id, tenant: 0, tokens, enqueued: Instant::now(), respond: tx };
+                let req = Request {
+                    id,
+                    tenant: 0,
+                    tokens,
+                    enqueued: Instant::now(),
+                    deadline: None,
+                    respond: tx,
+                };
                 match queue.try_push(req) {
                     PushResult::Ok => {
                         // block this connection until its answer arrives
@@ -167,6 +174,7 @@ mod tests {
             latency_s: 0.0015,
             bucket: 16,
             error: None,
+            expired: false,
         };
         let s = render_response(&ok);
         assert!(s.contains("\"argmax\":[4,2]"));

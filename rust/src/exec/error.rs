@@ -1,4 +1,13 @@
 //! Typed errors for the unified execution surface.
+//!
+//! Every error carries a transient/permanent classification
+//! ([`ExecError::is_transient`]): transient failures ([`ExecError::Timeout`],
+//! [`ExecError::ShardDown`]) are worth retrying — the condition can clear on
+//! its own or through placement action (shard evacuation) — while permanent
+//! failures (bad plan, missing inputs, a panicked worker) will fail the same
+//! way again and must be surfaced, not retried.  The serving layer's retry
+//! policy and the sharded executor's circuit breakers are driven entirely by
+//! this classification.
 
 use crate::batching::dispatch::DispatchError;
 
@@ -14,7 +23,56 @@ pub enum ExecError {
     /// (e.g. a PJRT artifact built for different static dims).
     PlanMismatch { backend: &'static str, detail: String },
     /// Backend-internal failure (runtime errors, artifact I/O, ...).
-    Backend { backend: &'static str, detail: String },
+    /// `source` preserves the structured cause when one exists (e.g. a
+    /// [`crate::util::threadpool::PoolError`] from a panicked worker), so
+    /// callers can classify by downcast instead of string-matching.
+    Backend {
+        backend: &'static str,
+        detail: String,
+        source: Option<Box<dyn std::error::Error + Send + Sync>>,
+    },
+    /// The step ran out of time.  Transient: the same batch can succeed on
+    /// a retry once the stall clears.
+    Timeout { backend: &'static str, detail: String },
+    /// One shard failed mid-step.  Transient: a retry can succeed after the
+    /// placement layer evacuates the shard (circuit breaker / fault plan).
+    ShardDown { backend: &'static str, shard: usize, detail: String },
+}
+
+impl ExecError {
+    /// A [`ExecError::Backend`] with no structured cause.
+    pub fn backend(backend: &'static str, detail: impl Into<String>) -> Self {
+        ExecError::Backend { backend, detail: detail.into(), source: None }
+    }
+
+    /// A [`ExecError::Backend`] preserving its structured cause, reachable
+    /// through [`std::error::Error::source`].
+    pub fn backend_caused(
+        backend: &'static str,
+        detail: impl Into<String>,
+        cause: impl std::error::Error + Send + Sync + 'static,
+    ) -> Self {
+        ExecError::Backend { backend, detail: detail.into(), source: Some(Box::new(cause)) }
+    }
+
+    /// Whether a retry of the same step is worth attempting.  Timeouts and
+    /// shard failures are transient (the condition can clear, or placement
+    /// can route around it); everything else — including worker panics,
+    /// which surface as [`ExecError::Backend`] with a
+    /// [`crate::util::threadpool::PoolError`] source — is permanent and
+    /// must not be retried.
+    pub fn is_transient(&self) -> bool {
+        matches!(self, ExecError::Timeout { .. } | ExecError::ShardDown { .. })
+    }
+
+    /// The shard a failure is attributable to, when it names one.  Drives
+    /// the sharded executor's per-shard circuit breakers.
+    pub fn shard(&self) -> Option<usize> {
+        match self {
+            ExecError::ShardDown { shard, .. } => Some(*shard),
+            _ => None,
+        }
+    }
 }
 
 impl std::fmt::Display for ExecError {
@@ -27,7 +85,13 @@ impl std::fmt::Display for ExecError {
             ExecError::PlanMismatch { backend, detail } => {
                 write!(f, "{backend}: plan incompatible with backend: {detail}")
             }
-            ExecError::Backend { backend, detail } => write!(f, "{backend}: {detail}"),
+            ExecError::Backend { backend, detail, .. } => write!(f, "{backend}: {detail}"),
+            ExecError::Timeout { backend, detail } => {
+                write!(f, "{backend}: step timed out: {detail}")
+            }
+            ExecError::ShardDown { backend, shard, detail } => {
+                write!(f, "{backend}: shard {shard} down: {detail}")
+            }
         }
     }
 }
@@ -36,6 +100,9 @@ impl std::error::Error for ExecError {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
             ExecError::Dispatch(e) => Some(e),
+            ExecError::Backend { source: Some(s), .. } => {
+                Some(s.as_ref() as &(dyn std::error::Error + 'static))
+            }
             _ => None,
         }
     }
@@ -51,6 +118,7 @@ impl From<DispatchError> for ExecError {
 mod tests {
     use super::*;
     use crate::batching::task::TaskKind;
+    use crate::util::threadpool::PoolError;
 
     #[test]
     fn display_carries_backend_and_cause() {
@@ -59,5 +127,35 @@ mod tests {
         let d: ExecError =
             DispatchError::Unregistered { kind: TaskKind::ReduceSum, task_index: 3 }.into();
         assert!(d.to_string().contains("no device function registered"));
+    }
+
+    #[test]
+    fn taxonomy_splits_transient_from_permanent() {
+        assert!(ExecError::Timeout { backend: "sim", detail: "stall".into() }.is_transient());
+        let down = ExecError::ShardDown { backend: "sim", shard: 2, detail: "nic".into() };
+        assert!(down.is_transient());
+        assert_eq!(down.shard(), Some(2));
+        assert!(!ExecError::backend("cpu", "boom").is_transient());
+        assert!(
+            !ExecError::PlanMismatch { backend: "cpu", detail: "dims".into() }.is_transient()
+        );
+        assert!(
+            !ExecError::MissingInputs { backend: "cpu", what: "tensors" }.is_transient()
+        );
+        assert_eq!(ExecError::backend("cpu", "boom").shard(), None);
+    }
+
+    #[test]
+    fn worker_panic_keeps_its_structured_source_and_stays_permanent() {
+        use std::error::Error;
+        // the satellite pin: a panicked pool worker must never be
+        // classified transient, and the PoolError cause must survive as a
+        // downcastable source instead of being flattened into the string
+        let e = ExecError::backend_caused("cpu", "worker pool failure", PoolError::WorkerPanicked);
+        assert!(!e.is_transient(), "a worker panic is permanent: never retry it");
+        let src = e.source().expect("structured cause preserved");
+        let pool = src.downcast_ref::<PoolError>().expect("source downcasts to PoolError");
+        assert_eq!(*pool, PoolError::WorkerPanicked);
+        assert!(e.to_string().contains("worker pool failure"));
     }
 }

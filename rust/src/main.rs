@@ -270,8 +270,9 @@ fn cmd_serve(_args: &[String]) -> i32 {
 fn cmd_serve_sim(args: &[String]) -> i32 {
     use staticbatch::coordinator::batcher::BatchPolicy;
     use staticbatch::serve::{
-        run_traffic, PlacementKind, Server, ServerConfig, ShardedServeConfig,
-        ShardedStepExecutor, SimServeConfig, SimStepExecutor, StepExecutor, TrafficConfig,
+        run_traffic, ChaosConfig, ChaosStepExecutor, PlacementKind, RetryPolicy, Server,
+        ServerConfig, ShardedServeConfig, ShardedStepExecutor, SimServeConfig, SimStepExecutor,
+        StepExecutor, TrafficConfig,
     };
 
     let cmd = Command::new("serve-sim", "synthetic traffic through the sim serving core")
@@ -291,6 +292,11 @@ fn cmd_serve_sim(args: &[String]) -> i32 {
         .flag("threads", Some("1"), "worker threads for CPU numerics (1 = serial)")
         .flag("deadline-ms", Some("2"), "batch deadline in ms (max-batch OR deadline)")
         .flag("depth", Some("2"), "pipeline depth between batcher/executor/responder")
+        .flag("retry", Some("1"), "max step attempts for transient failures (1 = no retry)")
+        .flag("backoff-ms", Some("0"), "linear retry backoff between attempts, ms")
+        .flag("request-deadline-ms", Some("0"), "per-request deadline in ms; 0 = none")
+        .flag("chaos-rate", Some("0.1"), "transient-fault probability per step under --chaos")
+        .switch("chaos", "inject seeded transient faults at the executor boundary")
         .switch("sync", "single-threaded reference loop (no pipelining)")
         .switch("accounting", "skip CPU numerics (roofline accounting only)");
     let p = match cmd.parse(args) {
@@ -322,7 +328,22 @@ fn cmd_serve_sim(args: &[String]) -> i32 {
         ),
         depth: p.usize("depth").unwrap_or(2).max(1),
         pipeline: !p.bool("sync"),
+        request_deadline: {
+            let ms = p.f64("request-deadline-ms").unwrap_or(0.0);
+            (ms > 0.0).then(|| std::time::Duration::from_secs_f64(ms / 1e3))
+        },
+        retry: RetryPolicy {
+            max_attempts: p.usize("retry").unwrap_or(1).max(1) as u32,
+            backoff: std::time::Duration::from_secs_f64(
+                p.f64("backoff-ms").unwrap_or(0.0).max(0.0) / 1e3,
+            ),
+        },
     };
+    let chaos = p.bool("chaos").then(|| ChaosConfig {
+        seed: p.u64("seed").unwrap_or(1) ^ 0xC4A0,
+        transient_rate: p.f64("chaos-rate").unwrap_or(0.1).clamp(0.0, 1.0),
+        ..ChaosConfig::default()
+    });
     let traffic = TrafficConfig {
         requests: p.usize("requests").unwrap_or(256),
         rate_hz: p.f64("rate").unwrap_or(500.0),
@@ -377,9 +398,17 @@ fn cmd_serve_sim(args: &[String]) -> i32 {
             rebalance_threshold: p.f64("rebalance").unwrap_or(1.25),
             ..ShardedServeConfig::default()
         };
-        drive(ShardedStepExecutor::new(cfg), server_cfg, traffic)
+        let executor = ShardedStepExecutor::new(cfg);
+        match chaos {
+            Some(c) => drive(ChaosStepExecutor::new(executor, c), server_cfg, traffic),
+            None => drive(executor, server_cfg, traffic),
+        }
     } else {
-        drive(SimStepExecutor::new(sim_cfg), server_cfg, traffic)
+        let executor = SimStepExecutor::new(sim_cfg);
+        match chaos {
+            Some(c) => drive(ChaosStepExecutor::new(executor, c), server_cfg, traffic),
+            None => drive(executor, server_cfg, traffic),
+        }
     }
 }
 
@@ -390,8 +419,9 @@ fn cmd_serve_sim(args: &[String]) -> i32 {
 /// re-shard mid-run.  Fully deterministic for a seed — nothing sleeps.
 fn cmd_scenario(args: &[String]) -> i32 {
     use staticbatch::serve::{
-        run_scenario, ArrivalTrace, FaultEvent, FaultKind, FaultPlan, PlacementKind,
-        ScenarioConfig, ShardedServeConfig, ShardedStepExecutor, SimServeConfig, SimStepExecutor,
+        run_scenario, ArrivalTrace, ChaosConfig, ChaosStepExecutor, FaultEvent, FaultKind,
+        FaultPlan, PlacementKind, RetryPolicy, ScenarioConfig, ShardedServeConfig,
+        ShardedStepExecutor, SimServeConfig, SimStepExecutor,
     };
 
     let cmd = Command::new("scenario", "trace-driven multi-tenant scenario on the virtual clock")
@@ -405,6 +435,11 @@ fn cmd_scenario(args: &[String]) -> i32 {
         .flag("kill-at", Some("0.3"), "virtual time the shard dies; negative = never")
         .flag("recover-at", Some("0.6"), "virtual time it returns; negative = never")
         .flag("shard", Some("1"), "shard the fault plan targets")
+        .flag("retry", Some("1"), "max step attempts for transient failures (1 = no retry)")
+        .flag("backoff-ms", Some("0"), "virtual retry backoff between attempts, ms")
+        .flag("deadline-ms", Some("0"), "per-request deadline in virtual ms; 0 = none")
+        .flag("chaos-rate", Some("0.1"), "transient-fault probability per step under --chaos")
+        .switch("chaos", "inject seeded transient faults at the executor boundary")
         .flag("seed", Some("1"), "arrival / tenant-assignment / prompt seed");
     let p = match cmd.parse(args) {
         Ok(p) => p,
@@ -431,9 +466,21 @@ fn cmd_scenario(args: &[String]) -> i32 {
         faults: FaultPlan::new(faults),
         queue_capacity: p.usize("queue").unwrap_or(64).max(1),
         max_requests: p.usize("requests").unwrap_or(0),
+        retry: RetryPolicy {
+            max_attempts: p.usize("retry").unwrap_or(1).max(1) as u32,
+            backoff: std::time::Duration::from_secs_f64(
+                p.f64("backoff-ms").unwrap_or(0.0).max(0.0) / 1e3,
+            ),
+        },
+        request_deadline_s: p.f64("deadline-ms").unwrap_or(0.0).max(0.0) / 1e3,
         seed,
         ..ScenarioConfig::default()
     };
+    let chaos = p.bool("chaos").then(|| ChaosConfig {
+        seed: seed ^ 0xC4A0,
+        transient_rate: p.f64("chaos-rate").unwrap_or(0.1).clamp(0.0, 1.0),
+        ..ChaosConfig::default()
+    });
     let ep = p.usize("ep").unwrap_or(4).max(1);
     let report = if ep > 1 {
         let placement = match PlacementKind::from_name(&p.str("placement")) {
@@ -443,20 +490,32 @@ fn cmd_scenario(args: &[String]) -> i32 {
                 return 2;
             }
         };
-        let mut ex = ShardedStepExecutor::new(ShardedServeConfig {
+        let ex = ShardedStepExecutor::new(ShardedServeConfig {
             base: SimServeConfig { numeric: false, seed, ..SimServeConfig::default() },
             ep,
             placement,
             ..ShardedServeConfig::default()
         });
-        run_scenario(&mut ex, &cfg)
+        match chaos {
+            Some(c) => run_scenario(&mut ChaosStepExecutor::new(ex, c), &cfg),
+            None => {
+                let mut ex = ex;
+                run_scenario(&mut ex, &cfg)
+            }
+        }
     } else {
-        let mut ex = SimStepExecutor::new(SimServeConfig {
+        let ex = SimStepExecutor::new(SimServeConfig {
             numeric: false,
             seed,
             ..SimServeConfig::default()
         });
-        run_scenario(&mut ex, &cfg)
+        match chaos {
+            Some(c) => run_scenario(&mut ChaosStepExecutor::new(ex, c), &cfg),
+            None => {
+                let mut ex = ex;
+                run_scenario(&mut ex, &cfg)
+            }
+        }
     };
     println!("{}", report.render());
     if report.failed > 0 {

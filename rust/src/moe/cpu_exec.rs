@@ -208,7 +208,10 @@ pub fn execute_traced(
 /// is purely a wall-clock knob.
 ///
 /// A worker panic or pool shutdown surfaces as [`ExecError::Backend`]
-/// instead of poisoning the calling thread.
+/// instead of poisoning the calling thread, with the
+/// [`crate::util::threadpool::PoolError`] preserved as the structured
+/// error source — retry classification downcasts it rather than
+/// string-matching, so a panic can never be mis-bucketed as transient.
 pub fn execute_parallel(
     plan: &ExecutionPlan,
     inputs: &MoeInputs,
@@ -232,7 +235,7 @@ pub fn execute_parallel(
     let chunk = pool.default_chunk(indices.len());
     let regions = pool
         .scoped_map_chunks(indices, chunk, job)
-        .map_err(|e| ExecError::Backend { backend: "cpu", detail: format!("worker pool: {e}") })?;
+        .map_err(|e| ExecError::backend_caused("cpu", format!("worker pool: {e}"), e))?;
     let views: Vec<&[f32]> = regions.iter().map(|r| r.as_slice()).collect();
     Ok(combine_regions(plan, inputs, &views))
 }

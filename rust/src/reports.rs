@@ -292,8 +292,8 @@ pub fn serving_sim_table(requests: usize, seed: u64) -> String {
     };
 
     let mut t = Table::new(&[
-        "traffic", "requests", "rejected", "errors", "batches", "mean batch", "cache hits",
-        "cache misses", "hit rate",
+        "traffic", "requests", "rejected", "errors", "expired", "retries", "batches",
+        "mean batch", "cache hits", "cache misses", "hit rate",
     ]);
     for (name, distinct, alpha) in
         [("hot pool", 4usize, 1.6), ("mixed pool", 8, 1.2), ("wide pool", 32, 0.8)]
@@ -329,6 +329,8 @@ pub fn serving_sim_table(requests: usize, seed: u64) -> String {
             format!("{}", report.ok),
             format!("{}", report.rejected),
             format!("{}", report.failed),
+            format!("{}", report.expired),
+            format!("{}", report.snapshot.retries),
             format!("{}", report.snapshot.batches),
             format!("{:.2}", report.snapshot.mean_batch),
             format!("{}", c.hits),
@@ -432,8 +434,8 @@ pub fn scenario_table(seed: u64) -> String {
     });
     let r = run_scenario(&mut ex, &cfg);
     let mut t = Table::new(&[
-        "tenant", "prio", "sent", "ok", "failed", "shed", "p50(ms)", "p99(ms)", "slo%",
-        "goodput(req/s)",
+        "tenant", "prio", "sent", "ok", "failed", "shed", "expired", "p50(ms)", "p99(ms)",
+        "slo%", "goodput(req/s)",
     ]);
     for tr in &r.tenants {
         t.row(&[
@@ -443,6 +445,7 @@ pub fn scenario_table(seed: u64) -> String {
             tr.ok.to_string(),
             tr.failed.to_string(),
             tr.shed.to_string(),
+            tr.expired.to_string(),
             format!("{:.3}", tr.p50_ms),
             format!("{:.3}", tr.p99_ms),
             format!("{:.1}", tr.slo_attainment * 100.0),
@@ -566,7 +569,10 @@ mod tests {
     fn serving_sim_table_reports_cache_behavior() {
         let s = super::serving_sim_table(48, 7);
         assert_eq!(s.lines().count(), 2 + 3, "header + 3 traffic rows:\n{s}");
-        for name in ["hot pool", "mixed pool", "wide pool", "rejected", "errors", "hit rate"] {
+        for name in [
+            "hot pool", "mixed pool", "wide pool", "rejected", "errors", "expired", "retries",
+            "hit rate",
+        ] {
             assert!(s.contains(name), "missing {name} in:\n{s}");
         }
     }
@@ -579,7 +585,7 @@ mod tests {
         let slo: Vec<f64> = s
             .lines()
             .skip(2)
-            .map(|l| l.split('|').nth(9).unwrap().trim().parse().unwrap())
+            .map(|l| l.split('|').nth(10).unwrap().trim().parse().unwrap())
             .collect();
         assert!(slo[0] >= slo[1], "premium {} < batch {}:\n{s}", slo[0], slo[1]);
     }

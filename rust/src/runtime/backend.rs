@@ -122,7 +122,7 @@ impl<'p> PjrtBackend<'p> {
     }
 
     fn exec_err(e: anyhow::Error) -> ExecError {
-        ExecError::Backend { backend: NAME, detail: e.to_string() }
+        ExecError::backend(NAME, e.to_string())
     }
 }
 
@@ -189,12 +189,11 @@ impl Backend for PjrtBackend<'_> {
                 if r.tokens_id != tensor_id(&numeric.tokens)
                     || r.weights_id != tensor_id(&numeric.weights) =>
             {
-                return Err(ExecError::Backend {
-                    backend: NAME,
-                    detail: "resident operands were warmed from different tensors than the \
-                             current inputs — call warm() again with these inputs"
-                        .into(),
-                });
+                return Err(ExecError::backend(
+                    NAME,
+                    "resident operands were warmed from different tensors than the \
+                     current inputs — call warm() again with these inputs",
+                ));
             }
             Some(r) => {
                 let bufs: Result<Vec<xla::PjRtBuffer>> =

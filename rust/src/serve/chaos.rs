@@ -1,0 +1,375 @@
+//! [`ChaosStepExecutor`]: seeded, deterministic fault injection at the
+//! [`StepExecutor::execute_step`] boundary.
+//!
+//! Every other fault path in the stack is *cooperative* — a
+//! [`crate::serve::scenario::FaultPlan`] tells the executor to degrade
+//! itself via `apply_fault`.  Chaos is the adversarial complement: faults
+//! arrive **as errors from the executor**, exactly the way a production
+//! serving loop experiences them, so retry policies, deadline shedding,
+//! and circuit breakers are testable under default features without any
+//! cooperation from the backend.
+//!
+//! The wrapper injects, in priority order per call:
+//!
+//! 1. **Worker-panic passthrough** ([`ChaosConfig::panic_calls`]): a
+//!    permanent [`ExecError::Backend`] whose structured source is
+//!    [`PoolError::WorkerPanicked`] — the retry layer must refuse to
+//!    retry it.
+//! 2. **Persistent shard death** ([`ChaosConfig::shard_deaths`]): while a
+//!    death window is active *and the inner executor still schedules work
+//!    on that shard* ([`StepExecutor::shard_in_use`]), every call fails
+//!    with a transient [`ExecError::ShardDown`].  Once placement
+//!    evacuates the shard (circuit breaker trip), the injector goes
+//!    quiet — and starts failing again if a half-open probe puts the
+//!    shard back before the window ends.
+//! 3. **Transient error bursts**: with probability
+//!    [`ChaosConfig::transient_rate`] a burst of
+//!    [`ChaosConfig::burst_len`] consecutive calls fails with
+//!    [`ExecError::Timeout`].
+//! 4. **Latency spikes**: a successful inner step's simulated time is
+//!    multiplied by [`ChaosConfig::latency_factor`] with probability
+//!    [`ChaosConfig::latency_rate`] (virtual-clock pressure without
+//!    touching outputs).
+//!
+//! All injection state is driven by a seeded [`Rng`] and a call counter,
+//! so a chaos schedule is a pure function of the configuration — the same
+//! run replays bit-for-bit.  Injected failures never reach the inner
+//! executor, which is what makes the chaos-vs-clean bitwise determinism
+//! property testable: the inner executor sees exactly the successful
+//! steps, in order.
+
+use crate::coordinator::metrics::ShardingStats;
+use crate::exec::ExecError;
+use crate::moe::plan_cache::CacheStats;
+use crate::serve::scenario::FaultEvent;
+use crate::serve::{StepExecutor, StepInput, StepOutput};
+use crate::util::rng::Rng;
+use crate::util::threadpool::PoolError;
+
+/// One persistent shard-death window, in chaos-call numbering: calls in
+/// `[from_call, until_call)` fail with [`ExecError::ShardDown`] while the
+/// inner executor still schedules work on `shard`.
+#[derive(Clone, Debug)]
+pub struct ShardDeath {
+    /// The shard that dies.
+    pub shard: usize,
+    /// First `execute_step` call (0-based) the death affects.
+    pub from_call: u64,
+    /// First call no longer affected (`u64::MAX` = never recovers).
+    pub until_call: u64,
+}
+
+/// Chaos-injection schedule knobs.  Everything is deterministic given the
+/// seed; see module docs for the injection order.
+#[derive(Clone, Debug)]
+pub struct ChaosConfig {
+    /// RNG seed driving the transient/latency draws.
+    pub seed: u64,
+    /// Per-call probability of starting a transient failure burst.
+    pub transient_rate: f64,
+    /// Consecutive calls a transient burst fails (>= 1).
+    pub burst_len: u32,
+    /// Per-successful-call probability of a latency spike.
+    pub latency_rate: f64,
+    /// Multiplier applied to `sim_time_s` on a latency spike.
+    pub latency_factor: f64,
+    /// Persistent shard-death windows.
+    pub shard_deaths: Vec<ShardDeath>,
+    /// Calls (0-based) that fail as a worker panic — a *permanent*
+    /// [`ExecError::Backend`] with a [`PoolError::WorkerPanicked`] source.
+    pub panic_calls: Vec<u64>,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            seed: 0xC4A05,
+            transient_rate: 0.0,
+            burst_len: 1,
+            latency_rate: 0.0,
+            latency_factor: 4.0,
+            shard_deaths: Vec::new(),
+            panic_calls: Vec::new(),
+        }
+    }
+}
+
+/// What the injector did so far (all counters cumulative).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChaosStats {
+    /// `execute_step` calls seen (including injected failures).
+    pub calls: u64,
+    /// Transient [`ExecError::Timeout`] failures injected.
+    pub transient_injected: u64,
+    /// [`ExecError::ShardDown`] failures injected.
+    pub shard_down_injected: u64,
+    /// Worker-panic (permanent) failures injected.
+    pub panics_injected: u64,
+    /// Successful steps whose simulated time was spiked.
+    pub latency_spikes: u64,
+}
+
+/// A [`StepExecutor`] wrapper injecting seeded faults in front of `E`.
+/// Delegates everything else — including [`StepExecutor::observe_error`],
+/// so the inner executor's circuit breakers keep learning about failures
+/// the server reports, injected or real.
+pub struct ChaosStepExecutor<E> {
+    inner: E,
+    cfg: ChaosConfig,
+    rng: Rng,
+    burst_left: u32,
+    stats: ChaosStats,
+}
+
+impl<E: StepExecutor> ChaosStepExecutor<E> {
+    pub fn new(inner: E, cfg: ChaosConfig) -> Self {
+        assert!(cfg.burst_len >= 1, "a burst is at least one failing call");
+        let rng = Rng::new(cfg.seed);
+        ChaosStepExecutor { inner, cfg, rng, burst_left: 0, stats: ChaosStats::default() }
+    }
+
+    /// The wrapped executor.
+    pub fn inner(&self) -> &E {
+        &self.inner
+    }
+
+    /// Mutable access to the wrapped executor.
+    pub fn inner_mut(&mut self) -> &mut E {
+        &mut self.inner
+    }
+
+    /// Cumulative injection counters.
+    pub fn stats(&self) -> ChaosStats {
+        self.stats
+    }
+}
+
+impl<E: StepExecutor> StepExecutor for ChaosStepExecutor<E> {
+    fn name(&self) -> &'static str {
+        "chaos"
+    }
+
+    fn buckets(&self) -> Vec<usize> {
+        self.inner.buckets()
+    }
+
+    fn max_step_tokens(&self) -> Option<usize> {
+        self.inner.max_step_tokens()
+    }
+
+    fn execute_step(&mut self, step: &StepInput<'_>) -> Result<StepOutput, ExecError> {
+        let call = self.stats.calls;
+        self.stats.calls += 1;
+
+        // 1. worker-panic passthrough: permanent, structured source intact
+        if self.cfg.panic_calls.contains(&call) {
+            self.stats.panics_injected += 1;
+            return Err(ExecError::backend_caused(
+                "chaos",
+                format!("injected worker panic (call {call})"),
+                PoolError::WorkerPanicked,
+            ));
+        }
+
+        // 2. persistent shard death: fails only while the inner executor
+        // still schedules work on the dead shard — evacuation silences it
+        for d in &self.cfg.shard_deaths {
+            if call >= d.from_call && call < d.until_call && self.inner.shard_in_use(d.shard) {
+                self.stats.shard_down_injected += 1;
+                return Err(ExecError::ShardDown {
+                    backend: "chaos",
+                    shard: d.shard,
+                    detail: format!("injected shard death (call {call})"),
+                });
+            }
+        }
+
+        // 3. transient bursts
+        if self.burst_left > 0 {
+            self.burst_left -= 1;
+            self.stats.transient_injected += 1;
+            return Err(ExecError::Timeout {
+                backend: "chaos",
+                detail: format!("injected transient failure (call {call})"),
+            });
+        }
+        if self.cfg.transient_rate > 0.0 && self.rng.f64() < self.cfg.transient_rate {
+            self.burst_left = self.cfg.burst_len - 1;
+            self.stats.transient_injected += 1;
+            return Err(ExecError::Timeout {
+                backend: "chaos",
+                detail: format!("injected transient failure (call {call})"),
+            });
+        }
+
+        // 4. real execution, optionally with a latency spike on top
+        let mut out = self.inner.execute_step(step)?;
+        if self.cfg.latency_rate > 0.0 && self.rng.f64() < self.cfg.latency_rate {
+            if let Some(t) = out.sim_time_s.as_mut() {
+                *t *= self.cfg.latency_factor;
+                self.stats.latency_spikes += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    fn cache_stats(&self) -> Option<CacheStats> {
+        self.inner.cache_stats()
+    }
+
+    fn sharding(&self) -> Option<ShardingStats> {
+        self.inner.sharding()
+    }
+
+    fn apply_fault(&mut self, event: &FaultEvent) {
+        self.inner.apply_fault(event);
+    }
+
+    fn observe_error(&mut self, err: &ExecError) {
+        self.inner.observe_error(err);
+    }
+
+    fn shard_in_use(&self, shard: usize) -> bool {
+        self.inner.shard_in_use(shard)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::error::Error;
+
+    /// Minimal inner executor: echoes tokens + 1, reports a configurable
+    /// shard-in-use set, counts real executions.
+    struct Probe {
+        executions: usize,
+        in_use: Vec<bool>,
+        sim_time_s: Option<f64>,
+    }
+
+    impl Default for Probe {
+        fn default() -> Self {
+            Probe { executions: 0, in_use: vec![true; 4], sim_time_s: Some(0.001) }
+        }
+    }
+
+    impl StepExecutor for Probe {
+        fn name(&self) -> &'static str {
+            "probe"
+        }
+
+        fn buckets(&self) -> Vec<usize> {
+            vec![4]
+        }
+
+        fn execute_step(&mut self, step: &StepInput<'_>) -> Result<StepOutput, ExecError> {
+            self.executions += 1;
+            Ok(StepOutput {
+                argmax: step.tokens.iter().map(|&t| t + 1).collect(),
+                expert_rows: Vec::new(),
+                failed: Vec::new(),
+                sim_time_s: self.sim_time_s,
+            })
+        }
+
+        fn shard_in_use(&self, shard: usize) -> bool {
+            self.in_use.get(shard).copied().unwrap_or(false)
+        }
+    }
+
+    fn run_schedule(cfg: ChaosConfig, calls: usize) -> Vec<bool> {
+        let mut ex = ChaosStepExecutor::new(Probe::default(), cfg);
+        let tokens = vec![1i32; 4];
+        let step = StepInput { bucket: 4, rows: 1, tokens: &tokens };
+        (0..calls).map(|_| ex.execute_step(&step).is_ok()).collect()
+    }
+
+    #[test]
+    fn chaos_schedule_is_deterministic_in_the_seed() {
+        let cfg = ChaosConfig { transient_rate: 0.3, burst_len: 2, ..ChaosConfig::default() };
+        let a = run_schedule(cfg.clone(), 64);
+        let b = run_schedule(cfg.clone(), 64);
+        assert_eq!(a, b, "same seed, same schedule");
+        assert!(a.iter().any(|&ok| !ok), "30% over 64 calls must inject something");
+        let c = run_schedule(ChaosConfig { seed: 99, ..cfg }, 64);
+        assert_ne!(a, c, "a different seed draws a different schedule");
+    }
+
+    #[test]
+    fn bursts_fail_exactly_burst_len_consecutive_calls() {
+        // rate 1.0: the first call starts a burst deterministically
+        let cfg = ChaosConfig { transient_rate: 1.0, burst_len: 3, ..ChaosConfig::default() };
+        let mut ex = ChaosStepExecutor::new(Probe::default(), cfg);
+        let tokens = vec![1i32; 4];
+        let step = StepInput { bucket: 4, rows: 1, tokens: &tokens };
+        for i in 0..3 {
+            let err = ex.execute_step(&step).unwrap_err();
+            assert!(err.is_transient(), "burst call {i} is transient");
+        }
+        assert_eq!(ex.stats().transient_injected, 3);
+        assert_eq!(ex.inner().executions, 0, "injected failures never reach the inner executor");
+    }
+
+    #[test]
+    fn shard_death_respects_shard_in_use() {
+        let cfg = ChaosConfig {
+            shard_deaths: vec![ShardDeath { shard: 1, from_call: 0, until_call: u64::MAX }],
+            ..ChaosConfig::default()
+        };
+        let mut ex = ChaosStepExecutor::new(Probe::default(), cfg);
+        let tokens = vec![1i32; 4];
+        let step = StepInput { bucket: 4, rows: 1, tokens: &tokens };
+        let err = ex.execute_step(&step).unwrap_err();
+        assert_eq!(err.shard(), Some(1));
+        assert!(err.is_transient(), "shard death is transient: evacuation can clear it");
+        // "placement evacuates" the shard: the injector goes quiet
+        ex.inner_mut().in_use[1] = false;
+        assert!(ex.execute_step(&step).is_ok());
+        assert_eq!(ex.stats().shard_down_injected, 1);
+        assert_eq!(ex.inner().executions, 1);
+    }
+
+    #[test]
+    fn death_window_bounds_the_injection_in_call_numbering() {
+        let cfg = ChaosConfig {
+            shard_deaths: vec![ShardDeath { shard: 0, from_call: 1, until_call: 3 }],
+            ..ChaosConfig::default()
+        };
+        let oks = {
+            let mut ex = ChaosStepExecutor::new(Probe::default(), cfg);
+            let tokens = vec![1i32; 4];
+            let step = StepInput { bucket: 4, rows: 1, tokens: &tokens };
+            (0..5).map(|_| ex.execute_step(&step).is_ok()).collect::<Vec<_>>()
+        };
+        assert_eq!(oks, vec![true, false, false, true, true]);
+    }
+
+    #[test]
+    fn injected_panic_is_permanent_with_a_structured_source() {
+        let cfg = ChaosConfig { panic_calls: vec![0], ..ChaosConfig::default() };
+        let mut ex = ChaosStepExecutor::new(Probe::default(), cfg);
+        let tokens = vec![1i32; 4];
+        let err =
+            ex.execute_step(&StepInput { bucket: 4, rows: 1, tokens: &tokens }).unwrap_err();
+        assert!(!err.is_transient(), "a worker panic must never be retried");
+        let src = err.source().expect("structured source");
+        assert_eq!(*src.downcast_ref::<PoolError>().unwrap(), PoolError::WorkerPanicked);
+        assert_eq!(ex.stats().panics_injected, 1);
+    }
+
+    #[test]
+    fn latency_spike_scales_sim_time_without_touching_outputs() {
+        let cfg = ChaosConfig {
+            latency_rate: 1.0,
+            latency_factor: 10.0,
+            ..ChaosConfig::default()
+        };
+        let mut ex = ChaosStepExecutor::new(Probe::default(), cfg);
+        let tokens = vec![5i32; 4];
+        let out =
+            ex.execute_step(&StepInput { bucket: 4, rows: 1, tokens: &tokens }).expect("ok");
+        assert_eq!(out.argmax, vec![6; 4], "outputs untouched");
+        assert!((out.sim_time_s.unwrap() - 0.010).abs() < 1e-12, "time scaled 10x");
+        assert_eq!(ex.stats().latency_spikes, 1);
+    }
+}

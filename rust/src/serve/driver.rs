@@ -68,6 +68,9 @@ pub struct TrafficReport {
     pub failed: usize,
     /// Requests the bounded queue refused (backpressure).
     pub rejected: usize,
+    /// Requests whose deadline passed before execution (a deadline shed,
+    /// disjoint from `failed`).
+    pub expired: usize,
     /// Wall-clock seconds of the serving loop (in sim-clock mode: the
     /// virtual arrival horizon, `requests / rate_hz`).
     pub wall_s: f64,
@@ -88,12 +91,13 @@ impl TrafficReport {
     /// the cache occupancy is the one field only [`CacheStats`] carries.
     pub fn render(&self) -> String {
         let mut s = format!(
-            "sent={} ok={} failed={} rejected={}  wall={:.2}s ({:.1} req/s)\n\
+            "sent={} ok={} failed={} rejected={} expired={}  wall={:.2}s ({:.1} req/s)\n\
              latency p50={:.3}ms p99={:.3}ms\n",
             self.sent,
             self.ok,
             self.failed,
             self.rejected,
+            self.expired,
             self.wall_s,
             if self.wall_s > 0.0 { self.ok as f64 / self.wall_s } else { 0.0 },
             self.p50_ms,
@@ -165,6 +169,7 @@ pub fn run_traffic<E: StepExecutor>(server: &mut Server<E>, cfg: TrafficConfig) 
     let sent = tickets.len() + rejected;
     let mut ok = 0usize;
     let mut failed = 0usize;
+    let mut expired = 0usize;
     let mut lat = Samples::new();
     for (len, ticket) in tickets {
         // serve() has returned, so every admitted ticket is resolved:
@@ -174,10 +179,13 @@ pub fn run_traffic<E: StepExecutor>(server: &mut Server<E>, cfg: TrafficConfig) 
             debug_assert_eq!(resp.argmax.len(), len);
             lat.push(resp.latency_s * 1e3);
             ok += 1;
+        } else if resp.expired {
+            expired += 1;
         } else {
             failed += 1;
         }
     }
+    debug_assert_eq!(ok + failed + expired + rejected, sent, "conservation");
     let (p50, p99) = if lat.is_empty() {
         (0.0, 0.0)
     } else {
@@ -188,6 +196,7 @@ pub fn run_traffic<E: StepExecutor>(server: &mut Server<E>, cfg: TrafficConfig) 
         ok,
         failed,
         rejected,
+        expired,
         wall_s,
         p50_ms: p50,
         p99_ms: p99,

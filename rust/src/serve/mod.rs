@@ -69,6 +69,7 @@
 //! assert_eq!(ticket.wait().argmax, vec![2, 3, 4]);
 //! ```
 
+pub mod chaos;
 pub mod driver;
 pub mod scenario;
 pub mod server;
@@ -77,12 +78,15 @@ pub mod sim_exec;
 
 pub use crate::coordinator::metrics::ShardingStats;
 pub use crate::moe::plan_cache::{CacheStats, PlanCache};
+pub use chaos::{ChaosConfig, ChaosStats, ChaosStepExecutor, ShardDeath};
 pub use driver::{run_traffic, TrafficConfig, TrafficReport};
 pub use scenario::{
     run_scenario, ArrivalTrace, FaultEvent, FaultKind, FaultPlan, ScenarioConfig, ScenarioReport,
     TenantClass, TraceSegment,
 };
-pub use server::{ServeHandle, Server, ServerConfig, Stopper, SubmitError, Ticket};
+pub use server::{
+    RetryPolicy, ServeHandle, Server, ServerConfig, Stopper, SubmitError, Ticket,
+};
 pub use sharded::{PlacementKind, ShardedServeConfig, ShardedStepExecutor};
 pub use sim_exec::{SimServeConfig, SimStepExecutor};
 
@@ -162,5 +166,24 @@ pub trait StepExecutor {
     /// evacuates experts off dead shards.
     fn apply_fault(&mut self, event: &FaultEvent) {
         let _ = event;
+    }
+
+    /// Report one step failure back to the executor — called by the
+    /// serving loop on *every* failed `execute_step`, retried or not.
+    /// [`ShardedStepExecutor`] feeds shard-attributed transient failures
+    /// into its per-shard circuit breakers; executors without failure
+    /// bookkeeping ignore it.
+    fn observe_error(&mut self, err: &ExecError) {
+        let _ = err;
+    }
+
+    /// Whether `shard` would participate in the next step (alive and
+    /// holding experts).  Fault injectors use this so a shard-death fault
+    /// only errors while work is actually scheduled on the dead shard —
+    /// and stops erroring once placement evacuates it.  Executors without
+    /// shard structure report every shard as in use.
+    fn shard_in_use(&self, shard: usize) -> bool {
+        let _ = shard;
+        true
     }
 }

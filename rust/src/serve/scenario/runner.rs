@@ -15,7 +15,7 @@ use std::collections::HashSet;
 
 use crate::coordinator::metrics::{Metrics, Snapshot, TenantStats};
 use crate::coordinator::queue::{Admit, PriorityAdmission};
-use crate::serve::{StepExecutor, StepInput};
+use crate::serve::{RetryPolicy, StepExecutor, StepInput};
 use crate::util::rng::{zipf_weights, Rng};
 
 use super::{ArrivalTrace, FaultEvent, FaultKind, FaultPlan, TenantClass};
@@ -39,6 +39,15 @@ pub struct ScenarioConfig {
     /// Virtual seconds charged per step when the executor reports no
     /// simulated time (e.g. numeric CPU executors).
     pub fallback_step_s: f64,
+    /// Retry policy for transient step failures: a failed attempt charges
+    /// `fallback_step_s` plus the policy's (linear) backoff in virtual
+    /// time, expired requests are dropped from the batch, and the
+    /// survivors re-execute.  The default (1 attempt) never retries.
+    pub retry: RetryPolicy,
+    /// Per-request deadline in virtual seconds from arrival; a queued or
+    /// retried request older than this is expired — answered as a
+    /// deadline shed, never executed.  `0.0` disables deadlines.
+    pub request_deadline_s: f64,
     /// Token id range for generated prompts.
     pub vocab: usize,
     /// Zipf exponent for prompt token values.
@@ -67,6 +76,8 @@ impl Default for ScenarioConfig {
             max_batch_requests: 8,
             max_requests: 0,
             fallback_step_s: 0.002,
+            retry: RetryPolicy::default(),
+            request_deadline_s: 0.0,
             vocab: 1000,
             zipf_alpha: 1.2,
             seed: 1,
@@ -81,7 +92,7 @@ pub struct TenantReport {
     pub name: String,
     /// Tenant priority.
     pub priority: u32,
-    /// Arrivals assigned to this class (ok + failed + shed).
+    /// Arrivals assigned to this class (ok + failed + shed + expired).
     pub sent: u64,
     /// Requests completed without error.
     pub ok: u64,
@@ -89,6 +100,8 @@ pub struct TenantReport {
     pub failed: u64,
     /// Requests dropped by admission control.
     pub shed: u64,
+    /// Requests whose deadline passed before execution.
+    pub expired: u64,
     /// Median end-to-end virtual latency, milliseconds.
     pub p50_ms: f64,
     /// 99th-percentile end-to-end virtual latency, milliseconds.
@@ -105,8 +118,8 @@ pub struct TenantReport {
 pub struct ScenarioReport {
     /// Virtual seconds the scenario spanned.
     pub virtual_s: f64,
-    /// Arrivals generated (= ok + failed + shed; conservation holds by
-    /// construction).
+    /// Arrivals generated (= ok + failed + shed + expired; conservation
+    /// holds by construction).
     pub sent: u64,
     /// Requests completed without error.
     pub ok: u64,
@@ -114,8 +127,19 @@ pub struct ScenarioReport {
     pub failed: u64,
     /// Requests dropped by admission control (lane-full + evictions).
     pub shed: u64,
+    /// Requests whose deadline passed before execution (queued too long,
+    /// or dropped from a batch between retry attempts).
+    pub expired: u64,
+    /// Transient step failures that were retried.
+    pub retries: u64,
     /// Batches executed.
     pub steps: u64,
+    /// Circuit-breaker quarantines (sharded executors only).
+    pub breaker_trips: u64,
+    /// Half-open probes that restored a quarantined shard.
+    pub breaker_probes: u64,
+    /// Steps executed while any shard was quarantined or dead.
+    pub degraded_steps: u64,
     /// Expert re-shards over the whole run (sharded executors only).
     pub reshards: u64,
     /// Re-shards at or after the first fault struck.
@@ -134,14 +158,17 @@ impl ScenarioReport {
     /// Multi-line human summary (the `staticbatch scenario` output).
     pub fn render(&self) -> String {
         let mut s = format!(
-            "scenario: virtual={:.3}s  sent={} ok={} failed={} shed={}  steps={}\n\
+            "scenario: virtual={:.3}s  sent={} ok={} failed={} shed={} expired={}  \
+             steps={} retries={}\n\
              placement: reshards={} (after first fault: {})  recovery={}",
             self.virtual_s,
             self.sent,
             self.ok,
             self.failed,
             self.shed,
+            self.expired,
             self.steps,
+            self.retries,
             self.reshards,
             self.reshards_after_fault,
             match self.recovery_s {
@@ -149,9 +176,15 @@ impl ScenarioReport {
                 None => "-".to_string(),
             },
         );
+        if self.breaker_trips + self.breaker_probes + self.degraded_steps > 0 {
+            s.push_str(&format!(
+                "\nbreakers: {} trips  {} probes  {} degraded steps",
+                self.breaker_trips, self.breaker_probes, self.degraded_steps,
+            ));
+        }
         for t in &self.tenants {
             s.push_str(&format!(
-                "\ntenant {} (prio {}): sent={} ok={} failed={} shed={}  \
+                "\ntenant {} (prio {}): sent={} ok={} failed={} shed={} expired={}  \
                  p50={:.3}ms p99={:.3}ms  slo {:.1}%  goodput {:.1} req/s",
                 t.name,
                 t.priority,
@@ -159,6 +192,7 @@ impl ScenarioReport {
                 t.ok,
                 t.failed,
                 t.shed,
+                t.expired,
                 t.p50_ms,
                 t.p99_ms,
                 t.slo_attainment * 100.0,
@@ -227,7 +261,11 @@ pub fn run_scenario<E: StepExecutor>(executor: &mut E, cfg: &ScenarioConfig) -> 
     let mut next = 0usize;
     let mut fi = 0usize;
     let (mut steps, mut ok, mut failed, mut shed) = (0u64, 0u64, 0u64, 0u64);
+    let (mut expired, mut retries) = (0u64, 0u64);
     let base_reshards = current_reshards(executor);
+    let base_breakers = executor
+        .sharding()
+        .map_or((0, 0, 0), |s| (s.breaker_trips, s.breaker_probes, s.degraded_steps));
     let mut first_fault: Option<f64> = None;
     let mut reshards_at_fault = 0u64;
     let mut recovery_s: Option<f64> = None;
@@ -273,6 +311,15 @@ pub fn run_scenario<E: StepExecutor>(executor: &mut E, cfg: &ScenarioConfig) -> 
         // form one batch: the highest-priority head picks the bucket,
         // riders that fit the bucket fill the remaining rows
         let (head_class, head) = pa.pop_front().expect("queue is non-empty");
+        let past_deadline = |it: &Item, now: f64| {
+            cfg.request_deadline_s > 0.0 && now - it.arrival_s > cfg.request_deadline_s
+        };
+        if past_deadline(&head, now) {
+            expired += 1;
+            metrics.record_expired();
+            metrics.record_tenant_expired(head.tenant);
+            continue;
+        }
         let bucket = match buckets.iter().find(|&&b| b >= head.tokens.len()) {
             Some(&b) => b,
             None => {
@@ -290,14 +337,65 @@ pub fn run_scenario<E: StepExecutor>(executor: &mut E, cfg: &ScenarioConfig) -> 
                 None => break,
             }
         }
-        let mut flat = Vec::with_capacity(batch.len() * bucket);
-        for (_, it) in &batch {
-            flat.extend_from_slice(&it.tokens);
-            flat.resize(flat.len() + bucket - it.tokens.len(), 0);
+        // a rider may have waited out its deadline in the queue; shed it
+        // now rather than spending a batch row on a dead request
+        let (live, dead): (Vec<_>, Vec<_>) =
+            batch.into_iter().partition(|(_, it)| !past_deadline(it, now));
+        for (_, it) in dead {
+            expired += 1;
+            metrics.record_expired();
+            metrics.record_tenant_expired(it.tenant);
         }
-        let step = StepInput { bucket, rows: batch.len(), tokens: &flat };
-        match executor.execute_step(&step) {
-            Ok(out) => {
+        let mut batch = live;
+        if batch.is_empty() {
+            continue;
+        }
+        // transient step failures retry (charging virtual backoff time and
+        // re-shedding anything that expires while waiting); permanent
+        // failures fail the whole batch
+        let mut attempt = 0u32;
+        let outcome = loop {
+            let mut flat = Vec::with_capacity(batch.len() * bucket);
+            for (_, it) in &batch {
+                flat.extend_from_slice(&it.tokens);
+                flat.resize(flat.len() + bucket - it.tokens.len(), 0);
+            }
+            let step = StepInput { bucket, rows: batch.len(), tokens: &flat };
+            match executor.execute_step(&step) {
+                Ok(out) => break Some(out),
+                Err(e) => {
+                    executor.observe_error(&e);
+                    attempt += 1;
+                    if e.is_transient() && attempt < cfg.retry.max_attempts {
+                        retries += 1;
+                        metrics.record_retry();
+                        now += cfg.fallback_step_s
+                            + cfg.retry.backoff.as_secs_f64() * attempt as f64;
+                        let (live, dead): (Vec<_>, Vec<_>) =
+                            batch.into_iter().partition(|(_, it)| !past_deadline(it, now));
+                        for (_, it) in dead {
+                            expired += 1;
+                            metrics.record_expired();
+                            metrics.record_tenant_expired(it.tenant);
+                        }
+                        batch = live;
+                        if batch.is_empty() {
+                            break None;
+                        }
+                        continue;
+                    }
+                    now += cfg.fallback_step_s;
+                    for (_, it) in &batch {
+                        failed += 1;
+                        metrics.record_tenant_error(it.tenant);
+                        metrics.record_error();
+                    }
+                    break None;
+                }
+            }
+        };
+        match outcome {
+            Some(out) => {
                 let dt = out.sim_time_s.unwrap_or(cfg.fallback_step_s).max(0.0);
                 now += dt;
                 steps += 1;
@@ -326,13 +424,13 @@ pub fn run_scenario<E: StepExecutor>(executor: &mut E, cfg: &ScenarioConfig) -> 
                     }
                 }
             }
-            Err(_) => {
-                for (_, it) in &batch {
-                    failed += 1;
-                    metrics.record_tenant_error(it.tenant);
-                    metrics.record_error();
+            // a permanent (or retry-exhausted) failure already failed the
+            // batch inside the retry loop; a fully-expired batch needs
+            // nothing more
+            None => {
+                if let Some(sh) = executor.sharding() {
+                    metrics.set_sharding(sh);
                 }
-                now += cfg.fallback_step_s;
             }
         }
         if let (Some(f0), None) = (first_fault, recovery_s) {
@@ -342,7 +440,7 @@ pub fn run_scenario<E: StepExecutor>(executor: &mut E, cfg: &ScenarioConfig) -> 
         }
     }
 
-    debug_assert_eq!(arrivals.len() as u64, ok + failed + shed, "conservation");
+    debug_assert_eq!(arrivals.len() as u64, ok + failed + shed + expired, "conservation");
     let snapshot = metrics.snapshot();
     let virtual_s = now;
     let tenants = cfg
@@ -360,10 +458,11 @@ pub fn run_scenario<E: StepExecutor>(executor: &mut E, cfg: &ScenarioConfig) -> 
             TenantReport {
                 name: t.name.clone(),
                 priority: t.priority,
-                sent: st.requests + st.errors + st.shed,
+                sent: st.requests + st.errors + st.shed + st.expired,
                 ok: st.requests,
                 failed: st.errors,
                 shed: st.shed,
+                expired: st.expired,
                 p50_ms: st.latency_p50_ms,
                 p99_ms: st.latency_p99_ms,
                 slo_attainment: st.slo_attainment(),
@@ -372,13 +471,21 @@ pub fn run_scenario<E: StepExecutor>(executor: &mut E, cfg: &ScenarioConfig) -> 
         })
         .collect();
     let final_reshards = current_reshards(executor);
+    let final_breakers = executor
+        .sharding()
+        .map_or((0, 0, 0), |s| (s.breaker_trips, s.breaker_probes, s.degraded_steps));
     ScenarioReport {
         virtual_s,
         sent: arrivals.len() as u64,
         ok,
         failed,
         shed,
+        expired,
+        retries,
         steps,
+        breaker_trips: final_breakers.0 - base_breakers.0,
+        breaker_probes: final_breakers.1 - base_breakers.1,
+        degraded_steps: final_breakers.2 - base_breakers.2,
         reshards: final_reshards - base_reshards,
         reshards_after_fault: if first_fault.is_some() {
             final_reshards - reshards_at_fault
@@ -506,5 +613,97 @@ mod tests {
         let r = run_scenario(&mut ex, &cfg);
         assert_eq!((r.ok, r.failed), (0, 5));
         assert_eq!(r.ok + r.failed + r.shed, r.sent);
+    }
+
+    #[test]
+    fn stale_queue_entries_expire_instead_of_executing() {
+        let mut ex = sim_exec();
+        let cfg = ScenarioConfig {
+            trace: ArrivalTrace::new().burst(50, 0.0),
+            tenants: vec![TenantClass::new("only", 1, 1.0)],
+            faults: FaultPlan::default(),
+            queue_capacity: 64,
+            // every step costs 2ms of virtual time but the deadline is
+            // 1ms: whatever the first batch leaves queued is already dead
+            fallback_step_s: 0.002,
+            request_deadline_s: 0.001,
+            ..ScenarioConfig::default()
+        };
+        let r = run_scenario(&mut ex, &cfg);
+        assert!(r.expired > 0, "queued remainder must expire");
+        assert_eq!(r.failed, 0);
+        assert_eq!(r.ok + r.failed + r.shed + r.expired, r.sent, "conservation");
+        assert_eq!(r.tenants[0].expired, r.expired, "tenant view matches");
+        let s = r.render();
+        assert!(s.contains("expired="), "{s}");
+    }
+
+    /// Fails the first `failures` step attempts with a transient error.
+    struct FlakyOnce {
+        inner: SimStepExecutor,
+        failures: u32,
+    }
+
+    impl StepExecutor for FlakyOnce {
+        fn name(&self) -> &'static str {
+            "flaky"
+        }
+        fn buckets(&self) -> Vec<usize> {
+            self.inner.buckets()
+        }
+        fn max_step_tokens(&self) -> Option<usize> {
+            self.inner.max_step_tokens()
+        }
+        fn execute_step(
+            &mut self,
+            step: &StepInput<'_>,
+        ) -> Result<crate::serve::StepOutput, crate::exec::ExecError> {
+            if self.failures > 0 {
+                self.failures -= 1;
+                return Err(crate::exec::ExecError::Timeout {
+                    backend: "flaky",
+                    detail: "injected".into(),
+                });
+            }
+            self.inner.execute_step(step)
+        }
+    }
+
+    #[test]
+    fn transient_failures_retry_without_losing_requests() {
+        let mut ex = FlakyOnce { inner: sim_exec(), failures: 2 };
+        let cfg = ScenarioConfig {
+            trace: ArrivalTrace::new().burst(20, 0.0),
+            tenants: vec![TenantClass::new("only", 1, 1.0)],
+            faults: FaultPlan::default(),
+            queue_capacity: 64,
+            retry: RetryPolicy {
+                max_attempts: 4,
+                backoff: std::time::Duration::from_millis(1),
+            },
+            ..ScenarioConfig::default()
+        };
+        let r = run_scenario(&mut ex, &cfg);
+        assert_eq!(r.retries, 2, "both transient failures retried");
+        assert_eq!(r.failed, 0, "retries absorb the faults");
+        assert_eq!(r.ok, r.sent, "every request completes");
+        assert!(r.render().contains("retries=2"), "{}", r.render());
+    }
+
+    #[test]
+    fn exhausted_retries_fail_the_batch_in_scenarios() {
+        let mut ex = FlakyOnce { inner: sim_exec(), failures: u32::MAX };
+        let cfg = ScenarioConfig {
+            trace: ArrivalTrace::new().burst(4, 0.0),
+            tenants: vec![TenantClass::new("only", 1, 1.0)],
+            faults: FaultPlan::default(),
+            queue_capacity: 8,
+            retry: RetryPolicy { max_attempts: 2, backoff: std::time::Duration::ZERO },
+            ..ScenarioConfig::default()
+        };
+        let r = run_scenario(&mut ex, &cfg);
+        assert_eq!(r.ok, 0);
+        assert_eq!(r.failed, r.sent);
+        assert_eq!(r.ok + r.failed + r.shed + r.expired, r.sent, "conservation");
     }
 }

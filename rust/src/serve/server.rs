@@ -50,6 +50,26 @@ use crate::coordinator::queue::{AdmissionQueue, PushResult};
 use crate::coordinator::request::{Request, Response};
 use crate::serve::{StepExecutor, StepInput, StepOutput};
 
+/// Bounded retry policy for transient step failures (see
+/// [`crate::exec::ExecError::is_transient`]): a failed step is retried up
+/// to `max_attempts` total attempts with deterministic linear backoff
+/// (`backoff * attempt_number` between attempts).  Permanent failures are
+/// never retried, and requests whose deadline passes between attempts are
+/// expired out of the batch before it is re-run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total execution attempts per step (1 = no retry).
+    pub max_attempts: u32,
+    /// Base backoff between attempts; attempt `n` sleeps `backoff * n`.
+    pub backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 1, backoff: Duration::ZERO }
+    }
+}
+
 /// Serving-core configuration (executor-independent knobs).
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
@@ -70,6 +90,12 @@ pub struct ServerConfig {
     /// synchronous single-threaded reference loop (same accumulation and
     /// numerics, no formation/execution overlap).
     pub pipeline: bool,
+    /// Default per-request deadline applied by [`ServeHandle`] submissions
+    /// (`None` = requests wait indefinitely).  Expired requests are shed
+    /// before execution and answered with [`Response::expired`] set.
+    pub request_deadline: Option<Duration>,
+    /// Retry policy for transient step failures.
+    pub retry: RetryPolicy,
 }
 
 impl Default for ServerConfig {
@@ -80,6 +106,8 @@ impl Default for ServerConfig {
             deadline: Duration::from_millis(2),
             depth: 2,
             pipeline: true,
+            request_deadline: None,
+            retry: RetryPolicy::default(),
         }
     }
 }
@@ -137,6 +165,20 @@ impl Ticket {
             }
         }
     }
+
+    /// Bounded wait: `None` if no response arrives within `timeout`.  A
+    /// timed-out wait consumes nothing — the ticket stays completable and
+    /// a later [`Ticket::wait`]/[`Ticket::wait_timeout`] still receives
+    /// the response (no double-take).
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<Response> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(resp) => Some(resp),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                Some(Response::failed(self.id, "request dropped by the server".into()))
+            }
+        }
+    }
 }
 
 /// Cloneable submission handle: the request-side face of a [`Server`].
@@ -147,6 +189,9 @@ pub struct ServeHandle {
     queue: Arc<AdmissionQueue>,
     metrics: Arc<Metrics>,
     seq: Arc<AtomicU64>,
+    /// Default per-request deadline ([`ServerConfig::request_deadline`]);
+    /// [`ServeHandle::submit_with_deadline`] overrides it per request.
+    default_deadline: Option<Duration>,
 }
 
 impl ServeHandle {
@@ -160,7 +205,7 @@ impl ServeHandle {
     /// [`Metrics`] (`rejected`), so driver-side shed accounting reconciles
     /// with the server's own counters.
     pub fn try_submit_for(&self, tenant: u32, tokens: &[i32]) -> Result<Ticket, SubmitError> {
-        let (req, ticket) = self.request(tenant, tokens);
+        let (req, ticket) = self.request(tenant, tokens, self.default_deadline);
         match self.queue.try_push(req) {
             PushResult::Ok => Ok(ticket),
             PushResult::Full => {
@@ -182,9 +227,26 @@ impl ServeHandle {
     /// Blocking submission: waits for queue headroom (a completing step
     /// frees it) instead of shedding; fails only once the queue closes.
     pub fn submit_for(&self, tenant: u32, tokens: &[i32]) -> Result<Ticket, SubmitError> {
-        let (req, ticket) = self.request(tenant, tokens);
+        let (req, ticket) = self.request(tenant, tokens, self.default_deadline);
+        self.push_blocking(req).map(|()| ticket)
+    }
+
+    /// Blocking submission with an explicit per-request deadline
+    /// (overriding [`ServerConfig::request_deadline`]): if `deadline`
+    /// passes before the request executes, it is shed pre-execution and
+    /// answered with [`Response::expired`] set.
+    pub fn submit_with_deadline(
+        &self,
+        tokens: &[i32],
+        deadline: Duration,
+    ) -> Result<Ticket, SubmitError> {
+        let (req, ticket) = self.request(0, tokens, Some(deadline));
+        self.push_blocking(req).map(|()| ticket)
+    }
+
+    fn push_blocking(&self, req: Request) -> Result<(), SubmitError> {
         match self.queue.push(req) {
-            PushResult::Ok => Ok(ticket),
+            PushResult::Ok => Ok(()),
             PushResult::Full => Err(SubmitError::Backpressure), // unreachable: push blocks
             PushResult::Closed => {
                 self.metrics.record_rejected();
@@ -206,14 +268,21 @@ impl ServeHandle {
         self.queue.len()
     }
 
-    fn request(&self, tenant: u32, tokens: &[i32]) -> (Request, Ticket) {
+    fn request(
+        &self,
+        tenant: u32,
+        tokens: &[i32],
+        deadline: Option<Duration>,
+    ) -> (Request, Ticket) {
         let id = self.seq.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = channel();
+        let now = Instant::now();
         let req = Request {
             id,
             tenant,
             tokens: tokens.to_vec(),
-            enqueued: Instant::now(),
+            enqueued: now,
+            deadline: deadline.map(|d| now + d),
             respond: tx,
         };
         (req, Ticket { id, rx })
@@ -271,6 +340,8 @@ pub struct Server<E: StepExecutor> {
     deadline: Duration,
     depth: usize,
     pipeline: bool,
+    request_deadline: Option<Duration>,
+    retry: RetryPolicy,
     stop: Arc<AtomicBool>,
     seq: Arc<AtomicU64>,
     executor: E,
@@ -295,6 +366,8 @@ impl<E: StepExecutor> Server<E> {
             deadline: cfg.deadline,
             depth: cfg.depth.max(1),
             pipeline: cfg.pipeline,
+            request_deadline: cfg.request_deadline,
+            retry: cfg.retry,
             stop: Arc::new(AtomicBool::new(false)),
             seq: Arc::new(AtomicU64::new(0)),
             executor,
@@ -307,6 +380,7 @@ impl<E: StepExecutor> Server<E> {
             queue: Arc::clone(&self.queue),
             metrics: Arc::clone(&self.metrics),
             seq: Arc::clone(&self.seq),
+            default_deadline: self.request_deadline,
         }
     }
 
@@ -399,8 +473,8 @@ impl<E: StepExecutor> Server<E> {
             });
             // executor stage on the calling thread (StepExecutor is not
             // required to be Send — the PJRT client stays pinned here)
-            for batch in batch_rx {
-                let outcome = self.run_step(&batch);
+            for mut batch in batch_rx {
+                let outcome = self.run_step(&mut batch);
                 self.sync_executor_metrics();
                 let PackedBatch { bucket, requests, .. } = batch;
                 if done_tx.send(StepResult { bucket, requests, outcome }).is_err() {
@@ -421,9 +495,9 @@ impl<E: StepExecutor> Server<E> {
         while let Some(pending) =
             accumulate(&self.queue, &self.policy, self.deadline, &self.stop)
         {
-            for batch in form_and_pack(pending, &self.policy, &self.metrics) {
+            for mut batch in form_and_pack(pending, &self.policy, &self.metrics) {
                 self.metrics.pipeline_enter();
-                let outcome = self.run_step(&batch);
+                let outcome = self.run_step(&mut batch);
                 let PackedBatch { bucket, requests, .. } = batch;
                 respond(StepResult { bucket, requests, outcome }, &self.metrics);
             }
@@ -431,35 +505,69 @@ impl<E: StepExecutor> Server<E> {
         }
     }
 
-    /// Execute one packed batch: dispatch once, validate the output shape,
-    /// record the per-batch exec metric.
-    fn run_step(&mut self, batch: &PackedBatch) -> Result<StepOutput, String> {
-        let rows = batch.requests.len();
-        let t0 = Instant::now();
-        let result = self
-            .executor
-            .execute_step(&StepInput { bucket: batch.bucket, rows, tokens: &batch.tokens })
-            .and_then(|out| {
-                if out.argmax.len() == rows * batch.bucket {
-                    Ok(out)
-                } else {
-                    Err(crate::exec::ExecError::Backend {
-                        backend: self.executor.name(),
-                        detail: format!(
-                            "step returned {} argmax entries for a {rows}x{} batch",
-                            out.argmax.len(),
-                            batch.bucket
-                        ),
-                    })
-                }
-            });
-        match result {
-            Ok(out) => {
-                // per-batch exec metric: one executor dispatch per batch
-                self.metrics.record_exec(t0.elapsed().as_secs_f64(), rows);
-                Ok(out)
+    /// Execute one packed batch: dispatch, validate the output shape,
+    /// record the per-batch exec metric.  Transient failures are retried
+    /// per [`RetryPolicy`]: every failure is reported to the executor
+    /// ([`StepExecutor::observe_error`], feeding circuit breakers), then
+    /// the batch's still-live requests are re-formed (expired ones are
+    /// answered and dropped — never re-planned) and the step re-runs after
+    /// a deterministic linear backoff.  Permanent failures and exhausted
+    /// retries fail the whole batch.
+    fn run_step(&mut self, batch: &mut PackedBatch) -> Result<StepOutput, String> {
+        let mut attempt: u32 = 0;
+        loop {
+            let rows = batch.requests.len();
+            if rows == 0 {
+                // every request expired while retrying: nothing to run
+                return Ok(StepOutput {
+                    argmax: Vec::new(),
+                    expert_rows: Vec::new(),
+                    failed: Vec::new(),
+                    sim_time_s: None,
+                });
             }
-            Err(e) => Err(e.to_string()),
+            let t0 = Instant::now();
+            let result = self
+                .executor
+                .execute_step(&StepInput { bucket: batch.bucket, rows, tokens: &batch.tokens })
+                .and_then(|out| {
+                    if out.argmax.len() == rows * batch.bucket {
+                        Ok(out)
+                    } else {
+                        Err(crate::exec::ExecError::backend(
+                            self.executor.name(),
+                            format!(
+                                "step returned {} argmax entries for a {rows}x{} batch",
+                                out.argmax.len(),
+                                batch.bucket
+                            ),
+                        ))
+                    }
+                });
+            match result {
+                Ok(out) => {
+                    // per-batch exec metric: one executor dispatch per batch
+                    self.metrics.record_exec(t0.elapsed().as_secs_f64(), rows);
+                    return Ok(out);
+                }
+                Err(e) => {
+                    // every failure feeds the executor's breakers, retried
+                    // or not — classification happens on the typed error,
+                    // before it is flattened to a response string
+                    self.executor.observe_error(&e);
+                    attempt += 1;
+                    if e.is_transient() && attempt < self.retry.max_attempts {
+                        self.metrics.record_retry();
+                        let backoff = self.retry.backoff * attempt;
+                        if !backoff.is_zero() {
+                            std::thread::sleep(backoff);
+                        }
+                        drop_expired(batch, &self.metrics);
+                        continue;
+                    }
+                    return Err(e.to_string());
+                }
+            }
         }
     }
 
@@ -503,14 +611,21 @@ fn accumulate(
 }
 
 /// Form policy batches from accumulated requests, reject what fits no
-/// bucket, pack the rest row-major, and record queue/form waits.
+/// bucket, pack the rest row-major, and record queue/form waits.  Requests
+/// past their deadline are expired here — before formation, so they are
+/// never planned or executed.
 fn form_and_pack(
     pending: Vec<Request>,
     policy: &BatchPolicy,
     metrics: &Metrics,
 ) -> Vec<PackedBatch> {
     let formed_at = Instant::now();
-    let (batches, rejected) = policy.form(pending);
+    let (live, dead): (Vec<Request>, Vec<Request>) =
+        pending.into_iter().partition(|r| !r.is_expired(formed_at));
+    for r in dead {
+        expire(r, metrics);
+    }
+    let (batches, rejected) = policy.form(live);
     for r in rejected {
         let msg = format!("request of {} tokens exceeds largest bucket", r.tokens.len());
         reject(r, msg, metrics);
@@ -545,6 +660,39 @@ fn reject(r: Request, msg: String, metrics: &Metrics) {
     let _ = r.respond.send(resp);
 }
 
+/// Shed one request whose deadline passed before execution.  Counted as
+/// `expired` (not `errors`), answered with [`Response::expired`] set.
+fn expire(r: Request, metrics: &Metrics) {
+    metrics.record_expired();
+    metrics.record_tenant_expired(r.tenant);
+    let mut resp = Response::failed(r.id, "deadline expired before execution");
+    resp.tenant = r.tenant;
+    resp.expired = true;
+    let _ = r.respond.send(resp);
+}
+
+/// Between retry attempts: expire any request whose deadline passed and
+/// re-pack the survivors' rows (same order, same bucket), so the retried
+/// step never executes dead work.
+fn drop_expired(batch: &mut PackedBatch, metrics: &Metrics) {
+    let now = Instant::now();
+    if !batch.requests.iter().any(|r| r.is_expired(now)) {
+        return;
+    }
+    let bucket = batch.bucket;
+    let old_tokens = std::mem::take(&mut batch.tokens);
+    let old_requests = std::mem::take(&mut batch.requests);
+    batch.tokens.reserve(old_tokens.len());
+    for (i, r) in old_requests.into_iter().enumerate() {
+        if r.is_expired(now) {
+            expire(r, metrics);
+        } else {
+            batch.tokens.extend_from_slice(&old_tokens[i * bucket..(i + 1) * bucket]);
+            batch.requests.push(r);
+        }
+    }
+}
+
 /// Fan one executed step's results back per caller and close out its
 /// pipeline slot.  A whole-step failure fails every request in the batch;
 /// a per-row failure ([`StepOutput::failed`]) fails only that request.
@@ -571,6 +719,7 @@ fn respond(done: StepResult, metrics: &Metrics) {
                     latency_s: latency,
                     bucket,
                     error: None,
+                    expired: false,
                 });
             }
         }
@@ -612,7 +761,7 @@ mod tests {
 
         fn execute_step(&mut self, step: &StepInput<'_>) -> Result<StepOutput, ExecError> {
             if self.fail {
-                return Err(ExecError::Backend { backend: "echo", detail: "boom".into() });
+                return Err(ExecError::backend("echo", "boom"));
             }
             self.steps.push((step.bucket, step.rows));
             let failed = match self.fail_row {
@@ -630,7 +779,15 @@ mod tests {
 
     fn req(id: u64, tokens: Vec<i32>) -> (Request, Receiver<Response>) {
         let (tx, rx) = channel();
-        (Request { id, tenant: 0, tokens, enqueued: Instant::now(), respond: tx }, rx)
+        let r = Request {
+            id,
+            tenant: 0,
+            tokens,
+            enqueued: Instant::now(),
+            deadline: None,
+            respond: tx,
+        };
+        (r, rx)
     }
 
     fn config(queue_capacity: usize) -> ServerConfig {
@@ -811,5 +968,146 @@ mod tests {
         }
         // one step at a time: the gauge's high-water mark stays at 1
         assert_eq!(s.metrics().snapshot().max_in_flight, 1);
+    }
+
+    /// Fails the next `failures_left` steps (transiently or permanently),
+    /// then echoes like [`Echo`].
+    struct Flaky {
+        failures_left: u32,
+        transient: bool,
+        executions: usize,
+    }
+
+    impl StepExecutor for Flaky {
+        fn name(&self) -> &'static str {
+            "flaky"
+        }
+
+        fn buckets(&self) -> Vec<usize> {
+            vec![4]
+        }
+
+        fn execute_step(&mut self, step: &StepInput<'_>) -> Result<StepOutput, ExecError> {
+            self.executions += 1;
+            if self.failures_left > 0 {
+                self.failures_left -= 1;
+                return Err(if self.transient {
+                    ExecError::Timeout { backend: "flaky", detail: "injected".into() }
+                } else {
+                    ExecError::backend("flaky", "injected")
+                });
+            }
+            Ok(StepOutput {
+                argmax: step.tokens.iter().map(|&t| t + 1).collect(),
+                expert_rows: Vec::new(),
+                failed: Vec::new(),
+                sim_time_s: None,
+            })
+        }
+    }
+
+    #[test]
+    fn wait_timeout_leaves_the_ticket_completable() {
+        let mut s = server(false);
+        let h = s.handle();
+        let t = h.try_submit(&[1, 2]).expect("admitted");
+        // nothing is serving yet: bounded waits time out...
+        assert!(t.wait_timeout(Duration::from_millis(5)).is_none());
+        assert!(t.wait_timeout(Duration::from_millis(5)).is_none());
+        h.close();
+        s.serve();
+        // ...and take nothing: the same ticket still completes
+        let resp = t.wait_timeout(Duration::from_secs(5)).expect("resolved after serve");
+        assert!(resp.error.is_none());
+        assert_eq!(resp.argmax, vec![2, 3]);
+    }
+
+    #[test]
+    fn expired_requests_are_shed_before_execution() {
+        let mut s = server(false);
+        let h = s.handle();
+        // already-passed deadline: must never reach the executor
+        let dead = h.submit_with_deadline(&[1, 2], Duration::ZERO).expect("admitted");
+        let live = h.try_submit(&[5]).expect("admitted");
+        std::thread::sleep(Duration::from_millis(2));
+        h.close();
+        s.serve();
+        let resp = dead.wait();
+        assert!(resp.expired, "deadline shed is marked expired");
+        assert!(resp.error.as_deref().unwrap_or("").contains("deadline expired"));
+        assert!(live.wait().error.is_none());
+        // only the live request was planned and executed
+        assert_eq!(s.executor().steps, vec![(4, 1)]);
+        let snap = s.metrics().snapshot();
+        assert_eq!((snap.expired, snap.errors, snap.requests), (1, 0, 1));
+    }
+
+    #[test]
+    fn default_request_deadline_applies_to_handle_submissions() {
+        let cfg = ServerConfig { request_deadline: Some(Duration::ZERO), ..config(32) };
+        let mut s = Server::new(cfg, Echo { steps: Vec::new(), fail: false, fail_row: None });
+        let h = s.handle();
+        let t = h.try_submit(&[1]).expect("admitted");
+        std::thread::sleep(Duration::from_millis(2));
+        h.close();
+        s.serve();
+        assert!(t.wait().expired);
+        assert!(s.executor().steps.is_empty());
+        assert_eq!(s.metrics().snapshot().expired, 1);
+    }
+
+    #[test]
+    fn transient_step_failures_retry_to_success() {
+        let cfg = ServerConfig {
+            retry: RetryPolicy { max_attempts: 3, backoff: Duration::ZERO },
+            ..config(32)
+        };
+        let mut s =
+            Server::new(cfg, Flaky { failures_left: 2, transient: true, executions: 0 });
+        let h = s.handle();
+        let t0 = h.try_submit(&[1]).expect("admitted");
+        let t1 = h.try_submit(&[2]).expect("admitted");
+        h.close();
+        s.serve();
+        assert!(t0.wait().error.is_none());
+        assert!(t1.wait().error.is_none());
+        assert_eq!(s.executor().executions, 3, "two transient failures + one success");
+        let snap = s.metrics().snapshot();
+        assert_eq!((snap.retries, snap.errors, snap.requests), (2, 0, 2));
+    }
+
+    #[test]
+    fn permanent_step_failures_are_never_retried() {
+        let cfg = ServerConfig {
+            retry: RetryPolicy { max_attempts: 3, backoff: Duration::ZERO },
+            ..config(32)
+        };
+        let mut s =
+            Server::new(cfg, Flaky { failures_left: 1, transient: false, executions: 0 });
+        let h = s.handle();
+        let t = h.try_submit(&[1]).expect("admitted");
+        h.close();
+        s.serve();
+        assert!(t.wait().error.as_deref().unwrap_or("").contains("injected"));
+        assert_eq!(s.executor().executions, 1, "permanent failure: exactly one attempt");
+        let snap = s.metrics().snapshot();
+        assert_eq!((snap.retries, snap.errors), (0, 1));
+    }
+
+    #[test]
+    fn exhausted_retries_fail_the_batch() {
+        let cfg = ServerConfig {
+            retry: RetryPolicy { max_attempts: 2, backoff: Duration::ZERO },
+            ..config(32)
+        };
+        let mut s =
+            Server::new(cfg, Flaky { failures_left: 5, transient: true, executions: 0 });
+        let h = s.handle();
+        let t = h.try_submit(&[1]).expect("admitted");
+        h.close();
+        s.serve();
+        assert!(t.wait().error.as_deref().unwrap_or("").contains("timed out"));
+        assert_eq!(s.executor().executions, 2, "max_attempts bounds total attempts");
+        assert_eq!(s.metrics().snapshot().retries, 1);
     }
 }

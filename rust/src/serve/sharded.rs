@@ -121,6 +121,12 @@ pub struct ShardedServeConfig {
     pub coll_latency_us: f64,
     /// GPU spec each shard's kernel time is simulated on.
     pub gpu: GpuSpec,
+    /// Circuit breaker: consecutive shard-attributed transient failures
+    /// before the shard is quarantined (evacuated like a `Kill`).
+    pub breaker_threshold: u32,
+    /// Circuit breaker: successful steps a quarantined shard waits before
+    /// a half-open probe restores it to placement for one trial step.
+    pub breaker_probe_after: u64,
 }
 
 impl Default for ShardedServeConfig {
@@ -135,6 +141,8 @@ impl Default for ShardedServeConfig {
             link_gbps: 200.0,
             coll_latency_us: 10.0,
             gpu: GpuSpec::h800(),
+            breaker_threshold: 3,
+            breaker_probe_after: 8,
         }
     }
 }
@@ -282,6 +290,43 @@ impl Placement {
         self.live[shard] = true;
         self.speed[shard] = 1.0;
     }
+
+    /// Revive a shard AND forcibly re-LPT so it receives experts again
+    /// immediately — the half-open probe needs the very next step to
+    /// exercise the shard, not wait for imbalance to drift.  Counts as a
+    /// re-shard when experts move.
+    fn restore(&mut self, shard: usize) {
+        self.revive(shard);
+        let next = lpt_assignment(&self.hist, &self.rates());
+        if next != self.assign {
+            self.assign = next;
+            self.reshards += 1;
+        }
+    }
+}
+
+/// Per-shard circuit-breaker state.  Closed → (threshold consecutive
+/// transient failures) → Open (quarantined: evacuated from placement) →
+/// (probe window of successful steps) → HalfOpen (restored for one trial
+/// step) → Closed on success, back to Open on another failure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum BreakerState {
+    Closed,
+    Open { since_step: u64 },
+    HalfOpen,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Breaker {
+    state: BreakerState,
+    /// Consecutive shard-attributed transient failures while closed.
+    consecutive: u32,
+}
+
+impl Default for Breaker {
+    fn default() -> Self {
+        Breaker { state: BreakerState::Closed, consecutive: 0 }
+    }
 }
 
 /// The expert-parallel sharded [`StepExecutor`].  See module docs.
@@ -298,6 +343,9 @@ pub struct ShardedStepExecutor {
     lanes: Vec<ExecutionSession>,
     stats: ShardingStats,
     steps: u64,
+    /// One circuit breaker per EP shard, fed by
+    /// [`StepExecutor::observe_error`].
+    breakers: Vec<Breaker>,
 }
 
 impl ShardedStepExecutor {
@@ -376,7 +424,8 @@ impl ShardedStepExecutor {
             link_gbps: cfg.link_gbps,
             coll_latency_us: cfg.coll_latency_us,
         };
-        ShardedStepExecutor { cfg, shard_shape, parallel, placement, lanes, stats, steps: 0 }
+        let breakers = vec![Breaker::default(); cfg.ep];
+        ShardedStepExecutor { cfg, shard_shape, parallel, placement, lanes, stats, steps: 0, breakers }
     }
 
     /// Steps executed so far.
@@ -413,6 +462,41 @@ impl ShardedStepExecutor {
     /// Cumulative re-shard count (includes forced kill evacuations).
     pub fn reshards(&self) -> u64 {
         self.placement.reshards
+    }
+
+    /// Per-shard breaker engagement: `true` while a shard's breaker is
+    /// open (quarantined) or half-open (probing).
+    pub fn breaker_engaged(&self) -> Vec<bool> {
+        self.breakers.iter().map(|b| b.state != BreakerState::Closed).collect()
+    }
+
+    /// Breaker bookkeeping after a successful step: a step that completed
+    /// with a half-open shard in placement is a passed probe (close the
+    /// breaker), a closed shard's consecutive-failure count resets, and a
+    /// quarantined shard whose probe window has elapsed is restored to
+    /// placement half-open — the *next* step exercises it.
+    fn breakers_on_success(&mut self) {
+        let degraded = self.breakers.iter().any(|b| b.state != BreakerState::Closed)
+            || self.placement.live.iter().any(|&l| !l);
+        if degraded {
+            self.stats.degraded_steps += 1;
+        }
+        for shard in 0..self.cfg.ep {
+            match self.breakers[shard].state {
+                BreakerState::Closed => self.breakers[shard].consecutive = 0,
+                BreakerState::HalfOpen => {
+                    self.breakers[shard] = Breaker::default();
+                }
+                BreakerState::Open { since_step } => {
+                    if self.steps.saturating_sub(since_step) >= self.cfg.breaker_probe_after {
+                        self.stats.breaker_probes += 1;
+                        self.placement.restore(shard);
+                        self.stats.reshards = self.placement.reshards;
+                        self.breakers[shard].state = BreakerState::HalfOpen;
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -577,6 +661,7 @@ impl StepExecutor for ShardedStepExecutor {
             None => step.tokens.iter().map(|&v| synthetic_argmax(v)).collect(),
         };
         self.steps += 1;
+        self.breakers_on_success();
         Ok(StepOutput {
             argmax,
             expert_rows: load.counts.iter().map(|&c| c as i32).collect(),
@@ -612,6 +697,55 @@ impl StepExecutor for ShardedStepExecutor {
 
     fn sharding(&self) -> Option<ShardingStats> {
         Some(self.stats.clone())
+    }
+
+    /// Feed shard-attributed transient failures into the per-shard circuit
+    /// breakers: `breaker_threshold` consecutive failures quarantine the
+    /// shard (evacuation + forced re-shard, reusing the `Kill` machinery);
+    /// a failure during a half-open probe re-quarantines it for another
+    /// window.  Permanent and unattributed errors never move a breaker.
+    fn observe_error(&mut self, err: &ExecError) {
+        if !err.is_transient() {
+            return;
+        }
+        let Some(shard) = err.shard() else { return };
+        if shard >= self.cfg.ep {
+            return;
+        }
+        match self.breakers[shard].state {
+            BreakerState::Closed => {
+                let b = &mut self.breakers[shard];
+                b.consecutive = b.consecutive.saturating_add(1);
+                if b.consecutive >= self.cfg.breaker_threshold {
+                    let was_live = self.placement.live[shard];
+                    self.placement.kill(shard);
+                    // the kill can be refused (last live shard): only a
+                    // real evacuation counts as a trip
+                    if was_live && !self.placement.live[shard] {
+                        self.stats.breaker_trips += 1;
+                        self.stats.reshards = self.placement.reshards;
+                        self.breakers[shard] =
+                            Breaker { state: BreakerState::Open { since_step: self.steps }, consecutive: 0 };
+                    }
+                }
+            }
+            BreakerState::HalfOpen => {
+                // failed probe: back into quarantine for another window
+                self.placement.kill(shard);
+                self.stats.reshards = self.placement.reshards;
+                self.breakers[shard].state = BreakerState::Open { since_step: self.steps };
+            }
+            BreakerState::Open { .. } => {}
+        }
+    }
+
+    /// A shard participates in the next step iff it is live and the
+    /// current placement assigns it at least one expert — the signal fault
+    /// injectors use to stop erroring once evacuation lands.
+    fn shard_in_use(&self, shard: usize) -> bool {
+        shard < self.cfg.ep
+            && self.placement.live[shard]
+            && self.placement.assign.contains(&shard)
     }
 }
 
@@ -824,6 +958,122 @@ mod tests {
                 }
             }
         }
+    }
+
+    fn down(shard: usize) -> ExecError {
+        ExecError::ShardDown { backend: "chaos", shard, detail: "injected".into() }
+    }
+
+    fn breaker_exec(threshold: u32, probe_after: u64) -> ShardedStepExecutor {
+        ShardedStepExecutor::new(ShardedServeConfig {
+            base: base(false, 1),
+            ep: 4,
+            breaker_threshold: threshold,
+            breaker_probe_after: probe_after,
+            ..ShardedServeConfig::default()
+        })
+    }
+
+    #[test]
+    fn breaker_trips_after_consecutive_transient_failures() {
+        let mut ex = breaker_exec(3, 8);
+        ex.observe_error(&down(1));
+        ex.observe_error(&down(1));
+        assert!(ex.live()[1], "two failures stay under the threshold");
+        assert_eq!(ex.stats().breaker_trips, 0);
+        ex.observe_error(&down(1));
+        assert!(!ex.live()[1], "third consecutive failure quarantines");
+        assert!(ex.assignment().iter().all(|&s| s != 1), "evacuated: {:?}", ex.assignment());
+        assert_eq!(ex.stats().breaker_trips, 1);
+        assert_eq!(ex.reshards(), 1, "evacuation is a forced reshard");
+        assert!(ex.breaker_engaged()[1]);
+        assert!(!ex.shard_in_use(1));
+    }
+
+    #[test]
+    fn successful_steps_reset_the_consecutive_failure_count() {
+        let mut ex = breaker_exec(3, 8);
+        let tokens = step_tokens(16, 4, 2);
+        let s = StepInput { bucket: 16, rows: 4, tokens: &tokens };
+        ex.observe_error(&down(2));
+        ex.observe_error(&down(2));
+        ex.execute_step(&s).expect("clean step");
+        ex.observe_error(&down(2));
+        ex.observe_error(&down(2));
+        assert!(ex.live()[2], "non-consecutive failures never trip");
+        assert_eq!(ex.stats().breaker_trips, 0);
+    }
+
+    #[test]
+    fn probe_window_restores_the_shard_and_a_clean_probe_closes_the_breaker() {
+        let mut ex = breaker_exec(1, 2);
+        let tokens = step_tokens(16, 4, 2);
+        let s = StepInput { bucket: 16, rows: 4, tokens: &tokens };
+        ex.observe_error(&down(1));
+        assert!(!ex.live()[1]);
+        // two successful steps elapse the probe window...
+        ex.execute_step(&s).expect("quarantined step 1");
+        assert!(!ex.live()[1]);
+        ex.execute_step(&s).expect("quarantined step 2");
+        // ...issuing the half-open probe: live again AND holding experts
+        assert_eq!(ex.stats().breaker_probes, 1);
+        assert!(ex.live()[1]);
+        assert!(ex.shard_in_use(1), "restore hands the probed shard experts back");
+        assert!(ex.breaker_engaged()[1], "half-open until the probe step lands");
+        // the probe step completes cleanly: breaker closes
+        ex.execute_step(&s).expect("probe step");
+        assert!(!ex.breaker_engaged()[1]);
+        assert_eq!(ex.stats().degraded_steps, 3, "all three steps ran degraded");
+        // later clean steps are not degraded
+        ex.execute_step(&s).expect("healthy step");
+        assert_eq!(ex.stats().degraded_steps, 3);
+    }
+
+    #[test]
+    fn failed_probe_requarantines_for_another_window() {
+        let mut ex = breaker_exec(1, 1);
+        let tokens = step_tokens(16, 4, 2);
+        let s = StepInput { bucket: 16, rows: 4, tokens: &tokens };
+        ex.observe_error(&down(1));
+        ex.execute_step(&s).expect("window step");
+        assert_eq!(ex.stats().breaker_probes, 1);
+        assert!(ex.live()[1], "half-open: restored for the trial");
+        // the trial fails: straight back to quarantine, no threshold count
+        ex.observe_error(&down(1));
+        assert!(!ex.live()[1]);
+        assert_eq!(ex.stats().breaker_trips, 1, "a failed probe is not a new trip");
+        assert!(ex.breaker_engaged()[1]);
+    }
+
+    #[test]
+    fn permanent_and_unattributed_errors_never_move_a_breaker() {
+        let mut ex = breaker_exec(1, 8);
+        for _ in 0..5 {
+            // permanent: even shard-shaped detail must not trip anything
+            ex.observe_error(&ExecError::backend("cpu", "worker pool failure"));
+            // transient but unattributed: no shard to blame
+            ex.observe_error(&ExecError::Timeout { backend: "sim", detail: "stall".into() });
+            // out-of-range shard id: ignored
+            ex.observe_error(&down(99));
+        }
+        assert!(ex.live().iter().all(|&l| l));
+        assert_eq!(ex.stats().breaker_trips, 0);
+        assert!(ex.breaker_engaged().iter().all(|&b| !b));
+    }
+
+    #[test]
+    fn breaker_refuses_to_quarantine_the_last_live_shard() {
+        let mut ex = ShardedStepExecutor::new(ShardedServeConfig {
+            base: base(false, 1),
+            ep: 2,
+            breaker_threshold: 1,
+            ..ShardedServeConfig::default()
+        });
+        ex.observe_error(&down(0));
+        assert!(!ex.live()[0]);
+        ex.observe_error(&down(1));
+        assert!(ex.live()[1], "the last live shard must survive");
+        assert_eq!(ex.stats().breaker_trips, 1, "refused kill is not a trip");
     }
 
     #[test]

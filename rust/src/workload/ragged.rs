@@ -425,7 +425,9 @@ pub fn execute_traced(
 /// ([`run_decode_tile`]), same merge order, same normalize: the output is
 /// **bitwise-equal** to the serial path.
 ///
-/// A worker panic or pool shutdown surfaces as [`ExecError::Backend`].
+/// A worker panic or pool shutdown surfaces as [`ExecError::Backend`] with
+/// the [`crate::util::threadpool::PoolError`] preserved as the structured
+/// error source (downcastable, never mis-bucketed as transient).
 pub fn execute_parallel(
     plan: &Plan<RaggedAttentionWorkload>,
     inputs: &RaggedInputs,
@@ -453,7 +455,7 @@ pub fn execute_parallel(
     let chunk = pool.default_chunk(indices.len());
     let states = pool
         .scoped_map_chunks(indices, chunk, job)
-        .map_err(|e| ExecError::Backend { backend: "cpu", detail: format!("worker pool: {e}") })?;
+        .map_err(|e| ExecError::backend_caused("cpu", format!("worker pool: {e}"), e))?;
     Ok(normalize(plan, &states))
 }
 

@@ -205,7 +205,7 @@ fn worker_panic_surfaces_as_exec_error_and_pool_survives() {
         .inputs(bad)
         .thread_pool(Arc::clone(&pool));
     match broken.run(&load) {
-        Err(ExecError::Backend { backend, detail }) => {
+        Err(ExecError::Backend { backend, detail, .. }) => {
             assert_eq!(backend, "cpu");
             assert!(detail.contains("worker pool"), "unexpected detail: {detail}");
         }

@@ -67,7 +67,14 @@ fn sim_server_serves_64_requests_end_to_end_with_cache_hits() {
         expected_tokens += tokens.len() as u64;
         let (tx, rx) = channel();
         let len = tokens.len();
-        queue.try_push(Request { id: i, tenant: 0, tokens, enqueued: Instant::now(), respond: tx });
+        queue.try_push(Request {
+            id: i,
+            tenant: 0,
+            tokens,
+            enqueued: Instant::now(),
+            deadline: None,
+            respond: tx,
+        });
         receivers.push((i, len, rx));
     }
     assert_eq!(queue.len(), 64, "all requests admitted up front");
@@ -149,7 +156,14 @@ fn plan_cache_under_capacity_pressure_evicts_and_keeps_counting() {
             _ => long.clone(),
         };
         let (tx, rx) = channel();
-        queue.try_push(Request { id: i, tenant: 0, tokens, enqueued: Instant::now(), respond: tx });
+        queue.try_push(Request {
+            id: i,
+            tenant: 0,
+            tokens,
+            enqueued: Instant::now(),
+            deadline: None,
+            respond: tx,
+        });
         receivers.push(rx);
     }
     queue.close();
@@ -194,6 +208,7 @@ fn mixed_valid_and_oversized_traffic_accounts_cleanly() {
             tenant: 0,
             tokens: vec![1; len],
             enqueued: Instant::now(),
+            deadline: None,
             respond: tx,
         });
         receivers.push((i, rx));
