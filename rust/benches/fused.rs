@@ -1,0 +1,217 @@
+//! Fused transformer-layer bench (default features): the FUSED report
+//! table — one heterogeneous plan (decode + prefill + expert FFN under a
+//! single σ) against the sequential two-plan baseline and padded-dense —
+//! plus a deterministic accounting drive of the fused serving executor.
+//!
+//! Every number here comes from the virtual clock and the planner, so the
+//! whole output is byte-deterministic: the same commit produces identical
+//! bytes on any machine.  With `--json <path>` (how `scripts/bench_distill`
+//! invokes it) the run merges a `fused_vs_sequential` row into the summary
+//! the scenario/serving benches wrote at `<path>`.
+
+use staticbatch::exec::{ExecutionSession, SimBackend};
+use staticbatch::moe::config::MoeShape;
+use staticbatch::serve::{FusedServeConfig, FusedStepExecutor, StepExecutor, StepInput};
+use staticbatch::sim::specs::GpuSpec;
+use staticbatch::util::json::Json;
+use staticbatch::workload::transformer::{FusedLayerWorkload, FusedLoad, PaddedDenseFused, SeqSpec};
+
+const SEQS: usize = 64;
+const SEED: u64 = 7;
+
+/// One planned-and-simulated leg of the comparison.
+struct Leg {
+    plans: u64,
+    launches: u64,
+    tiles: u64,
+    metadata_bytes: u64,
+    host_us: f64,
+    time_ms: f64,
+}
+
+impl Leg {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("plans", Json::num(self.plans as f64)),
+            ("launches", Json::num(self.launches as f64)),
+            ("tiles", Json::num(self.tiles as f64)),
+            ("metadata_bytes", Json::num(self.metadata_bytes as f64)),
+            ("host_us", Json::num(round_to(self.host_us, 3))),
+            ("time_ms", Json::num(round_to(self.time_ms, 4))),
+        ])
+    }
+}
+
+/// Round to `digits` decimal places so the emitted JSON stays diffable.
+fn round_to(x: f64, digits: i32) -> f64 {
+    let p = 10f64.powi(digits);
+    (x * p).round() / p
+}
+
+/// Re-derive the FUSED comparison on the report's shape: the fused load
+/// planned once, then the same tasks as two single-phase plans, then the
+/// padded-dense accounting baseline.
+fn compare() -> (Leg, Leg, Leg) {
+    let shape = MoeShape {
+        seq: SEQS,
+        d_model: 4096,
+        d_ff: 2048,
+        experts: 16,
+        top_k: 2,
+        dtype_bytes: 2,
+    };
+    let w = FusedLayerWorkload::new(32, shape);
+    let spec = GpuSpec::h800();
+    let load = FusedLoad::sample_mixed(&shape, SEED);
+    let attn_only = FusedLoad { seqs: load.seqs.clone(), expert_counts: vec![0; shape.experts] };
+    let ffn_only = FusedLoad {
+        seqs: vec![SeqSpec::Empty; shape.seq],
+        expert_counts: load.expert_counts.clone(),
+    };
+
+    let mut sess =
+        ExecutionSession::for_workload(w).gpu(spec.clone()).backend(SimBackend::ours());
+    let fused_plan = sess.plan(&load);
+    let fused_out = sess.run(&load).expect("fused sim step");
+    let attn_plan = sess.plan(&attn_only);
+    let attn_out = sess.run(&attn_only).expect("attention sim step");
+    let ffn_plan = sess.plan(&ffn_only);
+    let ffn_out = sess.run(&ffn_only).expect("ffn sim step");
+    let padded = ExecutionSession::for_workload(w)
+        .gpu(spec)
+        .backend(PaddedDenseFused)
+        .run(&load)
+        .expect("padded-dense step");
+
+    let fused = Leg {
+        plans: 1,
+        launches: 1,
+        tiles: fused_plan.total_tiles() as u64,
+        metadata_bytes: fused_plan.two_stage.metadata_bytes() as u64,
+        host_us: fused_out.sim().host_time_s * 1e6,
+        time_ms: fused_out.time_s() * 1e3,
+    };
+    let sequential = Leg {
+        plans: 2,
+        launches: 2,
+        tiles: (attn_plan.total_tiles() + ffn_plan.total_tiles()) as u64,
+        metadata_bytes: (attn_plan.two_stage.metadata_bytes()
+            + ffn_plan.two_stage.metadata_bytes()) as u64,
+        host_us: (attn_out.sim().host_time_s + ffn_out.sim().host_time_s) * 1e6,
+        time_ms: (attn_out.time_s() + ffn_out.time_s()) * 1e3,
+    };
+    let padded_dense = Leg {
+        plans: 2,
+        launches: 2,
+        tiles: padded.blocks as u64,
+        metadata_bytes: 0,
+        host_us: padded.sim().host_time_s * 1e6,
+        time_ms: padded.time_s() * 1e3,
+    };
+    (fused, sequential, padded_dense)
+}
+
+/// Drive the fused serving executor (accounting mode) through a cycle of
+/// four distinct formed batches: deterministic step count, cache hit/miss
+/// counts, and total simulated seconds.
+fn serve_leg() -> Json {
+    const STEPS: usize = 24;
+    const PATTERNS: usize = 4;
+    const BUCKET: usize = 16;
+    const ROWS: usize = 8;
+    let mut ex = FusedStepExecutor::new(FusedServeConfig {
+        numeric: false,
+        seed: SEED,
+        ..FusedServeConfig::default()
+    });
+    let batches: Vec<Vec<i32>> = (0..PATTERNS)
+        .map(|p| (0..ROWS * BUCKET).map(|i| ((p * 31 + i * 7) % 50) as i32).collect())
+        .collect();
+    let mut sim_s = 0.0;
+    for i in 0..STEPS {
+        let tokens: &[i32] = &batches[i % PATTERNS];
+        let out = ex
+            .execute_step(&StepInput { bucket: BUCKET, rows: ROWS, tokens })
+            .expect("fused sim step");
+        sim_s += out.sim_time_s.expect("accounting step is simulated");
+    }
+    let stats = ex.cache_stats().expect("fused executor caches plans");
+    println!(
+        "serve/fused accounting drive: {STEPS} steps over {PATTERNS} distinct loads, \
+         cache {} hits / {} misses, {:.3} simulated ms",
+        stats.hits,
+        stats.misses,
+        sim_s * 1e3,
+    );
+    Json::obj(vec![
+        ("steps", Json::num(STEPS as f64)),
+        ("distinct_loads", Json::num(PATTERNS as f64)),
+        ("cache_hits", Json::num(stats.hits as f64)),
+        ("cache_misses", Json::num(stats.misses as f64)),
+        ("sim_time_ms_total", Json::num(round_to(sim_s * 1e3, 4))),
+    ])
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    // scan for `--json <path>`, ignoring whatever else cargo bench passes
+    let json_path = args.windows(2).find(|w| w[0] == "--json").map(|w| w[1].clone());
+
+    println!("== FUSED: one heterogeneous plan vs sequential two-plan ==");
+    print!("{}", staticbatch::reports::fused_table(SEQS, SEED));
+
+    let (fused, sequential, padded) = compare();
+    println!(
+        "\nfused vs sequential: {} vs {} launches, host {:.2} vs {:.2} us, \
+         metadata {} vs {} B, time {:.3} vs {:.3} ms ({:.2}x)",
+        fused.launches,
+        sequential.launches,
+        fused.host_us,
+        sequential.host_us,
+        fused.metadata_bytes,
+        sequential.metadata_bytes,
+        fused.time_ms,
+        sequential.time_ms,
+        sequential.time_ms / fused.time_ms.max(1e-12),
+    );
+    println!();
+    let serve = serve_leg();
+
+    assert!(
+        fused.launches < sequential.launches,
+        "fused step must plan strictly fewer launches than the two-plan baseline"
+    );
+    assert!(
+        fused.host_us < sequential.host_us,
+        "fused step must spend less host time than the two-plan baseline"
+    );
+
+    if let Some(path) = json_path {
+        let row = Json::obj(vec![
+            ("seqs", Json::num(SEQS as f64)),
+            ("seed", Json::num(SEED as f64)),
+            ("fused", fused.to_json()),
+            ("sequential", sequential.to_json()),
+            ("padded_dense", padded.to_json()),
+            (
+                "host_saving_us",
+                Json::num(round_to(sequential.host_us - fused.host_us, 3)),
+            ),
+            (
+                "time_speedup",
+                Json::num(round_to(sequential.time_ms / fused.time_ms.max(1e-12), 4)),
+            ),
+            ("serve", serve),
+        ]);
+        // merge into the scenario/serving benches' summary, don't clobber it
+        let mut doc = std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|s| Json::parse(&s).ok())
+            .unwrap_or_else(|| Json::obj(Vec::new()));
+        if let Json::Obj(map) = &mut doc {
+            map.insert("fused_vs_sequential".to_string(), row);
+        }
+        std::fs::write(&path, format!("{doc}\n")).expect("write bench json");
+        println!("\nwrote {path}");
+    }
+}

@@ -10,7 +10,13 @@
 //!   serial one;
 //! * allocations per plan-cache *hit* (via a counting global allocator) —
 //!   the zero-alloc hot-path claim, checked unconditionally: a nonzero
-//!   count fails the bench on any machine.
+//!   count fails the bench on any machine;
+//! * allocations per *serving step* for the sim and fused executors (the
+//!   reusable routing/index/embed buffers): steady-state steps must
+//!   allocate strictly less than the cold first step, gated on any machine;
+//! * whole-grid mapping decode throughput — the run-based
+//!   `map_all_into` prefix scan against the per-block cursor walk it
+//!   replaced, bitwise-checked and reported as blocks/s.
 //!
 //! With `--json <path>` (how `scripts/bench_distill` invokes it) the run
 //! writes the machine-readable summary.  With `--enforce-speedup` the run
@@ -29,10 +35,16 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
+use staticbatch::batching::mapping::{map_all_into, MapCursor, TileMapping};
+use staticbatch::batching::tile_prefix::build_from_counts;
 use staticbatch::exec::{CpuBackend, ExecutionSession, NumericInputs};
 use staticbatch::moe::config::MoeShape;
 use staticbatch::moe::routing::LoadScenario;
+use staticbatch::serve::{
+    FusedServeConfig, FusedStepExecutor, SimServeConfig, SimStepExecutor, StepExecutor, StepInput,
+};
 use staticbatch::util::json::Json;
+use staticbatch::util::rng::Rng;
 use staticbatch::util::stats::Samples;
 use staticbatch::util::tensor::Tensor;
 use staticbatch::workload::ragged::{RaggedAttentionWorkload, RaggedInputs, RaggedScenario};
@@ -206,6 +218,86 @@ fn ragged_hit_allocs_per_lookup() -> f64 {
     (after - before) as f64 / N as f64
 }
 
+/// Allocations for the cold first serving step (plan-cache miss, buffer
+/// growth) and per steady-state step (cache hits, buffers reused in place)
+/// through one executor.  Counts are deterministic: serial, no pool.
+fn serve_allocs(mut ex: impl StepExecutor, bucket: usize, rows: usize) -> (u64, f64) {
+    let tokens: Vec<i32> = (0..rows * bucket).map(|i| (i % 37) as i32).collect();
+    let step = StepInput { bucket, rows, tokens: &tokens };
+    let before = alloc_count();
+    let out = ex.execute_step(&step).expect("cold step");
+    std::hint::black_box(&out);
+    let cold = alloc_count() - before;
+    // one warm step settles allocator/buffer capacities before measuring
+    let out = ex.execute_step(&step).expect("warm step");
+    std::hint::black_box(&out);
+    const N: u64 = 50;
+    let before = alloc_count();
+    for _ in 0..N {
+        let out = ex.execute_step(&step).expect("steady step");
+        std::hint::black_box(&out);
+    }
+    let steady = (alloc_count() - before) as f64 / N as f64;
+    (cold, steady)
+}
+
+/// Whole-grid mapping decode throughput (wall clock): the run-based
+/// `map_all_into` prefix scan against the per-block cursor walk it
+/// replaced, over a large grid, bitwise-checked against each other.
+struct MappingBench {
+    tasks: usize,
+    total_blocks: u64,
+    cursor_blocks_per_s: f64,
+    run_blocks_per_s: f64,
+    bitwise_equal: bool,
+}
+
+fn bench_mapping() -> MappingBench {
+    const TASKS: usize = 4096;
+    const REPS: usize = 200;
+    let mut rng = Rng::new(9);
+    let tiles: Vec<u32> = (0..TASKS).map(|_| rng.below(6) as u32).collect();
+    let prefix = build_from_counts(&tiles);
+    let total: u32 = tiles.iter().sum();
+
+    let mut cursor_out: Vec<TileMapping> = Vec::new();
+    let mut run_out: Vec<TileMapping> = Vec::new();
+    let cursor_walk = |out: &mut Vec<TileMapping>| {
+        out.clear();
+        out.reserve(total as usize);
+        let mut c = MapCursor::new();
+        for b in 0..total {
+            out.push(c.map(&prefix, b));
+        }
+    };
+    // warmup both paths (buffer growth, cache residency)
+    cursor_walk(&mut cursor_out);
+    map_all_into(&prefix, total, &mut run_out);
+    let bitwise_equal = cursor_out == run_out;
+
+    let t0 = Instant::now();
+    for _ in 0..REPS {
+        cursor_walk(&mut cursor_out);
+        std::hint::black_box(&cursor_out);
+    }
+    let cursor_s = t0.elapsed().as_secs_f64().max(1e-12);
+    let t0 = Instant::now();
+    for _ in 0..REPS {
+        map_all_into(&prefix, total, &mut run_out);
+        std::hint::black_box(&run_out);
+    }
+    let run_s = t0.elapsed().as_secs_f64().max(1e-12);
+
+    let blocks = total as u64 * REPS as u64;
+    MappingBench {
+        tasks: TASKS,
+        total_blocks: total as u64,
+        cursor_blocks_per_s: blocks as f64 / cursor_s,
+        run_blocks_per_s: blocks as f64 / run_s,
+        bitwise_equal,
+    }
+}
+
 fn sweep(name: &str, bench: impl Fn(usize) -> (Run, Tensor)) -> Vec<Run> {
     let (serial, serial_out) = bench(1);
     let mut runs = vec![serial];
@@ -245,6 +337,36 @@ fn main() {
     let moe_hit_allocs = moe_hit_allocs_per_lookup();
     let ragged_hit_allocs = ragged_hit_allocs_per_lookup();
     println!("plan-cache hit allocs/lookup: moe {moe_hit_allocs}, ragged {ragged_hit_allocs}");
+
+    // serve-path allocations per step (serial executors: no pool threads
+    // can touch the counter mid-measurement)
+    let (sim_cold, sim_steady) = serve_allocs(
+        SimStepExecutor::new(SimServeConfig { threads: 1, ..SimServeConfig::default() }),
+        16,
+        8,
+    );
+    let (fused_cold, fused_steady) = serve_allocs(
+        FusedStepExecutor::new(FusedServeConfig { threads: 1, ..FusedServeConfig::default() }),
+        16,
+        8,
+    );
+    println!(
+        "serve allocs/step (cold -> steady): sim {sim_cold} -> {sim_steady}, \
+         fused {fused_cold} -> {fused_steady}"
+    );
+    println!();
+
+    let mapping = bench_mapping();
+    println!(
+        "mapping decode ({} tasks, {} blocks/grid): cursor {:.0} blocks/s, \
+         run-based {:.0} blocks/s ({:.2}x), bitwise {}",
+        mapping.tasks,
+        mapping.total_blocks,
+        mapping.cursor_blocks_per_s,
+        mapping.run_blocks_per_s,
+        mapping.run_blocks_per_s / mapping.cursor_blocks_per_s.max(1e-12),
+        if mapping.bitwise_equal { "ok" } else { "FAIL" },
+    );
     println!();
 
     let moe_runs = sweep("moe", bench_moe);
@@ -256,6 +378,19 @@ fn main() {
     }
     if ragged_hit_allocs != 0.0 {
         failures.push(format!("ragged plan-cache hit allocates ({ragged_hit_allocs}/lookup)"));
+    }
+    if sim_steady >= sim_cold as f64 {
+        failures.push(format!(
+            "sim serve step does not reuse buffers ({sim_steady}/step steady vs {sim_cold} cold)"
+        ));
+    }
+    if fused_steady >= fused_cold as f64 {
+        failures.push(format!(
+            "fused serve step does not reuse buffers ({fused_steady}/step steady vs {fused_cold} cold)"
+        ));
+    }
+    if !mapping.bitwise_equal {
+        failures.push("run-based map_all_into diverges from the cursor walk".to_string());
     }
     for (name, runs) in [("moe", &moe_runs), ("ragged", &ragged_runs)] {
         for r in runs {
@@ -304,6 +439,48 @@ fn main() {
                 Json::obj(vec![
                     ("moe_hit_allocs_per_lookup", Json::num(moe_hit_allocs)),
                     ("ragged_hit_allocs_per_lookup", Json::num(ragged_hit_allocs)),
+                ]),
+            ),
+            (
+                "serve_allocs_per_step",
+                Json::obj(vec![
+                    (
+                        "sim",
+                        Json::obj(vec![
+                            ("cold", Json::num(sim_cold as f64)),
+                            ("steady", Json::num(sim_steady)),
+                        ]),
+                    ),
+                    (
+                        "fused",
+                        Json::obj(vec![
+                            ("cold", Json::num(fused_cold as f64)),
+                            ("steady", Json::num(fused_steady)),
+                        ]),
+                    ),
+                ]),
+            ),
+            (
+                "mapping_decode",
+                Json::obj(vec![
+                    ("tasks", Json::num(mapping.tasks as f64)),
+                    ("blocks_per_grid", Json::num(mapping.total_blocks as f64)),
+                    (
+                        "cursor_blocks_per_s",
+                        Json::num(round_to(mapping.cursor_blocks_per_s, 0)),
+                    ),
+                    (
+                        "run_based_blocks_per_s",
+                        Json::num(round_to(mapping.run_blocks_per_s, 0)),
+                    ),
+                    (
+                        "speedup",
+                        Json::num(round_to(
+                            mapping.run_blocks_per_s / mapping.cursor_blocks_per_s.max(1e-12),
+                            2,
+                        )),
+                    ),
+                    ("bitwise_equal", Json::Bool(mapping.bitwise_equal)),
                 ]),
             ),
         ]);

@@ -157,15 +157,37 @@ pub fn map_all(prefix: &[u32], total: u32) -> Vec<TileMapping> {
     out
 }
 
-/// [`map_all`] into a caller-provided buffer (cleared first) via a
-/// [`MapCursor`] — no per-step allocation once the buffer has grown to the
-/// steady-state grid size, and O(total + N) instead of O(total × N).
+/// [`map_all`] into a caller-provided buffer (cleared first) — no per-step
+/// allocation once the buffer has grown to the steady-state grid size.
+///
+/// Chunked prefix scan: instead of walking a [`MapCursor`] per block (one
+/// prefix comparison *per block*), each prefix entry emits its whole
+/// contiguous block run `[prefix[h-1], prefix[h])` at once as tiles
+/// `0..count` — one pass over the prefix, one branch per *task*, and a
+/// straight sequential fill of `out`.  O(total + N) like the cursor walk,
+/// but with the per-block compare/branch traffic deleted; bitwise-equal to
+/// the cursor (the tests pin it), including PAD_MAX sentinels, repeat-last
+/// padding, and `total` short of or beyond the prefix coverage.
 pub fn map_all_into(prefix: &[u32], total: u32, out: &mut Vec<TileMapping>) {
     out.clear();
     out.reserve(total as usize);
-    let mut cursor = MapCursor::new();
-    for b in 0..total {
-        out.push(cursor.map(prefix, b));
+    let mut base = 0u32; // first block of task `tasks_done`'s run
+    let mut tasks_done = 0u32;
+    for &p in prefix {
+        if p == PAD_MAX || base >= total {
+            break;
+        }
+        let end = p.min(total);
+        for tile in 0..end.saturating_sub(base) {
+            out.push(TileMapping { task: tasks_done, tile });
+        }
+        base = base.max(end);
+        tasks_done += 1;
+    }
+    // blocks past the scanned prefix (sentinel hit, or total beyond the
+    // coverage) — exactly where a cursor's scan would have stopped
+    for b in base..total {
+        out.push(TileMapping { task: tasks_done, tile: b - base });
     }
 }
 

@@ -22,6 +22,13 @@ pub enum TaskKind {
     /// [`crate::workload::ragged::KV_CATALOG`]).  `rows` is the KV length,
     /// `cols` the head count, `inner` the head dim.
     AttentionDecode { strategy: usize },
+    /// One chunk of causal prefill attention over a prompt, chunked by the
+    /// prefill tiling strategy `strategy` (index into
+    /// [`crate::workload::transformer::PREFILL_CATALOG`]).  `rows` is the
+    /// prompt length, `cols` the head count, `inner` the head dim.  Cost
+    /// model charges full chunked causal attention; see the transformer
+    /// module for the numerics it stands for.
+    PrefillChunk { strategy: usize },
 }
 
 impl TaskKind {
@@ -34,6 +41,9 @@ impl TaskKind {
             // ids 4.. stay clear of the GEMM range (16..) for any
             // realistically sized KV catalog
             TaskKind::AttentionDecode { strategy } => 4 + strategy,
+            // ids 8.. sit between the KV catalog (4..8) and the GEMM
+            // range (16..)
+            TaskKind::PrefillChunk { strategy } => 8 + strategy,
         }
     }
 }
@@ -82,6 +92,11 @@ impl TaskDescriptor {
             TaskKind::AttentionDecode { .. } => {
                 4 * self.rows as u64 * self.cols as u64 * self.inner as u64
             }
+            // causal prefill per head: QKᵀ + PV over all P·(P+1)/2 causal
+            // pairs → 4·D·P(P+1)/2 = 2·P·(P+1)·D
+            TaskKind::PrefillChunk { .. } => {
+                2 * self.rows as u64 * (self.rows as u64 + 1) * self.cols as u64 * self.inner as u64
+            }
         }
     }
 
@@ -101,6 +116,13 @@ impl TaskDescriptor {
                 // K + V reads per head, plus the query and output vectors
                 2 * self.rows as u64 * self.cols as u64 * self.inner as u64
                     + 2 * self.cols as u64 * self.inner as u64
+            }
+            TaskKind::PrefillChunk { .. } => {
+                // causal chunked prefill: every query chunk re-streams the
+                // KV prefix (≈ half the prompt on average), plus the Q and
+                // O blocks once per head
+                let chunks = self.rows.div_ceil(self.tile_rows) as u64;
+                (chunks + 2) * self.rows as u64 * self.cols as u64 * self.inner as u64
             }
         }
     }
@@ -144,6 +166,8 @@ mod tests {
             TaskKind::ElementWise.dispatch_id(),
             TaskKind::AttentionDecode { strategy: 0 }.dispatch_id(),
             TaskKind::AttentionDecode { strategy: 3 }.dispatch_id(),
+            TaskKind::PrefillChunk { strategy: 0 }.dispatch_id(),
+            TaskKind::PrefillChunk { strategy: 3 }.dispatch_id(),
             TaskKind::Gemm { strategy: 0 }.dispatch_id(),
             TaskKind::Gemm { strategy: 1 }.dispatch_id(),
         ];

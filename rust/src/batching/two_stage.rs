@@ -70,12 +70,27 @@ impl TwoStageMap {
     /// Decode the whole grid (σ applied) into a caller-provided buffer,
     /// cleared first — zero allocations once the buffer reaches the
     /// steady-state grid size, O(total + M) total work.
+    ///
+    /// Run-based like [`crate::batching::mapping::map_all_into`]: each
+    /// non-empty task's contiguous block run is emitted in one inner loop
+    /// with σ applied *once per task* instead of once per block — the
+    /// whole-grid decode the mapping-throughput bench row measures.
     pub fn map_all_into(&self, out: &mut Vec<TileMapping>) {
         out.clear();
         out.reserve(self.total_tiles as usize);
-        let mut cursor = MapCursor::new();
-        for b in 0..self.total_tiles {
-            out.push(self.map_with_cursor(&mut cursor, b));
+        let mut base = 0u32;
+        for (h, &p) in self.tile_prefix.iter().enumerate() {
+            if base >= self.total_tiles {
+                break;
+            }
+            let end = p.min(self.total_tiles);
+            if end > base {
+                let task = self.sigma[h];
+                for tile in 0..end - base {
+                    out.push(TileMapping { task, tile });
+                }
+                base = end;
+            }
         }
     }
 

@@ -8,6 +8,8 @@
 //!   empty-tasks   empty-task two-stage mapping ablation (A4)
 //!   token-copy    token-copy elimination accounting (A5)
 //!   ragged        ragged-attention decode (second workload) vs padded-dense
+//!   fused         fused transformer-layer step (attention + prefill + routed
+//!                 FFN under one σ) vs the two-plan sequential baseline
 //!   sweep         zipf imbalance sweep, ours vs grouped GEMM
 //!   simulate      one scenario end to end with the wave trace
 //!   plan          print the static batch plan for a scenario
@@ -78,6 +80,7 @@ fn main() {
             0
         }
         "ragged" => cmd_ragged(rest),
+        "fused" => cmd_fused(rest),
         "sweep" => cmd_sweep(rest),
         "simulate" => cmd_simulate(rest),
         "plan" => cmd_plan(rest),
@@ -90,8 +93,8 @@ fn main() {
             eprintln!(
                 "staticbatch {} — static batching of irregular workloads\n\n\
                  usage: staticbatch <table1|baselines|mapping|ordering|empty-tasks|swizzle|\n\
-                        token-copy|ragged|sweep|simulate|plan|serve|serve-sim|scenario|client|\n\
-                        selftest> [flags]\n\
+                        token-copy|ragged|fused|sweep|simulate|plan|serve|serve-sim|scenario|\n\
+                        client|selftest> [flags]\n\
                  run a subcommand with --help for its flags",
                 staticbatch::VERSION
             );
@@ -113,6 +116,28 @@ fn cmd_ragged(args: &[String]) -> i32 {
             print!(
                 "{}",
                 reports::ragged_table(p.usize("seqs").unwrap_or(256).max(1), p.u64("seed").unwrap_or(0))
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            2
+        }
+    }
+}
+
+/// The fused transformer-layer step (heterogeneous task kinds under one σ)
+/// vs running ragged attention and the routed FFN as two sequential plans,
+/// and vs the two-launch padded-dense scheme, on the GPU simulator.
+fn cmd_fused(args: &[String]) -> i32 {
+    let cmd = Command::new("fused", "fused transformer-layer step vs sequential / padded-dense")
+        .flag("seqs", Some("64"), "sequence slots in the formed batch")
+        .flag("seed", Some("0"), "traffic sampling seed");
+    match cmd.parse(args) {
+        Ok(p) => {
+            print!(
+                "{}",
+                reports::fused_table(p.usize("seqs").unwrap_or(64).max(4), p.u64("seed").unwrap_or(0))
             );
             0
         }
@@ -270,12 +295,18 @@ fn cmd_serve(_args: &[String]) -> i32 {
 fn cmd_serve_sim(args: &[String]) -> i32 {
     use staticbatch::coordinator::batcher::BatchPolicy;
     use staticbatch::serve::{
-        run_traffic, ChaosConfig, ChaosStepExecutor, PlacementKind, RetryPolicy, Server,
-        ServerConfig, ShardedServeConfig, ShardedStepExecutor, SimServeConfig, SimStepExecutor,
-        StepExecutor, TrafficConfig,
+        run_traffic, ChaosConfig, ChaosStepExecutor, FusedServeConfig, FusedStepExecutor,
+        PlacementKind, RetryPolicy, Server, ServerConfig, ShardedServeConfig, ShardedStepExecutor,
+        SimServeConfig, SimStepExecutor, StepExecutor, TrafficConfig,
     };
 
     let cmd = Command::new("serve-sim", "synthetic traffic through the sim serving core")
+        .flag(
+            "workload",
+            Some("moe"),
+            "per-step workload: moe (expert FFN only) | fused (whole transformer \
+             layer: ragged attention + chunked prefill + routed FFN as one plan)",
+        )
         .flag("requests", Some("256"), "requests to send")
         .flag("rate", Some("500"), "open-loop request rate (req/s); 0 = burst")
         .flag("alpha", Some("1.2"), "zipf exponent for tokens and prompt popularity")
@@ -354,6 +385,11 @@ fn cmd_serve_sim(args: &[String]) -> i32 {
     };
     let ep = p.usize("ep").unwrap_or(1).max(1);
     let tp = p.usize("tp").unwrap_or(1).max(1);
+    let workload = p.str("workload");
+    if workload != "moe" && workload != "fused" {
+        eprintln!("unknown workload '{workload}' (moe|fused)");
+        return 2;
+    }
 
     fn drive<E: StepExecutor>(
         executor: E,
@@ -378,6 +414,26 @@ fn cmd_serve_sim(args: &[String]) -> i32 {
         }
     }
 
+    if workload == "fused" {
+        if ep > 1 || tp > 1 {
+            eprintln!("--workload fused is single-lane; drop --ep/--tp (use top_k=1 routing for shard-equivalent behavior)");
+            return 2;
+        }
+        let fused_cfg = FusedServeConfig {
+            experts: sim_cfg.experts,
+            top_k: sim_cfg.top_k,
+            cache_capacity: sim_cfg.cache_capacity,
+            numeric: sim_cfg.numeric,
+            threads: sim_cfg.threads,
+            seed: sim_cfg.seed,
+            ..FusedServeConfig::default()
+        };
+        let executor = FusedStepExecutor::new(fused_cfg);
+        return match chaos {
+            Some(c) => drive(ChaosStepExecutor::new(executor, c), server_cfg, traffic),
+            None => drive(executor, server_cfg, traffic),
+        };
+    }
     if ep > 1 || tp > 1 {
         let placement = match PlacementKind::from_name(&p.str("placement")) {
             Some(k) => k,

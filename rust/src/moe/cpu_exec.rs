@@ -50,7 +50,7 @@ struct ExecCtx<'a> {
 /// `clear` + `resize` — bitwise-identical to fresh zeroed allocations, so
 /// reuse never changes numerics.
 #[derive(Default)]
-struct GemmScratch {
+pub(crate) struct GemmScratch {
     /// tile-local `[rows, cols]` output
     local: Vec<f32>,
     /// column-sliced `[k, cols]` weight view
@@ -62,7 +62,7 @@ struct GemmScratch {
 /// by the serial framework dispatch and [`execute_parallel`]: both visit a
 /// task's tiles in ascending order and call this, so their packed regions
 /// are bit-identical.
-fn run_gemm_tile(
+pub(crate) fn run_gemm_tile(
     inputs: &MoeInputs,
     task: &ExpertTask,
     desc: &TaskDescriptor,
@@ -106,10 +106,23 @@ fn run_gemm_tile(
 /// Shared by the serial and parallel executors — same traversal order,
 /// same float additions, so the two paths agree bitwise.
 fn combine_regions(plan: &ExecutionPlan, inputs: &MoeInputs, regions: &[&[f32]]) -> Tensor {
-    let shape = plan.shape();
-    let d_ff = shape.d_ff;
-    let mut out = Tensor::zeros(&[shape.seq, d_ff]);
-    for (ti, task) in plan.tasks.iter().enumerate() {
+    combine_task_regions(&plan.tasks, plan.shape().seq, plan.shape().d_ff, inputs, regions)
+}
+
+/// The combine loop behind [`combine_regions`], parameterised on the expert
+/// task slice so heterogeneous plans (fused transformer layer) can reuse it
+/// on just their GEMM-phase tasks.  Walks tasks in the given (grid) order —
+/// the float addition order, and therefore the bitwise result, is fully
+/// determined by that order.
+pub(crate) fn combine_task_regions(
+    tasks: &[ExpertTask],
+    seq: usize,
+    d_ff: usize,
+    inputs: &MoeInputs,
+    regions: &[&[f32]],
+) -> Tensor {
+    let mut out = Tensor::zeros(&[seq, d_ff]);
+    for (ti, task) in tasks.iter().enumerate() {
         let e = task.expert as usize;
         for (pos, &tok) in inputs.token_index.index[e].iter().enumerate() {
             let g = inputs.gates[e][pos];

@@ -63,6 +63,20 @@ impl TokenIndex {
         TokenIndex { index }
     }
 
+    /// In-place [`TokenIndex::build`]: clear and refill the per-expert
+    /// lists, reusing their capacity.  The zero-alloc per-step path of the
+    /// serving executors — same result as `build`, no fresh `Vec`s once
+    /// the lists reach steady-state size.
+    pub fn rebuild(&mut self, num_experts: usize, pairs: &[(u32, u32)]) {
+        self.index.resize(num_experts, Vec::new());
+        for v in &mut self.index {
+            v.clear();
+        }
+        for &(token, expert) in pairs {
+            self.index[expert as usize].push(token);
+        }
+    }
+
     pub fn counts(&self) -> Vec<usize> {
         self.index.iter().map(|v| v.len()).collect()
     }
@@ -134,6 +148,20 @@ mod tests {
         assert_eq!(idx, 4 * 8000);
         assert_eq!(copies, 8000 * 3584 * 2);
         assert!(copies > idx * 1000);
+    }
+
+    #[test]
+    fn rebuild_matches_build_and_reuses_capacity() {
+        let a = pairs(200, 2, 8, 11);
+        let b = pairs(40, 2, 8, 12);
+        let mut ti = TokenIndex::build(8, &a);
+        let caps: Vec<usize> = ti.index.iter().map(|v| v.capacity()).collect();
+        ti.rebuild(8, &b);
+        assert_eq!(ti, TokenIndex::build(8, &b));
+        // shrinking traffic keeps the grown capacity (no realloc next step)
+        for (v, &c) in ti.index.iter().zip(&caps) {
+            assert!(v.capacity() >= c);
+        }
     }
 
     #[test]

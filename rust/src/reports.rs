@@ -500,6 +500,91 @@ pub fn ragged_table(seqs: usize, seed: u64) -> String {
     t.render()
 }
 
+/// **FUSED**: the fused transformer-layer super-workload — ragged decode
+/// attention, chunked causal prefill, and routed expert-FFN GEMMs planned
+/// as **one** static batch under a single σ — against (a) the same tasks
+/// split into two sequential plans (attention plan then FFN plan: two
+/// launches, two metadata ships, two host-overhead charges) and (b) the
+/// two-launch padded-dense scheme.  The sequential rows run the *same*
+/// fused workload with one phase blanked, so the per-tile work is identical
+/// by construction and the delta is pure launch + mapping overhead.
+pub fn fused_table(seqs: usize, seed: u64) -> String {
+    use crate::workload::transformer::{FusedLayerWorkload, FusedLoad, PaddedDenseFused, SeqSpec};
+
+    let shape = MoeShape {
+        seq: seqs,
+        d_model: 4096,
+        d_ff: 2048,
+        experts: 16,
+        top_k: 2,
+        dtype_bytes: 2,
+    };
+    let w = FusedLayerWorkload::new(32, shape);
+    let spec = GpuSpec::h800();
+    let load = FusedLoad::sample_mixed(&shape, seed);
+    // the same tasks as two sequential single-phase plans
+    let attn_only =
+        FusedLoad { seqs: load.seqs.clone(), expert_counts: vec![0; shape.experts] };
+    let ffn_only = FusedLoad {
+        seqs: vec![SeqSpec::Empty; shape.seq],
+        expert_counts: load.expert_counts.clone(),
+    };
+
+    let mut sess =
+        ExecutionSession::for_workload(w).gpu(spec.clone()).backend(SimBackend::ours());
+    let fused_plan = sess.plan(&load);
+    let fused = sess.run(&load).unwrap();
+    let attn_plan = sess.plan(&attn_only);
+    let attn = sess.run(&attn_only).unwrap();
+    let ffn_plan = sess.plan(&ffn_only);
+    let ffn = sess.run(&ffn_only).unwrap();
+    let padded = ExecutionSession::for_workload(w)
+        .gpu(spec)
+        .backend(PaddedDenseFused)
+        .run(&load)
+        .unwrap();
+
+    let seq_time = attn.time_s() + ffn.time_s();
+    let seq_host = attn.sim().host_time_s + ffn.sim().host_time_s;
+    let seq_meta =
+        attn_plan.two_stage.metadata_bytes() + ffn_plan.two_stage.metadata_bytes();
+
+    let mut t = Table::new(&[
+        "impl", "plans", "launches", "tiles", "metadata(B)", "host(us)", "time(ms)", "vs fused",
+    ]);
+    t.row(&[
+        "fused one-plan".into(),
+        "1".into(),
+        "1".into(),
+        fused_plan.total_tiles().to_string(),
+        fused_plan.two_stage.metadata_bytes().to_string(),
+        format!("{:.2}", fused.sim().host_time_s * 1e6),
+        format!("{:.3}", fused.time_s() * 1e3),
+        "1.00x".into(),
+    ]);
+    t.row(&[
+        "sequential two-plan".into(),
+        "2".into(),
+        "2".into(),
+        (attn_plan.total_tiles() + ffn_plan.total_tiles()).to_string(),
+        seq_meta.to_string(),
+        format!("{:.2}", seq_host * 1e6),
+        format!("{:.3}", seq_time * 1e3),
+        format!("{:.2}x", seq_time / fused.time_s()),
+    ]);
+    t.row(&[
+        "padded-dense".into(),
+        "2".into(),
+        "2".into(),
+        padded.blocks.to_string(),
+        "0".into(),
+        format!("{:.2}", padded.sim().host_time_s * 1e6),
+        format!("{:.3}", padded.time_s() * 1e3),
+        format!("{:.2}x", padded.time_s() / fused.time_s()),
+    ]);
+    t.render()
+}
+
 /// Zipf-imbalance sweep: ours vs grouped GEMM crossover analysis.
 pub fn sweep_table(gpu: &str, seeds: u64) -> String {
     let spec = GpuSpec::by_name(gpu).unwrap_or_else(GpuSpec::h800);
@@ -609,6 +694,24 @@ mod tests {
                 assert!(speedup > 1.5, "skewed lengths must pad heavily: {line}");
             }
         }
+    }
+
+    #[test]
+    fn fused_table_plans_once_and_beats_sequential_on_overhead() {
+        let s = super::fused_table(64, 7);
+        assert_eq!(s.lines().count(), 2 + 3, "header + fused/sequential/padded rows:\n{s}");
+        let cell = |line: &str, i: usize| line.split('|').nth(i).unwrap().trim().to_string();
+        let rows: Vec<&str> = s.lines().skip(2).collect();
+        // strictly fewer launches than the two-plan baseline
+        assert_eq!(cell(rows[0], 3), "1");
+        assert_eq!(cell(rows[1], 3), "2");
+        // and strictly less host (launch + metadata) overhead
+        let host: Vec<f64> = rows.iter().map(|r| cell(r, 6).parse().unwrap()).collect();
+        assert!(host[0] < host[1], "fused host {} !< sequential {}:\n{s}", host[0], host[1]);
+        // sequential row is slower overall (vs-fused ratio above 1)
+        let ratio: f64 =
+            cell(rows[1], 8).trim_end_matches('x').parse().unwrap();
+        assert!(ratio > 1.0, "sequential must cost more than fused:\n{s}");
     }
 
     #[test]

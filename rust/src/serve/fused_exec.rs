@@ -1,0 +1,376 @@
+//! [`FusedStepExecutor`]: the whole-transformer-layer serving path.
+//!
+//! Where [`crate::serve::SimStepExecutor`] runs each formed batch through
+//! the MoE expert-FFN workload alone, this executor plans the batch as one
+//! [`crate::workload::transformer::FusedLayerWorkload`] step: every request
+//! row becomes a sequence slot — freshly admitted prompts prefill in causal
+//! chunks, established requests decode over their KV — and each slot's
+//! attention output routes to `top_k` experts, all under **one** σ, one
+//! TilePrefix, one launch.  The plan cache keys on the composite signature
+//! (per-slot `(kind, kv span)` plus per-expert counts), so repeated traffic
+//! skips planning exactly like the single-workload executors.
+//!
+//! The per-row prefill/decode split and KV spans derive deterministically
+//! from the row's leading token id, so identical traffic produces identical
+//! loads (cache hits) and identical numerics — and the executor never needs
+//! request-lifecycle state the serving loop doesn't carry.
+//!
+//! Per-step buffers (routing pairs, sequence specs, expert counts, Q rows,
+//! KV tensors, token-index lists, gate vectors) live for the life of the
+//! executor and are rewritten in place each step — the zero-alloc step path
+//! the `perf` bench measures.
+
+use crate::exec::{CpuBackend, ExecError, ExecutionSession};
+use crate::moe::config::MoeShape;
+use crate::moe::plan_cache::CacheStats;
+use crate::moe::token_index::TokenIndex;
+use crate::serve::sim_exec::{argmax_row, expert_weights, route_topk_into, synthetic_argmax};
+use crate::serve::{StepExecutor, StepInput, StepOutput};
+use crate::util::rng::SplitMix64;
+use crate::util::tensor::Tensor;
+use crate::workload::ragged::RaggedInputs;
+use crate::workload::transformer::{FusedInputs, FusedLayerWorkload, FusedLoad, SeqSpec};
+
+/// Configuration of the fused transformer-layer serving executor.
+#[derive(Clone, Debug)]
+pub struct FusedServeConfig {
+    /// Sequence buckets offered to the batcher, ascending.
+    pub buckets: Vec<usize>,
+    /// Sequence-slot capacity of one formed batch (the fused workload's
+    /// `shape.seq`); at most this many requests ride one step.
+    pub seq_slots: usize,
+    /// Attention heads (must divide `d_model`).
+    pub heads: usize,
+    /// Experts in the routed FFN.
+    pub experts: usize,
+    /// Experts each slot's attention output routes to.
+    pub top_k: usize,
+    /// Activation width (`heads * head_dim`).
+    pub d_model: usize,
+    /// Expert FFN width.
+    pub d_ff: usize,
+    /// LRU capacity of the plan cache.
+    pub cache_capacity: usize,
+    /// Real CPU numerics through the fused dispatch (true) or
+    /// accounting-only simulation (false — one simulated launch per step).
+    pub numeric: bool,
+    /// Worker threads for the numeric backend (bitwise-equal to serial).
+    pub threads: usize,
+    /// Seed for the synthetic expert weights, Q rows, and KV caches.
+    pub seed: u64,
+}
+
+impl Default for FusedServeConfig {
+    fn default() -> Self {
+        FusedServeConfig {
+            buckets: vec![16, 64, 256],
+            seq_slots: 64,
+            heads: 4,
+            experts: 16,
+            top_k: 2,
+            d_model: 32,
+            d_ff: 64,
+            cache_capacity: 128,
+            numeric: true,
+            threads: 1,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// What one request row is doing this step, derived deterministically from
+/// its leading token id `v`: every fourth id (`|v| % 4 == 0`) is treated as
+/// a freshly admitted prompt in chunked prefill, the rest decode over a KV
+/// span spread across the KV chunk catalog.
+pub fn row_spec(v: i32, bucket: usize) -> SeqSpec {
+    let base = v.unsigned_abs() as usize;
+    if base % 4 == 0 {
+        SeqSpec::Prefill { len: bucket + base % 121 }
+    } else {
+        SeqSpec::Decode { kv_len: 1 + base % 257 }
+    }
+}
+
+/// The fused-layer [`StepExecutor`].  See module docs.
+pub struct FusedStepExecutor {
+    cfg: FusedServeConfig,
+    shape: MoeShape,
+    session: ExecutionSession<FusedLayerWorkload>,
+    /// Reusable per-step buffers (zero-alloc step path).
+    row_tokens: Vec<i32>,
+    pairs: Vec<(u32, u32)>,
+    load: FusedLoad,
+    steps: u64,
+}
+
+impl FusedStepExecutor {
+    /// Build the executor: one long-lived fused session (plan cache
+    /// included) plus the synthetic expert weights and empty KV slots.
+    /// Panics on inconsistent configuration.
+    pub fn new(cfg: FusedServeConfig) -> Self {
+        assert!(!cfg.buckets.is_empty(), "at least one bucket");
+        assert!(cfg.top_k >= 1 && cfg.top_k <= cfg.experts, "1 <= top_k <= experts");
+        let shape = MoeShape {
+            seq: cfg.seq_slots,
+            d_model: cfg.d_model,
+            d_ff: cfg.d_ff,
+            experts: cfg.experts,
+            top_k: cfg.top_k,
+            dtype_bytes: 4,
+        };
+        let workload = FusedLayerWorkload::new(cfg.heads, shape);
+        let mut session = ExecutionSession::for_workload(workload)
+            .plan_cache(cfg.cache_capacity)
+            .threads(cfg.threads);
+        if cfg.numeric {
+            session = session.backend(CpuBackend).inputs(FusedInputs {
+                attn: RaggedInputs {
+                    q: Tensor::zeros(&[cfg.seq_slots, cfg.d_model]),
+                    keys: vec![Tensor::zeros(&[0, cfg.d_model]); cfg.seq_slots],
+                    values: vec![Tensor::zeros(&[0, cfg.d_model]); cfg.seq_slots],
+                },
+                expert_weights: expert_weights(cfg.experts, cfg.d_model, cfg.d_ff, cfg.seed),
+                token_index: TokenIndex { index: vec![Vec::new(); cfg.experts] },
+                gates: vec![Vec::new(); cfg.experts],
+            });
+        }
+        let load = FusedLoad {
+            seqs: vec![SeqSpec::Empty; cfg.seq_slots],
+            expert_counts: vec![0; cfg.experts],
+        };
+        FusedStepExecutor {
+            cfg,
+            shape,
+            session,
+            row_tokens: Vec::new(),
+            pairs: Vec::new(),
+            load,
+            steps: 0,
+        }
+    }
+
+    /// The session's problem shape (`seq` is the slot capacity).
+    pub fn shape(&self) -> MoeShape {
+        self.shape
+    }
+
+    /// Steps executed so far.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Derive this step's fused load in place: one [`SeqSpec`] per request
+    /// row (remaining slots [`SeqSpec::Empty`], σ-elided), and per-expert
+    /// counts from routing each row's attention output.
+    fn form_load(&mut self, step: &StepInput<'_>) {
+        self.row_tokens.clear();
+        self.row_tokens.extend((0..step.rows).map(|r| step.tokens[r * step.bucket]));
+        self.load.seqs.clear();
+        self.load
+            .seqs
+            .extend(self.row_tokens.iter().map(|&v| row_spec(v, step.bucket)));
+        self.load.seqs.resize(self.cfg.seq_slots, SeqSpec::Empty);
+        route_topk_into(&self.row_tokens, self.cfg.experts, self.cfg.top_k, &mut self.pairs);
+        self.load.expert_counts.clear();
+        self.load.expert_counts.resize(self.cfg.experts, 0);
+        for &(_, e) in &self.pairs {
+            self.load.expert_counts[e as usize] += 1;
+        }
+    }
+}
+
+/// Deterministic refill of one slot's KV tensor for a span of `kv` rows:
+/// reallocates only when the span changed, rewrites in place otherwise.
+fn refill_kv(t: &mut Tensor, kv: usize, width: usize, salt: u64, amp: f32) {
+    if t.shape != [kv, width] {
+        *t = Tensor::zeros(&[kv, width]);
+    }
+    let mut sm = SplitMix64(salt);
+    for x in &mut t.data {
+        *x = ((sm.next_u64() >> 40) as f32 / (1u64 << 24) as f32 - 0.5) * amp;
+    }
+}
+
+impl StepExecutor for FusedStepExecutor {
+    fn name(&self) -> &'static str {
+        if self.cfg.numeric {
+            "serve/fused+cpu"
+        } else {
+            "serve/fused"
+        }
+    }
+
+    fn buckets(&self) -> Vec<usize> {
+        self.cfg.buckets.clone()
+    }
+
+    fn max_step_tokens(&self) -> Option<usize> {
+        // rows * bucket <= slots * min_bucket  ==>  rows <= slots
+        let min_bucket = self.cfg.buckets.iter().copied().min().unwrap_or(1);
+        Some(self.cfg.seq_slots * min_bucket)
+    }
+
+    fn execute_step(&mut self, step: &StepInput<'_>) -> Result<StepOutput, ExecError> {
+        let total = step.rows * step.bucket;
+        if step.rows > self.cfg.seq_slots {
+            return Err(ExecError::PlanMismatch {
+                backend: self.name(),
+                detail: format!(
+                    "batch of {} rows exceeds the {} sequence slots",
+                    step.rows, self.cfg.seq_slots
+                ),
+            });
+        }
+        debug_assert_eq!(step.tokens.len(), total);
+        self.form_load(step);
+        if self.cfg.numeric {
+            let gate = 1.0 / self.cfg.top_k as f32;
+            let (experts, seed) = (self.cfg.experts, self.cfg.seed);
+            let d_model = self.cfg.d_model;
+            let (row_tokens, seqs, pairs) = (&self.row_tokens, &self.load.seqs, &self.pairs);
+            let inputs = self.session.inputs_mut().expect("numeric session holds inputs");
+            // Q row per active slot, seeded by the row's leading token id
+            for (r, &v) in row_tokens.iter().enumerate() {
+                let mut sm =
+                    SplitMix64((v as i64 as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ seed);
+                for x in inputs.attn.q.row_mut(r) {
+                    *x = (sm.next_u64() >> 40) as f32 / (1u64 << 24) as f32 - 0.5;
+                }
+            }
+            // KV cache per slot, seeded by (slot, span, kind)
+            for (s, spec) in seqs.iter().enumerate() {
+                let kv = spec.kv_len();
+                let salt = seed
+                    ^ ((s as u64) << 32)
+                    ^ ((kv as u64) << 4)
+                    ^ match spec {
+                        SeqSpec::Prefill { .. } => 2,
+                        _ => 1,
+                    };
+                refill_kv(&mut inputs.attn.keys[s], kv, d_model, salt, 0.5);
+                refill_kv(&mut inputs.attn.values[s], kv, d_model, salt.rotate_left(17), 1.0);
+            }
+            inputs.token_index.rebuild(experts, pairs);
+            for (g, rows) in inputs.gates.iter_mut().zip(&inputs.token_index.index) {
+                g.clear();
+                g.resize(rows.len(), gate);
+            }
+        }
+        let out = self.session.run(&self.load)?;
+        let argmax = match &out.output {
+            // real numerics: each request row's [d_ff] layer output, its
+            // argmax replicated across the row's padded positions
+            Some(t) => {
+                let mut am = Vec::with_capacity(total);
+                for r in 0..step.rows {
+                    let a = argmax_row(t.row(r));
+                    am.extend(std::iter::repeat(a).take(step.bucket));
+                }
+                am
+            }
+            // accounting backend: deterministic synthetic next-token ids
+            None => step.tokens.iter().map(|&v| synthetic_argmax(v)).collect(),
+        };
+        self.steps += 1;
+        Ok(StepOutput {
+            argmax,
+            expert_rows: self.load.expert_counts.iter().map(|&c| c as i32).collect(),
+            failed: Vec::new(),
+            sim_time_s: out.sim.as_ref().map(|s| s.time_s),
+        })
+    }
+
+    fn cache_stats(&self) -> Option<CacheStats> {
+        self.session.cache_stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tiny_cfg(numeric: bool) -> FusedServeConfig {
+        FusedServeConfig {
+            buckets: vec![8, 16],
+            seq_slots: 16,
+            heads: 2,
+            experts: 8,
+            top_k: 2,
+            d_model: 8,
+            d_ff: 12,
+            cache_capacity: 8,
+            numeric,
+            threads: 1,
+            seed: 3,
+        }
+    }
+
+    fn step_tokens(bucket: usize, rows: usize, seed: u64) -> Vec<i32> {
+        let mut rng = Rng::new(seed);
+        (0..rows * bucket).map(|_| rng.below(50) as i32).collect()
+    }
+
+    #[test]
+    fn numeric_step_is_deterministic_and_hits_cache_on_repeat() {
+        let mut ex = FusedStepExecutor::new(tiny_cfg(true));
+        let tokens = step_tokens(8, 3, 1);
+        let s = StepInput { bucket: 8, rows: 3, tokens: &tokens };
+        let a = ex.execute_step(&s).expect("step 1");
+        let b = ex.execute_step(&s).expect("step 2");
+        assert_eq!(a.argmax, b.argmax);
+        assert_eq!(a.argmax.len(), 24);
+        assert_eq!(a.expert_rows.iter().sum::<i32>(), 3 * 2);
+        let stats = ex.cache_stats().expect("cache enabled");
+        assert_eq!((stats.hits, stats.misses), (1, 1));
+        assert_eq!(ex.steps(), 2);
+    }
+
+    #[test]
+    fn traffic_mixes_prefill_and_decode_slots() {
+        let mut ex = FusedStepExecutor::new(tiny_cfg(false));
+        // leading ids 4 and 8 prefill; 3 and 7 decode
+        let mut tokens = vec![0i32; 4 * 8];
+        for (r, v) in [(0usize, 4i32), (1, 3), (2, 8), (3, 7)] {
+            tokens[r * 8] = v;
+        }
+        ex.execute_step(&StepInput { bucket: 8, rows: 4, tokens: &tokens }).expect("sim step");
+        let prefills =
+            ex.load.seqs.iter().filter(|s| matches!(s, SeqSpec::Prefill { .. })).count();
+        let decodes = ex.load.seqs.iter().filter(|s| matches!(s, SeqSpec::Decode { .. })).count();
+        assert_eq!((prefills, decodes), (2, 2));
+        assert_eq!(ex.load.seqs.len(), 16); // padded with σ-elided empties
+    }
+
+    #[test]
+    fn accounting_mode_reports_sim_time_and_synthetic_argmax() {
+        let mut ex = FusedStepExecutor::new(tiny_cfg(false));
+        let tokens = step_tokens(16, 2, 2);
+        let out = ex
+            .execute_step(&StepInput { bucket: 16, rows: 2, tokens: &tokens })
+            .expect("sim step");
+        assert_eq!(out.argmax.len(), 32);
+        assert!(out.sim_time_s.expect("accounting step is simulated") > 0.0);
+    }
+
+    #[test]
+    fn oversized_batch_is_a_typed_error() {
+        let mut ex = FusedStepExecutor::new(tiny_cfg(false));
+        let tokens = vec![1; 17 * 8];
+        let err = ex
+            .execute_step(&StepInput { bucket: 8, rows: 17, tokens: &tokens })
+            .unwrap_err();
+        assert!(matches!(err, ExecError::PlanMismatch { .. }));
+    }
+
+    #[test]
+    fn numeric_and_accounting_agree_on_expert_rows() {
+        let tokens = step_tokens(8, 4, 5);
+        let s = StepInput { bucket: 8, rows: 4, tokens: &tokens };
+        let mut num = FusedStepExecutor::new(tiny_cfg(true));
+        let mut sim = FusedStepExecutor::new(tiny_cfg(false));
+        let a = num.execute_step(&s).expect("numeric");
+        let b = sim.execute_step(&s).expect("sim");
+        assert_eq!(a.expert_rows, b.expert_rows);
+    }
+}

@@ -25,9 +25,11 @@
 //!      queue/form waits, in-flight steps, plan cache)     └─────────────────┘
 //! ```
 //!
-//! [`Server`] is generic over a small [`StepExecutor`] trait with three
+//! [`Server`] is generic over a small [`StepExecutor`] trait with four
 //! instantiations: the default-features [`SimStepExecutor`] (routing +
-//! [`PlanCache`] + [`crate::exec::ExecutionSession`]), the expert-parallel
+//! [`PlanCache`] + [`crate::exec::ExecutionSession`]), the whole-layer
+//! [`FusedStepExecutor`] (attention + prefill + routed FFN as one
+//! heterogeneous plan), the expert-parallel
 //! [`ShardedStepExecutor`] (per-shard sessions and plan-cache lanes, EP/TP
 //! collectives, pluggable [`PlacementKind`]), and the PJRT engine
 //! (`coordinator::engine::Engine`, feature `pjrt`) — so the whole pipeline
@@ -71,6 +73,7 @@
 
 pub mod chaos;
 pub mod driver;
+pub mod fused_exec;
 pub mod scenario;
 pub mod server;
 pub mod sharded;
@@ -80,6 +83,7 @@ pub use crate::coordinator::metrics::ShardingStats;
 pub use crate::moe::plan_cache::{CacheStats, PlanCache};
 pub use chaos::{ChaosConfig, ChaosStats, ChaosStepExecutor, ShardDeath};
 pub use driver::{run_traffic, TrafficConfig, TrafficReport};
+pub use fused_exec::{FusedServeConfig, FusedStepExecutor};
 pub use scenario::{
     run_scenario, ArrivalTrace, FaultEvent, FaultKind, FaultPlan, ScenarioConfig, ScenarioReport,
     TenantClass, TraceSegment,

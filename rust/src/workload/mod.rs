@@ -11,7 +11,7 @@
 //! [`cache::PlanCache`], the [`crate::exec::Backend`] surface, and
 //! [`crate::exec::ExecutionSession`] — is generic over it.
 //!
-//! Two instances ship:
+//! Three instances ship:
 //!
 //! * [`crate::moe::planner::MoeWorkload`] — per-expert GEMMs of one MoE
 //!   layer (the paper's application; [`crate::moe`] owns its load
@@ -19,8 +19,12 @@
 //! * [`ragged::RaggedAttentionWorkload`] — a decode-step batch of
 //!   attention reads over per-sequence KV caches of wildly different
 //!   lengths (the second irregular workload; defined in [`ragged`]).
+//! * [`transformer::FusedLayerWorkload`] — a whole transformer-layer step
+//!   as *one* heterogeneous static batch: ragged attention (decode and
+//!   chunked prefill) plus routed expert FFN GEMMs, three task kinds under
+//!   a single σ (defined in [`transformer`]).
 //!
-//! Both run through the *same* σ / ordering / TilePrefix machinery; the
+//! All run through the *same* σ / ordering / TilePrefix machinery; the
 //! cross-workload agreement tests pin that the dispatch sequences decoded
 //! by the simulator match the sequences the CPU executors actually run.
 //!
@@ -44,6 +48,7 @@
 pub mod cache;
 pub mod plan;
 pub mod ragged;
+pub mod transformer;
 
 use crate::batching::task::{TaskDescriptor, TaskKind};
 use crate::moe::tiling::StrategyId;
@@ -115,6 +120,23 @@ pub trait Workload: Clone + PartialEq + std::fmt::Debug + 'static {
     /// Element type of the workload's operands (cost accounting).
     fn dtype(&self) -> Dtype;
 
+    /// Element type of *one task's* operands.  Heterogeneous workloads can
+    /// mix dtypes across task kinds (e.g. bf16 KV reads next to fp32 expert
+    /// weights); the default is the workload-wide [`Workload::dtype`].
+    fn task_dtype(&self, _task: &Self::Task) -> Dtype {
+        self.dtype()
+    }
+
+    /// Grid phase of a task.  The planner lays out non-empty tasks grouped
+    /// by ascending phase, ordering *within* each phase with the configured
+    /// strategy, so a later phase's first tile is a natural barrier point
+    /// for executors with cross-phase data dependencies (attention output
+    /// feeding expert FFN).  Single-kind workloads keep the default single
+    /// phase and planner behaviour is unchanged.
+    fn phase(&self, _task: &Self::Task) -> usize {
+        0
+    }
+
     /// Expand one task into the simulator's tile stream.  `decode_ns` is
     /// the per-block mapping-decode overhead the active mapping mode
     /// charges.  The default handles GEMM-shaped tasks exactly like the
@@ -130,7 +152,7 @@ pub trait Workload: Clone + PartialEq + std::fmt::Debug + 'static {
                 d.inner,
                 d.tile_rows,
                 d.tile_cols,
-                self.dtype(),
+                self.task_dtype(task),
                 decode_ns,
             ),
             _ => {
@@ -139,7 +161,7 @@ pub trait Workload: Clone + PartialEq + std::fmt::Debug + 'static {
                     return Vec::new();
                 }
                 let flops = d.flops() as f64 / nt as f64;
-                let bytes = d.elems_moved() as f64 * self.dtype().bytes() as f64 / nt as f64;
+                let bytes = d.elems_moved() as f64 * self.task_dtype(task).bytes() as f64 / nt as f64;
                 let tiles_n = d.tiles_n() as u32;
                 (0..nt as u32)
                     .map(|t| TileWork {
@@ -161,7 +183,6 @@ pub trait Workload: Clone + PartialEq + std::fmt::Debug + 'static {
     /// Total operand bytes of a plan's tasks — the L2-pressure proxy the
     /// per-block-array mapping modes charge decode costs against.
     fn operand_bytes(&self, tasks: &[Self::Task]) -> f64 {
-        let ds = self.dtype().bytes() as f64;
         tasks
             .iter()
             .map(|t| {
@@ -169,7 +190,7 @@ pub trait Workload: Clone + PartialEq + std::fmt::Debug + 'static {
                 if d.num_tiles() == 0 {
                     0.0
                 } else {
-                    d.elems_moved() as f64 * ds
+                    d.elems_moved() as f64 * self.task_dtype(t).bytes() as f64
                 }
             })
             .sum()

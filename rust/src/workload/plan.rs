@@ -126,17 +126,38 @@ impl<W: Workload> Planner<W> {
 
     /// Build the plan for one load: σ over non-empty tasks, ordering,
     /// per-task tiling, compressed TilePrefix.
+    ///
+    /// Non-empty tasks are grouped by ascending [`Workload::phase`], and the
+    /// ordering strategy permutes tasks *within* each phase.  Ordering
+    /// strategies are pure functions of `(canonical index, weight)` pairs,
+    /// so a phase's internal permutation is identical to what a standalone
+    /// plan over just that phase's tasks would produce — the property the
+    /// fused-vs-sequential bitwise equivalence tests rely on.  Single-phase
+    /// workloads (every instance before the fused transformer layer) see
+    /// exactly the old behaviour.
     pub fn plan(&self, load: &W::Load) -> Plan<W> {
         let canonical = self.workload.tasks(load, self.force_strategy);
         let weights: Vec<usize> = canonical.iter().map(|t| self.workload.weight(t)).collect();
-        // non-empty tasks with their ordering weights (canonical index as id)
-        let nonempty: Vec<(u32, usize)> = weights
+        // non-empty tasks with their ordering weights (canonical index as
+        // id), grouped by phase, ordered within each phase
+        let mut phases: Vec<usize> = canonical
             .iter()
-            .enumerate()
+            .zip(&weights)
             .filter(|&(_, &w)| w > 0)
-            .map(|(i, &w)| (i as u32, w))
+            .map(|(t, _)| self.workload.phase(t))
             .collect();
-        let ordered = self.ordering.order(&nonempty);
+        phases.sort_unstable();
+        phases.dedup();
+        let mut ordered: Vec<u32> = Vec::new();
+        for ph in phases {
+            let nonempty: Vec<(u32, usize)> = canonical
+                .iter()
+                .enumerate()
+                .filter(|&(i, t)| weights[i] > 0 && self.workload.phase(t) == ph)
+                .map(|(i, _)| (i as u32, weights[i]))
+                .collect();
+            ordered.extend(self.ordering.order(&nonempty));
+        }
 
         // materialize the grid without cloning tasks: move each one out of
         // its canonical slot exactly once — ordered non-empty prefix, then

@@ -273,10 +273,18 @@ impl RaggedInputs {
 
 /// Online-softmax accumulator of one (task, head) pair.
 #[derive(Clone)]
-struct HeadState {
-    m: f32,
-    l: f32,
-    acc: Vec<f32>,
+pub(crate) struct HeadState {
+    pub(crate) m: f32,
+    pub(crate) l: f32,
+    pub(crate) acc: Vec<f32>,
+}
+
+impl HeadState {
+    /// A fresh accumulator for a head of width `d` (m = −inf, l = 0,
+    /// zeroed acc) — what every executor starts each (task, head) from.
+    pub(crate) fn fresh(d: usize) -> Self {
+        HeadState { m: f32::NEG_INFINITY, l: 0.0, acc: vec![0.0; d] }
+    }
 }
 
 struct RaggedCtx<'a> {
@@ -295,7 +303,7 @@ struct RaggedCtx<'a> {
 /// both visit a task's tiles in ascending order, so the merge sequence —
 /// and therefore every float — is identical on either path.  `scores` is
 /// caller scratch, cleared and fully overwritten here.
-fn run_decode_tile(
+pub(crate) fn run_decode_tile(
     inputs: &RaggedInputs,
     task: &SeqTask,
     desc: &TaskDescriptor,
@@ -401,7 +409,7 @@ pub fn execute_traced(
     }
     let batch = StaticBatch::try_new(plan.descriptors(), builder)?;
 
-    let fresh = HeadState { m: f32::NEG_INFINITY, l: 0.0, acc: vec![0.0; d] };
+    let fresh = HeadState::fresh(d);
     let mut ctx = RaggedCtx {
         plan,
         inputs,
@@ -443,7 +451,7 @@ pub fn execute_parallel(
     let job = move |ti: usize| -> Vec<HeadState> {
         let task = tasks[ti];
         let desc = &descs_ref[ti];
-        let fresh = HeadState { m: f32::NEG_INFINITY, l: 0.0, acc: vec![0.0; d] };
+        let fresh = HeadState::fresh(d);
         let mut state = vec![fresh; heads];
         let mut scores = Vec::new();
         for tile in 0..desc.num_tiles() as u32 {

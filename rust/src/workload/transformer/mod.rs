@@ -1,0 +1,923 @@
+//! The fused transformer-layer super-workload: heterogeneous task kinds in
+//! one static batch.
+//!
+//! The paper's framework claims generality — any set of tasks whose tile
+//! counts ν(T) are known up front can share one fused kernel, one σ, one
+//! TilePrefix.  The MoE and ragged-attention workloads each exercised the
+//! machinery with a *single* task kind per plan; this module composes them:
+//! a [`FusedLayerWorkload`] plans a whole transformer-layer step — ragged
+//! decode attention, chunked causal prefill, and routed expert-FFN GEMMs —
+//! as **one** `Plan` with three task kinds under a single σ.  Nothing in
+//! `batching/`, `workload/plan.rs`, or the simulator changes for this: the
+//! descriptors carry per-kind tile geometry, the dispatch table routes each
+//! block to its kind's device function (Algorithm 3), and the two-stage map
+//! elides empty sequences and idle experts alike (Algorithm 4).
+//!
+//! Layout and data flow: the planner groups non-empty tasks by
+//! [`Workload::phase`] — attention (decode + prefill) first, expert GEMMs
+//! second — ordering *within* each phase with the configured strategy.  The
+//! CPU executor walks the grid in block order, so the first expert tile is a
+//! natural barrier: it finalizes the online-softmax accumulators into the
+//! activation matrix that the expert GEMMs then gather from (attention
+//! output feeds routing feeds expert FFN).  Because ordering strategies are
+//! pure functions of `(canonical index, weight)` pairs, each phase's
+//! permutation matches what the standalone workload's planner would emit,
+//! and the fused output is **bitwise-equal** to running ragged attention
+//! then MoE as two separate plans — the property `tests/fused_transformer`
+//! pins.
+//!
+//! Mixed prefill+decode is the classic continuous-batching irregularity: a
+//! freshly admitted prompt needs O(P²) causal attention while its neighbors
+//! decode one token each.  [`SeqSpec::Prefill`] models it as a third task
+//! kind ([`TaskKind::PrefillChunk`]) with its own chunk catalog and cost
+//! shape; a padded-dense scheme must pad every sequence to the longest
+//! prompt's span ([`PaddedDenseFused`] quantifies the waste).
+
+use crate::batching::dispatch::{DispatchError, DispatchRecord, DispatchTableBuilder};
+use crate::batching::framework::StaticBatch;
+use crate::batching::task::{TaskDescriptor, TaskKind};
+use crate::exec::backend::{Backend, ExecContext, Outcome};
+use crate::exec::backends::CpuBackend;
+use crate::exec::error::ExecError;
+use crate::moe::config::MoeShape;
+use crate::moe::cpu_exec::{combine_task_regions, run_gemm_tile, GemmScratch, MoeInputs};
+use crate::moe::planner::ExpertTask;
+use crate::moe::tiling::{self, StrategyId, CATALOG};
+use crate::moe::token_index::TokenIndex;
+use crate::sim::cost::{gemm_tiles, Dtype, TileWork};
+use crate::sim::wave;
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+use crate::util::threadpool::ThreadPool;
+use crate::workload::plan::Plan;
+use crate::workload::ragged::{
+    run_decode_tile, select_chunk, HeadState, RaggedAttentionWorkload, RaggedInputs, RaggedLoad,
+    SeqTask, KV_CATALOG,
+};
+use crate::workload::Workload;
+
+/// Prefill chunk sizes (query rows one tile covers), largest to smallest —
+/// prompts are long, so the catalog sits above [`KV_CATALOG`].
+pub const PREFILL_CATALOG: &[usize] = &[1024, 256, 64, 16];
+
+/// Pick the prefill chunk for a prompt of `len` rows: largest chunk at
+/// least half-filled, falling back to the smallest (the same rule as
+/// [`select_chunk`] and [`crate::moe::tiling::select`]).
+pub fn select_prefill_chunk(len: usize) -> StrategyId {
+    for (i, &c) in PREFILL_CATALOG.iter().enumerate() {
+        if len >= c || len * 2 >= c {
+            return i;
+        }
+    }
+    PREFILL_CATALOG.len() - 1
+}
+
+/// What one sequence slot of the formed batch is doing this step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeqSpec {
+    /// Idle slot (no request, or a request with no KV yet) — σ elides it.
+    Empty,
+    /// One decode token attending over `kv_len` cached rows.
+    Decode { kv_len: usize },
+    /// A freshly admitted prompt of `len` tokens in chunked causal prefill.
+    Prefill { len: usize },
+}
+
+impl SeqSpec {
+    /// KV rows this slot's attention spans (0 for an empty slot).
+    pub fn kv_len(&self) -> usize {
+        match *self {
+            SeqSpec::Empty => 0,
+            SeqSpec::Decode { kv_len } => kv_len,
+            SeqSpec::Prefill { len } => len,
+        }
+    }
+
+    fn tag(&self) -> u64 {
+        match self {
+            SeqSpec::Empty => 0,
+            SeqSpec::Decode { .. } => 1,
+            SeqSpec::Prefill { .. } => 2,
+        }
+    }
+}
+
+/// One fused step's load: the attention side (per-slot sequence specs) and
+/// the FFN side (rows routed per expert) of the *same* formed batch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FusedLoad {
+    /// One entry per sequence slot; length must equal the workload's
+    /// `shape.seq` capacity.
+    pub seqs: Vec<SeqSpec>,
+    /// Rows routed to each expert (length = `shape.experts`).
+    pub expert_counts: Vec<usize>,
+}
+
+impl FusedLoad {
+    /// The attention phase viewed as a standalone ragged load (the
+    /// sequential baseline plans from this).
+    pub fn ragged(&self) -> RaggedLoad {
+        RaggedLoad { lens: self.seqs.iter().map(|s| s.kv_len()).collect() }
+    }
+
+    /// The FFN phase viewed as a standalone MoE load.
+    pub fn expert_load(&self) -> crate::moe::routing::ExpertLoad {
+        crate::moe::routing::ExpertLoad { counts: self.expert_counts.clone() }
+    }
+
+    /// A deterministic mixed serving moment for reports and benches:
+    /// roughly 1/8 of the slots idle, 1/4 freshly admitted prompts in
+    /// chunked prefill, the rest decoding over wide-ranging KV spans; the
+    /// active slots' routed rows land on experts with quadratic skew (the
+    /// popular-expert regime the σ machinery exists for).
+    pub fn sample_mixed(shape: &MoeShape, seed: u64) -> FusedLoad {
+        let mut rng = Rng::new(seed ^ 0xF05E);
+        let seqs: Vec<SeqSpec> = (0..shape.seq)
+            .map(|_| match rng.below(8) {
+                0 => SeqSpec::Empty,
+                1 | 2 => SeqSpec::Prefill { len: 64 + rng.usize_below(1985) },
+                _ => SeqSpec::Decode { kv_len: 1 + rng.usize_below(8192) },
+            })
+            .collect();
+        let active = seqs.iter().filter(|s| s.kv_len() > 0).count();
+        let mut expert_counts = vec![0usize; shape.experts];
+        for _ in 0..active * shape.top_k {
+            let r = rng.f32();
+            let e = ((r * r) * shape.experts as f32) as usize;
+            expert_counts[e.min(shape.experts - 1)] += 1;
+        }
+        FusedLoad { seqs, expert_counts }
+    }
+}
+
+/// One task of the fused grid.  The attention-side payloads reuse
+/// [`SeqTask`] (for prefill, `kv_len` is the prompt length and `strategy`
+/// indexes [`PREFILL_CATALOG`]); the FFN side reuses [`ExpertTask`] — the
+/// task bodies are literally the standalone workloads' tile bodies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FusedTask {
+    /// Phase 0: decode attention for one sequence slot.
+    Attention(SeqTask),
+    /// Phase 0: chunked causal prefill for one sequence slot.
+    Prefill(SeqTask),
+    /// Phase 1: routed-token GEMM of one expert.
+    Expert(ExpertTask),
+}
+
+/// A whole transformer-layer step (attention + routed FFN) as one
+/// heterogeneous [`Workload`].  `shape.d_model` must equal
+/// `heads · head_dim`: the attention output rows are exactly the
+/// activations the expert GEMMs gather.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FusedLayerWorkload {
+    /// Attention geometry (heads, head width, KV dtype).
+    pub attn: RaggedAttentionWorkload,
+    /// Expert-FFN geometry (`seq` = sequence-slot capacity).
+    pub shape: MoeShape,
+}
+
+impl FusedLayerWorkload {
+    /// A fused layer over `shape` with `heads` attention heads; the head
+    /// width is derived so attention output width equals `d_model`.
+    ///
+    /// # Panics
+    /// If `heads` does not divide `shape.d_model`.
+    pub fn new(heads: usize, shape: MoeShape) -> Self {
+        assert_eq!(
+            shape.d_model % heads,
+            0,
+            "heads ({heads}) must divide d_model ({})",
+            shape.d_model
+        );
+        let attn = RaggedAttentionWorkload {
+            heads,
+            head_dim: shape.d_model / heads,
+            dtype_bytes: shape.dtype_bytes,
+        };
+        FusedLayerWorkload { attn, shape }
+    }
+
+    /// A small shape for tests and quickstarts.
+    pub fn tiny() -> Self {
+        FusedLayerWorkload::new(4, MoeShape::tiny())
+    }
+}
+
+impl Workload for FusedLayerWorkload {
+    type Load = FusedLoad;
+    type Task = FusedTask;
+    type Inputs = FusedInputs;
+
+    fn name(&self) -> &'static str {
+        "fused-layer"
+    }
+
+    fn tasks(&self, load: &FusedLoad, force_strategy: Option<StrategyId>) -> Vec<FusedTask> {
+        assert_eq!(load.seqs.len(), self.shape.seq, "sequence slots must match shape.seq");
+        assert_eq!(load.expert_counts.len(), self.shape.experts);
+        let mut out = Vec::with_capacity(load.seqs.len() + load.expert_counts.len());
+        for (s, spec) in load.seqs.iter().enumerate() {
+            let seq = s as u32;
+            match *spec {
+                SeqSpec::Prefill { len } => out.push(FusedTask::Prefill(SeqTask {
+                    seq,
+                    kv_len: len,
+                    strategy: force_strategy
+                        .map(|f| f.min(PREFILL_CATALOG.len() - 1))
+                        .unwrap_or_else(|| select_prefill_chunk(len)),
+                })),
+                // empty slots become zero-length decode tasks: weight 0,
+                // zero tiles, σ-elided — identical to the ragged planner
+                SeqSpec::Empty | SeqSpec::Decode { .. } => {
+                    let kv_len = spec.kv_len();
+                    out.push(FusedTask::Attention(SeqTask {
+                        seq,
+                        kv_len,
+                        strategy: force_strategy
+                            .map(|f| f.min(KV_CATALOG.len() - 1))
+                            .unwrap_or_else(|| select_chunk(kv_len)),
+                    }));
+                }
+            }
+        }
+        for (e, &rows) in load.expert_counts.iter().enumerate() {
+            out.push(FusedTask::Expert(ExpertTask {
+                expert: e as u32,
+                rows,
+                strategy: force_strategy.map(|f| f.min(CATALOG.len() - 1)).unwrap_or_else(|| {
+                    if rows > 0 {
+                        tiling::select(rows)
+                    } else {
+                        CATALOG.len() - 1
+                    }
+                }),
+            }));
+        }
+        out
+    }
+
+    fn descriptor(&self, task: &FusedTask) -> TaskDescriptor {
+        match *task {
+            FusedTask::Attention(t) => self.attn.descriptor(&t),
+            FusedTask::Prefill(t) => TaskDescriptor {
+                kind: TaskKind::PrefillChunk { strategy: t.strategy },
+                rows: t.kv_len,
+                cols: self.attn.heads,
+                inner: self.attn.head_dim,
+                tile_rows: PREFILL_CATALOG[t.strategy],
+                tile_cols: 1,
+            },
+            FusedTask::Expert(t) => t.descriptor(&self.shape),
+        }
+    }
+
+    fn weight(&self, task: &FusedTask) -> usize {
+        match task {
+            FusedTask::Attention(t) | FusedTask::Prefill(t) => t.kv_len,
+            FusedTask::Expert(t) => t.rows,
+        }
+    }
+
+    fn signature_into(&self, load: &FusedLoad, out: &mut Vec<u64>) {
+        out.clear();
+        // slot count first so the seq / expert sections can't alias across
+        // loads of different slot capacity
+        out.push(load.seqs.len() as u64);
+        out.extend(load.seqs.iter().map(|s| ((s.kv_len() as u64) << 2) | s.tag()));
+        out.extend(load.expert_counts.iter().map(|&c| c as u64));
+    }
+
+    fn dtype(&self) -> Dtype {
+        self.shape.dtype()
+    }
+
+    fn task_dtype(&self, task: &FusedTask) -> Dtype {
+        match task {
+            FusedTask::Attention(_) | FusedTask::Prefill(_) => self.attn.dtype(),
+            FusedTask::Expert(_) => self.shape.dtype(),
+        }
+    }
+
+    fn phase(&self, task: &FusedTask) -> usize {
+        match task {
+            FusedTask::Attention(_) | FusedTask::Prefill(_) => 0,
+            FusedTask::Expert(_) => 1,
+        }
+    }
+
+    /// Per-kind cost shapes: decode tiles reuse the ragged stream, prefill
+    /// tiles charge chunked *causal* attention (each query chunk re-streams
+    /// the KV prefix up to its own end), expert tiles reuse the MoE GEMM
+    /// stream.  One heterogeneous tile stream through all four mapping
+    /// modes.
+    fn tiles(&self, task: &FusedTask, index: u32, decode_ns: f64) -> Vec<TileWork> {
+        match *task {
+            FusedTask::Attention(t) => self.attn.tiles(&t, index, decode_ns),
+            FusedTask::Prefill(t) => {
+                let d = self.attn.head_dim as f64;
+                let ds = self.attn.dtype().bytes() as f64;
+                let chunk = PREFILL_CATALOG[t.strategy];
+                let chunks = t.kv_len.div_ceil(chunk);
+                let mut out = Vec::with_capacity(chunks * self.attn.heads);
+                for mi in 0..chunks {
+                    let r0 = mi * chunk;
+                    let rows = (t.kv_len - r0).min(chunk);
+                    // causal pairs this query chunk covers: row r0+i
+                    // attends r0+i+1 keys
+                    let pairs = (rows * r0 + rows * (rows + 1) / 2) as f64;
+                    for h in 0..self.attn.heads {
+                        out.push(TileWork {
+                            task: index,
+                            m_tile: h as u32,
+                            n_tile: (mi * self.attn.heads + h) as u32,
+                            useful_flops: 4.0 * pairs * d,
+                            occupied_flops: 4.0 * pairs * d,
+                            // K + V prefix up to this chunk's end
+                            weight_bytes: 2.0 * (r0 + rows) as f64 * d * ds,
+                            token_bytes: rows as f64 * d * ds,
+                            out_bytes: rows as f64 * d * ds,
+                            decode_ns,
+                        });
+                    }
+                }
+                out
+            }
+            FusedTask::Expert(t) => {
+                let s = CATALOG[t.strategy];
+                gemm_tiles(
+                    index,
+                    t.rows,
+                    self.shape.d_ff,
+                    self.shape.d_model,
+                    s.tm,
+                    s.tn,
+                    self.shape.dtype(),
+                    decode_ns,
+                )
+            }
+        }
+    }
+}
+
+/// Real tensors of one fused step: the attention side's Q/K/V plus the FFN
+/// side's expert weights and routing.  `attn.q` holds one query row per
+/// sequence slot — for a prefill slot that is the *last* prompt position
+/// (the one whose output the step actually routes onward); the cost model
+/// still charges the full causal prefill.
+pub struct FusedInputs {
+    /// Q/K/V per sequence slot (`keys[s]` spans that slot's KV rows).
+    pub attn: RaggedInputs,
+    /// `[experts, d_model, d_ff]` expert weights.
+    pub expert_weights: Tensor,
+    /// Token index arrays per expert over sequence-slot rows.
+    pub token_index: TokenIndex,
+    /// Combine gate per (expert, position) — aligned with `token_index`.
+    pub gates: Vec<Vec<f32>>,
+}
+
+impl FusedInputs {
+    /// Deterministic synthetic inputs consistent with a load.
+    pub fn synthetic(w: &FusedLayerWorkload, load: &FusedLoad, seed: u64) -> Self {
+        let attn = RaggedInputs::synthetic(&w.attn, &load.ragged(), seed);
+        let mut rng = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15);
+        let expert_weights =
+            Tensor::randn(&[w.shape.experts, w.shape.d_model, w.shape.d_ff], 0.1, &mut rng);
+        let mut pairs = Vec::new();
+        for (e, &c) in load.expert_counts.iter().enumerate() {
+            for _ in 0..c {
+                pairs.push((rng.usize_below(load.seqs.len()) as u32, e as u32));
+            }
+        }
+        let token_index = TokenIndex::build(w.shape.experts, &pairs);
+        let gates = token_index
+            .index
+            .iter()
+            .map(|rows| rows.iter().map(|_| rng.f32() * 0.5 + 0.25).collect())
+            .collect();
+        FusedInputs { attn, expert_weights, token_index, gates }
+    }
+}
+
+struct FusedCtx<'a> {
+    plan: &'a Plan<FusedLayerWorkload>,
+    inputs: &'a FusedInputs,
+    /// online-softmax state per grid task (attention-phase entries only).
+    state: Vec<Vec<HeadState>>,
+    /// `[seq_slots, d_model]` attention output; written at the barrier.
+    activations: Tensor,
+    barrier_crossed: bool,
+    /// packed expert output rows, grid order, no tile padding.
+    packed: Vec<f32>,
+    /// packed-row offset per grid task (expert entries only).
+    offsets: Vec<usize>,
+    scores: Vec<f32>,
+    scratch: GemmScratch,
+    trace: Option<Vec<DispatchRecord>>,
+}
+
+/// Normalize the attention accumulators into the activation matrix:
+/// `activations[seq, h·d + j] = acc / l`.  Same arithmetic per row as the
+/// ragged normalize, so each sequence's activation row is bitwise what the
+/// standalone ragged executor outputs.
+fn finalize_attention(
+    tasks: &[FusedTask],
+    states: &[Vec<HeadState>],
+    head_dim: usize,
+    activations: &mut Tensor,
+) {
+    for (ti, task) in tasks.iter().enumerate() {
+        let (FusedTask::Attention(t) | FusedTask::Prefill(t)) = task else { continue };
+        if t.kv_len == 0 {
+            continue;
+        }
+        let row = activations.row_mut(t.seq as usize);
+        for (h, st) in states[ti].iter().enumerate() {
+            for (j, &a) in st.acc.iter().enumerate() {
+                row[h * head_dim + j] = a / st.l;
+            }
+        }
+    }
+}
+
+fn attention_block(ctx: &mut FusedCtx, desc: &TaskDescriptor, task_idx: u32, tile_idx: u32, scale: f32) {
+    if let Some(trace) = ctx.trace.as_mut() {
+        trace.push(DispatchRecord { task: task_idx, tile: tile_idx, kind: desc.kind });
+    }
+    let (FusedTask::Attention(t) | FusedTask::Prefill(t)) = ctx.plan.tasks[task_idx as usize]
+    else {
+        unreachable!("attention kinds only dispatch to attention-phase tasks")
+    };
+    run_decode_tile(
+        &ctx.inputs.attn,
+        &t,
+        desc,
+        scale,
+        tile_idx,
+        &mut ctx.state[task_idx as usize],
+        &mut ctx.scores,
+    );
+}
+
+fn expert_block(ctx: &mut FusedCtx, desc: &TaskDescriptor, task_idx: u32, tile_idx: u32) {
+    if let Some(trace) = ctx.trace.as_mut() {
+        trace.push(DispatchRecord { task: task_idx, tile: tile_idx, kind: desc.kind });
+    }
+    // The first expert tile in block order is the phase barrier: every
+    // attention tile already ran (phase-0 tasks precede phase-1 tasks in
+    // the grid and the serial walk is block-ascending), so the activation
+    // matrix the GEMMs gather from is complete.
+    if !ctx.barrier_crossed {
+        finalize_attention(
+            &ctx.plan.tasks,
+            &ctx.state,
+            ctx.plan.workload.attn.head_dim,
+            &mut ctx.activations,
+        );
+        ctx.barrier_crossed = true;
+    }
+    let FusedTask::Expert(task) = ctx.plan.tasks[task_idx as usize] else {
+        unreachable!("GEMM kinds only dispatch to expert-phase tasks")
+    };
+    let d_ff = ctx.plan.workload.shape.d_ff;
+    let base = ctx.offsets[task_idx as usize];
+    let region = &mut ctx.packed[base * d_ff..(base + task.rows) * d_ff];
+    let view = MoeInputs {
+        tokens: &ctx.activations,
+        weights: &ctx.inputs.expert_weights,
+        token_index: &ctx.inputs.token_index,
+        gates: &ctx.inputs.gates,
+    };
+    run_gemm_tile(&view, &task, desc, tile_idx, region, &mut ctx.scratch);
+}
+
+/// Execute a fused plan numerically *through the framework dispatch*: one
+/// block-ascending walk over the heterogeneous grid, attention tiles fold
+/// online-softmax accumulators, the first expert tile finalizes them into
+/// the activation matrix, expert tiles gather-GEMM from it, and the gated
+/// combine produces the `[seq_slots, d_ff]` layer output.  Returns the
+/// dispatch trace too when requested (cross-backend agreement tests).
+pub fn execute_traced(
+    plan: &Plan<FusedLayerWorkload>,
+    inputs: &FusedInputs,
+    record_dispatch: bool,
+) -> Result<(Tensor, Option<Vec<DispatchRecord>>), DispatchError> {
+    let w = plan.workload;
+    let d_ff = w.shape.d_ff;
+    let scale = 1.0 / (w.attn.head_dim as f32).sqrt();
+
+    let mut offsets = vec![0usize; plan.tasks.len()];
+    let mut packed_rows = 0usize;
+    for (ti, t) in plan.tasks.iter().enumerate() {
+        if let FusedTask::Expert(e) = t {
+            offsets[ti] = packed_rows;
+            packed_rows += e.rows;
+        }
+    }
+
+    let mut builder: DispatchTableBuilder<FusedCtx> = DispatchTableBuilder::new();
+    for sid in 0..KV_CATALOG.len() {
+        builder = builder.on(TaskKind::AttentionDecode { strategy: sid }, move |ctx, d, a, b| {
+            attention_block(ctx, d, a, b, scale)
+        });
+    }
+    for sid in 0..PREFILL_CATALOG.len() {
+        builder = builder.on(TaskKind::PrefillChunk { strategy: sid }, move |ctx, d, a, b| {
+            attention_block(ctx, d, a, b, scale)
+        });
+    }
+    for sid in 0..CATALOG.len() {
+        builder = builder.on(TaskKind::Gemm { strategy: sid }, expert_block);
+    }
+    let batch = StaticBatch::try_new(plan.descriptors(), builder)?;
+
+    let fresh = HeadState::fresh(w.attn.head_dim);
+    let mut ctx = FusedCtx {
+        plan,
+        inputs,
+        state: vec![vec![fresh; w.attn.heads]; plan.tasks.len()],
+        activations: Tensor::zeros(&[w.shape.seq, w.shape.d_model]),
+        barrier_crossed: false,
+        packed: vec![0.0; packed_rows * d_ff],
+        offsets,
+        scores: Vec::new(),
+        scratch: GemmScratch::default(),
+        trace: record_dispatch.then(Vec::new),
+    };
+    let blocks = batch.run(&mut ctx);
+    debug_assert_eq!(blocks, plan.total_tiles());
+
+    // grid-order expert tasks + their packed regions, for the gated combine
+    let expert_tasks: Vec<ExpertTask> = plan
+        .tasks
+        .iter()
+        .filter_map(|t| if let FusedTask::Expert(e) = t { Some(*e) } else { None })
+        .collect();
+    let regions: Vec<&[f32]> = plan
+        .tasks
+        .iter()
+        .enumerate()
+        .filter_map(|(ti, t)| {
+            if let FusedTask::Expert(e) = t {
+                Some(&ctx.packed[ctx.offsets[ti] * d_ff..(ctx.offsets[ti] + e.rows) * d_ff])
+            } else {
+                None
+            }
+        })
+        .collect();
+    let view = MoeInputs {
+        tokens: &ctx.activations,
+        weights: &inputs.expert_weights,
+        token_index: &inputs.token_index,
+        gates: &inputs.gates,
+    };
+    let out = combine_task_regions(&expert_tasks, w.shape.seq, d_ff, &view, &regions);
+    Ok((out, ctx.trace))
+}
+
+/// Execute a fused plan with per-task fan-out across `pool`'s workers: the
+/// attention phase fans out per sequence, a normalize barrier builds the
+/// activation matrix, the expert phase fans out per expert, and the gated
+/// combine runs on the calling thread in grid order.  Same tile bodies,
+/// same per-task tile order, same normalize and combine order as the serial
+/// path — the output is **bitwise-equal** to [`execute_traced`].
+pub fn execute_parallel(
+    plan: &Plan<FusedLayerWorkload>,
+    inputs: &FusedInputs,
+    pool: &ThreadPool,
+) -> Result<Tensor, ExecError> {
+    let w = plan.workload;
+    let d = w.attn.head_dim;
+    let heads = w.attn.heads;
+    let d_ff = w.shape.d_ff;
+    let scale = 1.0 / (d as f32).sqrt();
+    let descs = plan.descriptors();
+    let descs_ref = &descs;
+    let tasks = &plan.tasks;
+
+    // phase 0: attention fan-out per sequence task
+    let attn_indices: Vec<usize> = tasks
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| matches!(t, FusedTask::Attention(_) | FusedTask::Prefill(_)))
+        .map(|(i, _)| i)
+        .collect();
+    let attn_job = move |ti: usize| -> Vec<HeadState> {
+        let (FusedTask::Attention(task) | FusedTask::Prefill(task)) = tasks[ti] else {
+            unreachable!("attention indices filter attention tasks")
+        };
+        let desc = &descs_ref[ti];
+        let mut state = vec![HeadState::fresh(d); heads];
+        let mut scores = Vec::new();
+        for tile in 0..desc.num_tiles() as u32 {
+            run_decode_tile(&inputs.attn, &task, desc, scale, tile, &mut state, &mut scores);
+        }
+        state
+    };
+    let chunk = pool.default_chunk(attn_indices.len());
+    let states = pool
+        .scoped_map_chunks(attn_indices.clone(), chunk, attn_job)
+        .map_err(|e| ExecError::backend_caused("cpu", format!("worker pool: {e}"), e))?;
+    let mut all_states = vec![Vec::new(); plan.tasks.len()];
+    for (ti, st) in attn_indices.into_iter().zip(states) {
+        all_states[ti] = st;
+    }
+    let mut activations = Tensor::zeros(&[w.shape.seq, w.shape.d_model]);
+    finalize_attention(&plan.tasks, &all_states, d, &mut activations);
+
+    // phase 1: expert fan-out per expert task
+    let expert_indices: Vec<usize> = tasks
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| matches!(t, FusedTask::Expert(_)))
+        .map(|(i, _)| i)
+        .collect();
+    let activations_ref = &activations;
+    let expert_job = move |ti: usize| -> Vec<f32> {
+        let FusedTask::Expert(task) = tasks[ti] else {
+            unreachable!("expert indices filter expert tasks")
+        };
+        let desc = &descs_ref[ti];
+        let view = MoeInputs {
+            tokens: activations_ref,
+            weights: &inputs.expert_weights,
+            token_index: &inputs.token_index,
+            gates: &inputs.gates,
+        };
+        let mut region = vec![0.0f32; task.rows * d_ff];
+        let mut scratch = GemmScratch::default();
+        for tile in 0..desc.num_tiles() as u32 {
+            run_gemm_tile(&view, &task, desc, tile, &mut region, &mut scratch);
+        }
+        region
+    };
+    let chunk = pool.default_chunk(expert_indices.len());
+    let regions = pool
+        .scoped_map_chunks(expert_indices.clone(), chunk, expert_job)
+        .map_err(|e| ExecError::backend_caused("cpu", format!("worker pool: {e}"), e))?;
+
+    let expert_tasks: Vec<ExpertTask> = expert_indices
+        .iter()
+        .map(|&ti| {
+            let FusedTask::Expert(e) = tasks[ti] else { unreachable!() };
+            e
+        })
+        .collect();
+    let views: Vec<&[f32]> = regions.iter().map(|r| r.as_slice()).collect();
+    let view = MoeInputs {
+        tokens: &activations,
+        weights: &inputs.expert_weights,
+        token_index: &inputs.token_index,
+        gates: &inputs.gates,
+    };
+    Ok(combine_task_regions(&expert_tasks, w.shape.seq, d_ff, &view, &views))
+}
+
+impl Backend<FusedLayerWorkload> for CpuBackend {
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+
+    fn execute(
+        &mut self,
+        plan: &Plan<FusedLayerWorkload>,
+        ctx: &mut ExecContext<'_, FusedLayerWorkload>,
+    ) -> Result<Outcome, ExecError> {
+        let inputs = ctx.numeric.ok_or(ExecError::MissingInputs {
+            backend: "cpu",
+            what: "fused layer inputs (q/kv, expert weights, routing)",
+        })?;
+        let (output, trace) = match &ctx.pool {
+            Some(pool) if pool.workers() > 1 && !ctx.record_dispatch => {
+                (execute_parallel(plan, inputs, pool)?, None)
+            }
+            _ => execute_traced(plan, inputs, ctx.record_dispatch)?,
+        };
+        Ok(Outcome {
+            backend: "cpu",
+            blocks: plan.total_tiles(),
+            sim: None,
+            output: Some(output),
+            trace,
+        })
+    }
+}
+
+/// The dense baseline for the fused step: a scheme without σ/TilePrefix
+/// pads the attention phase to the batch's longest KV span (prefill
+/// prompts pad *everyone*) and the FFN phase to the busiest expert's row
+/// count, each as its own rectangular kernel — two launches and all the
+/// padding occupancy and HBM traffic the fused single-plan grid deletes.
+pub struct PaddedDenseFused;
+
+impl Backend<FusedLayerWorkload> for PaddedDenseFused {
+    fn name(&self) -> &'static str {
+        "fused/padded-dense"
+    }
+
+    fn execute(
+        &mut self,
+        plan: &Plan<FusedLayerWorkload>,
+        ctx: &mut ExecContext<'_, FusedLayerWorkload>,
+    ) -> Result<Outcome, ExecError> {
+        let w = plan.workload;
+        let d = w.attn.head_dim as f64;
+        let ds = w.attn.dtype().bytes() as f64;
+        let mut tiles: Vec<TileWork> = Vec::new();
+
+        // attention: every slot padded to the longest KV span in the batch
+        let max_len = plan
+            .tasks
+            .iter()
+            .filter_map(|t| match t {
+                FusedTask::Attention(s) | FusedTask::Prefill(s) => Some(s.kv_len),
+                FusedTask::Expert(_) => None,
+            })
+            .max()
+            .unwrap_or(0);
+        if max_len > 0 {
+            let chunk = KV_CATALOG[select_chunk(max_len)];
+            let chunks = max_len.div_ceil(chunk);
+            for (ti, task) in plan.tasks.iter().enumerate() {
+                let (FusedTask::Attention(s) | FusedTask::Prefill(s)) = task else { continue };
+                for mi in 0..chunks {
+                    let real = s.kv_len.saturating_sub(mi * chunk).min(chunk);
+                    for h in 0..w.attn.heads {
+                        tiles.push(TileWork {
+                            task: ti as u32,
+                            m_tile: h as u32,
+                            n_tile: (mi * w.attn.heads + h) as u32,
+                            useful_flops: 4.0 * real as f64 * d,
+                            occupied_flops: 4.0 * chunk as f64 * d,
+                            weight_bytes: 2.0 * chunk as f64 * d * ds,
+                            token_bytes: d * ds,
+                            out_bytes: d * ds,
+                            decode_ns: 0.0,
+                        });
+                    }
+                }
+            }
+        }
+
+        // FFN: every expert padded to the busiest expert's row count
+        let max_rows = plan
+            .tasks
+            .iter()
+            .filter_map(|t| if let FusedTask::Expert(e) = t { Some(e.rows) } else { None })
+            .max()
+            .unwrap_or(0);
+        if max_rows > 0 {
+            let s = CATALOG[tiling::select(max_rows)];
+            let (d_ff, d_model) = (w.shape.d_ff, w.shape.d_model);
+            let dsg = w.shape.dtype().bytes() as f64;
+            let tiles_m = max_rows.div_ceil(s.tm);
+            let tiles_n = d_ff.div_ceil(s.tn);
+            for (ti, task) in plan.tasks.iter().enumerate() {
+                let FusedTask::Expert(e) = task else { continue };
+                for mi in 0..tiles_m {
+                    let real = e.rows.saturating_sub(mi * s.tm).min(s.tm);
+                    for ni in 0..tiles_n {
+                        let cols = (d_ff - ni * s.tn).min(s.tn);
+                        tiles.push(TileWork {
+                            task: ti as u32,
+                            m_tile: mi as u32,
+                            n_tile: ni as u32,
+                            useful_flops: 2.0 * real as f64 * cols as f64 * d_model as f64,
+                            occupied_flops: 2.0 * s.tm as f64 * cols as f64 * d_model as f64,
+                            weight_bytes: d_model as f64 * cols as f64 * dsg,
+                            token_bytes: s.tm as f64 * d_model as f64 * dsg,
+                            out_bytes: s.tm as f64 * cols as f64 * dsg,
+                            decode_ns: 0.0,
+                        });
+                    }
+                }
+            }
+        }
+
+        // two rectangular kernels: two launches, no mapping metadata
+        let host = 2.0 * ctx.spec.launch_us * 1e-6;
+        let blocks = tiles.len() as u32;
+        let sim = wave::run_waves(&tiles, &ctx.spec, host);
+        Ok(Outcome { backend: self.name(), blocks, sim: Some(sim), output: None, trace: None })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::plan::Planner;
+
+    fn small_load() -> FusedLoad {
+        FusedLoad {
+            seqs: (0..64)
+                .map(|i| match i % 5 {
+                    0 => SeqSpec::Empty,
+                    1 => SeqSpec::Prefill { len: 30 + 7 * i },
+                    _ => SeqSpec::Decode { kv_len: 1 + 13 * i },
+                })
+                .collect(),
+            expert_counts: (0..8).map(|e| if e == 3 { 0 } else { 8 * e + 4 }).collect(),
+        }
+    }
+
+    #[test]
+    fn plan_mixes_three_kinds_under_one_sigma() {
+        let w = FusedLayerWorkload::tiny();
+        let plan = Planner::for_workload(w).plan(&small_load());
+        let descs = plan.descriptors();
+        let mut kinds = [false; 3];
+        for d in &descs {
+            match d.kind {
+                TaskKind::AttentionDecode { .. } => kinds[0] = true,
+                TaskKind::PrefillChunk { .. } => kinds[1] = true,
+                TaskKind::Gemm { .. } => kinds[2] = true,
+                _ => {}
+            }
+        }
+        assert_eq!(kinds, [true, true, true]);
+        // σ covers exactly the non-empty tiles
+        let tiles: usize = descs.iter().map(|d| d.num_tiles()).sum();
+        assert_eq!(plan.total_tiles() as usize, tiles);
+    }
+
+    #[test]
+    fn attention_phase_precedes_expert_phase_in_the_grid() {
+        let w = FusedLayerWorkload::tiny();
+        let plan = Planner::for_workload(w).plan(&small_load());
+        let nonempty = plan.num_nonempty();
+        let first_expert = plan.tasks[..nonempty]
+            .iter()
+            .position(|t| matches!(t, FusedTask::Expert(_)))
+            .expect("non-empty expert tasks exist");
+        assert!(plan.tasks[..first_expert]
+            .iter()
+            .all(|t| matches!(t, FusedTask::Attention(_) | FusedTask::Prefill(_))));
+        assert!(plan.tasks[first_expert..nonempty]
+            .iter()
+            .all(|t| matches!(t, FusedTask::Expert(_))));
+    }
+
+    #[test]
+    fn serial_and_parallel_agree_bitwise() {
+        let w = FusedLayerWorkload::tiny();
+        let load = small_load();
+        let inputs = FusedInputs::synthetic(&w, &load, 17);
+        let plan = Planner::for_workload(w).plan(&load);
+        let (serial, _) = execute_traced(&plan, &inputs, false).expect("dispatch covered");
+        for threads in [1, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            let par = execute_parallel(&plan, &inputs, &pool).unwrap();
+            assert_eq!(serial.shape, par.shape);
+            assert_eq!(serial.data, par.data, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn trace_matches_mapping_decode_across_kinds() {
+        let w = FusedLayerWorkload::tiny();
+        let load = small_load();
+        let inputs = FusedInputs::synthetic(&w, &load, 23);
+        let plan = Planner::for_workload(w).plan(&load);
+        let (_, trace) = execute_traced(&plan, &inputs, true).unwrap();
+        let trace = trace.expect("requested");
+        assert_eq!(trace.len() as u32, plan.total_tiles());
+        let descs = plan.descriptors();
+        for (block, r) in trace.iter().enumerate() {
+            let m = plan.two_stage.map(block as u32);
+            assert_eq!((r.task, r.tile), (m.task, m.tile));
+            assert_eq!(r.kind, descs[m.task as usize].kind);
+        }
+    }
+
+    #[test]
+    fn prefill_chunk_selection_uses_its_own_catalog() {
+        assert_eq!(PREFILL_CATALOG[select_prefill_chunk(2000)], 1024);
+        assert_eq!(PREFILL_CATALOG[select_prefill_chunk(512)], 1024);
+        assert_eq!(PREFILL_CATALOG[select_prefill_chunk(100)], 256);
+        assert_eq!(PREFILL_CATALOG[select_prefill_chunk(5)], 16);
+    }
+
+    #[test]
+    fn prefill_tile_stream_covers_the_descriptor_grid() {
+        let w = FusedLayerWorkload::tiny();
+        let t = FusedTask::Prefill(SeqTask { seq: 0, kv_len: 700, strategy: 1 });
+        let d = w.descriptor(&t);
+        assert_eq!(w.tiles(&t, 0, 0.0).len(), d.num_tiles());
+        // causal pairs across the stream sum to P(P+1)/2 per head (4·d each)
+        let total: f64 = w.tiles(&t, 0, 0.0).iter().map(|x| x.useful_flops).sum();
+        let expect = 4.0 * (700.0 * 701.0 / 2.0) * w.attn.head_dim as f64 * w.attn.heads as f64;
+        assert!((total - expect).abs() < 1e-6 * expect);
+    }
+
+    #[test]
+    fn signature_distinguishes_prefill_from_decode() {
+        let w = FusedLayerWorkload::tiny();
+        let mut a = small_load();
+        let mut sig_a = Vec::new();
+        w.signature_into(&a, &mut sig_a);
+        // same kv span, different kind → different signature
+        a.seqs[1] = SeqSpec::Decode { kv_len: a.seqs[1].kv_len() };
+        let mut sig_b = Vec::new();
+        w.signature_into(&a, &mut sig_b);
+        assert_ne!(sig_a, sig_b);
+    }
+}
